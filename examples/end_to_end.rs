@@ -1,0 +1,100 @@
+//! End-to-end driver (DESIGN.md §validation): exercises every layer of the
+//! system on a real small workload and reports the paper's headline
+//! comparison. Results of a run of this binary are recorded in
+//! EXPERIMENTS.md.
+//!
+//! Stages: pretrain (loss curve logged) → calibrate → MSFP search →
+//! TALoRA+DFA fine-tune → batched sampling → FID-syn/IS-syn eval →
+//! serving throughput, for FP vs INT-PTQ-FT baseline vs ours at W4A4.
+//!
+//!   make artifacts && cargo run --release --example end_to_end
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use msfp::config::{MethodSpec, Scale};
+use msfp::coordinator::{self, Request, ServeMode, ServerCfg};
+use msfp::data::Corpus;
+use msfp::eval::generate::SamplerKind;
+use msfp::pipeline::Pipeline;
+use msfp::runtime::Denoiser;
+
+fn main() -> Result<()> {
+    let t0 = Instant::now();
+    let pl = Pipeline::new(&Pipeline::default_artifacts_dir(), Scale::from_env())?;
+    println!(
+        "== end-to-end: celeba-syn, scale: pretrain {} steps / {} DDIM steps / {} eval imgs ==",
+        pl.scale.pretrain_steps, pl.scale.steps, pl.scale.eval_n
+    );
+
+    // --- stage 1: pretrain ------------------------------------------------
+    let p = pl.prepare(Corpus::CelebaSyn)?;
+    let l = &p.pretrain_losses;
+    println!("\n[1] pretrain loss curve (every 10%):");
+    for i in (0..l.len()).step_by((l.len() / 10).max(1)) {
+        println!("    step {i:4}: {:.4}", l[i]);
+    }
+    println!("    final    : {:.4}", l.last().unwrap());
+
+    // --- stage 2+3: calibrate + quantize (three methods) -------------------
+    let e = pl.scale.ft_epochs;
+    let specs = [
+        MethodSpec::fp(),
+        MethodSpec::qdiffusion_like(4),
+        MethodSpec::efficientdm_like(4, e),
+        MethodSpec::ours(4, 2, e),
+    ];
+    println!("\n[2] quantize + fine-tune + evaluate (W4A4):");
+    let mut results = Vec::new();
+    for spec in &specs {
+        let (r, q) = pl.evaluate_spec(&p, spec, SamplerKind::Ddim, 0.0, 42)?;
+        if let Some(q) = &q {
+            if let Some(ft) = &q.ft_stats {
+                println!(
+                    "    {}: finetune loss {:.4} -> {:.4}",
+                    spec.label,
+                    ft.losses.first().unwrap(),
+                    ft.losses.last().unwrap()
+                );
+            }
+        }
+        println!("    {:<22} {}", spec.label, r.row());
+        results.push((spec.label.clone(), r, q));
+    }
+
+    // headline check: ours beats the INT fine-tuning baseline at 4 bits
+    let fid = |label: &str| {
+        results.iter().find(|(l, ..)| l == label).map(|(_, r, _)| r.fid).unwrap()
+    };
+    println!("\n[3] headline: Ours(h=2) FID {:.2} vs EfficientDM-like {:.2} vs PTQ-only {:.2} (FP {:.2})",
+        fid("Ours (h=2)"), fid("EfficientDM-like"), fid("Q-Diffusion-like"), fid("FP"));
+
+    // --- stage 4: serve the quantized model -------------------------------
+    let ours = results.pop().unwrap().2.unwrap();
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &p.info)?);
+    let handle = coordinator::spawn(
+        den,
+        p.info.clone(),
+        pl.sched.clone(),
+        Arc::new(p.params.clone()),
+        ServerCfg { mode: ServeMode::Quant(ours.state), decode_latents: false, seed: 9 },
+    );
+    let t_serve = Instant::now();
+    let rxs: Vec<_> = (0..8)
+        .map(|i| {
+            let mut r = Request::new(0, 2, pl.scale.steps);
+            r.seed = i;
+            handle.submit(r)
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv()?;
+    }
+    let m = handle.shutdown();
+    println!("\n[4] quantized serving ({} concurrent requests): {}", 8, m.report());
+    println!("    serve wall {:.1}s", t_serve.elapsed().as_secs_f64());
+
+    println!("\ntotal wall time {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

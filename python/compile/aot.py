@@ -1,0 +1,330 @@
+"""AOT compiler: lower every graph the Rust coordinator needs to HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  manifest.json                 the ABI: models, param/layer specs, artifact
+                                table, input signatures
+  <model>_init.f32              seeded initial parameters (raw LE f32)
+  <model>_{fp,q}_b{B}.hlo.txt   forward graphs (fp / quantized+TALoRA serve)
+  <model>_calib_b8.hlo.txt      fp forward + per-layer activation capture
+  <model>_pretrain_b8.hlo.txt   DDPM loss + grad(params)
+  <model>_finetune_b8.hlo.txt   DFA loss + grad(lora, router) + router sel
+  features{16,32}.hlo.txt       fixed random-conv feature extractor (eval)
+  golden/quant_golden.json      ref-kernel test vectors for the Rust mirror
+  golden/router_golden.json     router selections for the Rust mirror
+
+Per-artifact caching: a stamp records the sha256 of python/compile sources;
+artifacts are re-lowered only when sources change or --force is given.
+Python runs only here — never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import quantized as Q
+from .kernels import ref
+
+BATCHES_FP = (1, 4, 8)
+BATCHES_Q = (1, 2, 4, 8)
+TRAIN_B = 8
+CALIB_B = 8
+EVAL_B = 32
+ACT_SAMPLES = 512
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default print elides big constants as
+    # `{...}`, which the HLO text parser on the Rust side silently reads
+    # back as zeros (bit us via the baked feature-extractor weights).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _src_hash() -> str:
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# feature extractor (fixed random weights — the FID-syn embedding)
+# --------------------------------------------------------------------------
+
+def _feature_weights(hw):
+    rng = np.random.default_rng(7)
+    chans = [3, 32, 64, 64] if hw == 16 else [3, 32, 64, 64, 64]
+    ws = []
+    for cin, cout in zip(chans[:-1], chans[1:]):
+        ws.append((rng.normal(size=(3, 3, cin, cout))
+                   * math.sqrt(2.0 / (9 * cin))).astype(np.float32))
+    wl = (rng.normal(size=(64, 10)) * 0.3).astype(np.float32)
+    return ws, wl
+
+
+def make_features(hw):
+    ws, wl = _feature_weights(hw)
+
+    def feats(img):
+        h = img
+        for w in ws:
+            h = jax.lax.conv_general_dilated(
+                h, jnp.asarray(w), (2, 2), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            h = jnp.tanh(h)
+        sfeat = h.reshape(h.shape[0], -1)          # [B, 2*2*64]
+        feat = jnp.mean(h, axis=(1, 2))            # [B, 64]
+        logits = feat @ jnp.asarray(wl)            # [B, 10]
+        return feat, sfeat, logits
+
+    return feats
+
+
+# --------------------------------------------------------------------------
+# goldens for the Rust mirror
+# --------------------------------------------------------------------------
+
+def quant_golden():
+    rng = np.random.default_rng(11)
+    arrays = {
+        "normal": (rng.normal(size=96) * 2.0).astype(np.float32),
+        "silu": (np.maximum(rng.normal(size=96) * 3.0, 0)
+                 - 0.25 * rng.random(96)).astype(np.float32),
+        "uniform": (rng.random(96) * 5.0 - 1.0).astype(np.float32),
+        "tiny": (rng.normal(size=96) * 1e-3).astype(np.float32),
+    }
+    rows = [
+        # [sign, maxval, e_bits, m_bits, zp]
+        [1.0, 2.7, 2, 1, 0.0], [1.0, 1.3, 1, 2, 0.0], [1.0, 4.0, 3, 2, 0.0],
+        [1.0, 0.9, 0, 3, 0.0], [0.0, 2.7, 2, 2, -0.25], [0.0, 3.1, 3, 1, -0.1],
+        [0.0, 1.0, 0, 4, -0.3], [0.0, 5.0, 1, 3, 0.0],
+        [1.0, 2.0, -1, 4, 0.0], [0.0, 2.0, -1, 4, -0.25],  # INT rows
+        [1.0, 6.0, -1, 6, 0.0], [0.0, 6.0, -1, 6, -0.3],
+        [1.0, 3.3, -1, 8, 0.0], [0.0, 3.3, -1, 8, -0.2],
+    ]
+    cases = []
+    for aname, arr in arrays.items():
+        for row in rows:
+            sign, maxval, e, m, zp = row
+            out = ref.mixup_qdq(jnp.asarray(arr), sign, maxval, e, m, zp)
+            wout = ref.weight_qdq(jnp.asarray(arr), maxval, e, m)
+            cases.append({
+                "array": aname, "sign": sign, "maxval": maxval,
+                "e_bits": e, "m_bits": m, "zp": zp,
+                "mixup": [float(v) for v in np.asarray(out)],
+                "weight": [float(v) for v in np.asarray(wout)],
+            })
+    return {"arrays": {k: [float(v) for v in v_] for k, v_ in arrays.items()},
+            "cases": cases}
+
+
+def router_golden(cfg, meta):
+    rng = np.random.default_rng(23)
+    rsize = meta["router_size"]
+    router = (rng.normal(size=rsize) * 0.5).astype(np.float32)
+    out = {"temb_dim": cfg.temb_dim, "n_layers": meta["n_layers"],
+           "hub": cfg.lora_hub, "router": [float(v) for v in router],
+           "cases": []}
+    for mask in ([1, 1, 1, 1], [1, 1, 0, 0]):
+        for t in range(0, 100, 7):
+            sel = Q.router_select(cfg, meta["n_layers"],
+                                  jnp.asarray(router), float(t),
+                                  jnp.asarray(mask, jnp.float32))
+            idx = [int(i) for i in np.argmax(np.asarray(sel), axis=-1)]
+            out["cases"].append({"t": t, "mask": mask, "sel": idx})
+    return out
+
+
+# --------------------------------------------------------------------------
+# artifact registry
+# --------------------------------------------------------------------------
+
+def model_artifacts(name, cfg, meta):
+    """Yield (filename, build_fn) for one model variant."""
+    L = meta["n_layers"]
+    P = meta["n_params"]
+    LF = meta["lora_size"]
+    RF = meta["router_size"]
+    H = cfg.lora_hub
+    hw, c = cfg.img_hw, cfg.in_ch
+
+    def xs(b):
+        return spec((b, hw, hw, c))
+
+    for b in BATCHES_FP:
+        def build(b=b):
+            return jax.jit(
+                lambda flat, x, t, cond: M.apply_fp(cfg, meta, flat, x, t, cond),
+                keep_unused=True,
+            ).lower(spec((P,)), xs(b), spec((b,)), spec((b,)))
+        yield f"{name}_fp_b{b}.hlo.txt", build
+
+    for b in BATCHES_Q:
+        def build(b=b):
+            return jax.jit(
+                lambda flat, qp, lora, sel, x, t, cond: M.apply_quant(
+                    cfg, meta, flat, qp, lora, sel, x, t, cond, mode="serve"),
+                keep_unused=True,
+            ).lower(spec((P,)), spec((L, 8)), spec((LF,)), spec((L, H)),
+                    xs(b), spec((b,)), spec((b,)))
+        yield f"{name}_q_b{b}.hlo.txt", build
+
+    def build_calib():
+        return jax.jit(
+            lambda flat, x, t, cond: M.apply_calib(
+                cfg, meta, flat, x, t, cond, samples=ACT_SAMPLES),
+            keep_unused=True,
+        ).lower(spec((P,)), xs(CALIB_B), spec((CALIB_B,)), spec((CALIB_B,)))
+    yield f"{name}_calib_b{CALIB_B}.hlo.txt", build_calib
+
+    def build_pretrain():
+        step = Q.make_pretrain_step(cfg, meta)
+        return jax.jit(step, keep_unused=True).lower(
+            spec((P,)), xs(TRAIN_B), xs(TRAIN_B), spec((TRAIN_B,)),
+            spec((TRAIN_B,)), spec((TRAIN_B,)))
+    yield f"{name}_pretrain_b{TRAIN_B}.hlo.txt", build_pretrain
+
+    def build_finetune():
+        step = Q.make_finetune_step(cfg, meta)
+        return jax.jit(step, keep_unused=True).lower(
+            spec((P,)), spec((L, 8)), spec((LF,)), spec((RF,)), spec((H,)),
+            xs(TRAIN_B), spec(()), spec(()), xs(TRAIN_B), spec((TRAIN_B,)))
+    yield f"{name}_finetune_b{TRAIN_B}.hlo.txt", build_finetune
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "..", "artifacts"))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "golden"), exist_ok=True)
+
+    stamp_path = os.path.join(out, "stamp.json")
+    src = _src_hash()
+    stamp = {}
+    if os.path.exists(stamp_path) and not args.force:
+        with open(stamp_path) as f:
+            stamp = json.load(f)
+    fresh = stamp.get("src") == src
+
+    def want(fname):
+        if args.only and args.only not in fname:
+            return False
+        path = os.path.join(out, fname)
+        return args.force or not (fresh and os.path.exists(path))
+
+    manifest = {"models": {}, "schema": 1}
+    t_all = time.time()
+    for name, cfg in M.MODELS.items():
+        flat, meta = M.init_model(cfg, seed=hash(name) % (2**31))
+        init_name = f"{name}_init.f32"
+        flat.astype("<f4").tofile(os.path.join(out, init_name))
+
+        arts = {}
+        for fname, build in model_artifacts(name, cfg, meta):
+            arts[fname.split(".")[0][len(name) + 1:]] = fname
+            if not want(fname):
+                continue
+            t0 = time.time()
+            text = to_hlo_text(build())
+            with open(os.path.join(out, fname), "w") as f:
+                f.write(text)
+            print(f"  {fname}: {len(text)/1e6:.1f} MB in {time.time()-t0:.0f}s",
+                  flush=True)
+
+        manifest["models"][name] = {
+            "cfg": {k: (list(v) if isinstance(v, tuple) else v)
+                    for k, v in dataclasses_asdict(cfg).items()},
+            "n_params": meta["n_params"], "n_layers": meta["n_layers"],
+            "lora_size": meta["lora_size"], "router_size": meta["router_size"],
+            "act_samples": ACT_SAMPLES,
+            "param_specs": meta["param_specs"],
+            "layer_specs": meta["layer_specs"],
+            "init_params": init_name,
+            "artifacts": arts,
+            "batches_fp": list(BATCHES_FP), "batches_q": list(BATCHES_Q),
+            "train_b": TRAIN_B, "calib_b": CALIB_B,
+        }
+        if name == "ddim16":
+            with open(os.path.join(out, "golden", "router_golden.json"), "w") as f:
+                json.dump(router_golden(cfg, meta), f)
+
+    for hw in (16, 32):
+        fname = f"features{hw}.hlo.txt"
+        if want(fname):
+            feats = make_features(hw)
+            lowered = jax.jit(feats).lower(spec((EVAL_B, hw, hw, 3)))
+            with open(os.path.join(out, fname), "w") as f:
+                f.write(to_hlo_text(lowered))
+            print(f"  {fname} done", flush=True)
+    manifest["features"] = {"16": "features16.hlo.txt",
+                            "32": "features32.hlo.txt",
+                            "feat_dim": 64, "sfeat_dim": 256,
+                            "n_logits": 10, "batch": EVAL_B}
+    manifest["io"] = {
+        "fp": ["params[P]", "x[B,H,W,C]", "t[B]", "cond[B]", "-> eps"],
+        "q": ["params[P]", "qparams[L,8]", "lora[LF]", "sel[L,H]",
+              "x[B,H,W,C]", "t[B]", "cond[B]", "-> eps"],
+        "calib": ["params[P]", "x[B,H,W,C]", "t[B]", "cond[B]",
+                  "-> (eps, acts[L,S], minmax[L,2])"],
+        "pretrain": ["params[P]", "x0", "noise", "t[B]", "abar[B]", "cond[B]",
+                     "-> (loss, grad[P])"],
+        "finetune": ["params[P]", "qparams[L,8]", "lora[LF]", "router[RF]",
+                     "hub_mask[H]", "x_t", "t[]", "gamma[]", "eps_target",
+                     "cond[B]", "-> (loss, glora[LF], grouter[RF], sel[L,H])"],
+        "features": ["img[B,H,W,3]", "-> (feat[B,64], sfeat[B,256],"
+                     " logits[B,10])"],
+        "qparams_row": ["w_maxval", "w_ebits(<0 => INT)", "w_mbits",
+                        "a_sign", "a_maxval", "a_ebits(<0 => INT)",
+                        "a_mbits", "a_zp"],
+    }
+
+    with open(os.path.join(out, "golden", "quant_golden.json"), "w") as f:
+        json.dump(quant_golden(), f)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp_path, "w") as f:
+        json.dump({"src": src}, f)
+    print(f"artifacts complete in {time.time()-t_all:.0f}s -> {out}")
+
+
+def dataclasses_asdict(cfg):
+    import dataclasses as dc
+    return dc.asdict(cfg)
+
+
+if __name__ == "__main__":
+    main()

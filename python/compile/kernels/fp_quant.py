@@ -1,0 +1,143 @@
+"""L1 Pallas kernel: mixup-sign floating-point fake quantize-dequantize.
+
+This is the deployed quantizer of the MSFP framework: every quantized layer
+in the serving graphs (``*_q_b*.hlo.txt``) funnels its weights and input
+activations through this kernel. It is an elementwise VPU pipeline; on TPU
+it would tile HBM->VMEM in (BLOCK_ROWS, 128) blocks with double-buffered row
+streaming (see DESIGN.md §6). On this image it must run ``interpret=True``:
+real TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot
+execute.
+
+The numerics are the contract defined in ref.py (exponent bit-extraction,
+bit-assembled powers of two, half-up rounding) so the kernel, the jnp
+reference and the Rust mirror agree bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane width of the TPU VPU; blocks are (BLOCK_ROWS, LANES).
+LANES = 128
+BLOCK_ROWS = 64
+
+
+def _exp2_int(k):
+    k = k.astype(jnp.int32)
+    return jax.lax.bitcast_convert_type((k + 127) << 23, jnp.float32)
+
+
+def _floor_log2(x):
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    exp_field = (bits >> 23) & 0xFF
+    mant = bits & 0x7FFFFF
+    normal_e = exp_field - 127
+    sub_e = (31 - jax.lax.clz(mant)) - 149
+    e = jnp.where(exp_field == 0, sub_e, normal_e)
+    return jnp.where((mant == 0) & (exp_field == 0), jnp.int32(-200), e)
+
+
+def _rnd(v):
+    return jnp.floor(v + 0.5)
+
+
+def _mixup_qdq_block(x, sign, maxval, e_bits, m_bits, zp):
+    """Elementwise mixup-sign qdq on one block; mirrors ref.mixup_qdq,
+    including the e_bits < 0 INT-baseline dispatch."""
+    e_sel = e_bits
+    e_bits = jnp.maximum(e_bits, 0.0).astype(jnp.int32)
+    m_i = m_bits.astype(jnp.int32)
+    full = 2.0 - _exp2_int(-m_i)
+    a = maxval / full
+    e_min = jnp.maximum(-((jnp.int32(1) << e_bits) - 1), -100)
+
+    # signed FP branch
+    ys = jnp.clip(x / a, -full, full)
+    es = jnp.clip(_floor_log2(jnp.abs(ys)), e_min, 0)
+    ss = _exp2_int(es - m_i)
+    qs = _rnd(ys / ss) * ss * a
+
+    # unsigned + zero-point FP branch
+    yu = jnp.clip((x - zp) / a, 0.0, full)
+    eu = jnp.clip(_floor_log2(yu), e_min, 0)
+    su = _exp2_int(eu - m_i)
+    qu = _rnd(yu / su) * su * a + zp
+
+    fp = jnp.where(sign >= 0.5, qs, qu)
+
+    # INT branches (n = m_bits): symmetric / asymmetric on [zp, maxval]
+    qmax = ((jnp.int32(1) << (m_i - 1)) - 1).astype(jnp.float32)
+    si = maxval / qmax
+    ii_s = jnp.clip(_rnd(x / si), -qmax - 1.0, qmax) * si
+    levels = ((jnp.int32(1) << m_i) - 1).astype(jnp.float32)
+    sa = (maxval - zp) / levels
+    sa = jnp.where(sa <= 0.0, 1.0, sa)
+    za = _rnd(-zp / sa)
+    ii_a = (jnp.clip(_rnd(x / sa) + za, 0.0, levels) - za) * sa
+    ii = jnp.where(sign >= 0.5, ii_s, ii_a)
+
+    return jnp.where(e_sel >= 0.0, fp, ii)
+
+
+def _kernel(p_ref, x_ref, o_ref):
+    # p_ref: (8,) f32 — [sign, maxval, e_bits, m_bits, zp, _, _, _]
+    sign = p_ref[0]
+    maxval = p_ref[1]
+    e_bits = p_ref[2]
+    m_bits = p_ref[3]
+    zp = p_ref[4]
+    o_ref[...] = _mixup_qdq_block(x_ref[...], sign, maxval, e_bits, m_bits, zp)
+
+
+def mixup_qdq_pallas(x, sign, maxval, e_bits, m_bits, zp):
+    """Mixup-sign fake-qdq of an arbitrary-shape f32 array via Pallas.
+
+    Scalar quantizer parameters are packed into an (8,) params vector and
+    broadcast to every block; the data is flattened, padded to a
+    (rows, LANES) layout and streamed block-by-block.
+    """
+    params = jnp.stack(
+        [
+            jnp.asarray(sign, jnp.float32),
+            jnp.asarray(maxval, jnp.float32),
+            jnp.asarray(e_bits, jnp.float32),
+            jnp.asarray(m_bits, jnp.float32),
+            jnp.asarray(zp, jnp.float32),
+            jnp.float32(0),
+            jnp.float32(0),
+            jnp.float32(0),
+        ]
+    )
+    shape = x.shape
+    n = x.size
+    block = BLOCK_ROWS * LANES
+    rows = max(1, -(-n // LANES))
+    # pad rows to a multiple of BLOCK_ROWS
+    rows = -(-rows // BLOCK_ROWS) * BLOCK_ROWS
+    padded = rows * LANES
+    xf = jnp.pad(x.reshape(-1), (0, padded - n)).reshape(rows, LANES)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((8,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(params, xf)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def signed_qdq_pallas(x, maxval, e_bits, m_bits):
+    """Signed-only convenience wrapper (weight quantization path)."""
+    return mixup_qdq_pallas(x, 1.0, maxval, e_bits, m_bits, 0.0)
+
+
+def unsigned_qdq_pallas(x, maxval, e_bits, m_bits, zp):
+    """Unsigned + zero-point convenience wrapper (AAL activation path)."""
+    return mixup_qdq_pallas(x, 0.0, maxval, e_bits, m_bits, zp)

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: fused quantized-linear + LoRA correction.
+
+Computes  y = qdq_signed(W) @ x + scale * B @ (A @ x)
+with W: [N, K], x: [K, B], A: [r, K], B: [N, r].
+
+This is the MXU-facing hot spot of the serving path: the attention qkv/proj
+and time-embedding linears of the quantized UNet route through it. The grid
+tiles the output rows (one block of W rows per program); the dequantized
+weight block is staged in VMEM and the rank-r LoRA correction is fused into
+the same block accumulation (r << BLOCK_N keeps A, B resident). On TPU the
+natural tiling is (128, 128) MXU blocks; here the kernel runs under
+``interpret=True`` (see fp_quant.py) and the block shape is sized for test
+speed.
+
+Numerics contract: identical to ref.lora_qmatmul_ref (which composes
+ref.fp_qdq_signed with two jnp matmuls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fp_quant
+
+BLOCK_N = 64
+
+
+def _kernel(p_ref, w_ref, x_ref, a_ref, b_ref, o_ref):
+    # p_ref: (8,) f32 — [scale, maxval, e_bits, m_bits, _, _, _, _]
+    scale = p_ref[0]
+    maxval = p_ref[1]
+    e_bits = p_ref[2]
+    m_bits = p_ref[3]
+    wq = fp_quant._mixup_qdq_block(
+        w_ref[...], jnp.float32(1.0), maxval, e_bits, m_bits, jnp.float32(0.0)
+    )
+    ax = a_ref[...] @ x_ref[...]          # [r, B] — recomputed per block; r is tiny
+    o_ref[...] = wq @ x_ref[...] + scale * (b_ref[...] @ ax)
+
+
+def lora_qmatmul_pallas(w, x, a, b, scale, maxval, e_bits, m_bits):
+    """Fused qdq-matmul + LoRA. w: [N,K], x: [K,B], a: [r,K], b: [N,r]."""
+    n, k = w.shape
+    _, bs = x.shape
+    r = a.shape[0]
+    params = jnp.stack(
+        [
+            jnp.asarray(scale, jnp.float32),
+            jnp.asarray(maxval, jnp.float32),
+            jnp.asarray(e_bits, jnp.float32),
+            jnp.asarray(m_bits, jnp.float32),
+            jnp.float32(0),
+            jnp.float32(0),
+            jnp.float32(0),
+            jnp.float32(0),
+        ]
+    )
+    n_pad = -(-n // BLOCK_N) * BLOCK_N
+    w_p = jnp.pad(w, ((0, n_pad - n), (0, 0)))
+    b_p = jnp.pad(b, ((0, n_pad - n), (0, 0)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((8,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_N, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, bs), lambda i: (0, 0)),
+            pl.BlockSpec((r, k), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_N, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N, bs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, bs), jnp.float32),
+        interpret=True,
+    )(params, w_p, x, a, b_p)
+    return out[:n]

@@ -1,0 +1,201 @@
+"""Pure-jnp oracle for the MSFP quantization kernels.
+
+This module defines the *numerics contract* shared by three implementations:
+  1. this reference (used by training graphs, where autodiff needs STE),
+  2. the Pallas kernels in fp_quant.py / lora_qmatmul.py (the deployed path),
+  3. the Rust mirror in rust/src/quant/ (used by the MSFP parameter search).
+
+All three must agree bit-for-bit on f32 inputs. To make that possible the
+implementation avoids transcendental functions whose last-ulp behaviour
+differs across libms:
+
+  * floor(log2|x|) is computed by IEEE-754 exponent extraction
+    (bitcast + shift), exact for normals and subnormals alike;
+  * powers of two 2^k are constructed by bit assembly ((k+127)<<23),
+    exact for k in [-126, 127];
+  * rounding is rnd(v) = floor(v + 0.5) (deterministic half-up), identical
+    on XLA and rustc.
+
+Quantizer definition (paper Eq. 6 / Eq. 8 / Eq. 10):
+An ExMy floating-point grid anchored at `maxval` with full mantissa range
+[1, 2 - 2^-m]. We normalize y = x / a with a = maxval / (2 - 2^-m) so the
+top binade of the normalized grid is [1, 2). Normal binades span
+e in [E_min, 0], E_min = -(2^e_bits - 1); below 2^E_min the grid degrades
+to the uniform subnormal grid with step 2^(E_min - m), which includes 0.
+e_bits = 0 therefore yields a uniform (INT-like) grid — the E0My formats of
+the paper's search space.
+
+The paper's Eq. 10 prints maxval = 2^(2^x-1-b) * (1 - 2^-y); that drops the
+implicit leading 1 of the mantissa in Eq. 6. We follow Eq. 6: the largest
+mantissa is 1 + (2^y - 1)/2^y = 2 - 2^-y. See DESIGN.md §3.1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _exp2_int(k):
+    """Exact 2^k for integer-valued k (int32 array), k in [-126, 127]."""
+    k = jnp.asarray(k).astype(jnp.int32)
+    bits = (k + 127) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _floor_log2(x):
+    """floor(log2(x)) for x > 0 via IEEE-754 exponent extraction (exact).
+
+    Subnormal inputs are handled by counting the leading zeros of the
+    mantissa field. x == 0 maps to a large negative sentinel (-200) which
+    every caller clamps away.
+    """
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    exp_field = (bits >> 23) & 0xFF
+    mant = bits & 0x7FFFFF
+    # Normal numbers: unbiased exponent.
+    normal_e = exp_field - 127
+    # Subnormals: value = mant * 2^-149, floor(log2) = (bitlen(mant)-1) - 149.
+    sub_e = (31 - jax.lax.clz(mant)) - 149
+    e = jnp.where(exp_field == 0, sub_e, normal_e)
+    return jnp.where((mant == 0) & (exp_field == 0), jnp.int32(-200), e)
+
+
+def _rnd(v):
+    """Deterministic half-up rounding: floor(v + 0.5)."""
+    return jnp.floor(v + 0.5)
+
+
+def fp_qdq_signed(x, maxval, e_bits, m_bits):
+    """Signed ExMy fake quantize-dequantize (paper Eq. 6), s = 1.
+
+    x: f32 array. maxval: positive scalar (grid anchor). e_bits/m_bits:
+    integer-valued scalars (may arrive as f32; converted).
+    """
+    e_bits = jnp.asarray(e_bits).astype(jnp.int32)
+    m_bits = jnp.asarray(m_bits).astype(jnp.int32)
+    maxval = jnp.asarray(maxval, jnp.float32)
+    full = 2.0 - _exp2_int(-m_bits)  # 2 - 2^-m, exact
+    a = maxval / full
+    y = jnp.clip(x / a, -full, full)
+    ay = jnp.abs(y)
+    # e_min floored at -100 so step = 2^(e_min - m) stays a normal f32 for
+    # any mantissa width (shared contract with quant::fp::e_min_of).
+    e_min = jnp.maximum(-((jnp.int32(1) << e_bits) - 1), -100)
+    e = jnp.clip(_floor_log2(ay), e_min, 0)
+    step = _exp2_int(e - m_bits)
+    q = _rnd(y / step) * step
+    return q * a
+
+
+def fp_qdq_unsigned(x, maxval, e_bits, m_bits, zp):
+    """Unsigned ExMy fake quantize-dequantize with zero point (paper Eq. 8).
+
+    The grid covers [zp, maxval + zp] (zp <= 0 recovers the SiLU trough
+    [-0.278, 0)). s = 0, so e + m = n for an n-bit format.
+    """
+    e_bits = jnp.asarray(e_bits).astype(jnp.int32)
+    m_bits = jnp.asarray(m_bits).astype(jnp.int32)
+    maxval = jnp.asarray(maxval, jnp.float32)
+    zp = jnp.asarray(zp, jnp.float32)
+    full = 2.0 - _exp2_int(-m_bits)
+    a = maxval / full
+    y = jnp.clip((x - zp) / a, 0.0, full)
+    e_min = jnp.maximum(-((jnp.int32(1) << e_bits) - 1), -100)
+    e = jnp.clip(_floor_log2(y), e_min, 0)
+    step = _exp2_int(e - m_bits)
+    q = _rnd(y / step) * step
+    return q * a + zp
+
+
+def mixup_qdq(x, sign, maxval, e_bits, m_bits, zp):
+    """Mixup-sign dispatch. The per-layer activation quantizer of MSFP.
+
+    Row semantics (also implemented by the Pallas kernel and the Rust
+    mirror):
+      e_bits >= 0, sign >= 0.5  -> signed ExMy FP grid
+      e_bits >= 0, sign <  0.5  -> unsigned ExMy FP grid + zero point zp
+      e_bits <  0, sign >= 0.5  -> symmetric INT, n = m_bits (baselines)
+      e_bits <  0, sign <  0.5  -> asymmetric INT on [zp, maxval], n = m_bits
+
+    The INT rows let the INT-PTQ baselines (Q-Diffusion/EfficientDM-like)
+    reuse the same serving/fine-tune artifacts; the Rust-side search decides
+    which row each layer gets. sign/format/zp are runtime scalars in
+    qparams[L, 8].
+    """
+    sign = jnp.asarray(sign, jnp.float32)
+    e_sel = jnp.asarray(e_bits, jnp.float32)
+    e_fp = jnp.maximum(e_sel, 0.0)
+    s = fp_qdq_signed(x, maxval, e_fp, m_bits)
+    u = fp_qdq_unsigned(x, maxval, e_fp, m_bits, zp)
+    fp = jnp.where(sign >= 0.5, s, u)
+    i_s = int_qdq_sym(x, maxval, m_bits)
+    i_a = int_qdq_asym(x, zp, maxval, m_bits)
+    i = jnp.where(sign >= 0.5, i_s, i_a)
+    return jnp.where(e_sel >= 0.0, fp, i)
+
+
+def weight_qdq(x, maxval, e_bits, m_bits):
+    """Weight quantizer dispatch: signed FP grid, or symmetric INT if
+    e_bits < 0 (INT baselines)."""
+    e_sel = jnp.asarray(e_bits, jnp.float32)
+    fp = fp_qdq_signed(x, maxval, jnp.maximum(e_sel, 0.0), m_bits)
+    i = int_qdq_sym(x, maxval, m_bits)
+    return jnp.where(e_sel >= 0.0, fp, i)
+
+
+def int_qdq_sym(x, maxval, n_bits):
+    """Symmetric uniform INT fake quant (baseline: Q-Diffusion-like weights)."""
+    n_bits = jnp.asarray(n_bits).astype(jnp.int32)
+    qmax = ((jnp.int32(1) << (n_bits - 1)) - 1).astype(jnp.float32)
+    s = jnp.asarray(maxval, jnp.float32) / qmax
+    q = jnp.clip(_rnd(x / s), -qmax - 1.0, qmax)
+    return q * s
+
+
+def int_qdq_asym(x, lo, hi, n_bits):
+    """Asymmetric uniform INT fake quant (baseline for activations)."""
+    n_bits = jnp.asarray(n_bits).astype(jnp.int32)
+    levels = ((jnp.int32(1) << n_bits) - 1).astype(jnp.float32)
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    s = (hi - lo) / levels
+    s = jnp.where(s <= 0.0, 1.0, s)
+    z = _rnd(-lo / s)
+    q = jnp.clip(_rnd(x / s) + z, 0.0, levels)
+    return (q - z) * s
+
+
+def ste(fn, x, *args):
+    """Straight-through estimator: forward fn(x), identity backward in x."""
+    return x + jax.lax.stop_gradient(fn(x, *args) - x)
+
+
+def fp_qdq_signed_ste(x, maxval, e_bits, m_bits):
+    return ste(fp_qdq_signed, x, maxval, e_bits, m_bits)
+
+
+def weight_qdq_ste(x, maxval, e_bits, m_bits):
+    return ste(weight_qdq, x, maxval, e_bits, m_bits)
+
+
+def mixup_qdq_ste(x, sign, maxval, e_bits, m_bits, zp):
+    return ste(mixup_qdq, x, sign, maxval, e_bits, m_bits, zp)
+
+
+def int_qdq_sym_ste(x, maxval, n_bits):
+    return ste(int_qdq_sym, x, maxval, n_bits)
+
+
+def int_qdq_asym_ste(x, lo, hi, n_bits):
+    return ste(int_qdq_asym, x, lo, hi, n_bits)
+
+
+def lora_qmatmul_ref(w, x, a, b, scale, maxval, e_bits, m_bits):
+    """Oracle for the fused quantized-linear + LoRA kernel.
+
+    y = qdq_signed(W) @ x + scale * B @ (A @ x)
+    W: [N, K], x: [K, B], A: [r, K], B: [N, r].
+    """
+    wq = fp_qdq_signed(w, maxval, e_bits, m_bits)
+    return wq @ x + scale * (b @ (a @ x))

@@ -1,0 +1,351 @@
+"""L2: the diffusion UNet in JAX, with a mode-switched quantization context.
+
+One architecture definition serves every graph the Rust coordinator loads:
+
+  mode='fp'      full-precision forward (pretraining, FP trajectories)
+  mode='qtrain'  fake-quant with STE through ref.py (differentiable; used by
+                 the fine-tune graph, where grads flow to LoRA + router)
+  mode='serve'   fake-quant through the *Pallas kernels* (the deployed path;
+                 lowered into the *_q_b*.hlo.txt serving artifacts)
+  mode='calib'   full-precision forward that additionally emits per-layer
+                 activation samples + min/max for the Rust MSFP search
+
+Parameters cross the ABI as a single flat f32 vector; ``param_specs`` (name,
+shape, offset) is emitted into artifacts/manifest.json so Rust owns the
+parameter store. Quantized layers are discovered in call order and recorded
+in ``layer_specs``; their per-layer quantizer parameters arrive as a
+``qparams[L, 8]`` runtime input laid out as
+[w_maxval, w_ebits, w_mbits, a_sign, a_maxval, a_ebits, a_mbits, a_zp].
+
+Model variants (DESIGN.md §2): ``ddim16`` (pixel space 16x16x3, stands in
+for the paper's DDIM CIFAR-10/CelebA models), ``ldm8``/``ldm8c`` (latent
+space 8x8x4 over a fixed orthogonal patch autoencoder, stands in for
+LDM-4/LDM-8 on LSUN/ImageNet; ``ldm8c`` is class-conditional).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import fp_quant
+from .kernels import lora_qmatmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    img_hw: int
+    in_ch: int
+    base_ch: int = 32
+    ch_mult: tuple = (1, 2)
+    temb_dim: int = 64
+    groups: int = 8
+    n_classes: int = 0  # 0 = unconditional
+    lora_rank: int = 4
+    lora_hub: int = 4  # H; h=2 runs mask slots 2/3 (see quantized.py)
+
+
+MODELS = {
+    "ddim16": ModelCfg("ddim16", 16, 3),
+    "ldm8": ModelCfg("ldm8", 8, 4),
+    "ldm8c": ModelCfg("ldm8c", 8, 4, n_classes=10),
+}
+
+
+def sinusoidal_temb(t, dim):
+    """Sinusoidal timestep embedding; mirrored in rust/src/model/temb.rs."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = jnp.asarray(t, jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)
+
+
+def group_norm(x, scale, bias, groups, eps=1e-5):
+    """GroupNorm over NHWC (kept full precision, as in the paper)."""
+    b, h, w, c = x.shape
+    g = groups
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c) * scale + bias
+
+
+class Ctx:
+    """Walks the UNet, owning parameter access and quantizer insertion.
+
+    In init mode it *creates* parameters (numpy, seeded) and records
+    param_specs / layer_specs. In apply modes it reads the flat parameter
+    vector and threads qparams / LoRA / selection through each quantized
+    layer in the same call order.
+    """
+
+    def __init__(self, cfg, mode, rng=None, flat=None, param_specs=None,
+                 layer_specs=None, qparams=None, lora=None, sel=None):
+        self.cfg = cfg
+        self.mode = mode
+        self.rng = rng
+        self.flat = flat
+        self.params = {}
+        self.param_specs = param_specs or []
+        self.layer_specs = layer_specs or []
+        self.qparams = qparams
+        self.lora = lora
+        self.sel = sel
+        self.qi = 0  # quant-layer cursor
+        self.acts = []
+        self.minmax = []
+        self.act_samples = 512
+        if flat is not None:
+            for spec in self.param_specs:
+                o, shape = spec["offset"], tuple(spec["shape"])
+                size = int(np.prod(shape))
+                self.params[spec["name"]] = flat[o:o + size].reshape(shape)
+
+    # ---- parameter creation / access -------------------------------------
+    def _make(self, name, shape, init):
+        if self.mode == "init":
+            fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+            if init == "he":
+                v = self.rng.normal(size=shape) * math.sqrt(2.0 / max(fan_in, 1))
+            elif init == "zero":
+                v = np.zeros(shape)
+            elif init == "one":
+                v = np.ones(shape)
+            elif init == "small":
+                v = self.rng.normal(size=shape) * 0.02
+            else:
+                raise ValueError(init)
+            arr = v.astype(np.float32)
+            off = sum(int(np.prod(s["shape"])) for s in self.param_specs)
+            self.param_specs.append({"name": name, "shape": list(shape), "offset": off})
+            self.params[name] = arr
+            return jnp.asarray(arr)
+        return self.params[name]
+
+    # ---- quantizer plumbing ----------------------------------------------
+    def _qrow(self):
+        return self.qparams[self.qi]
+
+    def _lora_slices(self, spec):
+        """A [H, r, K], B [H, N, r] slices of the flat LoRA vector."""
+        cfg = self.cfg
+        H, r = cfg.lora_hub, cfg.lora_rank
+        K, N = spec["fan_in"], spec["fan_out"]
+        o = spec["lora_offset"]
+        a = self.lora[o:o + H * r * K].reshape(H, r, K)
+        b = self.lora[o + H * r * K:o + H * r * K + H * N * r].reshape(H, N, r)
+        return a, b
+
+    def _act_quant(self, x):
+        row = self._qrow()
+        if self.mode == "qtrain":
+            return ref.mixup_qdq_ste(x, row[3], row[4], row[5], row[6], row[7])
+        return fp_quant.mixup_qdq_pallas(x, row[3], row[4], row[5], row[6], row[7])
+
+    def _weight_quant(self, w):
+        row = self._qrow()
+        if self.mode == "qtrain":
+            return ref.weight_qdq_ste(w, row[0], row[1], row[2])
+        return fp_quant.signed_qdq_pallas(w, row[0], row[1], row[2])
+
+    def _record_act(self, x):
+        flat = x.reshape(-1)
+        self.acts.append(jnp.resize(flat, (self.act_samples,)))
+        self.minmax.append(jnp.stack([jnp.min(flat), jnp.max(flat)]))
+
+    # ---- layers ------------------------------------------------------------
+    def conv(self, name, x, cout, k=3, stride=1, zero_init=False, aal_hint=False):
+        """Quantized 2D conv (NHWC, HWIO weights) with per-layer LoRA."""
+        cfg = self.cfg
+        cin = x.shape[-1]
+        w = self._make(f"{name}.w", (k, k, cin, cout), "zero" if zero_init else "he")
+        bias = self._make(f"{name}.b", (cout,), "zero")
+        if self.mode == "init":
+            self.layer_specs.append({
+                "name": name, "kind": "conv", "fan_in": k * k * cin,
+                "fan_out": cout, "k": k, "stride": stride, "aal": bool(aal_hint),
+                "param": f"{name}.w",
+            })
+            self.qi += 1
+        elif self.mode in ("fp", "calib"):
+            if self.mode == "calib":
+                self._record_act(x)
+            self.qi += 1
+        else:
+            spec = self.layer_specs[self.qi]
+            x = self._act_quant(x)
+            wq = self._weight_quant(w)
+            a, b = self._lora_slices(spec)
+            s = self.sel[self.qi]  # [H] one-hot
+            a_sel = jnp.einsum("h,hrk->rk", s, a)
+            b_sel = jnp.einsum("h,hnr->nr", s, b)
+            delta = (b_sel @ a_sel).reshape(cout, k, k, cin)
+            delta = jnp.transpose(delta, (1, 2, 3, 0)) * (1.0 / cfg.lora_rank)
+            w = wq + delta
+            self.qi += 1
+        if self.mode not in ("qtrain", "serve"):
+            w = w if isinstance(w, jnp.ndarray) else jnp.asarray(w)
+        y = jax.lax.conv_general_dilated(
+            x, w, window_strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return y + bias
+
+    def linear(self, name, x, cout, aal_hint=False):
+        """Quantized dense layer; serve mode uses the fused Pallas kernel."""
+        cfg = self.cfg
+        cin = x.shape[-1]
+        w = self._make(f"{name}.w", (cin, cout), "he")
+        bias = self._make(f"{name}.b", (cout,), "zero")
+        if self.mode == "init":
+            self.layer_specs.append({
+                "name": name, "kind": "linear", "fan_in": cin, "fan_out": cout,
+                "k": 1, "stride": 1, "aal": bool(aal_hint), "param": f"{name}.w",
+            })
+            self.qi += 1
+            return x @ w + bias
+        if self.mode in ("fp", "calib"):
+            if self.mode == "calib":
+                self._record_act(x)
+            self.qi += 1
+            return x @ w + bias
+        spec = self.layer_specs[self.qi]
+        row = self._qrow()
+        x = self._act_quant(x)
+        a, b = self._lora_slices(spec)
+        s = self.sel[self.qi]
+        a_sel = jnp.einsum("h,hrk->rk", s, a)
+        b_sel = jnp.einsum("h,hnr->nr", s, b)
+        self.qi += 1
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, cin).T  # [K, B*]
+        if self.mode == "serve":
+            y = lora_qmatmul.lora_qmatmul_pallas(
+                w.T, x2, a_sel, b_sel, 1.0 / cfg.lora_rank, row[0], row[1], row[2])
+        else:
+            wq = ref.weight_qdq_ste(w, row[0], row[1], row[2])
+            y = (wq.T + (b_sel @ a_sel) * (1.0 / cfg.lora_rank)) @ x2
+        return y.T.reshape(*lead, cout) + bias
+
+    def gn(self, name, x):
+        scale = self._make(f"{name}.g", (x.shape[-1],), "one")
+        bias = self._make(f"{name}.b", (x.shape[-1],), "zero")
+        return group_norm(x, scale, bias, self.cfg.groups)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _resblock(ctx, name, x, temb, cout):
+    cin = x.shape[-1]
+    h = ctx.gn(f"{name}.gn1", x)
+    h = silu(h)
+    h = ctx.conv(f"{name}.conv1", h, cout, aal_hint=True)
+    tp = ctx.linear(f"{name}.temb", silu(temb), cout, aal_hint=True)
+    h = h + tp[:, None, None, :]
+    h = ctx.gn(f"{name}.gn2", h)
+    h = silu(h)
+    h = ctx.conv(f"{name}.conv2", h, cout, aal_hint=True)
+    if cin != cout:
+        x = ctx.conv(f"{name}.skip", x, cout, k=1)
+    return x + h
+
+
+def _attention(ctx, name, x):
+    b, h, w, c = x.shape
+    y = ctx.gn(f"{name}.gn", x)
+    y = y.reshape(b, h * w, c)
+    qkv = ctx.linear(f"{name}.qkv", y, 3 * c)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    att = jax.nn.softmax(q @ jnp.transpose(k, (0, 2, 1)) / math.sqrt(c), axis=-1)
+    y = att @ v
+    y = ctx.linear(f"{name}.proj", y, c)
+    return x + y.reshape(b, h, w, c)
+
+
+def unet(ctx, x, t, cond):
+    """The denoiser eps_theta(x_t, t[, cond]) shared by every mode."""
+    cfg = ctx.cfg
+    c0 = cfg.base_ch
+    c1 = cfg.base_ch * cfg.ch_mult[1]
+
+    temb = sinusoidal_temb(t, cfg.temb_dim)
+    temb = ctx.linear("temb.lin1", temb, cfg.temb_dim * 2, aal_hint=False)
+    temb = ctx.linear("temb.lin2", silu(temb), cfg.temb_dim, aal_hint=True)
+    if cfg.n_classes > 0:
+        table = ctx._make("cls.emb", (cfg.n_classes, cfg.temb_dim), "small")
+        onehot = jax.nn.one_hot(jnp.asarray(cond, jnp.int32), cfg.n_classes)
+        temb = temb + onehot @ table
+
+    h0 = ctx.conv("conv_in", x, c0)                    # [HW, c0] (8-bit layer)
+    h1 = _resblock(ctx, "res1", h0, temb, c0)
+    d1 = ctx.conv("down", silu(h1), c1, stride=2, aal_hint=True)
+    h2 = _resblock(ctx, "res2", d1, temb, c1)
+    m = _resblock(ctx, "mid", h2, temb, c1)
+    m = _attention(ctx, "attn", m)
+    u = jnp.concatenate([m, h2], axis=-1)
+    u = _resblock(ctx, "res3", u, temb, c1)
+    u = jnp.repeat(jnp.repeat(u, 2, axis=1), 2, axis=2)  # nearest upsample
+    u = ctx.conv("up", silu(u), c0, aal_hint=True)
+    u2 = jnp.concatenate([u, h1], axis=-1)
+    u2 = _resblock(ctx, "res4", u2, temb, c0)
+    out = ctx.gn("out.gn", u2)
+    out = ctx.conv("conv_out", silu(out), cfg.in_ch, zero_init=True,
+                   aal_hint=True)                       # (8-bit layer)
+    return out
+
+
+def init_model(cfg, seed=0):
+    """Build params + specs by tracing the model once in init mode."""
+    rng = np.random.default_rng(seed)
+    ctx = Ctx(cfg, "init", rng=rng)
+    x = jnp.zeros((1, cfg.img_hw, cfg.img_hw, cfg.in_ch), jnp.float32)
+    t = jnp.zeros((1,), jnp.float32)
+    cond = jnp.zeros((1,), jnp.float32)
+    unet(ctx, x, t, cond)
+    # assign LoRA offsets in layer order
+    off = 0
+    H, r = cfg.lora_hub, cfg.lora_rank
+    for spec in ctx.layer_specs:
+        spec["lora_offset"] = off
+        off += H * r * spec["fan_in"] + H * spec["fan_out"] * r
+    flat = np.concatenate([ctx.params[s["name"]].reshape(-1)
+                           for s in ctx.param_specs])
+    meta = {
+        "param_specs": ctx.param_specs,
+        "layer_specs": ctx.layer_specs,
+        "n_params": int(flat.size),
+        "n_layers": len(ctx.layer_specs),
+        "lora_size": int(off),
+        "router_size": cfg.temb_dim * len(ctx.layer_specs) * H
+                       + len(ctx.layer_specs) * H,
+    }
+    return flat, meta
+
+
+def apply_fp(cfg, meta, flat, x, t, cond):
+    ctx = Ctx(cfg, "fp", flat=flat, param_specs=meta["param_specs"],
+              layer_specs=meta["layer_specs"])
+    return unet(ctx, x, t, cond)
+
+
+def apply_calib(cfg, meta, flat, x, t, cond, samples=512):
+    ctx = Ctx(cfg, "calib", flat=flat, param_specs=meta["param_specs"],
+              layer_specs=meta["layer_specs"])
+    ctx.act_samples = samples
+    eps = unet(ctx, x, t, cond)
+    return eps, jnp.stack(ctx.acts), jnp.stack(ctx.minmax)
+
+
+def apply_quant(cfg, meta, flat, qparams, lora, sel, x, t, cond, mode="serve"):
+    ctx = Ctx(cfg, mode, flat=flat, param_specs=meta["param_specs"],
+              layer_specs=meta["layer_specs"], qparams=qparams, lora=lora,
+              sel=sel)
+    return unet(ctx, x, t, cond)

@@ -1,0 +1,88 @@
+"""L2: TALoRA router + training-step graphs (pretrain / fine-tune).
+
+The fine-tune graph is where the paper's three techniques compose:
+  * MSFP quantizers (qparams rows, searched in Rust) applied with STE,
+  * TALoRA: per-layer LoRA hub + the timestep-aware router, trained jointly
+    (hard selection forward, straight-through softmax backward),
+  * DFA: the denoising-factor gamma_t (computed by the Rust schedule,
+    paper Eq. 4) scales the eps-MSE loss (paper Eq. 9).
+
+Rust executes these graphs via PJRT and owns the Adam state; each graph is a
+pure function returning (loss, grads...).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+def router_select(cfg, n_layers, router_flat, t, hub_mask):
+    """Timestep-aware router: t -> one-hot LoRA selection per layer.
+
+    router_flat packs W [temb_dim, L*H] then b [L*H]. Forward uses the hard
+    argmax one-hot; backward flows through the per-layer softmax (STE, [1]
+    in the paper). hub_mask[H] in {0,1} disables hub slots (h=2 runs mask
+    slots 2,3 of the H=4 hub). Mirrored for inference by
+    rust/src/lora/router.rs (golden-tested).
+    """
+    H = cfg.lora_hub
+    d = cfg.temb_dim
+    w = router_flat[:d * n_layers * H].reshape(d, n_layers * H)
+    b = router_flat[d * n_layers * H:]
+    temb = M.sinusoidal_temb(jnp.asarray(t, jnp.float32), d)
+    logits = (temb @ w + b).reshape(n_layers, H)
+    logits = logits + (hub_mask - 1.0) * 1e9
+    soft = jax.nn.softmax(logits, axis=-1)
+    hard = jax.nn.one_hot(jnp.argmax(logits, axis=-1), H)
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+def pretrain_loss(cfg, meta, flat, x0, noise, t, abar, cond):
+    """DDPM eps-prediction loss (paper Eq. 1): x_t built in-graph."""
+    a = jnp.sqrt(abar)[:, None, None, None]
+    s = jnp.sqrt(1.0 - abar)[:, None, None, None]
+    x_t = a * x0 + s * noise
+    eps = M.apply_fp(cfg, meta, flat, x_t, t, cond)
+    return jnp.mean((eps - noise) ** 2)
+
+
+def make_pretrain_step(cfg, meta):
+    def step(flat, x0, noise, t, abar, cond):
+        loss, g = jax.value_and_grad(
+            lambda f: pretrain_loss(cfg, meta, f, x0, noise, t, abar, cond)
+        )(flat)
+        return loss, g
+    return step
+
+
+def finetune_loss(cfg, meta, flat, qparams, lora, router, hub_mask,
+                  x_t, t, gamma, eps_target, cond):
+    """DFA-aligned fine-tune loss (paper Eq. 7 + Eq. 9).
+
+    The whole batch shares one timestep t (trajectory fine-tuning walks the
+    denoising process step by step), so the router picks one LoRA per layer
+    per step — exactly the TALoRA inference regime.
+    """
+    n_layers = meta["n_layers"]
+    sel = router_select(cfg, n_layers, router, t, hub_mask)
+    tb = jnp.full((x_t.shape[0],), t, jnp.float32)
+    eps_q = M.apply_quant(cfg, meta, flat, qparams, lora, sel, x_t, tb, cond,
+                          mode="qtrain")
+    return gamma * jnp.mean((eps_q - eps_target) ** 2), sel
+
+
+def make_finetune_step(cfg, meta):
+    def step(flat, qparams, lora, router, hub_mask, x_t, t, gamma,
+             eps_target, cond):
+        def lossfn(lo, ro):
+            loss, sel = finetune_loss(cfg, meta, flat, qparams, lo, ro,
+                                      hub_mask, x_t, t, gamma, eps_target,
+                                      cond)
+            return loss, sel
+        (loss, sel), (g_lora, g_router) = jax.value_and_grad(
+            lossfn, argnums=(0, 1), has_aux=True)(lora, router)
+        return loss, g_lora, g_router, sel
+    return step

@@ -1,0 +1,164 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes, formats, maxvals and zero points; the kernels and
+the reference must agree to f32 ulp-level (the FMA-contraction of the final
+`q*a + zp` can differ by 1 ulp between interpret and eager paths).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, fp_quant, lora_qmatmul
+
+TOL = 5e-6
+
+
+def _close(a, b, tol=TOL):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# fixed-case agreement
+# ---------------------------------------------------------------------------
+
+FORMATS = [
+    (1.0, 2, 1, 0.0), (1.0, 1, 2, 0.0), (1.0, 3, 0, 0.0), (1.0, 0, 3, 0.0),
+    (0.0, 2, 2, -0.25), (0.0, 3, 1, -0.1), (0.0, 0, 4, -0.3),
+    (1.0, -1, 4, 0.0), (0.0, -1, 4, -0.25),  # INT dispatch rows
+    (1.0, -1, 8, 0.0), (0.0, -1, 8, -0.1),
+]
+
+
+@pytest.mark.parametrize("sign,e,m,zp", FORMATS)
+def test_pallas_matches_ref(sign, e, m, zp):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(33, 17)).astype(np.float32) * 3)
+    r = ref.mixup_qdq(x, sign, 2.7, e, m, zp)
+    p = fp_quant.mixup_qdq_pallas(x, sign, 2.7, e, m, zp)
+    _close(r, p)
+
+
+def test_signed_wrapper_matches():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    _close(fp_quant.signed_qdq_pallas(x, 1.5, 2, 1),
+           ref.fp_qdq_signed(x, 1.5, 2, 1))
+
+
+def test_unsigned_wrapper_matches():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(np.abs(rng.normal(size=(64,)).astype(np.float32)) - 0.2)
+    _close(fp_quant.unsigned_qdq_pallas(x, 1.5, 2, 2, -0.2),
+           ref.fp_qdq_unsigned(x, 1.5, 2, 2, -0.2))
+
+
+def test_lora_qmatmul_matches_ref():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(50, 24)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(24, 8)).astype(np.float32))
+    a = jnp.asarray(rng.normal(size=(4, 24)).astype(np.float32) * 0.1)
+    b = jnp.asarray(rng.normal(size=(50, 4)).astype(np.float32) * 0.1)
+    r = ref.lora_qmatmul_ref(w, x, a, b, 0.5, 1.9, 2, 1)
+    p = lora_qmatmul.lora_qmatmul_pallas(w, x, a, b, 0.5, 1.9, 2, 1)
+    _close(r, p, tol=1e-4)  # matmul reassociation
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 700),
+    sign=st.sampled_from([0.0, 1.0]),
+    e=st.integers(0, 4),
+    m=st.integers(1, 5),
+    maxval=st.floats(0.05, 50.0),
+    zp=st.floats(-0.3, 0.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sweep_shapes_formats(n, sign, e, m, maxval, zp, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=n) * maxval).astype(np.float32))
+    r = ref.mixup_qdq(x, sign, maxval, e, m, zp)
+    p = fp_quant.mixup_qdq_pallas(x, sign, maxval, e, m, zp)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p),
+                               atol=max(TOL, 1e-6 * maxval), rtol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    e=st.integers(0, 3), m=st.integers(1, 4),
+    maxval=st.floats(0.1, 10.0), seed=st.integers(0, 2**31 - 1),
+)
+def test_signed_qdq_invariants(e, m, maxval, seed):
+    """Grid invariants: idempotence, bound, symmetry."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=256) * maxval).astype(np.float32))
+    q = ref.fp_qdq_signed(x, maxval, e, m)
+    q2 = ref.fp_qdq_signed(q, maxval, e, m)
+    _close(q, q2, tol=1e-6 * max(1.0, maxval))          # idempotent
+    assert float(jnp.max(jnp.abs(q))) <= maxval * (1 + 1e-6)  # bounded
+    qn = ref.fp_qdq_signed(-x, maxval, e, m)
+    _close(q, -qn, tol=1e-6 * max(1.0, maxval))         # odd symmetry
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    e=st.integers(0, 3), m=st.integers(1, 4),
+    maxval=st.floats(0.1, 10.0), zp=st.floats(-0.3, 0.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_unsigned_qdq_invariants(e, m, maxval, zp, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=256) * maxval).astype(np.float32))
+    q = ref.fp_qdq_unsigned(x, maxval, e, m, zp)
+    q2 = ref.fp_qdq_unsigned(q, maxval, e, m, zp)
+    _close(q, q2, tol=1e-6 * max(1.0, maxval))
+    assert float(jnp.min(q)) >= zp - 1e-6               # floor at zp
+    assert float(jnp.max(q)) <= maxval + zp + 1e-5 * maxval
+
+
+def test_quantization_error_bounded_by_halfstep():
+    """In the top binade the error is <= step/2 = 2^-m * maxval/(2-2^-m)/2."""
+    m = 2
+    maxval = 1.0
+    x = jnp.linspace(0.5, 1.0, 101).astype(jnp.float32) * maxval
+    q = ref.fp_qdq_signed(x, maxval, 2, m)
+    a = maxval / (2 - 2.0 ** -m)
+    step_top = 2.0 ** -m * a
+    assert float(jnp.max(jnp.abs(q - x))) <= step_top / 2 + 1e-7
+
+
+def test_unsigned_beats_signed_on_silu_distribution():
+    """The paper's Observation 1 at 4 bits: unsigned+zp wins on AAL data."""
+    rng = np.random.default_rng(5)
+    z = rng.normal(size=20000).astype(np.float32) * 2.0
+    silu = z / (1.0 + np.exp(-z))  # SiLU output: asymmetric, min ~ -0.278
+    x = jnp.asarray(silu)
+    mx = float(np.max(silu))
+    # best signed 4-bit (e+m = 3) vs best unsigned-with-zp 4-bit (e+m = 4)
+    best_s = min(float(jnp.mean((ref.fp_qdq_signed(x, mx, e, 3 - e) - x) ** 2))
+                 for e in range(4))
+    best_u = min(float(jnp.mean(
+        (ref.fp_qdq_unsigned(x, mx + 0.278, e, 4 - e, -0.278) - x) ** 2))
+        for e in range(1, 5))
+    assert best_u < best_s
+
+
+def test_ste_gradient_is_identity():
+    x = jnp.asarray(np.random.default_rng(6).normal(size=32).astype(np.float32))
+    g = jax.grad(lambda t: jnp.sum(ref.mixup_qdq_ste(t, 1.0, 2.0, 2, 1, 0.0)))(x)
+    _close(g, jnp.ones_like(x))
+
+
+def test_int_dispatch_matches_int_ref():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=128).astype(np.float32))
+    _close(ref.mixup_qdq(x, 1.0, 2.0, -1, 4, 0.0), ref.int_qdq_sym(x, 2.0, 4))
+    _close(ref.mixup_qdq(x, 0.0, 2.0, -1, 4, -0.5),
+           ref.int_qdq_asym(x, -0.5, 2.0, 4))
+    _close(ref.weight_qdq(x, 2.0, -1, 4), ref.int_qdq_sym(x, 2.0, 4))

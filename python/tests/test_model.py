@@ -1,0 +1,166 @@
+"""L2 model tests: shapes, mode agreement, gradient flow, router STE."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import quantized as Q
+
+
+@pytest.fixture(scope="module")
+def ddim16():
+    cfg = M.MODELS["ddim16"]
+    flat, meta = M.init_model(cfg, seed=3)
+    # break the zero-init of conv_out so quantization effects are visible
+    rng = np.random.default_rng(4)
+    flat = flat + rng.normal(size=flat.shape).astype(np.float32) * 0.02
+    return cfg, jnp.asarray(flat), meta
+
+
+def _inputs(cfg, b, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, cfg.img_hw, cfg.img_hw, cfg.in_ch))
+                    .astype(np.float32))
+    t = jnp.asarray(rng.integers(0, 100, size=b).astype(np.float32))
+    cond = jnp.zeros((b,), jnp.float32)
+    return x, t, cond
+
+
+def _qparams(meta, wbits=4, abits=4):
+    L = meta["n_layers"]
+    qp = np.zeros((L, 8), np.float32)
+    qp[:, 0] = 2.0; qp[:, 1] = 2; qp[:, 2] = wbits - 3
+    qp[:, 3] = 1.0; qp[:, 4] = 6.0; qp[:, 5] = 2; qp[:, 6] = abits - 1
+    qp[:, 7] = -0.2
+    return jnp.asarray(qp)
+
+
+def test_fp_forward_shape(ddim16):
+    cfg, flat, meta = ddim16
+    x, t, cond = _inputs(cfg, 2)
+    eps = M.apply_fp(cfg, meta, flat, x, t, cond)
+    assert eps.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(eps)))
+
+
+def test_param_count_consistency(ddim16):
+    cfg, flat, meta = ddim16
+    assert flat.size == meta["n_params"]
+    assert meta["n_params"] == sum(
+        int(np.prod(s["shape"])) for s in meta["param_specs"])
+
+
+def test_layer_specs_have_lora_offsets(ddim16):
+    cfg, flat, meta = ddim16
+    offs = [s["lora_offset"] for s in meta["layer_specs"]]
+    assert offs == sorted(offs)
+    H, r = cfg.lora_hub, cfg.lora_rank
+    last = meta["layer_specs"][-1]
+    end = last["lora_offset"] + H * r * last["fan_in"] + H * last["fan_out"] * r
+    assert end == meta["lora_size"]
+
+
+def test_qtrain_serve_agree(ddim16):
+    """The STE reference path and the Pallas serving path must match."""
+    cfg, flat, meta = ddim16
+    x, t, cond = _inputs(cfg, 1)
+    qp = _qparams(meta)
+    lora = jnp.zeros((meta["lora_size"],))
+    sel = jnp.tile(jnp.eye(cfg.lora_hub)[0], (meta["n_layers"], 1))
+    a = M.apply_quant(cfg, meta, flat, qp, lora, sel, x, t, cond, mode="qtrain")
+    b = M.apply_quant(cfg, meta, flat, qp, lora, sel, x, t, cond, mode="serve")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_quantization_changes_output(ddim16):
+    cfg, flat, meta = ddim16
+    x, t, cond = _inputs(cfg, 1)
+    qp = _qparams(meta, 4, 4)
+    lora = jnp.zeros((meta["lora_size"],))
+    sel = jnp.tile(jnp.eye(cfg.lora_hub)[0], (meta["n_layers"], 1))
+    eq = M.apply_quant(cfg, meta, flat, qp, lora, sel, x, t, cond, mode="qtrain")
+    ef = M.apply_fp(cfg, meta, flat, x, t, cond)
+    assert float(jnp.max(jnp.abs(eq - ef))) > 1e-5
+
+
+def test_calib_outputs(ddim16):
+    cfg, flat, meta = ddim16
+    x, t, cond = _inputs(cfg, 2)
+    eps, acts, mm = M.apply_calib(cfg, meta, flat, x, t, cond, samples=128)
+    L = meta["n_layers"]
+    assert acts.shape == (L, 128) and mm.shape == (L, 2)
+    assert bool(jnp.all(mm[:, 0] <= mm[:, 1]))
+
+
+def test_finetune_grads_flow(ddim16):
+    cfg, flat, meta = ddim16
+    x, t, cond = _inputs(cfg, 2)
+    qp = _qparams(meta)
+    rng = np.random.default_rng(9)
+    lora = jnp.asarray(rng.normal(size=meta["lora_size"]).astype(np.float32)
+                       * 0.01)
+    router = jnp.asarray(rng.normal(size=meta["router_size"])
+                         .astype(np.float32) * 0.1)
+    hub = jnp.ones((cfg.lora_hub,))
+    target = M.apply_fp(cfg, meta, flat, x,
+                        jnp.full((2,), 37.0), cond)
+    step = Q.make_finetune_step(cfg, meta)
+    loss, gl, gr, sel = step(flat, qp, lora, router, hub, x, 37.0, 1.3,
+                             target, cond)
+    assert float(loss) > 0
+    assert float(jnp.abs(gl).sum()) > 0, "LoRA grads must flow"
+    assert float(jnp.abs(gr).sum()) > 0, "router grads must flow (STE)"
+    # sel rows are one-hot
+    assert np.allclose(np.asarray(sel).sum(-1), 1.0)
+    assert np.allclose(np.sort(np.asarray(sel), -1)[:, :-1], 0.0)
+
+
+def test_router_hub_mask(ddim16):
+    cfg, flat, meta = ddim16
+    rng = np.random.default_rng(10)
+    router = jnp.asarray(rng.normal(size=meta["router_size"])
+                         .astype(np.float32))
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    for t in (0.0, 13.0, 99.0):
+        sel = Q.router_select(cfg, meta["n_layers"], router, t, mask)
+        idx = np.argmax(np.asarray(sel), -1)
+        assert (idx < 2).all(), "masked hub slots must never be selected"
+
+
+def test_pretrain_step_decreases_loss(ddim16):
+    cfg, flat, meta = ddim16
+    rng = np.random.default_rng(11)
+    b = 4
+    x0 = jnp.asarray(rng.normal(size=(b, cfg.img_hw, cfg.img_hw, cfg.in_ch))
+                     .astype(np.float32))
+    noise = jnp.asarray(rng.normal(size=x0.shape).astype(np.float32))
+    t = jnp.asarray([10.0, 30.0, 60.0, 90.0])
+    abar = jnp.asarray([0.9, 0.6, 0.3, 0.1])
+    cond = jnp.zeros((b,))
+    step = jax.jit(Q.make_pretrain_step(cfg, meta))
+    f = flat
+    l0, g = step(f, x0, noise, t, abar, cond)
+    f = f - 1e-3 * g  # plain SGD probe
+    l1, _ = step(f, x0, noise, t, abar, cond)
+    assert float(l1) < float(l0)
+
+
+def test_conditional_model_uses_cond():
+    cfg = M.MODELS["ldm8c"]
+    flat, meta = M.init_model(cfg, seed=5)
+    rng = np.random.default_rng(6)
+    flat = jnp.asarray(flat + rng.normal(size=flat.shape).astype(np.float32)
+                       * 0.02)
+    x, t, _ = _inputs(cfg, 2, seed=7)
+    e0 = M.apply_fp(cfg, meta, flat, x, t, jnp.asarray([0.0, 0.0]))
+    e1 = M.apply_fp(cfg, meta, flat, x, t, jnp.asarray([3.0, 3.0]))
+    assert float(jnp.max(jnp.abs(e0 - e1))) > 1e-6
+
+
+def test_sinusoidal_temb_props():
+    e = M.sinusoidal_temb(jnp.asarray([0.0, 5.0, 99.0]), 64)
+    assert e.shape == (3, 64)
+    assert np.allclose(np.asarray(e[0, :32]), 0.0)      # sin(0) = 0
+    assert np.allclose(np.asarray(e[0, 32:]), 1.0)      # cos(0) = 1

@@ -1,0 +1,24 @@
+//! Bench: regenerate Figures 3, 6, 7 and 9 (the fine-tuning figures) —
+//! DFA loss alignment, sample grids across bit-widths, and the router's
+//! LoRA-allocation distributions at h=2 and h=4.
+use msfp::config::Scale;
+use msfp::data::Corpus;
+use msfp::exp::{figures, Report};
+use msfp::pipeline::Pipeline;
+
+fn main() {
+    let dir = Pipeline::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP fig_finetune_analysis: artifacts not built");
+        return;
+    }
+    let pl = Pipeline::new(&dir, Scale::from_env()).unwrap();
+    let report = Report::new(&pl.runs_dir).unwrap();
+    let p = pl.prepare(Corpus::CelebaSyn).unwrap();
+    let t0 = std::time::Instant::now();
+    figures::fig3(&pl, &report, &p).unwrap();
+    figures::fig6(&pl, &report, &p).unwrap();
+    figures::fig7_9(&pl, &report, &p, 2).unwrap();
+    figures::fig7_9(&pl, &report, &p, 4).unwrap();
+    println!("fig_finetune_analysis done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate Figures 1, 2, 4 and 8 (the quantizer-analysis
+//! figures) — calibration histograms, bit-width capacity curves, the
+//! four-strategy AAL comparison, and weight histograms.
+use msfp::config::Scale;
+use msfp::data::Corpus;
+use msfp::exp::{figures, Report};
+use msfp::pipeline::Pipeline;
+
+fn main() {
+    let dir = Pipeline::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP fig_quant_analysis: artifacts not built");
+        return;
+    }
+    let pl = Pipeline::new(&dir, Scale::from_env()).unwrap();
+    let report = Report::new(&pl.runs_dir).unwrap();
+    let p = pl.prepare(Corpus::CelebaSyn).unwrap();
+    let t0 = std::time::Instant::now();
+    figures::fig1(&pl, &report, &p).unwrap();
+    figures::fig2(&pl, &report, &p).unwrap();
+    let (improved, total) = figures::fig4(&pl, &report, &p, 4).unwrap();
+    figures::fig8(&pl, &report, &p).unwrap();
+    println!(
+        "fig_quant_analysis done in {:.1}s (fig4: unsigned+zp wins {improved}/{total} AALs)",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,78 @@
+//! Perf A/B (L1 structural): compare quantized-eval latency across kernel
+//! block shapes. Pass an alternative artifacts dir with the re-lowered
+//! graph via MSFP_AB_DIR; the baseline comes from ./artifacts.
+use std::sync::Arc;
+use std::time::Instant;
+
+use msfp::lora::hub::AllocStrategy;
+use msfp::lora::Router;
+use msfp::model::manifest::Manifest;
+use msfp::model::ParamStore;
+use msfp::pipeline::Pipeline;
+use msfp::runtime::Engine;
+use msfp::util::rng::Rng;
+
+fn measure(dir: &std::path::Path, file: &str, label: &str) {
+    let base = Pipeline::default_artifacts_dir();
+    let m = Manifest::load(&base).unwrap();
+    let info = m.model("ddim16").unwrap().clone();
+    let engine = Arc::new(Engine::new(dir).unwrap());
+    // copy manifest deps from base dir when measuring the AB dir
+    let exe = match engine.load(file) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("SKIP {label}: {e:#}");
+            return;
+        }
+    };
+    let params = ParamStore::load_init(&info, &base).unwrap().flat;
+    let mut rng = Rng::new(1);
+    let b = 8usize;
+    let mut qp = Vec::new();
+    for _ in 0..info.n_layers {
+        qp.extend_from_slice(&[1.0, 2.0, 1.0, 1.0, 4.0, 2.0, 1.0, -0.2]);
+    }
+    let router = Router::init(&info, &mut rng);
+    let _ = AllocStrategy::Learned;
+    let sel = router.selection_onehot(5.0, &[1.0; 4]);
+    let x = vec![0.2f32; info.x_size(b)];
+    let t = vec![5.0f32; b];
+    let cond = vec![0.0f32; b];
+    let hw = info.cfg.img_hw as i64;
+    let l = info.n_layers as i64;
+    let lora = vec![0.0f32; info.lora_size];
+    let run = || {
+        exe.run(&[
+            (&params[..], &[params.len() as i64]),
+            (&qp[..], &[l, 8]),
+            (&lora[..], &[lora.len() as i64]),
+            (&sel[..], &[l, 4]),
+            (&x[..], &[b as i64, hw, hw, info.cfg.in_ch as i64]),
+            (&t[..], &[b as i64]),
+            (&cond[..], &[b as i64]),
+        ])
+        .unwrap()
+    };
+    run(); // warmup
+    let n = 12;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        run();
+    }
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+    println!("{label}: {ms:.2} ms/eval (b=8)");
+}
+
+fn main() {
+    let base = Pipeline::default_artifacts_dir();
+    if !base.join("manifest.json").exists() {
+        println!("SKIP perf_l1_blocks: artifacts not built");
+        return;
+    }
+    measure(&base, "ddim16_q_b8.hlo.txt", "BLOCK_ROWS=8 (baseline)");
+    if let Ok(ab) = std::env::var("MSFP_AB_DIR") {
+        measure(std::path::Path::new(&ab), "ddim16_q_b8.hlo.txt", "BLOCK_ROWS=64 (candidate)");
+    } else {
+        println!("set MSFP_AB_DIR=<dir> to measure a re-lowered candidate");
+    }
+}

@@ -1,0 +1,114 @@
+//! Perf bench (§Perf headline): end-to-end serving throughput/latency by
+//! batch size, quantized-vs-FP step latency, and coordinator overhead.
+use std::sync::Arc;
+use std::time::Instant;
+
+use msfp::coordinator::{self, Request, ServeMode, ServerCfg};
+use msfp::lora::hub::AllocStrategy;
+use msfp::lora::Router;
+use msfp::model::manifest::Manifest;
+use msfp::model::ParamStore;
+use msfp::pipeline::Pipeline;
+use msfp::runtime::{Denoiser, Engine, QuantState};
+use msfp::schedule::Schedule;
+use msfp::util::rng::Rng;
+
+fn main() {
+    let dir = Pipeline::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP perf_serving: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(&dir).unwrap();
+    let info = m.model("ddim16").unwrap().clone();
+    let engine = Arc::new(Engine::new(&dir).unwrap());
+    let den = Arc::new(Denoiser::new(Arc::clone(&engine), &info).unwrap());
+    let params = Arc::new(ParamStore::load_init(&info, &dir).unwrap().flat);
+    let sched = Schedule::linear(100);
+    let mut rng = Rng::new(5);
+
+    // --- raw step latency by batch class (fp vs quantized) ----------------
+    let mut qp = Vec::new();
+    for _ in 0..info.n_layers {
+        qp.extend_from_slice(&[1.0, 2.0, 1.0, 1.0, 4.0, 2.0, 1.0, -0.2]);
+    }
+    let qs = QuantState {
+        qparams: qp,
+        lora: vec![0.0; info.lora_size],
+        router: Router::init(&info, &mut rng),
+        hub_mask: vec![1.0, 1.0, 0.0, 0.0],
+        strategy: AllocStrategy::Learned,
+        t_total: 100,
+    };
+    println!("\n-- per-eval latency by batch class (after warmup) --");
+    for b in [1usize, 2, 4, 8] {
+        let x = vec![0.2f32; info.x_size(b)];
+        let cond = vec![0.0; b];
+        let t = vec![5.0f32; b];
+        // warmup (compile)
+        den.eps_fp(&params, &x, &t, &cond).unwrap();
+        den.eps_q(&params, &qs, &x, 5.0, &cond, &mut rng).unwrap();
+        let n = 10;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            den.eps_fp(&params, &x, &t, &cond).unwrap();
+        }
+        let fp_ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            den.eps_q(&params, &qs, &x, 5.0, &cond, &mut rng).unwrap();
+        }
+        let q_ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+        println!(
+            "  b={b}: fp {fp_ms:8.2} ms/eval ({:6.1} img/s)   q {q_ms:8.2} ms/eval ({:6.1} img/s)   q/fp {:.2}x",
+            b as f64 / (fp_ms / 1e3),
+            b as f64 / (q_ms / 1e3),
+            q_ms / fp_ms
+        );
+    }
+
+    // --- serving throughput: sequential vs batched coordinator -------------
+    println!("\n-- coordinator throughput (16 requests x 2 images x 6 steps, quantized) --");
+    {
+        let label = "batched";
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            sched.clone(),
+            Arc::clone(&params),
+            ServerCfg { mode: ServeMode::Quant(qs.clone()), decode_latents: false, seed: 1 },
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                let mut r = Request::new(0, 2, 6);
+                r.seed = i;
+                handle.submit(r)
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = handle.shutdown();
+        println!("  {label}: {} ({wall:.2}s wall)", m.report());
+    }
+
+    // sequential baseline: one request at a time
+    let handle = coordinator::spawn(
+        Arc::clone(&den),
+        info.clone(),
+        sched.clone(),
+        Arc::clone(&params),
+        ServerCfg { mode: ServeMode::Quant(qs.clone()), decode_latents: false, seed: 1 },
+    );
+    let t0 = Instant::now();
+    for i in 0..16 {
+        let mut r = Request::new(0, 2, 6);
+        r.seed = i;
+        handle.submit(r).recv().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = handle.shutdown();
+    println!("  sequential: {} ({wall:.2}s wall)", m.report());
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate paper Table 2 (unconditional generation).
+//! The full three-corpus sweep is heavy; by default this runs the cifar-syn
+//! column and says so — set MSFP_BENCH_HEAVY=1 for all three corpora.
+use msfp::config::Scale;
+use msfp::data::Corpus;
+use msfp::exp::{tables, Report};
+use msfp::pipeline::Pipeline;
+
+fn main() {
+    let dir = Pipeline::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP table2: artifacts not built (make artifacts)");
+        return;
+    }
+    let heavy = std::env::var("MSFP_BENCH_HEAVY").is_ok();
+    let corpora: &[Corpus] = if heavy {
+        &[Corpus::CifarSyn, Corpus::BedroomSyn, Corpus::ChurchSyn]
+    } else {
+        println!("table2: running cifar-syn only (MSFP_BENCH_HEAVY=1 for all corpora)");
+        &[Corpus::CifarSyn]
+    };
+    let mut scale = Scale::from_env();
+    if !heavy {
+        scale.eval_n = 32;
+        scale.ref_n = 64;
+        scale.steps = 5;
+        scale.ft_epochs = 1;
+        scale.traj_samples = 4;
+        scale.calib_rounds = 2;
+        println!("table2: REDUCED budget (eval_n=32, steps=5, 1 epoch)");
+    }
+    let pl = Pipeline::new(&dir, scale).unwrap();
+    let report = Report::new(&pl.runs_dir).unwrap();
+    let t0 = std::time::Instant::now();
+    tables::table2(&pl, &report, corpora).unwrap();
+    println!("table2 done in {:.1}s", t0.elapsed().as_secs_f64());
+}

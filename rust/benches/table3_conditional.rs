@@ -1,0 +1,32 @@
+//! Bench: regenerate paper Table 3 on the synthetic substrate.
+//! Runs at the env-selected scale (MSFP_SCALE=fast default; =full for the
+//! paper protocol). Reduced budgets are printed, never silent.
+use msfp::config::Scale;
+use msfp::exp::{tables, Report};
+use msfp::pipeline::Pipeline;
+
+fn main() {
+    let dir = Pipeline::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP table3_conditional: artifacts not built (make artifacts)");
+        return;
+    }
+    let mut scale = Scale::from_env();
+    if std::env::var("MSFP_BENCH_HEAVY").is_err() {
+        // reduced budget so the whole bench suite stays tractable; printed,
+        // never silent (MSFP_BENCH_HEAVY=1 for the env-selected scale)
+        scale.eval_n = 32;
+        scale.ref_n = 64;
+        scale.steps = 5;
+        scale.ft_epochs = 1;
+        scale.traj_samples = 4;
+        scale.calib_rounds = 2;
+        println!("table3_conditional: REDUCED budget (eval_n=32, steps=5, 1 epoch)");
+    }
+    println!("table3_conditional: scale = {scale:?}");
+    let pl = Pipeline::new(&dir, scale).unwrap();
+    let report = Report::new(&pl.runs_dir).unwrap();
+    let t0 = std::time::Instant::now();
+    tables::run_table(&pl, &report, "t3").unwrap();
+    println!("table3_conditional done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate paper Table 5 on the synthetic substrate.
+//! Runs at the env-selected scale (MSFP_SCALE=fast default; =full for the
+//! paper protocol). Reduced budgets are printed, never silent.
+use msfp::config::Scale;
+use msfp::exp::{tables, Report};
+use msfp::pipeline::Pipeline;
+
+fn main() {
+    let dir = Pipeline::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP table5_searchspace: artifacts not built (make artifacts)");
+        return;
+    }
+    let scale = Scale::from_env();
+    println!("table5_searchspace: scale = {scale:?}");
+    let pl = Pipeline::new(&dir, scale).unwrap();
+    let report = Report::new(&pl.runs_dir).unwrap();
+    let t0 = std::time::Instant::now();
+    tables::run_table(&pl, &report, "t5").unwrap();
+    println!("table5_searchspace done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate paper Table 8 on the synthetic substrate.
+//! Runs at the env-selected scale (MSFP_SCALE=fast default; =full for the
+//! paper protocol). Reduced budgets are printed, never silent.
+use msfp::config::Scale;
+use msfp::exp::{tables, Report};
+use msfp::pipeline::Pipeline;
+
+fn main() {
+    let dir = Pipeline::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP table8_rank_scaled: artifacts not built (make artifacts)");
+        return;
+    }
+    let scale = Scale::from_env();
+    println!("table8_rank_scaled: scale = {scale:?}");
+    let pl = Pipeline::new(&dir, scale).unwrap();
+    let report = Report::new(&pl.runs_dir).unwrap();
+    let t0 = std::time::Instant::now();
+    tables::run_table(&pl, &report, "t8").unwrap();
+    println!("table8_rank_scaled done in {:.1}s", t0.elapsed().as_secs_f64());
+}

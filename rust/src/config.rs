@@ -1,0 +1,193 @@
+//! Experiment configuration: method specs (the rows of the paper's tables)
+//! and scale presets (paper-scale vs CI-scale runs).
+
+use crate::lora::hub::AllocStrategy;
+use crate::quant::msfp::Method;
+use crate::train::FinetuneCfg;
+
+/// Scale knobs for a full experiment chain. `full` approximates the paper's
+/// protocol at this model scale; `fast` keeps CI and benches snappy.
+#[derive(Debug, Clone)]
+pub struct Scale {
+    pub pretrain_steps: usize,
+    pub traj_samples: usize,
+    pub ft_epochs: usize,
+    pub eval_n: usize,
+    pub ref_n: usize,
+    pub steps: usize,
+    pub calib_rounds: usize,
+}
+
+impl Scale {
+    pub fn full() -> Scale {
+        Scale {
+            pretrain_steps: 600,
+            traj_samples: 32,
+            ft_epochs: 6,
+            eval_n: 512,
+            ref_n: 512,
+            steps: 100,
+            calib_rounds: 8,
+        }
+    }
+
+    pub fn fast() -> Scale {
+        Scale {
+            pretrain_steps: 80,
+            traj_samples: 8,
+            ft_epochs: 2,
+            eval_n: 96,
+            ref_n: 192,
+            steps: 10,
+            calib_rounds: 3,
+        }
+    }
+
+    /// Middle preset: enough budget for discriminative tables in minutes.
+    pub fn mid() -> Scale {
+        Scale {
+            pretrain_steps: 400,
+            traj_samples: 16,
+            ft_epochs: 3,
+            eval_n: 128,
+            ref_n: 256,
+            steps: 20,
+            calib_rounds: 4,
+        }
+    }
+
+    /// Resolve from the MSFP_SCALE env var (default fast — experiments that
+    /// matter pass full/mid explicitly or set the env).
+    pub fn from_env() -> Scale {
+        match std::env::var("MSFP_SCALE").as_deref() {
+            Ok("full") => Scale::full(),
+            Ok("mid") => Scale::mid(),
+            _ => Scale::fast(),
+        }
+    }
+}
+
+/// One table row: how to initialize and (optionally) fine-tune a model.
+#[derive(Debug, Clone)]
+pub struct MethodSpec {
+    pub label: String,
+    /// None = full precision (no quantization at all)
+    pub method: Option<Method>,
+    pub wbits: i32,
+    pub abits: i32,
+    /// None = PTQ only (no fine-tuning)
+    pub finetune: Option<FinetuneCfg>,
+    pub alloc: AllocStrategy,
+    /// Table 11: keep skip-connection/up/down layers at high precision
+    pub partial: bool,
+}
+
+impl MethodSpec {
+    pub fn fp() -> MethodSpec {
+        MethodSpec {
+            label: "FP".into(),
+            method: None,
+            wbits: 32,
+            abits: 32,
+            finetune: None,
+            alloc: AllocStrategy::Single,
+            partial: false,
+        }
+    }
+
+    /// Ours: MSFP + TALoRA(h) + DFA.
+    pub fn ours(bits: i32, h: usize, epochs: usize) -> MethodSpec {
+        MethodSpec {
+            label: format!("Ours (h={h})"),
+            method: Some(Method::Msfp),
+            wbits: bits,
+            abits: bits,
+            finetune: Some(FinetuneCfg { epochs, h, dfa: true, ..Default::default() }),
+            alloc: AllocStrategy::Learned,
+            partial: false,
+        }
+    }
+
+    /// Q-Diffusion-like: MSE-searched INT PTQ, no fine-tuning.
+    pub fn qdiffusion_like(bits: i32) -> MethodSpec {
+        MethodSpec {
+            label: "Q-Diffusion-like".into(),
+            method: Some(Method::IntMse),
+            wbits: bits,
+            abits: bits,
+            finetune: None,
+            alloc: AllocStrategy::Single,
+            partial: false,
+        }
+    }
+
+    /// EDA-DM-like: INT PTQ with min-max calibration-reconstruction flavor.
+    pub fn eda_dm_like(bits: i32) -> MethodSpec {
+        MethodSpec {
+            label: "EDA-DM-like".into(),
+            method: Some(Method::IntMinMax),
+            wbits: bits,
+            abits: bits,
+            finetune: None,
+            alloc: AllocStrategy::Single,
+            partial: false,
+        }
+    }
+
+    /// EfficientDM-like: INT PTQ + single-LoRA fine-tuning.
+    pub fn efficientdm_like(bits: i32, epochs: usize) -> MethodSpec {
+        MethodSpec {
+            label: "EfficientDM-like".into(),
+            method: Some(Method::IntMse),
+            wbits: bits,
+            abits: bits,
+            finetune: Some(FinetuneCfg { epochs, h: 1, dfa: false, ..Default::default() }),
+            alloc: AllocStrategy::Single,
+            partial: false,
+        }
+    }
+
+    /// QuEST-like: INT PTQ + single-LoRA with activation-aware (min-max)
+    /// init.
+    pub fn quest_like(bits: i32, epochs: usize) -> MethodSpec {
+        MethodSpec {
+            label: "QuEST-like".into(),
+            method: Some(Method::IntMinMax),
+            wbits: bits,
+            abits: bits,
+            finetune: Some(FinetuneCfg { epochs, h: 1, dfa: false, ..Default::default() }),
+            alloc: AllocStrategy::Single,
+            partial: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_consistent() {
+        let f = Scale::full();
+        let q = Scale::fast();
+        assert!(f.eval_n > q.eval_n);
+        assert!(f.pretrain_steps > q.pretrain_steps);
+    }
+
+    #[test]
+    fn ours_spec_wires_talora_dfa() {
+        let s = MethodSpec::ours(4, 2, 3);
+        assert_eq!(s.wbits, 4);
+        let ft = s.finetune.unwrap();
+        assert!(ft.dfa);
+        assert_eq!(ft.h, 2);
+        assert_eq!(s.alloc, AllocStrategy::Learned);
+    }
+
+    #[test]
+    fn baselines_differ() {
+        assert_ne!(MethodSpec::qdiffusion_like(4).method, MethodSpec::eda_dm_like(4).method);
+        assert!(MethodSpec::efficientdm_like(4, 2).finetune.is_some());
+        assert!(MethodSpec::qdiffusion_like(4).finetune.is_none());
+    }
+}

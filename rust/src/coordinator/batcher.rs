@@ -1,0 +1,190 @@
+//! Step-level continuous batching policy (pure logic, unit-tested).
+//!
+//! Quantized serving constraint: one model evaluation shares a single
+//! timestep t (TALoRA routes per timestep), so only same-t evals can share
+//! a batch. Each scheduling round takes every pending evaluation ticket,
+//! groups by t, packs FIFO-greedily into the compiled batch-size classes,
+//! and returns the execution plan.
+
+/// One pending model evaluation: request `req` needs its `n` samples
+/// evaluated at timestep `t`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ticket {
+    pub req: usize,
+    pub t: f32,
+    pub n: usize,
+}
+
+/// A planned batch: same-t tickets packed to `class` slots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub t: f32,
+    pub class: usize,
+    pub tickets: Vec<Ticket>,
+}
+
+impl Batch {
+    pub fn used(&self) -> usize {
+        self.tickets.iter().map(|tk| tk.n).sum()
+    }
+
+    /// fill ratio = used slots / class size (batching efficiency metric)
+    pub fn fill(&self) -> f32 {
+        self.used() as f32 / self.class as f32
+    }
+}
+
+/// Pack tickets into batches. `classes` must be the ascending compiled
+/// batch sizes. Tickets larger than the max class are split.
+pub fn plan(tickets: &[Ticket], classes: &[usize]) -> Vec<Batch> {
+    assert!(!classes.is_empty());
+    let max = *classes.last().unwrap();
+    // split oversized tickets
+    let mut items: Vec<Ticket> = Vec::with_capacity(tickets.len());
+    for &tk in tickets {
+        let mut left = tk.n;
+        while left > 0 {
+            let take = left.min(max);
+            items.push(Ticket { req: tk.req, t: tk.t, n: take });
+            left -= take;
+        }
+    }
+    // group by t (exact bits; samplers produce identical t for identical
+    // phases)
+    let mut groups: Vec<(u32, Vec<Ticket>)> = Vec::new();
+    for tk in items {
+        let key = tk.t.to_bits();
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => v.push(tk),
+            None => groups.push((key, vec![tk])),
+        }
+    }
+    let mut out = Vec::new();
+    for (_, group) in groups {
+        let mut current: Vec<Ticket> = Vec::new();
+        let mut used = 0usize;
+        for tk in group {
+            if used + tk.n > max && used > 0 {
+                out.push(close_batch(std::mem::take(&mut current), classes));
+                used = 0;
+            }
+            used += tk.n;
+            current.push(tk);
+        }
+        if !current.is_empty() {
+            out.push(close_batch(current, classes));
+        }
+    }
+    out
+}
+
+fn close_batch(tickets: Vec<Ticket>, classes: &[usize]) -> Batch {
+    let used: usize = tickets.iter().map(|t| t.n).sum();
+    let class = *classes.iter().find(|&&c| c >= used).unwrap_or(classes.last().unwrap());
+    Batch { t: tickets[0].t, class, tickets }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    const CLASSES: &[usize] = &[1, 2, 4, 8];
+
+    #[test]
+    fn same_t_merges() {
+        let tickets =
+            vec![Ticket { req: 0, t: 5.0, n: 2 }, Ticket { req: 1, t: 5.0, n: 3 }];
+        let plan = plan(&tickets, CLASSES);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].class, 8);
+        assert_eq!(plan[0].used(), 5);
+    }
+
+    #[test]
+    fn different_t_never_merge() {
+        let tickets =
+            vec![Ticket { req: 0, t: 5.0, n: 1 }, Ticket { req: 1, t: 6.0, n: 1 }];
+        let plan = plan(&tickets, CLASSES);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].class, 1);
+    }
+
+    #[test]
+    fn oversized_request_splits() {
+        let tickets = vec![Ticket { req: 0, t: 2.0, n: 19 }];
+        let plan = plan(&tickets, CLASSES);
+        let total: usize = plan.iter().map(|b| b.used()).sum();
+        assert_eq!(total, 19);
+        assert!(plan.iter().all(|b| b.used() <= 8));
+        assert_eq!(plan.len(), 3); // 8 + 8 + 3
+    }
+
+    #[test]
+    fn class_is_smallest_fitting() {
+        let p3 = plan(&[Ticket { req: 0, t: 1.0, n: 3 }], CLASSES);
+        assert_eq!(p3[0].class, 4);
+        let p1 = plan(&[Ticket { req: 0, t: 1.0, n: 1 }], CLASSES);
+        assert_eq!(p1[0].class, 1);
+    }
+
+    #[test]
+    fn fifo_order_within_group() {
+        let tickets = vec![
+            Ticket { req: 7, t: 3.0, n: 4 },
+            Ticket { req: 8, t: 3.0, n: 4 },
+            Ticket { req: 9, t: 3.0, n: 4 },
+        ];
+        let plan = plan(&tickets, CLASSES);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].tickets[0].req, 7);
+        assert_eq!(plan[0].tickets[1].req, 8);
+        assert_eq!(plan[1].tickets[0].req, 9); // no starvation / reorder
+    }
+
+    #[test]
+    fn prop_no_ticket_lost_and_caps_respected() {
+        prop::check(
+            "batcher-conservation",
+            200,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(20);
+                (0..n)
+                    .map(|i| Ticket {
+                        req: i,
+                        t: rng.below(5) as f32,
+                        n: 1 + rng.below(12),
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |tickets| {
+                let batches = plan(tickets, CLASSES);
+                let total_in: usize = tickets.iter().map(|t| t.n).sum();
+                let total_out: usize = batches.iter().map(|b| b.used()).sum();
+                total_in == total_out
+                    && batches.iter().all(|b| b.used() <= b.class && b.class <= 8)
+                    && batches
+                        .iter()
+                        .all(|b| b.tickets.iter().all(|tk| tk.t == b.t))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_fill_ratio_reasonable() {
+        // with many same-t single-sample tickets the packer should reach
+        // high fill on all but the last batch
+        prop::check(
+            "batcher-fill",
+            50,
+            |rng: &mut Rng| 9 + rng.below(40),
+            |&n| {
+                let tickets: Vec<Ticket> =
+                    (0..n).map(|i| Ticket { req: i, t: 1.0, n: 1 }).collect();
+                let batches = plan(&tickets, CLASSES);
+                batches[..batches.len() - 1].iter().all(|b| b.fill() >= 0.99)
+            },
+        );
+    }
+}

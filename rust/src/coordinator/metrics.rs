@@ -1,0 +1,91 @@
+//! Serving metrics: latency percentiles, throughput, batching efficiency.
+
+use std::time::Duration;
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub latencies: Vec<Duration>,
+    pub images_done: usize,
+    pub evals: usize,
+    pub batch_sizes: Vec<usize>,
+    pub batch_fills: Vec<f32>,
+    pub wall: Duration,
+}
+
+impl Metrics {
+    pub fn latency_p(&self, q: f64) -> Duration {
+        if self.latencies.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut v = self.latencies.clone();
+        v.sort();
+        v[((v.len() - 1) as f64 * q) as usize]
+    }
+
+    /// images per second over the measured wall time
+    pub fn throughput(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.images_done as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    pub fn mean_fill(&self) -> f64 {
+        if self.batch_fills.is_empty() {
+            return 0.0;
+        }
+        self.batch_fills.iter().map(|f| *f as f64).sum::<f64>() / self.batch_fills.len() as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests {:4}  images {:5}  evals {:6}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%",
+            self.latencies.len(),
+            self.images_done,
+            self.evals,
+            self.throughput(),
+            self.latency_p(0.5).as_secs_f64() * 1e3,
+            self.latency_p(0.95).as_secs_f64() * 1e3,
+            self.mean_batch(),
+            self.mean_fill() * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut m = Metrics::default();
+        for ms in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            m.latencies.push(Duration::from_millis(ms));
+        }
+        assert_eq!(m.latency_p(0.5), Duration::from_millis(50));
+        assert_eq!(m.latency_p(0.0), Duration::from_millis(10));
+        assert_eq!(m.latency_p(1.0), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Metrics { images_done: 50, wall: Duration::from_secs(5), ..Default::default() };
+        assert!((m.throughput() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_p(0.5), Duration::ZERO);
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.mean_batch(), 0.0);
+        let _ = m.report();
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 serving coordinator: request router + step-level continuous batcher
+//! over the quantized diffusion model (the deployment story of a 4-bit
+//! diffusion model — paper §1's edge-serving motivation).
+
+pub mod request;
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use metrics::Metrics;
+pub use request::{Request, Response};
+pub use server::{spawn, ServeMode, ServerCfg, ServerHandle};

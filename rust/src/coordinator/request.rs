@@ -1,0 +1,52 @@
+//! Serving request/response types.
+
+use crate::eval::generate::SamplerKind;
+
+/// A generation request: n images from a (possibly quantized) diffusion
+/// model. Submitted to the coordinator, which co-schedules the denoising
+//  steps of concurrent requests into shared model evaluations.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// number of images
+    pub n: usize,
+    pub steps: usize,
+    pub eta: f32,
+    pub sampler: SamplerKind,
+    pub seed: u64,
+    /// class label for conditional models (None = unconditional / random)
+    pub class: Option<usize>,
+}
+
+impl Request {
+    pub fn new(id: u64, n: usize, steps: usize) -> Request {
+        Request { id, n, steps, eta: 0.0, sampler: SamplerKind::Ddim, seed: id, class: None }
+    }
+}
+
+/// Completed generation.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    /// pixels (decoded for LDM variants), n * hw*hw*3
+    pub images: Vec<f32>,
+    pub n: usize,
+    /// wall time from submit to completion
+    pub latency: std::time::Duration,
+    /// total model evaluations consumed
+    pub evals: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_defaults() {
+        let r = Request::new(3, 4, 10);
+        assert_eq!(r.id, 3);
+        assert_eq!(r.n, 4);
+        assert_eq!(r.sampler, SamplerKind::Ddim);
+        assert!(r.class.is_none());
+    }
+}

@@ -1,0 +1,327 @@
+//! The serving coordinator: step-level continuous batching over the
+//! quantized (or FP) denoiser — the vLLM-router-shaped L3 of this repo.
+//!
+//! Architecture (std threads; tokio unavailable offline — DESIGN.md §1):
+//!   * clients `submit()` requests over an MPSC channel and get a
+//!     per-request response receiver;
+//!   * the scheduler thread owns all request state (sampler state machines,
+//!     latents) and loops: drain arrivals → collect each active request's
+//!     next evaluation ticket → `batcher::plan` → execute batches (model
+//!     eval) → `observe` results into the samplers → emit completions;
+//!   * new requests join at the next round (continuous batching): a long
+//!     request never blocks a short one, same-t requests share compute.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+
+use crate::data::PatchAutoencoder;
+use crate::model::manifest::ModelInfo;
+use crate::runtime::{Denoiser, QuantState};
+use crate::schedule::{timestep_subsequence, DdimSampler, DpmSolver2, PlmsSampler, Sampler, Schedule};
+use crate::util::rng::Rng;
+
+use super::batcher::{plan, Ticket};
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+
+use crate::eval::generate::SamplerKind;
+
+enum Msg {
+    Submit(Request, mpsc::Sender<Response>),
+    Shutdown(mpsc::Sender<Metrics>),
+}
+
+struct Active {
+    req: Request,
+    sampler: Box<dyn Sampler>,
+    x: Vec<f32>,
+    cond: Vec<f32>,
+    rng: Rng,
+    tx: mpsc::Sender<Response>,
+    submitted: Instant,
+    evals: usize,
+}
+
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+    join: Option<thread::JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl ServerHandle {
+    pub fn submit(&self, mut req: Request) -> mpsc::Receiver<Response> {
+        req.id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Submit(req, tx)).expect("server down");
+        rx
+    }
+
+    /// Stop the scheduler (after finishing in-flight requests) and collect
+    /// the serving metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Shutdown(tx));
+        let m = rx.recv().unwrap_or_default();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        m
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        if let Some(j) = self.join.take() {
+            let (tx, _rx) = mpsc::channel();
+            let _ = self.tx.send(Msg::Shutdown(tx));
+            let _ = j.join();
+        }
+    }
+}
+
+/// Serving mode: FP or quantized model.
+pub enum ServeMode {
+    Fp,
+    Quant(QuantState),
+}
+
+pub struct ServerCfg {
+    pub mode: ServeMode,
+    /// decode latents to pixels before responding (LDM variants)
+    pub decode_latents: bool,
+    pub seed: u64,
+}
+
+/// Spawn the coordinator. `den`/`params` are shared with the scheduler
+/// thread; everything it needs is moved in.
+pub fn spawn(
+    den: Arc<Denoiser>,
+    info: ModelInfo,
+    sched: Schedule,
+    params: Arc<Vec<f32>>,
+    cfg: ServerCfg,
+) -> ServerHandle {
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let join = thread::spawn(move || scheduler_loop(rx, den, info, sched, params, cfg));
+    ServerHandle { tx, join: Some(join), next_id: std::sync::atomic::AtomicU64::new(1) }
+}
+
+fn make_sampler(req: &Request, sched: &Schedule) -> Box<dyn Sampler> {
+    let tau = timestep_subsequence(sched.t_total, req.steps);
+    let s = Arc::new(sched.clone());
+    match req.sampler {
+        SamplerKind::Ddim => Box::new(DdimSampler::new(s, tau, req.eta)),
+        SamplerKind::Plms => Box::new(PlmsSampler::new(s, tau)),
+        SamplerKind::DpmSolver2 => Box::new(DpmSolver2::new(s, tau)),
+    }
+}
+
+fn scheduler_loop(
+    rx: mpsc::Receiver<Msg>,
+    den: Arc<Denoiser>,
+    info: ModelInfo,
+    sched: Schedule,
+    params: Arc<Vec<f32>>,
+    cfg: ServerCfg,
+) {
+    let mut active: Vec<Active> = Vec::new();
+    let mut metrics = Metrics::default();
+    let mut shutdown: Option<mpsc::Sender<Metrics>> = None;
+    let classes = den.batch_classes_q();
+    let ae = PatchAutoencoder::default();
+    let t0 = Instant::now();
+    let xs = info.x_size(1);
+
+    loop {
+        // drain arrivals; block only when idle and not shutting down
+        loop {
+            let msg = if active.is_empty() && shutdown.is_none() {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        if active.is_empty() {
+                            return;
+                        }
+                        break;
+                    }
+                }
+            };
+            match msg {
+                Msg::Submit(req, tx) => {
+                    let mut rng = Rng::new(req.seed ^ 0x73657276);
+                    let x: Vec<f32> = (0..req.n * xs).map(|_| rng.normal()).collect();
+                    let cond: Vec<f32> = (0..req.n)
+                        .map(|_| match req.class {
+                            Some(c) => c as f32,
+                            None if info.cfg.n_classes > 0 => {
+                                rng.below(info.cfg.n_classes) as f32
+                            }
+                            None => 0.0,
+                        })
+                        .collect();
+                    active.push(Active {
+                        sampler: make_sampler(&req, &sched),
+                        x,
+                        cond,
+                        rng,
+                        tx,
+                        submitted: Instant::now(),
+                        evals: 0,
+                        req,
+                    });
+                }
+                Msg::Shutdown(tx) => shutdown = Some(tx),
+            }
+        }
+
+        if active.is_empty() {
+            if let Some(tx) = shutdown.take() {
+                metrics.wall = t0.elapsed();
+                let _ = tx.send(metrics.clone());
+                return;
+            }
+            continue;
+        }
+
+        // one scheduling round: plan same-t batches over all active requests
+        let tickets: Vec<Ticket> = active
+            .iter()
+            .enumerate()
+            .map(|(i, a)| Ticket { req: i, t: a.sampler.current_t(), n: a.req.n })
+            .collect();
+        let batches = plan(&tickets, &classes);
+
+        // execute each batch and scatter eps back per request
+        let mut eps_per_req: Vec<Vec<f32>> = active.iter().map(|_| Vec::new()).collect();
+        for batch in &batches {
+            let mut x = Vec::with_capacity(batch.used() * xs);
+            let mut cond = Vec::with_capacity(batch.used());
+            for tk in &batch.tickets {
+                // NOTE: split tickets (n > max class) keep sample order, so
+                // offsets reconstruct by arrival order per request
+                let a = &active[tk.req];
+                let done = eps_per_req[tk.req].len() / xs;
+                x.extend_from_slice(&a.x[done * xs..(done + tk.n) * xs]);
+                cond.extend_from_slice(&a.cond[done..done + tk.n]);
+            }
+            let eps = match &cfg.mode {
+                ServeMode::Fp => {
+                    let t = vec![batch.t; cond.len()];
+                    den.eps_fp(&params, &x, &t, &cond)
+                }
+                ServeMode::Quant(qs) => {
+                    // selection computed once per batch (one t): serving
+                    // hot path shares it across the whole batch
+                    let mut rng = Rng::new(cfg.seed ^ batch.t.to_bits() as u64);
+                    den.eps_q(&params, qs, &x, batch.t, &cond, &mut rng)
+                }
+            };
+            let eps = match eps {
+                Ok(e) => e,
+                Err(err) => {
+                    crate::log_warn!("batch eval failed: {err:#}");
+                    continue;
+                }
+            };
+            metrics.evals += 1;
+            metrics.batch_sizes.push(batch.used());
+            metrics.batch_fills.push(batch.fill());
+            let mut off = 0;
+            for tk in &batch.tickets {
+                eps_per_req[tk.req].extend_from_slice(&eps[off * xs..(off + tk.n) * xs]);
+                off += tk.n;
+            }
+        }
+
+        // observe + complete
+        let mut i = 0;
+        while i < active.len() {
+            let eps = std::mem::take(&mut eps_per_req[i]);
+            if eps.len() == active[i].x.len() {
+                let a = &mut active[i];
+                a.sampler.observe(&mut a.x, &eps, &mut a.rng);
+                a.evals += 1;
+            }
+            if active[i].sampler.done() {
+                let a = active.swap_remove(i);
+                eps_per_req.swap_remove(i);
+                let images = if cfg.decode_latents {
+                    ae.decode_batch(&a.x, a.req.n)
+                } else {
+                    a.x
+                };
+                metrics.images_done += a.req.n;
+                metrics.latencies.push(a.submitted.elapsed());
+                let _ = a.tx.send(Response {
+                    id: a.req.id,
+                    images,
+                    n: a.req.n,
+                    latency: a.submitted.elapsed(),
+                    evals: a.evals,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use crate::model::ParamStore;
+    use crate::runtime::Engine;
+    use std::path::PathBuf;
+
+    fn setup() -> Option<(Arc<Denoiser>, ModelInfo, Arc<Vec<f32>>)> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let m = Manifest::load(&d).unwrap();
+        let info = m.model("ddim16").unwrap().clone();
+        let engine = Arc::new(Engine::new(&d).unwrap());
+        let den = Arc::new(Denoiser::new(engine, &info).unwrap());
+        let params = Arc::new(ParamStore::load_init(&info, &d).unwrap().flat);
+        Some((den, info, params))
+    }
+
+    #[test]
+    fn serves_concurrent_fp_requests() {
+        let Some((den, info, params)) = setup() else { return };
+        let sched = Schedule::linear(100);
+        let handle = spawn(
+            den,
+            info,
+            sched,
+            params,
+            ServerCfg { mode: ServeMode::Fp, decode_latents: false, seed: 1 },
+        );
+        let rx1 = handle.submit(Request::new(0, 3, 4));
+        let rx2 = handle.submit(Request::new(0, 2, 4));
+        let rx3 = handle.submit(Request::new(0, 1, 6)); // different step count
+        let r1 = rx1.recv().unwrap();
+        let r2 = rx2.recv().unwrap();
+        let r3 = rx3.recv().unwrap();
+        assert_eq!(r1.n, 3);
+        assert_eq!(r2.images.len(), 2 * 16 * 16 * 3);
+        assert_eq!(r3.evals, 6);
+        assert!(r1.images.iter().all(|v| v.is_finite()));
+        let m = handle.shutdown();
+        assert_eq!(m.images_done, 6);
+        assert!(m.evals > 0);
+        // same-steps requests must have shared batches at least once
+        assert!(m.mean_batch() > 1.0, "no batching happened: {}", m.report());
+    }
+}

@@ -1,0 +1,232 @@
+//! Fixed orthogonal patch autoencoder — the LDM latent-space stand-in.
+//!
+//! 32x32x3 images are split into 4x4 patches (48 dims) and projected onto 4
+//! fixed orthonormal directions (seeded Gram-Schmidt), giving an 8x8x4
+//! latent. Orthonormality makes decode(encode(x)) the best rank-4
+//! projection of each patch — deterministic, invertible-on-range, and
+//! training-free, which keeps the substitution honest: all learning happens
+//! in the latent UNet, as in LDM.
+
+use crate::util::rng::Rng;
+
+pub const PATCH: usize = 4;
+pub const IMG_HW: usize = 32;
+pub const LAT_HW: usize = IMG_HW / PATCH; // 8
+pub const PATCH_DIM: usize = PATCH * PATCH * 3; // 48
+pub const LAT_CH: usize = 4;
+/// latent scale: patch energy concentrates in few directions; scale to
+/// roughly unit variance for the diffusion prior.
+const SCALE: f32 = 0.55;
+
+#[derive(Debug, Clone)]
+pub struct PatchAutoencoder {
+    /// [PATCH_DIM, LAT_CH] orthonormal columns
+    basis: Vec<f32>,
+}
+
+impl Default for PatchAutoencoder {
+    fn default() -> Self {
+        Self::new(911)
+    }
+}
+
+impl PatchAutoencoder {
+    pub fn new(seed: u64) -> PatchAutoencoder {
+        let mut rng = Rng::new(seed);
+        // Structured low-frequency basis (a 4-component DCT-like dictionary:
+        // luminance DC, horizontal + vertical luminance gradients, chroma
+        // R-B DC), orthonormalized by Gram-Schmidt with a whisper of seeded
+        // noise to break exact ties. Rank-4 random projections lose most
+        // image structure; these four carry the bulk of smooth-image energy.
+        let mut cols: Vec<Vec<f32>> = Vec::new();
+        let comp = |f: &dyn Fn(usize, usize, usize) -> f32| -> Vec<f32> {
+            let mut v = vec![0.0f32; PATCH_DIM];
+            for dy in 0..PATCH {
+                for dx in 0..PATCH {
+                    for ch in 0..3 {
+                        v[(dy * PATCH + dx) * 3 + ch] = f(dy, dx, ch);
+                    }
+                }
+            }
+            v
+        };
+        cols.push(comp(&|_, _, _| 1.0)); // luminance DC
+        cols.push(comp(&|_, dx, _| dx as f32 - (PATCH - 1) as f32 / 2.0)); // horiz grad
+        cols.push(comp(&|dy, _, _| dy as f32 - (PATCH - 1) as f32 / 2.0)); // vert grad
+        cols.push(comp(&|_, _, ch| match ch {
+            0 => 1.0,
+            2 => -1.0,
+            _ => 0.0,
+        })); // chroma R-B
+        for col in &mut cols {
+            for v in col.iter_mut() {
+                *v += rng.normal() * 1e-3;
+            }
+        }
+        for i in 0..LAT_CH {
+            for j in 0..i {
+                let d: f32 = cols[i].iter().zip(&cols[j]).map(|(a, b)| a * b).sum();
+                let cj = cols[j].clone();
+                for (a, b) in cols[i].iter_mut().zip(cj) {
+                    *a -= d * b;
+                }
+            }
+            let n: f32 = cols[i].iter().map(|v| v * v).sum::<f32>().sqrt();
+            for v in &mut cols[i] {
+                *v /= n;
+            }
+        }
+        let mut basis = vec![0.0f32; PATCH_DIM * LAT_CH];
+        for (j, col) in cols.iter().enumerate() {
+            for (i, &v) in col.iter().enumerate() {
+                basis[i * LAT_CH + j] = v;
+            }
+        }
+        PatchAutoencoder { basis }
+    }
+
+    /// 32x32x3 NHWC pixels -> 8x8x4 latent.
+    pub fn encode(&self, img: &[f32]) -> Vec<f32> {
+        assert_eq!(img.len(), IMG_HW * IMG_HW * 3);
+        let mut z = vec![0.0f32; LAT_HW * LAT_HW * LAT_CH];
+        for py in 0..LAT_HW {
+            for px in 0..LAT_HW {
+                for c in 0..LAT_CH {
+                    let mut acc = 0.0f32;
+                    for dy in 0..PATCH {
+                        for dx in 0..PATCH {
+                            let y = py * PATCH + dy;
+                            let x = px * PATCH + dx;
+                            for ch in 0..3 {
+                                let pi = (dy * PATCH + dx) * 3 + ch;
+                                acc += img[(y * IMG_HW + x) * 3 + ch]
+                                    * self.basis[pi * LAT_CH + c];
+                            }
+                        }
+                    }
+                    z[(py * LAT_HW + px) * LAT_CH + c] = acc * SCALE;
+                }
+            }
+        }
+        z
+    }
+
+    /// 8x8x4 latent -> 32x32x3 pixels (transpose projection).
+    pub fn decode(&self, z: &[f32]) -> Vec<f32> {
+        assert_eq!(z.len(), LAT_HW * LAT_HW * LAT_CH);
+        let mut img = vec![0.0f32; IMG_HW * IMG_HW * 3];
+        for py in 0..LAT_HW {
+            for px in 0..LAT_HW {
+                for dy in 0..PATCH {
+                    for dx in 0..PATCH {
+                        let y = py * PATCH + dy;
+                        let x = px * PATCH + dx;
+                        for ch in 0..3 {
+                            let pi = (dy * PATCH + dx) * 3 + ch;
+                            let mut acc = 0.0f32;
+                            for c in 0..LAT_CH {
+                                acc += z[(py * LAT_HW + px) * LAT_CH + c]
+                                    * self.basis[pi * LAT_CH + c];
+                            }
+                            img[(y * IMG_HW + x) * 3 + ch] = (acc / SCALE).clamp(-1.0, 1.0);
+                        }
+                    }
+                }
+            }
+        }
+        img
+    }
+
+    pub fn encode_batch(&self, imgs: &[f32], n: usize) -> Vec<f32> {
+        let per = IMG_HW * IMG_HW * 3;
+        let mut out = Vec::with_capacity(n * LAT_HW * LAT_HW * LAT_CH);
+        for i in 0..n {
+            out.extend(self.encode(&imgs[i * per..(i + 1) * per]));
+        }
+        out
+    }
+
+    pub fn decode_batch(&self, zs: &[f32], n: usize) -> Vec<f32> {
+        let per = LAT_HW * LAT_HW * LAT_CH;
+        let mut out = Vec::with_capacity(n * IMG_HW * IMG_HW * 3);
+        for i in 0..n {
+            out.extend(self.decode(&zs[i * per..(i + 1) * per]));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Corpus;
+
+    #[test]
+    fn basis_is_orthonormal() {
+        let ae = PatchAutoencoder::default();
+        for a in 0..LAT_CH {
+            for b in 0..LAT_CH {
+                let dot: f32 = (0..PATCH_DIM)
+                    .map(|i| ae.basis[i * LAT_CH + a] * ae.basis[i * LAT_CH + b])
+                    .sum();
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "({a},{b}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_encode_is_projection() {
+        // encode∘decode must be identity on the latent space
+        let ae = PatchAutoencoder::default();
+        let mut rng = Rng::new(1);
+        let z: Vec<f32> = (0..LAT_HW * LAT_HW * LAT_CH).map(|_| rng.normal() * 0.3).collect();
+        let z2 = ae.encode(&ae.decode(&z));
+        for (a, b) in z.iter().zip(&z2) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}"); // clamp can nibble
+        }
+    }
+
+    #[test]
+    fn encode_decode_preserves_structure() {
+        // the low-frequency content of real corpus images must survive
+        let ae = PatchAutoencoder::default();
+        let mut rng = Rng::new(2);
+        let s = Corpus::BedroomSyn.sample(&mut rng);
+        let rec = ae.decode(&ae.encode(&s.pixels));
+        // correlation between original and reconstruction
+        let mx = s.pixels.iter().sum::<f32>() / s.pixels.len() as f32;
+        let my = rec.iter().sum::<f32>() / rec.len() as f32;
+        let mut num = 0.0;
+        let mut dx = 0.0;
+        let mut dy = 0.0;
+        for (a, b) in s.pixels.iter().zip(&rec) {
+            num += (a - mx) * (b - my);
+            dx += (a - mx).powi(2);
+            dy += (b - my).powi(2);
+        }
+        let corr = num / (dx.sqrt() * dy.sqrt()).max(1e-9);
+        assert!(corr > 0.7, "reconstruction correlation {corr}");
+    }
+
+    #[test]
+    fn latent_roughly_unit_scale() {
+        let ae = PatchAutoencoder::default();
+        let mut rng = Rng::new(3);
+        let (px, _) = Corpus::ChurchSyn.batch(&mut rng, 32);
+        let z = ae.encode_batch(&px, 32);
+        let var = z.iter().map(|v| v * v).sum::<f32>() / z.len() as f32;
+        assert!(var > 0.05 && var < 5.0, "latent var {var}");
+    }
+
+    #[test]
+    fn batch_roundtrip_shapes() {
+        let ae = PatchAutoencoder::default();
+        let mut rng = Rng::new(4);
+        let (px, _) = Corpus::ImagenetSyn.batch(&mut rng, 3);
+        let z = ae.encode_batch(&px, 3);
+        assert_eq!(z.len(), 3 * 8 * 8 * 4);
+        let rec = ae.decode_batch(&z, 3);
+        assert_eq!(rec.len(), px.len());
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic data substrate (DESIGN.md §2): procedural stand-ins for
+//! CIFAR-10 / CelebA / LSUN-Bedroom / LSUN-Church / ImageNet, plus the
+//! fixed orthogonal patch autoencoder that provides the latent space for
+//! the LDM variants.
+
+pub mod synth;
+pub mod latent;
+
+pub use latent::PatchAutoencoder;
+pub use synth::{Corpus, Sample};

@@ -1,0 +1,136 @@
+//! Run the fixed random-conv feature extractor artifact over image batches.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::linalg::tensor::Mat;
+use crate::model::manifest::FeatureInfo;
+use crate::runtime::{Engine, Executable};
+
+pub struct FeatureExtractor {
+    exe: Arc<Executable>,
+    pub hw: usize,
+    pub batch: usize,
+    pub feat_dim: usize,
+    pub sfeat_dim: usize,
+    pub n_logits: usize,
+}
+
+impl FeatureExtractor {
+    pub fn new(engine: &Arc<Engine>, fi: &FeatureInfo, hw: usize) -> Result<FeatureExtractor> {
+        let path = match hw {
+            16 => &fi.path16,
+            32 => &fi.path32,
+            _ => anyhow::bail!("no feature extractor for {hw}px"),
+        };
+        Ok(FeatureExtractor {
+            exe: engine.load(path)?,
+            hw,
+            batch: fi.batch,
+            feat_dim: fi.feat_dim,
+            sfeat_dim: fi.sfeat_dim,
+            n_logits: fi.n_logits,
+        })
+    }
+
+    /// Featurize n stacked hw*hw*3 images -> (feat [n,F], sfeat [n,S],
+    /// logits [n,K]).
+    pub fn extract(&self, imgs: &[f32], n: usize) -> Result<(Mat, Mat, Mat)> {
+        let per = self.hw * self.hw * 3;
+        assert_eq!(imgs.len(), n * per);
+        let mut feat = Mat::zeros(n, self.feat_dim);
+        let mut sfeat = Mat::zeros(n, self.sfeat_dim);
+        let mut logits = Mat::zeros(n, self.n_logits);
+        let b = self.batch;
+        let dims = [b as i64, self.hw as i64, self.hw as i64, 3];
+        let mut i = 0;
+        while i < n {
+            let m = b.min(n - i);
+            // pad by repeating the last image
+            let mut chunk = Vec::with_capacity(b * per);
+            chunk.extend_from_slice(&imgs[i * per..(i + m) * per]);
+            for _ in m..b {
+                chunk.extend_from_slice(&imgs[(i + m - 1) * per..(i + m) * per]);
+            }
+            let out = self.exe.run(&[(&chunk, &dims)])?;
+            for r in 0..m {
+                feat.data[(i + r) * self.feat_dim..(i + r + 1) * self.feat_dim]
+                    .copy_from_slice(&out[0][r * self.feat_dim..(r + 1) * self.feat_dim]);
+                sfeat.data[(i + r) * self.sfeat_dim..(i + r + 1) * self.sfeat_dim]
+                    .copy_from_slice(&out[1][r * self.sfeat_dim..(r + 1) * self.sfeat_dim]);
+                logits.data[(i + r) * self.n_logits..(i + r + 1) * self.n_logits]
+                    .copy_from_slice(&out[2][r * self.n_logits..(r + 1) * self.n_logits]);
+            }
+            i += m;
+        }
+        Ok((feat, sfeat, logits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use std::path::PathBuf;
+
+    #[test]
+    fn extracts_nontrivial_features() {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&d).unwrap();
+        let engine = Arc::new(Engine::new(&d).unwrap());
+        let fx = FeatureExtractor::new(&engine, &m.features, 16).unwrap();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let n = 40; // exercises padding (batch is 32)
+        let imgs: Vec<f32> = (0..n * 16 * 16 * 3).map(|_| rng.normal() * 0.5).collect();
+        let (f, s, l) = fx.extract(&imgs, n).unwrap();
+        assert_eq!((f.rows, f.cols), (n, 64));
+        assert_eq!((s.rows, s.cols), (n, 256));
+        assert_eq!((l.rows, l.cols), (n, 10));
+        // different images -> different features
+        assert!(f.row(0) != f.row(1));
+        assert!(f.data.iter().all(|v| v.is_finite()));
+    }
+}
+
+/// Regression guards for the HLO-text interchange (elided large constants
+/// parse back as zeros — see aot.to_hlo_text).
+#[cfg(test)]
+mod interchange_tests {
+    use super::*;
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    #[test]
+    fn baked_constants_survive_hlo_text() {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() { return; }
+        let engine = Arc::new(Engine::new(&d).unwrap());
+        let exe = engine.load("features16.hlo.txt").unwrap();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let img: Vec<f32> = (0..32*16*16*3).map(|_| rng.normal()*0.5).collect();
+        let out = exe.run(&[(&img, &[32,16,16,3])]).unwrap();
+        // feature weights are baked constants: if the HLO printer elided
+        // them, every output collapses to zero
+        assert!(out[0].iter().any(|&v| v != 0.0), "baked constants were elided");
+        assert!(out[0][..64] != out[0][64..128], "features collapsed");
+    }
+
+    #[test]
+    fn literal_reshape_roundtrip() {
+        let l = xla::Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        eprintln!("reshaped: {:?} count {}", r.to_vec::<f32>().unwrap(), r.element_count());
+        let big: Vec<f32> = (0..32*16*16*3).map(|i| i as f32).collect();
+        let lb = xla::Literal::vec1(&big);
+        let rb = lb.reshape(&[32, 16, 16, 3]).unwrap();
+        let back = rb.to_vec::<f32>().unwrap();
+        eprintln!("big roundtrip ok: {} sum {}", back.len(), back.iter().sum::<f32>());
+        assert_eq!(back, big);
+    }
+
+}

@@ -1,0 +1,57 @@
+//! PPM image emission for the paper's visual figures (6, 10, 11, 12).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Write a grid of [-1,1] NHWC images as a binary PPM (P6).
+pub fn write_grid_ppm(path: &Path, images: &[f32], n: usize, hw: usize, cols: usize) -> Result<()> {
+    let rows = n.div_ceil(cols);
+    let pad = 2;
+    let w = cols * (hw + pad) + pad;
+    let h = rows * (hw + pad) + pad;
+    let mut buf = vec![30u8; w * h * 3];
+    for i in 0..n {
+        let gx = (i % cols) * (hw + pad) + pad;
+        let gy = (i / cols) * (hw + pad) + pad;
+        for y in 0..hw {
+            for x in 0..hw {
+                for c in 0..3 {
+                    let v = images[(i * hw * hw + y * hw + x) * 3 + c];
+                    let b = (((v + 1.0) * 0.5).clamp(0.0, 1.0) * 255.0) as u8;
+                    buf[((gy + y) * w + gx + x) * 3 + c] = b;
+                }
+            }
+        }
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P6\n{w} {h}\n255\n")?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_valid_ppm() {
+        let path = std::env::temp_dir().join("msfp_grid_test.ppm");
+        let images = vec![0.5f32; 4 * 8 * 8 * 3];
+        write_grid_ppm(&path, &images, 4, 8, 2).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P6\n22 22\n255\n"));
+        assert_eq!(bytes.len(), b"P6\n22 22\n255\n".len() + 22 * 22 * 3);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let path = std::env::temp_dir().join("msfp_grid_test2.ppm");
+        let images = vec![99.0f32; 1 * 4 * 4 * 3];
+        write_grid_ppm(&path, &images, 1, 4, 1).unwrap(); // must not panic
+    }
+}

@@ -1,0 +1,126 @@
+//! FID-syn / sFID-syn / IS-syn: the paper's metric triple on the fixed
+//! random-feature embedding.
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::linalg::stats::{frechet, inception_score, mean_cov, softmax_rows};
+use crate::linalg::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::features::FeatureExtractor;
+
+/// Reference statistics of a corpus (the "real data" side of FID).
+pub struct RefStats {
+    pub mu: Vec<f32>,
+    pub cov: Mat,
+    pub smu: Vec<f32>,
+    pub scov: Mat,
+}
+
+/// Build reference stats from n fresh corpus samples.
+pub fn reference_stats(
+    fx: &FeatureExtractor,
+    corpus: Corpus,
+    n: usize,
+    seed: u64,
+) -> Result<RefStats> {
+    let mut rng = Rng::new(seed ^ 0x726566);
+    let (px, _) = corpus.batch(&mut rng, n);
+    let (feat, sfeat, _) = fx.extract(&px, n)?;
+    let (mu, cov) = mean_cov(&feat)?;
+    let (smu, scov) = mean_cov(&sfeat)?;
+    Ok(RefStats { mu, cov, smu, scov })
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub fid: f32,
+    pub sfid: f32,
+    pub is: f32,
+}
+
+impl EvalResult {
+    pub fn row(&self) -> String {
+        format!("FID-syn {:8.3}  sFID-syn {:8.3}  IS-syn {:6.3}", self.fid, self.sfid, self.is)
+    }
+}
+
+/// Score generated images against reference stats.
+pub fn evaluate(
+    fx: &FeatureExtractor,
+    refs: &RefStats,
+    images: &[f32],
+    n: usize,
+) -> Result<EvalResult> {
+    let (feat, sfeat, logits) = fx.extract(images, n)?;
+    let (mu, cov) = mean_cov(&feat)?;
+    let (smu, scov) = mean_cov(&sfeat)?;
+    let fid = frechet(&refs.mu, &refs.cov, &mu, &cov)?;
+    let sfid = frechet(&refs.smu, &refs.scov, &smu, &scov)?;
+    let mut probs = logits;
+    // temperature sharpens the random projection head into usable
+    // class-confidences for the IS proxy
+    for v in &mut probs.data {
+        *v *= 4.0;
+    }
+    softmax_rows(&mut probs);
+    let is = inception_score(&probs)?;
+    Ok(EvalResult { fid, sfid, is })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use crate::runtime::Engine;
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    fn setup16() -> Option<FeatureExtractor> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let m = Manifest::load(&d).unwrap();
+        let engine = Arc::new(Engine::new(&d).unwrap());
+        Some(FeatureExtractor::new(&engine, &m.features, 16).unwrap())
+    }
+
+    #[test]
+    fn same_corpus_scores_near_zero_fid() {
+        let Some(fx) = setup16() else { return };
+        let refs = reference_stats(&fx, Corpus::CelebaSyn, 256, 1).unwrap();
+        let mut rng = Rng::new(99);
+        let (px, _) = Corpus::CelebaSyn.batch(&mut rng, 256);
+        let r = evaluate(&fx, &refs, &px, 256).unwrap();
+        assert!(r.fid < 3.0, "same-distribution FID-syn should be small: {}", r.fid);
+    }
+
+    #[test]
+    fn different_corpus_scores_higher() {
+        let Some(fx) = setup16() else { return };
+        let refs = reference_stats(&fx, Corpus::CelebaSyn, 256, 2).unwrap();
+        let mut rng = Rng::new(100);
+        let (same, _) = Corpus::CelebaSyn.batch(&mut rng, 256);
+        let (diff, _) = Corpus::CifarSyn.batch(&mut rng, 256);
+        let r_same = evaluate(&fx, &refs, &same, 256).unwrap();
+        let r_diff = evaluate(&fx, &refs, &diff, 256).unwrap();
+        assert!(r_diff.fid > 3.0 * r_same.fid.max(0.1),
+            "cross-corpus FID {} vs same {}", r_diff.fid, r_same.fid);
+        assert!(r_diff.sfid > r_same.sfid);
+    }
+
+    #[test]
+    fn noise_scores_much_higher() {
+        let Some(fx) = setup16() else { return };
+        let refs = reference_stats(&fx, Corpus::CifarSyn, 256, 3).unwrap();
+        let mut rng = Rng::new(101);
+        let noise: Vec<f32> = (0..128 * 16 * 16 * 3).map(|_| rng.normal().clamp(-1.0, 1.0)).collect();
+        let (real, _) = Corpus::CifarSyn.batch(&mut rng, 128);
+        let r_noise = evaluate(&fx, &refs, &noise, 128).unwrap();
+        let r_real = evaluate(&fx, &refs, &real, 128).unwrap();
+        assert!(r_noise.fid > 5.0 * r_real.fid.max(0.1));
+    }
+}

@@ -1,0 +1,15 @@
+//! Evaluation stack: the fixed-random-feature Frechet metrics (FID-syn /
+//! sFID-syn), the projection-head Inception-Score proxy (IS-syn), and the
+//! generation loop that produces samples from FP or quantized models.
+//!
+//! These are proxy metrics (DESIGN.md §2): the paper's claims we reproduce
+//! are *orderings and gaps* between methods, not absolute values.
+
+pub mod features;
+pub mod metrics;
+pub mod generate;
+pub mod image;
+
+pub use features::FeatureExtractor;
+pub use generate::{generate_images, GenerateCfg, ModelMode};
+pub use metrics::{evaluate, reference_stats, EvalResult, RefStats};

@@ -1,0 +1,9 @@
+//! The experiment harness: per-table and per-figure runners (DESIGN.md §5)
+//! plus report emission. `msfp repro --exp <id>` and the benches drive
+//! these.
+
+pub mod report;
+pub mod tables;
+pub mod figures;
+
+pub use report::Report;

@@ -1,0 +1,92 @@
+//! Experiment report emission: CSV series + aligned-text tables, written
+//! under <runs>/reports so EXPERIMENTS.md can cite stable files.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+pub struct Report {
+    pub dir: PathBuf,
+}
+
+impl Report {
+    pub fn new(runs_dir: &Path) -> Result<Report> {
+        let dir = runs_dir.join("reports");
+        std::fs::create_dir_all(&dir)?;
+        Ok(Report { dir })
+    }
+
+    /// Write a CSV file (header + rows).
+    pub fn csv(&self, name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<PathBuf> {
+        let path = self.dir.join(name);
+        let mut out = String::new();
+        out.push_str(&header.join(","));
+        out.push('\n');
+        for row in rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+
+    /// Render + print + persist an aligned table.
+    pub fn table(&self, name: &str, title: &str, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+        let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+        for row in rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "\n== {title} ==");
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(s, "{}", line(&header.iter().map(|h| h.to_string()).collect::<Vec<_>>(), &widths));
+        let _ = writeln!(s, "{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in rows {
+            let _ = writeln!(s, "{}", line(row, &widths));
+        }
+        print!("{s}");
+        let path = self.dir.join(format!("{name}.txt"));
+        std::fs::write(path, s)?;
+        self.csv(
+            &format!("{name}.csv"),
+            header,
+            rows,
+        )?;
+        Ok(())
+    }
+}
+
+pub fn f(v: f32) -> String {
+    format!("{v:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_csv_and_table() {
+        let tmp = std::env::temp_dir().join("msfp_report_test");
+        let r = Report::new(&tmp).unwrap();
+        let rows = vec![
+            vec!["FP".into(), "32/32".into(), "4.26".into()],
+            vec!["Ours".into(), "4/4".into(), "6.02".into()],
+        ];
+        r.table("t_test", "Test table", &["Method", "Bits", "FID"], &rows).unwrap();
+        let csv = std::fs::read_to_string(tmp.join("reports/t_test.csv")).unwrap();
+        assert!(csv.starts_with("Method,Bits,FID\n"));
+        assert!(csv.contains("Ours,4/4,6.02"));
+        let txt = std::fs::read_to_string(tmp.join("reports/t_test.txt")).unwrap();
+        assert!(txt.contains("== Test table =="));
+    }
+}

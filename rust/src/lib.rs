@@ -1,0 +1,31 @@
+//! # MSFP — 4-bit floating-point quantization for diffusion models
+//!
+//! Rust reproduction of *Pioneering 4-Bit FP Quantization for Diffusion
+//! Models: Mixup-Sign Quantization and Timestep-Aware Fine-Tuning*
+//! (Zhao et al., 2025), as the Layer-3 coordinator of a three-layer
+//! Rust + JAX + Pallas stack (see DESIGN.md).
+//!
+//! The crate owns everything at run time: the parameter store, the MSFP
+//! quantizer search (the paper's Algorithm 1), the DDPM schedule and
+//! samplers, pretraining / TALoRA fine-tuning loops (gradients come from
+//! AOT-lowered JAX graphs executed through PJRT), the serving coordinator
+//! with step-level continuous batching, proxy FID/IS evaluation, and the
+//! experiment harness that regenerates the paper's tables and figures.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! binary is self-contained once `artifacts/` exists.
+
+pub mod util;
+pub mod linalg;
+pub mod quant;
+pub mod schedule;
+pub mod model;
+pub mod lora;
+pub mod runtime;
+pub mod train;
+pub mod data;
+pub mod eval;
+pub mod coordinator;
+pub mod exp;
+pub mod config;
+pub mod pipeline;

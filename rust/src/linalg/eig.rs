@@ -1,0 +1,176 @@
+//! Cyclic Jacobi eigendecomposition for symmetric matrices.
+//!
+//! Used by the Frechet-distance (FID-syn) computation: the matrix square
+//! root of a symmetric PSD covariance product is V·sqrt(Λ)·Vᵀ. Dimensions
+//! are small (feature dim 64 / spatial 256), where Jacobi is robust and
+//! plenty fast.
+
+use anyhow::{bail, Result};
+
+use super::tensor::Mat;
+
+/// Returns (eigenvalues, eigenvectors-as-columns) of a symmetric matrix.
+pub fn eigh(a: &Mat) -> Result<(Vec<f32>, Mat)> {
+    if a.rows != a.cols {
+        bail!("eigh: matrix not square");
+    }
+    let n = a.rows;
+    // f64 working copy: Jacobi accumulates many rotations.
+    let mut m: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let idx = |i: usize, j: usize| i * n + j;
+
+    for sweep in 0..100 {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[idx(i, j)] * m[idx(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-11 {
+            break;
+        }
+        if sweep == 99 {
+            // fall through with whatever precision we reached
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q
+                for k in 0..n {
+                    let mkp = m[idx(k, p)];
+                    let mkq = m[idx(k, q)];
+                    m[idx(k, p)] = c * mkp - s * mkq;
+                    m[idx(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[idx(p, k)];
+                    let mqk = m[idx(q, k)];
+                    m[idx(p, k)] = c * mpk - s * mqk;
+                    m[idx(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[idx(k, p)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p)] = c * vkp - s * vkq;
+                    v[idx(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let eigvals: Vec<f32> = (0..n).map(|i| m[idx(i, i)] as f32).collect();
+    let eigvecs = Mat::from_vec(n, n, v.into_iter().map(|x| x as f32).collect())?;
+    Ok((eigvals, eigvecs))
+}
+
+/// Symmetric PSD matrix square root via eigh; negative eigenvalues (noise)
+/// are clamped to zero.
+pub fn sqrtm_psd(a: &Mat) -> Result<Mat> {
+    let (vals, vecs) = eigh(a)?;
+    let n = a.rows;
+    let mut out = Mat::zeros(n, n);
+    // V diag(sqrt(max(λ,0))) Vᵀ
+    for k in 0..n {
+        let s = vals[k].max(0.0).sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            let vik = vecs[(i, k)] * s;
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[(i, j)] += vik * vecs[(j, k)];
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sym(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn eig_of_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = -1.0;
+        a[(2, 2)] = 7.0;
+        let (mut vals, _) = eigh(&a).unwrap();
+        vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((vals[0] + 1.0).abs() < 1e-5);
+        assert!((vals[1] - 3.0).abs() < 1e-5);
+        assert!((vals[2] - 7.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn reconstruction() {
+        let a = random_sym(12, 4);
+        let (vals, vecs) = eigh(&a).unwrap();
+        // A ≈ V diag(vals) Vᵀ
+        let mut d = Mat::zeros(12, 12);
+        for i in 0..12 {
+            d[(i, i)] = vals[i];
+        }
+        let rec = vecs.matmul(&d).unwrap().matmul(&vecs.transpose()).unwrap();
+        assert!(rec.dist(&a) < 1e-3, "dist={}", rec.dist(&a));
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_sym(16, 9);
+        let (_, vecs) = eigh(&a).unwrap();
+        let vtv = vecs.transpose().matmul(&vecs).unwrap();
+        assert!(vtv.dist(&Mat::eye(16)) < 1e-4);
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        // build PSD: B Bᵀ
+        let b = random_sym(10, 17);
+        let psd = b.matmul(&b.transpose()).unwrap();
+        let r = sqrtm_psd(&psd).unwrap();
+        let r2 = r.matmul(&r).unwrap();
+        assert!(r2.dist(&psd) < 1e-2 * (1.0 + psd.trace().abs()), "dist={}", r2.dist(&psd));
+    }
+
+    #[test]
+    fn sqrtm_of_identity() {
+        let r = sqrtm_psd(&Mat::eye(8)).unwrap();
+        assert!(r.dist(&Mat::eye(8)) < 1e-5);
+    }
+
+    #[test]
+    fn rejects_nonsquare() {
+        assert!(eigh(&Mat::zeros(2, 3)).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Dense linear algebra substrate: just enough for the evaluation stack
+//! (feature statistics, Frechet distance) and the autoencoder — built
+//! in-repo since no BLAS/ndarray is available offline.
+
+pub mod tensor;
+pub mod eig;
+pub mod stats;

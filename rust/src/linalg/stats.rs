@@ -1,0 +1,194 @@
+//! Feature statistics + Frechet distance (the FID-syn metric core).
+
+use anyhow::{bail, Result};
+
+use super::eig::sqrtm_psd;
+use super::tensor::Mat;
+
+/// Mean vector and covariance matrix of row-stacked feature vectors.
+pub fn mean_cov(feats: &Mat) -> Result<(Vec<f32>, Mat)> {
+    let (n, d) = (feats.rows, feats.cols);
+    if n < 2 {
+        bail!("mean_cov: need at least 2 samples, got {n}");
+    }
+    let mut mean = vec![0.0f32; d];
+    for i in 0..n {
+        for (m, &v) in mean.iter_mut().zip(feats.row(i)) {
+            *m += v;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f32;
+    }
+    let mut cov = Mat::zeros(d, d);
+    for i in 0..n {
+        let row = feats.row(i);
+        for a in 0..d {
+            let da = row[a] - mean[a];
+            if da == 0.0 {
+                continue;
+            }
+            for b in 0..d {
+                cov[(a, b)] += da * (row[b] - mean[b]);
+            }
+        }
+    }
+    let denom = (n - 1) as f32;
+    for v in &mut cov.data {
+        *v /= denom;
+    }
+    Ok((mean, cov))
+}
+
+/// Frechet distance between two Gaussians:
+/// ||µ1-µ2||² + Tr(Σ1 + Σ2 − 2·sqrtm(Σ1 Σ2)).
+///
+/// Σ1Σ2 is not symmetric; we use the standard equivalent symmetric form
+/// sqrtm(Σ1)·Σ2·sqrtm(Σ1), whose trace-sqrt equals Tr(sqrtm(Σ1 Σ2)).
+pub fn frechet(mu1: &[f32], cov1: &Mat, mu2: &[f32], cov2: &Mat) -> Result<f32> {
+    if mu1.len() != mu2.len() || cov1.rows != cov2.rows {
+        bail!("frechet: dimension mismatch");
+    }
+    let dmu: f32 = mu1.iter().zip(mu2).map(|(a, b)| (a - b).powi(2)).sum();
+    let s1 = sqrtm_psd(cov1)?;
+    let inner = s1.matmul(cov2)?.matmul(&s1)?;
+    // numerical symmetrization before the PSD sqrt
+    let inner_sym = inner.add(&inner.transpose())?.scale(0.5);
+    let covmean = sqrtm_psd(&inner_sym)?;
+    let fid = dmu + cov1.trace() + cov2.trace() - 2.0 * covmean.trace();
+    Ok(fid.max(0.0))
+}
+
+/// Inception-Score-style exp(E_x KL(p(y|x) || p(y))) from row-stacked
+/// per-sample class probabilities.
+pub fn inception_score(probs: &Mat) -> Result<f32> {
+    let (n, k) = (probs.rows, probs.cols);
+    if n == 0 {
+        bail!("inception_score: no samples");
+    }
+    let mut marginal = vec![0.0f64; k];
+    for i in 0..n {
+        for (m, &p) in marginal.iter_mut().zip(probs.row(i)) {
+            *m += p as f64;
+        }
+    }
+    for m in &mut marginal {
+        *m /= n as f64;
+    }
+    let mut kl_sum = 0.0f64;
+    for i in 0..n {
+        for (j, &p) in probs.row(i).iter().enumerate() {
+            let p = p as f64;
+            if p > 1e-12 {
+                kl_sum += p * (p / marginal[j].max(1e-12)).ln();
+            }
+        }
+    }
+    Ok(((kl_sum / n as f64).exp()) as f32)
+}
+
+/// Softmax rows in place.
+pub fn softmax_rows(m: &mut Mat) {
+    for i in 0..m.rows {
+        let row = &mut m.data[i * m.cols..(i + 1) * m.cols];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian_feats(n: usize, d: usize, mean: f32, std: f32, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(n, d, (0..n * d).map(|_| mean + std * rng.normal()).collect()).unwrap()
+    }
+
+    #[test]
+    fn mean_cov_of_known() {
+        let f = Mat::from_vec(4, 2, vec![1., 0., -1., 0., 0., 1., 0., -1.]).unwrap();
+        let (mu, cov) = mean_cov(&f).unwrap();
+        assert!(mu.iter().all(|v| v.abs() < 1e-6));
+        assert!((cov[(0, 0)] - 2.0 / 3.0).abs() < 1e-5);
+        assert!((cov[(0, 1)]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn frechet_zero_for_same() {
+        let f = gaussian_feats(500, 8, 0.0, 1.0, 1);
+        let (mu, cov) = mean_cov(&f).unwrap();
+        let d = frechet(&mu, &cov, &mu, &cov).unwrap();
+        assert!(d < 1e-3, "d={d}");
+    }
+
+    #[test]
+    fn frechet_detects_mean_shift() {
+        let a = gaussian_feats(2000, 6, 0.0, 1.0, 2);
+        let b = gaussian_feats(2000, 6, 1.0, 1.0, 3);
+        let (m1, c1) = mean_cov(&a).unwrap();
+        let (m2, c2) = mean_cov(&b).unwrap();
+        let d = frechet(&m1, &c1, &m2, &c2).unwrap();
+        // analytic: ||Δµ||² = 6
+        assert!((d - 6.0).abs() < 1.0, "d={d}");
+    }
+
+    #[test]
+    fn frechet_detects_scale_change() {
+        let a = gaussian_feats(3000, 4, 0.0, 1.0, 4);
+        let b = gaussian_feats(3000, 4, 0.0, 2.0, 5);
+        let (m1, c1) = mean_cov(&a).unwrap();
+        let (m2, c2) = mean_cov(&b).unwrap();
+        // analytic: Tr(1 + 4 − 2·2) per dim = 1 per dim = 4
+        let d = frechet(&m1, &c1, &m2, &c2).unwrap();
+        assert!((d - 4.0).abs() < 1.0, "d={d}");
+    }
+
+    #[test]
+    fn frechet_monotone_in_shift() {
+        let a = gaussian_feats(1000, 4, 0.0, 1.0, 6);
+        let (m1, c1) = mean_cov(&a).unwrap();
+        let mut prev = -1.0;
+        for shift in [0.0f32, 0.5, 1.0, 2.0] {
+            let b = gaussian_feats(1000, 4, shift, 1.0, 7);
+            let (m2, c2) = mean_cov(&b).unwrap();
+            let d = frechet(&m1, &c1, &m2, &c2).unwrap();
+            assert!(d > prev, "shift={shift} d={d} prev={prev}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn is_uniform_vs_peaked() {
+        // peaked & diverse predictions -> high IS; uniform -> IS = 1
+        let n = 100;
+        let k = 10;
+        let mut peaked = Mat::zeros(n, k);
+        for i in 0..n {
+            peaked[(i, i % k)] = 1.0;
+        }
+        let uniform = Mat::from_vec(n, k, vec![0.1; n * k]).unwrap();
+        let is_peaked = inception_score(&peaked).unwrap();
+        let is_uniform = inception_score(&uniform).unwrap();
+        assert!((is_uniform - 1.0).abs() < 1e-4);
+        assert!((is_peaked - k as f32).abs() < 0.5, "{is_peaked}");
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut m = Mat::from_vec(2, 3, vec![1., 2., 3., -1., 0., 1.]).unwrap();
+        softmax_rows(&mut m);
+        for i in 0..2 {
+            let s: f32 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Row-major f32 matrix with the handful of ops the eval stack needs.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Result<Mat> {
+        if rows.is_empty() {
+            return Ok(Mat::zeros(0, 0));
+        }
+        let cols = rows[0].len();
+        if rows.iter().any(|r| r.len() != cols) {
+            bail!("ragged rows");
+        }
+        Ok(Mat { rows: rows.len(), cols, data: rows.concat() })
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Mat> {
+        if data.len() != rows * cols {
+            bail!("shape {}x{} != data len {}", rows, cols, data.len());
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Result<Mat> {
+        if self.cols != other.rows {
+            bail!("matmul shape mismatch: {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
+        }
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj loop order: stream `other` rows, accumulate into out rows.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn add(&self, other: &Mat) -> Result<Mat> {
+        if self.rows != other.rows || self.cols != other.cols {
+            bail!("add shape mismatch");
+        }
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Ok(Mat { rows: self.rows, cols: self.cols, data })
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|v| v * s).collect() }
+    }
+
+    pub fn trace(&self) -> f32 {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Frobenius norm of (self - other).
+    pub fn dist(&self, other: &Mat) -> f32 {
+        self.data.iter().zip(&other.data).map(|(a, b)| (a - b).powi(2)).sum::<f32>().sqrt()
+    }
+
+    pub fn is_symmetric(&self, tol: f32) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in 0..i {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_vec(3, 3, (0..9).map(|i| i as f32).collect()).unwrap();
+        let c = a.matmul(&Mat::eye(3)).unwrap();
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn matmul_shape_error() {
+        let a = Mat::zeros(2, 3);
+        assert!(a.matmul(&Mat::zeros(2, 2)).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn trace_and_dist() {
+        let a = Mat::eye(4);
+        assert_eq!(a.trace(), 4.0);
+        assert_eq!(a.dist(&Mat::eye(4)), 0.0);
+        assert!(a.dist(&Mat::zeros(4, 4)) > 1.9);
+    }
+
+    #[test]
+    fn symmetry_check() {
+        let mut a = Mat::eye(3);
+        assert!(a.is_symmetric(1e-9));
+        a[(0, 1)] = 0.5;
+        assert!(!a.is_symmetric(1e-9));
+        a[(1, 0)] = 0.5;
+        assert!(a.is_symmetric(1e-9));
+    }
+}

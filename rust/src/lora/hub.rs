@@ -1,0 +1,124 @@
+//! The LoRA hub state: per-layer A[H,r,K] / B[H,N,r] adapters packed into
+//! the flat vector the graphs consume, plus allocation-strategy helpers for
+//! the Table-1 experiment (single / dual-split / dual-random).
+
+use anyhow::{bail, Result};
+
+use crate::model::manifest::ModelInfo;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct LoraHub {
+    pub flat: Vec<f32>,
+    pub h: usize,
+    pub rank: usize,
+}
+
+impl LoraHub {
+    /// Paper init: A ~ N(0, 0.02), B = 0 (adapters start as no-ops).
+    pub fn init(info: &ModelInfo, rng: &mut Rng) -> LoraHub {
+        let h = info.cfg.lora_hub;
+        let r = info.cfg.lora_rank;
+        let mut flat = vec![0.0f32; info.lora_size];
+        for spec in &info.layer_specs {
+            let a_len = h * r * spec.fan_in;
+            for v in &mut flat[spec.lora_offset..spec.lora_offset + a_len] {
+                *v = rng.normal() * 0.02;
+            }
+            // B region stays zero
+        }
+        LoraHub { flat, h, rank: r }
+    }
+
+    pub fn zeros(info: &ModelInfo) -> LoraHub {
+        LoraHub { flat: vec![0.0; info.lora_size], h: info.cfg.lora_hub, rank: info.cfg.lora_rank }
+    }
+}
+
+/// How LoRAs are assigned to timesteps — Table 1's three strategies plus
+/// the learned router (TALoRA proper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocStrategy {
+    /// one adapter for every timestep (hub slot 0)
+    Single,
+    /// slot 0 for the first half of the denoising process (large t),
+    /// slot 1 for the last half
+    DualSplit,
+    /// uniformly random slot in {0,1} per timestep (the paper's negative
+    /// control — disordered allocation hurts)
+    DualRandom,
+    /// the learned timestep-aware router
+    Learned,
+}
+
+impl AllocStrategy {
+    /// Fixed (non-learned) selection for timestep t of T; None means the
+    /// router decides.
+    pub fn fixed_slot(&self, t: usize, t_total: usize, rng: &mut Rng) -> Option<usize> {
+        match self {
+            AllocStrategy::Single => Some(0),
+            AllocStrategy::DualSplit => Some(if t >= t_total / 2 { 0 } else { 1 }),
+            AllocStrategy::DualRandom => Some(rng.below(2)),
+            AllocStrategy::Learned => None,
+        }
+    }
+
+    /// Effective hub mask (h=1 for Single, h=2 for Dual*, full for Learned
+    /// callers pass their own h).
+    pub fn hub_mask(&self, h_total: usize, h_learned: usize) -> Vec<f32> {
+        let active = match self {
+            AllocStrategy::Single => 1,
+            AllocStrategy::DualSplit | AllocStrategy::DualRandom => 2,
+            AllocStrategy::Learned => h_learned,
+        };
+        (0..h_total).map(|i| if i < active { 1.0 } else { 0.0 }).collect()
+    }
+}
+
+/// Build a one-hot selection matrix [L, H] with every layer on `slot`.
+pub fn uniform_selection(n_layers: usize, h: usize, slot: usize) -> Result<Vec<f32>> {
+    if slot >= h {
+        bail!("slot {slot} >= hub size {h}");
+    }
+    let mut sel = vec![0.0f32; n_layers * h];
+    for l in 0..n_layers {
+        sel[l * h + slot] = 1.0;
+    }
+    Ok(sel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_slots() {
+        let mut rng = Rng::new(1);
+        assert_eq!(AllocStrategy::Single.fixed_slot(77, 100, &mut rng), Some(0));
+        assert_eq!(AllocStrategy::DualSplit.fixed_slot(80, 100, &mut rng), Some(0));
+        assert_eq!(AllocStrategy::DualSplit.fixed_slot(20, 100, &mut rng), Some(1));
+        assert_eq!(AllocStrategy::Learned.fixed_slot(5, 100, &mut rng), None);
+        let s = AllocStrategy::DualRandom.fixed_slot(5, 100, &mut rng).unwrap();
+        assert!(s < 2);
+    }
+
+    #[test]
+    fn hub_masks() {
+        assert_eq!(AllocStrategy::Single.hub_mask(4, 4), vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(AllocStrategy::DualSplit.hub_mask(4, 4), vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(AllocStrategy::Learned.hub_mask(4, 2), vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(AllocStrategy::Learned.hub_mask(4, 4), vec![1.0; 4]);
+    }
+
+    #[test]
+    fn uniform_selection_onehot() {
+        let sel = uniform_selection(3, 4, 2).unwrap();
+        assert_eq!(sel.len(), 12);
+        for l in 0..3 {
+            let row = &sel[l * 4..(l + 1) * 4];
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+            assert_eq!(row[2], 1.0);
+        }
+        assert!(uniform_selection(3, 4, 4).is_err());
+    }
+}

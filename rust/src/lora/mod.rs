@@ -1,0 +1,11 @@
+//! TALoRA: the timestep-aware LoRA hub and its router (paper §4.2).
+//!
+//! Training happens inside the fine-tune graph (router + STE in JAX);
+//! at inference the Rust router mirrors it exactly: sinusoidal(t) → linear
+//! → per-layer argmax → one-hot selection fed to the serving graph.
+
+pub mod hub;
+pub mod router;
+
+pub use hub::LoraHub;
+pub use router::Router;

@@ -1,0 +1,180 @@
+//! The timestep-aware router — inference-side mirror of
+//! quantized.router_select (python). Training updates the router weights
+//! through the fine-tune graph (STE); this mirror turns the trained weights
+//! into per-timestep one-hot selections on the serving path, so routing
+//! costs one tiny matvec in Rust and zero extra graph inputs beyond the
+//! sel[L,H] tensor.
+//!
+//! Agreement with the python forward is pinned by the router-golden
+//! integration test (argmax selections must match on ≥ 95% of cases;
+//! sin/cos/exp may differ by 1 ulp near ties).
+
+use anyhow::{bail, Result};
+
+use crate::model::manifest::ModelInfo;
+use crate::model::temb::sinusoidal;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// packed [temb_dim * L * H] weight then [L * H] bias
+    pub flat: Vec<f32>,
+    pub temb_dim: usize,
+    pub n_layers: usize,
+    pub h: usize,
+}
+
+impl Router {
+    pub fn new(info: &ModelInfo, flat: Vec<f32>) -> Result<Router> {
+        if flat.len() != info.router_size {
+            bail!("router len {} != router_size {}", flat.len(), info.router_size);
+        }
+        Ok(Router {
+            flat,
+            temb_dim: info.cfg.temb_dim,
+            n_layers: info.n_layers,
+            h: info.cfg.lora_hub,
+        })
+    }
+
+    /// Small random init (matches the fine-tune loop's initialization).
+    pub fn init(info: &ModelInfo, rng: &mut Rng) -> Router {
+        let flat = rng.normal_vec(info.router_size, 0.1);
+        Router::new(info, flat).unwrap()
+    }
+
+    /// logits[l*H + h] = temb · W[:, l*H + h] + b[l*H + h], mask applied.
+    pub fn logits(&self, t: f32, hub_mask: &[f32]) -> Vec<f32> {
+        let d = self.temb_dim;
+        let lh = self.n_layers * self.h;
+        let temb = sinusoidal(t, d);
+        let (w, b) = self.flat.split_at(d * lh);
+        let mut out = b.to_vec();
+        for (i, &e) in temb.iter().enumerate() {
+            if e == 0.0 {
+                continue;
+            }
+            let row = &w[i * lh..(i + 1) * lh];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += e * wv;
+            }
+        }
+        for l in 0..self.n_layers {
+            for k in 0..self.h {
+                out[l * self.h + k] += (hub_mask[k] - 1.0) * 1e9;
+            }
+        }
+        out
+    }
+
+    /// Per-layer argmax slot (first max wins, matching jnp.argmax).
+    pub fn select(&self, t: f32, hub_mask: &[f32]) -> Vec<usize> {
+        let logits = self.logits(t, hub_mask);
+        (0..self.n_layers)
+            .map(|l| {
+                let row = &logits[l * self.h..(l + 1) * self.h];
+                let mut best = 0;
+                for (k, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = k;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// One-hot selection matrix [L, H] for the serving graph.
+    pub fn selection_onehot(&self, t: f32, hub_mask: &[f32]) -> Vec<f32> {
+        let sel = self.select(t, hub_mask);
+        let mut out = vec![0.0f32; self.n_layers * self.h];
+        for (l, &s) in sel.iter().enumerate() {
+            out[l * self.h + s] = 1.0;
+        }
+        out
+    }
+
+    /// Allocation histogram over timesteps: out[t][h] = fraction of layers
+    /// routed to hub slot h at timestep t (Figures 7 & 9).
+    pub fn allocation_distribution(&self, t_total: usize, hub_mask: &[f32]) -> Vec<Vec<f32>> {
+        (0..t_total)
+            .map(|t| {
+                let sel = self.select(t as f32, hub_mask);
+                let mut hist = vec![0.0f32; self.h];
+                for s in sel {
+                    hist[s] += 1.0;
+                }
+                for v in &mut hist {
+                    *v /= self.n_layers as f32;
+                }
+                hist
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_router() -> Router {
+        let temb_dim = 8;
+        let n_layers = 3;
+        let h = 4;
+        let mut rng = Rng::new(42);
+        Router {
+            flat: rng.normal_vec(temb_dim * n_layers * h + n_layers * h, 0.5),
+            temb_dim,
+            n_layers,
+            h,
+        }
+    }
+
+    #[test]
+    fn selection_in_range_and_deterministic() {
+        let r = tiny_router();
+        let mask = vec![1.0; 4];
+        let a = r.select(13.0, &mask);
+        let b = r.select(13.0, &mask);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&s| s < 4));
+    }
+
+    #[test]
+    fn hub_mask_excludes_slots() {
+        let r = tiny_router();
+        let mask = vec![1.0, 1.0, 0.0, 0.0];
+        for t in 0..100 {
+            assert!(r.select(t as f32, &mask).iter().all(|&s| s < 2));
+        }
+    }
+
+    #[test]
+    fn onehot_rows_valid() {
+        let r = tiny_router();
+        let sel = r.selection_onehot(5.0, &[1.0; 4]);
+        for l in 0..3 {
+            let row = &sel[l * 4..(l + 1) * 4];
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+            assert!(row.iter().all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+
+    #[test]
+    fn allocation_distribution_normalized() {
+        let r = tiny_router();
+        let dist = r.allocation_distribution(50, &[1.0; 4]);
+        assert_eq!(dist.len(), 50);
+        for row in dist {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn different_timesteps_can_route_differently() {
+        let r = tiny_router();
+        let mask = vec![1.0; 4];
+        let any_diff = (0..99).any(|t| r.select(t as f32, &mask) != r.select((t + 1) as f32, &mask));
+        assert!(any_diff, "router constant across all timesteps is suspicious");
+    }
+}

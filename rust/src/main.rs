@@ -1,0 +1,233 @@
+//! msfp — CLI for the MSFP 4-bit FP diffusion quantization system.
+//!
+//! Subcommands:
+//!   pretrain  --corpus <name> [--steps N]           train the FP model
+//!   quantize  --corpus <name> --bits 4 [--method msfp|signed|int-mse|int-minmax]
+//!   sample    --corpus <name> [--bits N] [--n N] [--steps N] [--out grid.ppm]
+//!   eval      --corpus <name> [--bits N] [--method ...]     FID/sFID/IS proxy
+//!   serve     --corpus <name> [--requests N] [--n N]        serving demo/load
+//!   repro     --exp t1..t11,f1..f9|all                      paper tables/figures
+//!
+//! Scale: MSFP_SCALE=fast|full (default fast). Artifacts dir: MSFP_ARTIFACTS
+//! (default ./artifacts, built by `make artifacts`).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use msfp::config::{MethodSpec, Scale};
+use msfp::coordinator::{self, Request, ServeMode, ServerCfg};
+use msfp::data::Corpus;
+use msfp::eval::generate::SamplerKind;
+use msfp::eval::image::write_grid_ppm;
+use msfp::eval::{generate_images, GenerateCfg, ModelMode};
+use msfp::exp::{figures, tables, Report};
+use msfp::pipeline::Pipeline;
+use msfp::quant::msfp::Method;
+use msfp::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn corpus_arg(args: &Args) -> Result<Corpus> {
+    let name = args.str("corpus", "celeba-syn");
+    Corpus::parse(&name).with_context(|| format!("unknown corpus '{name}'"))
+}
+
+fn spec_arg(args: &Args, scale: &Scale) -> Result<MethodSpec> {
+    let bits = args.usize("bits", 4)? as i32;
+    if bits == 32 {
+        return Ok(MethodSpec::fp());
+    }
+    let h = args.usize("h", 2)?;
+    let method = args.str("method", "msfp");
+    Ok(match method.as_str() {
+        "msfp" => MethodSpec::ours(bits, h, scale.ft_epochs),
+        "msfp-ptq" => MethodSpec { finetune: None, ..MethodSpec::ours(bits, h, scale.ft_epochs) },
+        "signed" => MethodSpec {
+            label: "signed-FP".into(),
+            method: Some(Method::SignedFp),
+            ..MethodSpec::ours(bits, h, scale.ft_epochs)
+        },
+        "int-mse" => MethodSpec::qdiffusion_like(bits),
+        "int-minmax" => MethodSpec::eda_dm_like(bits),
+        "efficientdm" => MethodSpec::efficientdm_like(bits, scale.ft_epochs),
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse_env()?;
+    let scale = Scale::from_env();
+    let artifacts = Pipeline::default_artifacts_dir();
+
+    match args.subcommand.as_deref() {
+        Some("pretrain") => {
+            let mut scale = scale;
+            if let Some(steps) = args.opt_str("steps") {
+                scale.pretrain_steps = steps.parse()?;
+            }
+            let corpus = corpus_arg(&args)?;
+            args.finish()?;
+            let pl = Pipeline::new(&artifacts, scale)?;
+            let p = pl.prepare(corpus)?;
+            println!(
+                "pretrained {}: {} steps, loss {:.4} -> {:.4}",
+                corpus.name(),
+                p.pretrain_losses.len(),
+                p.pretrain_losses.first().unwrap_or(&0.0),
+                p.pretrain_losses.last().unwrap_or(&0.0)
+            );
+        }
+        Some("quantize") => {
+            let corpus = corpus_arg(&args)?;
+            let spec = spec_arg(&args, &scale)?;
+            args.finish()?;
+            let pl = Pipeline::new(&artifacts, scale)?;
+            let p = pl.prepare(corpus)?;
+            let calib = pl.calibrate(&p)?;
+            let q = pl.quantize(&p, &spec, &calib)?;
+            println!(
+                "quantized {} [{}]: {} layers, {} AALs, unsigned on {:.0}% of AALs",
+                corpus.name(),
+                spec.label,
+                q.scheme.layers.len(),
+                q.scheme.n_aal(),
+                q.scheme.unsigned_fraction_on_aals() * 100.0
+            );
+            for l in q.scheme.layers.iter().take(8) {
+                println!(
+                    "  {:<14} {:?} | w {:?} (mse {:.2e}) | a {:?} (mse {:.2e})",
+                    l.name, l.class, l.weight, l.w_mse, l.act, l.a_mse
+                );
+            }
+            let out = pl.runs_dir.join(format!("quant_{}_w{}.mts", corpus.name(), spec.wbits));
+            q.state.save(&out)?;
+            println!("saved quantized state to {} (serve --load {})", out.display(), out.display());
+        }
+        Some("sample") => {
+            let corpus = corpus_arg(&args)?;
+            let spec = spec_arg(&args, &scale)?;
+            let n = args.usize("n", 16)?;
+            let steps = args.usize("steps", scale.steps)?;
+            let out = args.str("out", "samples.ppm");
+            let seed = args.u64("seed", 11)?;
+            args.finish()?;
+            let pl = Pipeline::new(&artifacts, scale)?;
+            let p = pl.prepare(corpus)?;
+            let cfg = GenerateCfg { n, steps, eta: 0.0, sampler: SamplerKind::Ddim, seed };
+            let px = if spec.method.is_none() {
+                generate_images(&p.den, &p.info, &pl.sched, corpus, &p.params, ModelMode::Fp, &cfg)?
+                    .0
+            } else {
+                let calib = pl.calibrate(&p)?;
+                let q = pl.quantize(&p, &spec, &calib)?;
+                generate_images(
+                    &p.den,
+                    &p.info,
+                    &pl.sched,
+                    corpus,
+                    &p.params,
+                    ModelMode::Quant(&q.state),
+                    &cfg,
+                )?
+                .0
+            };
+            write_grid_ppm(std::path::Path::new(&out), &px, n, corpus.hw(), 4)?;
+            println!("wrote {n} samples to {out}");
+        }
+        Some("eval") => {
+            let corpus = corpus_arg(&args)?;
+            let spec = spec_arg(&args, &scale)?;
+            args.finish()?;
+            let pl = Pipeline::new(&artifacts, scale)?;
+            let p = pl.prepare(corpus)?;
+            let (r, _) = pl.evaluate_spec(&p, &spec, SamplerKind::Ddim, 0.0, 42)?;
+            println!("{} [{}]: {}", corpus.name(), spec.label, r.row());
+        }
+        Some("serve") => {
+            let corpus = corpus_arg(&args)?;
+            let spec = spec_arg(&args, &scale)?;
+            let requests = args.usize("requests", 12)?;
+            let per = args.usize("n", 2)?;
+            let steps = args.usize("steps", scale.steps)?;
+            args.finish()?;
+            let pl = Pipeline::new(&artifacts, scale)?;
+            let p = pl.prepare(corpus)?;
+            let mode = if let Some(path) = args.opt_str("load") {
+                ServeMode::Quant(msfp::runtime::QuantState::load(
+                    &p.info,
+                    std::path::Path::new(&path),
+                )?)
+            } else if spec.method.is_none() {
+                ServeMode::Fp
+            } else {
+                let calib = pl.calibrate(&p)?;
+                let q = pl.quantize(&p, &spec, &calib)?;
+                ServeMode::Quant(q.state)
+            };
+            let decode = corpus.hw() != p.info.cfg.img_hw;
+            let den = Arc::new(msfp::runtime::Denoiser::new(Arc::clone(&pl.engine), &p.info)?);
+            let handle = coordinator::spawn(
+                den,
+                p.info.clone(),
+                pl.sched.clone(),
+                Arc::new(p.params.clone()),
+                ServerCfg { mode, decode_latents: decode, seed: 3 },
+            );
+            let rxs: Vec<_> = (0..requests)
+                .map(|i| handle.submit(Request::new(i as u64, per, steps)))
+                .collect();
+            for rx in rxs {
+                let resp = rx.recv()?;
+                println!(
+                    "request {} done: {} images in {:.1} ms ({} evals)",
+                    resp.id,
+                    resp.n,
+                    resp.latency.as_secs_f64() * 1e3,
+                    resp.evals
+                );
+            }
+            let m = handle.shutdown();
+            println!("serving summary: {}", m.report());
+        }
+        Some("repro") => {
+            let exp = args.str("exp", "all");
+            args.finish()?;
+            let pl = Pipeline::new(&artifacts, scale)?;
+            let report = Report::new(&pl.runs_dir)?;
+            let ids: Vec<&str> = if exp == "all" {
+                vec![
+                    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "t11", "f1",
+                    "f2", "f3", "f4", "f6", "f7", "f8", "f9",
+                ]
+            } else {
+                exp.split(',').collect()
+            };
+            for id in ids {
+                println!("\n### running experiment {id} ###");
+                let r = if id.starts_with('t') {
+                    tables::run_table(&pl, &report, id)
+                } else {
+                    figures::run_figure(&pl, &report, id)
+                };
+                if let Err(e) = r {
+                    eprintln!("experiment {id} failed: {e:#}");
+                }
+            }
+        }
+        Some(other) => {
+            bail!("unknown subcommand '{other}' (try: pretrain quantize sample eval serve repro)")
+        }
+        None => {
+            println!("msfp — 4-bit FP quantization for diffusion models (MSFP + TALoRA + DFA)");
+            println!("usage: msfp <pretrain|quantize|sample|eval|serve|repro> [--flags]");
+            println!("see README.md; artifacts must be built first: make artifacts");
+        }
+    }
+    Ok(())
+}

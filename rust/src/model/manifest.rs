@@ -1,0 +1,285 @@
+//! artifacts/manifest.json — the ABI contract emitted by python/compile/aot.py.
+//!
+//! Everything Rust needs to drive the graphs: parameter layout (name →
+//! offset/shape), the quantized-layer table (order matches the graphs'
+//! call-order cursor), artifact filenames per role/batch-size, and model
+//! hyperparameters.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: String, // "conv" | "linear"
+    pub fan_in: usize,
+    pub fan_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub aal_hint: bool,
+    pub param: String,
+    pub lora_offset: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub img_hw: usize,
+    pub in_ch: usize,
+    pub temb_dim: usize,
+    pub n_classes: usize,
+    pub lora_rank: usize,
+    pub lora_hub: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub cfg: ModelCfg,
+    pub n_params: usize,
+    pub n_layers: usize,
+    pub lora_size: usize,
+    pub router_size: usize,
+    pub act_samples: usize,
+    pub param_specs: Vec<ParamSpec>,
+    pub layer_specs: Vec<LayerSpec>,
+    pub init_params: String,
+    pub artifacts: BTreeMap<String, String>,
+    pub batches_fp: Vec<usize>,
+    pub batches_q: Vec<usize>,
+    pub train_b: usize,
+    pub calib_b: usize,
+}
+
+impl ModelInfo {
+    /// x-tensor element count for batch b.
+    pub fn x_size(&self, b: usize) -> usize {
+        b * self.cfg.img_hw * self.cfg.img_hw * self.cfg.in_ch
+    }
+
+    pub fn artifact(&self, role: &str) -> Result<&str> {
+        self.artifacts
+            .get(role)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("model {} has no artifact '{role}'", self.name))
+    }
+
+    pub fn param_spec(&self, name: &str) -> Result<&ParamSpec> {
+        self.param_specs
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow!("no param '{name}'"))
+    }
+
+    /// Indices of the 8-bit IO layers (first = conv_in preceded by the temb
+    /// linears in call order; we mark by name).
+    pub fn io_layer_indices(&self) -> Vec<usize> {
+        self.layer_specs
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.name == "conv_in" || l.name == "conv_out")
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Indices of skip-connection layers (Table 11's partial-quantization
+    /// setting keeps these at high precision).
+    pub fn skip_layer_indices(&self) -> Vec<usize> {
+        self.layer_specs
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.name.ends_with(".skip") || l.name == "up" || l.name == "down")
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FeatureInfo {
+    pub path16: String,
+    pub path32: String,
+    pub feat_dim: usize,
+    pub sfeat_dim: usize,
+    pub n_logits: usize,
+    pub batch: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub features: FeatureInfo,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.get("schema")?.usize()? != 1 {
+            bail!("unsupported manifest schema");
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.obj()? {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        let f = j.get("features")?;
+        let features = FeatureInfo {
+            path16: f.get("16")?.str()?.to_string(),
+            path32: f.get("32")?.str()?.to_string(),
+            feat_dim: f.get("feat_dim")?.usize()?,
+            sfeat_dim: f.get("sfeat_dim")?.usize()?,
+            n_logits: f.get("n_logits")?.usize()?,
+            batch: f.get("batch")?.usize()?,
+        };
+        Ok(Manifest { dir: dir.to_path_buf(), models, features })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!("unknown model '{name}' (have: {:?})", self.models.keys().collect::<Vec<_>>())
+        })
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
+    let cfg = m.get("cfg")?;
+    let cfg = ModelCfg {
+        img_hw: cfg.get("img_hw")?.usize()?,
+        in_ch: cfg.get("in_ch")?.usize()?,
+        temb_dim: cfg.get("temb_dim")?.usize()?,
+        n_classes: cfg.get("n_classes")?.usize()?,
+        lora_rank: cfg.get("lora_rank")?.usize()?,
+        lora_hub: cfg.get("lora_hub")?.usize()?,
+    };
+    let param_specs = m
+        .get("param_specs")?
+        .arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.get("name")?.str()?.to_string(),
+                shape: p.get("shape")?.usize_vec()?,
+                offset: p.get("offset")?.usize()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let layer_specs = m
+        .get("layer_specs")?
+        .arr()?
+        .iter()
+        .map(|l| {
+            Ok(LayerSpec {
+                name: l.get("name")?.str()?.to_string(),
+                kind: l.get("kind")?.str()?.to_string(),
+                fan_in: l.get("fan_in")?.usize()?,
+                fan_out: l.get("fan_out")?.usize()?,
+                k: l.get("k")?.usize()?,
+                stride: l.get("stride")?.usize()?,
+                aal_hint: l.get("aal")?.bool()?,
+                param: l.get("param")?.str()?.to_string(),
+                lora_offset: l.get("lora_offset")?.usize()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let artifacts = m
+        .get("artifacts")?
+        .obj()?
+        .iter()
+        .map(|(k, v)| Ok((k.clone(), v.str()?.to_string())))
+        .collect::<Result<BTreeMap<_, _>>>()?;
+    let info = ModelInfo {
+        name: name.to_string(),
+        cfg,
+        n_params: m.get("n_params")?.usize()?,
+        n_layers: m.get("n_layers")?.usize()?,
+        lora_size: m.get("lora_size")?.usize()?,
+        router_size: m.get("router_size")?.usize()?,
+        act_samples: m.get("act_samples")?.usize()?,
+        param_specs,
+        layer_specs,
+        init_params: m.get("init_params")?.str()?.to_string(),
+        artifacts,
+        batches_fp: m.get("batches_fp")?.usize_vec()?,
+        batches_q: m.get("batches_q")?.usize_vec()?,
+        train_b: m.get("train_b")?.usize()?,
+        calib_b: m.get("calib_b")?.usize()?,
+    };
+    // consistency checks — catch drift between aot.py and this parser early
+    if info.layer_specs.len() != info.n_layers {
+        bail!("model {name}: layer_specs len != n_layers");
+    }
+    let psum: usize = info.param_specs.iter().map(|p| p.size()).sum();
+    if psum != info.n_params {
+        bail!("model {name}: param sizes sum {psum} != n_params {}", info.n_params);
+    }
+    Ok(info)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("ddim16"));
+        assert!(m.models.contains_key("ldm8"));
+        assert!(m.models.contains_key("ldm8c"));
+        let d = m.model("ddim16").unwrap();
+        assert_eq!(d.cfg.img_hw, 16);
+        assert_eq!(d.cfg.in_ch, 3);
+        assert!(d.n_layers > 10);
+        assert!(!d.io_layer_indices().is_empty());
+        assert!(d.artifact("fp_b8").is_ok());
+        assert!(d.artifact("q_b1").is_ok());
+        assert!(d.artifact("finetune_b8").is_ok());
+        assert!(d.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn ldm8c_is_conditional() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model("ldm8c").unwrap().cfg.n_classes, 10);
+        assert_eq!(m.model("ldm8").unwrap().cfg.n_classes, 0);
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Model-side plumbing: the artifact manifest (the Rust↔JAX ABI), the flat
+//! parameter store, the sinusoidal timestep embedding mirror, and model
+//! variant metadata.
+
+pub mod manifest;
+pub mod params;
+pub mod temb;
+
+pub use manifest::{LayerSpec, Manifest, ModelInfo, ParamSpec};
+pub use params::ParamStore;

@@ -1,0 +1,111 @@
+//! The flat parameter store. Rust owns all mutable state (the graphs are
+//! pure functions); this wraps the flat f32 vector with manifest-indexed
+//! slicing and checkpoint IO.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::io::{read_f32_raw, Store};
+
+use super::manifest::ModelInfo;
+
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub flat: Vec<f32>,
+}
+
+impl ParamStore {
+    /// Load the seeded initial parameters emitted by aot.py.
+    pub fn load_init(info: &ModelInfo, artifacts_dir: &Path) -> Result<ParamStore> {
+        let flat = read_f32_raw(&artifacts_dir.join(&info.init_params))?;
+        if flat.len() != info.n_params {
+            bail!("init params len {} != n_params {}", flat.len(), info.n_params);
+        }
+        Ok(ParamStore { flat })
+    }
+
+    pub fn from_vec(info: &ModelInfo, flat: Vec<f32>) -> Result<ParamStore> {
+        if flat.len() != info.n_params {
+            bail!("param len {} != n_params {}", flat.len(), info.n_params);
+        }
+        Ok(ParamStore { flat })
+    }
+
+    /// Slice one named parameter tensor.
+    pub fn tensor<'a>(&'a self, info: &ModelInfo, name: &str) -> Result<&'a [f32]> {
+        let spec = info.param_spec(name)?;
+        Ok(&self.flat[spec.offset..spec.offset + spec.size()])
+    }
+
+    /// Weight tensors of all quantized layers, in layer order (for the
+    /// MSFP weight search).
+    pub fn layer_weights(&self, info: &ModelInfo) -> Result<Vec<Vec<f32>>> {
+        info.layer_specs.iter().map(|l| Ok(self.tensor(info, &l.param)?.to_vec())).collect()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut s = Store::new();
+        s.put("params", self.flat.clone());
+        s.save(path)
+    }
+
+    pub fn load(info: &ModelInfo, path: &Path) -> Result<ParamStore> {
+        let s = Store::load(path)?;
+        Self::from_vec(info, s.get("params")?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then(|| Manifest::load(&d).unwrap())
+    }
+
+    #[test]
+    fn loads_init_params_and_slices() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let info = m.model("ddim16").unwrap();
+        let p = ParamStore::load_init(info, &m.dir).unwrap();
+        assert_eq!(p.flat.len(), info.n_params);
+        // conv_in weights exist and are non-trivial
+        let w = p.tensor(info, "conv_in.w").unwrap();
+        assert!(w.iter().any(|&v| v != 0.0));
+        // conv_out is zero-initialized by design
+        let wo = p.tensor(info, "conv_out.w").unwrap();
+        assert!(wo.iter().all(|&v| v == 0.0));
+        // all layer weights sliceable
+        let lw = p.layer_weights(info).unwrap();
+        assert_eq!(lw.len(), info.n_layers);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let Some(m) = manifest() else {
+            return;
+        };
+        let info = m.model("ldm8").unwrap();
+        let p = ParamStore::load_init(info, &m.dir).unwrap();
+        let path = std::env::temp_dir().join("msfp_params_test.mts");
+        p.save(&path).unwrap();
+        let p2 = ParamStore::load(info, &path).unwrap();
+        assert_eq!(p.flat, p2.flat);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let Some(m) = manifest() else {
+            return;
+        };
+        let info = m.model("ddim16").unwrap();
+        assert!(ParamStore::from_vec(info, vec![0.0; 3]).is_err());
+    }
+}

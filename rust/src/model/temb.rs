@@ -1,0 +1,47 @@
+//! Sinusoidal timestep embedding — exact mirror of model.sinusoidal_temb
+//! (python). The TALoRA router consumes this at inference, so the Rust and
+//! JAX halves must produce matching embeddings (pinned by the router golden
+//! test).
+
+/// emb[i] = sin(t * exp(-ln(10000) * i / half)) for i < half, then cos.
+pub fn sinusoidal(t: f32, dim: usize) -> Vec<f32> {
+    let half = dim / 2;
+    let mut out = Vec::with_capacity(dim);
+    let ln1e4 = (10000.0f32).ln();
+    for i in 0..half {
+        let freq = (-ln1e4 * i as f32 / half as f32).exp();
+        out.push((t * freq).sin());
+    }
+    for i in 0..half {
+        let freq = (-ln1e4 * i as f32 / half as f32).exp();
+        out.push((t * freq).cos());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_timestep() {
+        let e = sinusoidal(0.0, 64);
+        assert!(e[..32].iter().all(|&v| v == 0.0));
+        assert!(e[32..].iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn bounded_and_distinct() {
+        let a = sinusoidal(10.0, 64);
+        let b = sinusoidal(11.0, 64);
+        assert!(a.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn first_component_is_plain_sin() {
+        let e = sinusoidal(2.5, 64);
+        assert!((e[0] - 2.5f32.sin()).abs() < 1e-6);
+        assert!((e[32] - 2.5f32.cos()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,291 @@
+//! End-to-end pipeline: pretrain → calibrate → quantize (MSFP/baseline) →
+//! fine-tune (TALoRA+DFA) → generate → evaluate. Every experiment runner
+//! and the CLI drive this; pretrained checkpoints are cached per corpus in
+//! the runs directory.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{MethodSpec, Scale};
+use crate::data::{Corpus, PatchAutoencoder};
+use crate::eval::{
+    evaluate, generate_images, reference_stats, EvalResult, FeatureExtractor, GenerateCfg,
+    ModelMode,
+};
+use crate::eval::generate::SamplerKind;
+use crate::log_info;
+use crate::lora::{LoraHub, Router};
+use crate::model::manifest::{Manifest, ModelInfo};
+use crate::model::ParamStore;
+use crate::quant::msfp::{quantize_model, LayerCalib, QuantOpts, QuantScheme};
+use crate::runtime::{Denoiser, Engine, QuantState};
+use crate::schedule::{timestep_subsequence, Schedule};
+use crate::train::{collect_calibration, finetune, pretrain, FinetuneStats, PretrainCfg, TrajectoryBuffer};
+use crate::util::io::Store;
+use crate::util::rng::Rng;
+
+pub const T_TOTAL: usize = 100;
+
+pub struct Pipeline {
+    pub engine: Arc<Engine>,
+    pub manifest: Manifest,
+    pub sched: Schedule,
+    pub runs_dir: PathBuf,
+    pub scale: Scale,
+}
+
+/// A pretrained model ready for quantization experiments.
+pub struct Prepared {
+    pub corpus: Corpus,
+    pub info: ModelInfo,
+    pub den: Denoiser,
+    pub params: Vec<f32>,
+    pub pretrain_losses: Vec<f32>,
+}
+
+/// A quantized (and possibly fine-tuned) model.
+pub struct Quantized {
+    pub scheme: QuantScheme,
+    pub state: QuantState,
+    pub ft_stats: Option<FinetuneStats>,
+}
+
+impl Pipeline {
+    pub fn new(artifacts_dir: &std::path::Path, scale: Scale) -> Result<Pipeline> {
+        let engine = Arc::new(Engine::new(artifacts_dir)?);
+        let manifest = Manifest::load(artifacts_dir)?;
+        let runs_dir = std::env::var("MSFP_RUNS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| artifacts_dir.parent().unwrap().join("runs"));
+        std::fs::create_dir_all(&runs_dir)?;
+        Ok(Pipeline { engine, manifest, sched: Schedule::linear(T_TOTAL), runs_dir, scale })
+    }
+
+    pub fn default_artifacts_dir() -> PathBuf {
+        std::env::var("MSFP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    /// Pretrain (or load the cached checkpoint for) a corpus.
+    pub fn prepare(&self, corpus: Corpus) -> Result<Prepared> {
+        let info = self.manifest.model(corpus.model_name())?.clone();
+        let den = Denoiser::new(Arc::clone(&self.engine), &info)?;
+        let ckpt = self.runs_dir.join(format!(
+            "pretrain_{}_{}steps.mts",
+            corpus.name(),
+            self.scale.pretrain_steps
+        ));
+        if ckpt.exists() {
+            let store = Store::load(&ckpt)?;
+            log_info!("loaded pretrained {} from {}", corpus.name(), ckpt.display());
+            return Ok(Prepared {
+                corpus,
+                params: store.get("params")?.to_vec(),
+                pretrain_losses: store.get("losses")?.to_vec(),
+                info,
+                den,
+            });
+        }
+        let init = ParamStore::load_init(&info, &self.manifest.dir)?;
+        let cfg = PretrainCfg {
+            steps: self.scale.pretrain_steps,
+            seed: 7 ^ corpus.name().len() as u64,
+            ..Default::default()
+        };
+        let (params, losses) =
+            pretrain(&self.engine, &info, &self.sched, corpus, init.flat, &cfg)?;
+        let mut store = Store::new();
+        store.put("params", params.clone());
+        store.put("losses", losses.clone());
+        store.save(&ckpt)?;
+        Ok(Prepared { corpus, params, pretrain_losses: losses, info, den })
+    }
+
+    /// Collect calibration data for a prepared model (x0 pool from the
+    /// corpus itself, per Q-Diffusion's calibration-set construction).
+    pub fn calibrate(&self, p: &Prepared) -> Result<Vec<LayerCalib>> {
+        let mut rng = Rng::new(11);
+        let ae = PatchAutoencoder::default();
+        let n = 16;
+        let (x0, _) = crate::train::pretrain::corpus_batch(p.corpus, &p.info, &ae, &mut rng, n);
+        collect_calibration(
+            &p.den,
+            &p.info,
+            &self.sched,
+            &p.params,
+            &x0,
+            self.scale.calib_rounds,
+            p.info.cfg.n_classes,
+            &mut rng,
+        )
+    }
+
+    /// Quantize per a method spec (and optionally fine-tune).
+    pub fn quantize(
+        &self,
+        p: &Prepared,
+        spec: &MethodSpec,
+        calib: &[LayerCalib],
+    ) -> Result<Quantized> {
+        let method = spec.method.expect("quantize() requires a quantization method");
+        let info = &p.info;
+        let store = ParamStore::from_vec(info, p.params.clone())?;
+        let weights = store.layer_weights(info)?;
+        let mut opts = QuantOpts::new(method, info.n_layers, spec.wbits, spec.abits)
+            .with_io_8bit(&info.io_layer_indices());
+        if spec.partial {
+            // Table 11 "partial quantization": skip/up/down layers at 8-bit
+            let skip = info.skip_layer_indices();
+            opts = opts.with_io_8bit(&skip);
+        }
+        let scheme = quantize_model(&weights, calib, &opts);
+        log_info!(
+            "quantized {} [{}] w{}a{}: {} AALs, unsigned on {:.0}%",
+            p.corpus.name(),
+            spec.label,
+            spec.wbits,
+            spec.abits,
+            scheme.n_aal(),
+            scheme.unsigned_fraction_on_aals() * 100.0
+        );
+
+        let mut rng = Rng::new(23);
+        let lora = LoraHub::init(info, &mut rng);
+        let router_flat = rng.normal_vec(info.router_size, 0.05);
+        let mut state = QuantState {
+            qparams: scheme.qparams_rows(),
+            lora: lora.flat,
+            router: Router::new(info, router_flat)?,
+            hub_mask: spec.alloc.hub_mask(
+                info.cfg.lora_hub,
+                spec.finetune.as_ref().map(|f| f.h).unwrap_or(1),
+            ),
+            strategy: spec.alloc,
+            t_total: self.sched.t_total,
+        };
+
+        let ft_stats = if let Some(ft) = &spec.finetune {
+            let tau = timestep_subsequence(self.sched.t_total, self.scale.steps);
+            let mut rng = Rng::new(31);
+            let traj = TrajectoryBuffer::collect(
+                &p.den,
+                info,
+                &self.sched,
+                &tau,
+                &p.params,
+                self.scale.traj_samples,
+                info.cfg.n_classes,
+                &mut rng,
+            )?;
+            let mut lora_flat = state.lora.clone();
+            let mut router_flat = state.router.flat.clone();
+            let mut cfg = ft.clone();
+            cfg.epochs = cfg.epochs.max(1);
+            let stats = finetune(
+                &self.engine,
+                info,
+                &self.sched,
+                &traj,
+                &p.params,
+                &state.qparams,
+                &mut lora_flat,
+                &mut router_flat,
+                &cfg,
+            )?;
+            state.lora = lora_flat;
+            state.router = Router::new(info, router_flat)?;
+            Some(stats)
+        } else {
+            None
+        };
+        Ok(Quantized { scheme, state, ft_stats })
+    }
+
+    /// Generate + evaluate a method spec end to end; FP spec short-circuits
+    /// the quantization stages.
+    pub fn evaluate_spec(
+        &self,
+        p: &Prepared,
+        spec: &MethodSpec,
+        sampler: SamplerKind,
+        eta: f32,
+        seed: u64,
+    ) -> Result<(EvalResult, Option<Quantized>)> {
+        let fx = FeatureExtractor::new(&self.engine, &self.manifest.features, p.corpus.hw())?;
+        let refs = reference_stats(&fx, p.corpus, self.scale.ref_n, 17)?;
+        let gen_cfg = GenerateCfg {
+            n: self.scale.eval_n,
+            steps: self.scale.steps,
+            eta,
+            sampler,
+            seed,
+        };
+        let (q, mode_images) = if spec.method.is_none() {
+            let (px, _) = generate_images(
+                &p.den, &p.info, &self.sched, p.corpus, &p.params, ModelMode::Fp, &gen_cfg,
+            )?;
+            (None, px)
+        } else {
+            let calib = self.calibrate(p)?;
+            let q = self.quantize(p, spec, &calib)?;
+            let (px, _) = generate_images(
+                &p.den,
+                &p.info,
+                &self.sched,
+                p.corpus,
+                &p.params,
+                ModelMode::Quant(&q.state),
+                &gen_cfg,
+            )?;
+            (Some(q), px)
+        };
+        let result = evaluate(&fx, &refs, &mode_images, gen_cfg.n)?;
+        log_info!("eval {} [{}]: {}", p.corpus.name(), spec.label, result.row());
+        Ok((result, q))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_fast_pipeline_ddim16() {
+        let dir = Pipeline::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut scale = Scale::fast();
+        scale.pretrain_steps = 25;
+        scale.eval_n = 40;
+        scale.ref_n = 64;
+        scale.steps = 5;
+        scale.traj_samples = 4;
+        scale.ft_epochs = 1;
+        scale.calib_rounds = 2;
+        // isolated runs dir so the cached checkpoint doesn't leak between
+        // test configurations
+        std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_test_runs"));
+        let pl = Pipeline::new(&dir, scale).unwrap();
+        let p = pl.prepare(Corpus::CelebaSyn).unwrap();
+        assert!(!p.pretrain_losses.is_empty());
+
+        // FP eval
+        let (fp, _) = pl
+            .evaluate_spec(&p, &MethodSpec::fp(), SamplerKind::Ddim, 0.0, 1)
+            .unwrap();
+        // ours 4-bit with 1-epoch finetune
+        let (ours, q) = pl
+            .evaluate_spec(&p, &MethodSpec::ours(4, 2, 1), SamplerKind::Ddim, 0.0, 1)
+            .unwrap();
+        assert!(fp.fid.is_finite() && ours.fid.is_finite());
+        let q = q.unwrap();
+        assert!(q.scheme.n_aal() > 0, "UNet must expose AALs");
+        assert!(q.ft_stats.is_some());
+        std::env::remove_var("MSFP_RUNS");
+    }
+}

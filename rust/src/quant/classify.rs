@@ -1,0 +1,93 @@
+//! AAL / NAL classification (paper Observation 1).
+//!
+//! Layers fed by SiLU have Anomalous Activation Distributions: every
+//! negative value is compressed into the trough [SILU_MIN, 0) ≈ [-0.278, 0),
+//! while the positive tail is long. The classifier detects that signature
+//! from calibration statistics alone (min/max + samples), so it works on
+//! models whose architecture we cannot introspect.
+
+use super::format::SILU_MIN;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerClass {
+    /// Anomalous-Activation-Distribution Layer: SiLU-shaped asymmetric input.
+    Aal,
+    /// Normal-Activation-Distribution Layer: roughly symmetric input.
+    Nal,
+}
+
+/// Classify from calibration stats. The SiLU signature:
+///  * the minimum sits inside the trough (> SILU_MIN - slack, < 0), and
+///  * the positive tail extends well beyond the trough depth.
+pub fn classify(min: f32, max: f32) -> LayerClass {
+    let trough = min > SILU_MIN - 0.05 && min < -1e-4;
+    let asymmetric = max > 2.0 * min.abs();
+    if trough && asymmetric {
+        LayerClass::Aal
+    } else {
+        LayerClass::Nal
+    }
+}
+
+/// Asymmetry diagnostic used by the Figure-1 report: ratio of positive to
+/// negative mass range. ~1 for symmetric distributions, >> 1 for AALs.
+pub fn asymmetry_ratio(min: f32, max: f32) -> f32 {
+    if min >= 0.0 {
+        f32::INFINITY
+    } else {
+        max / min.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn silu(x: f32) -> f32 {
+        x / (1.0 + (-x).exp())
+    }
+
+    #[test]
+    fn silu_outputs_classified_aal() {
+        let mut rng = Rng::new(1);
+        let vals: Vec<f32> = (0..10_000).map(|_| silu(rng.normal() * 2.0)).collect();
+        let min = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(classify(min, max), LayerClass::Aal, "min={min} max={max}");
+    }
+
+    #[test]
+    fn gaussian_classified_nal() {
+        let mut rng = Rng::new(2);
+        let vals: Vec<f32> = (0..10_000).map(|_| rng.normal()).collect();
+        let min = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(classify(min, max), LayerClass::Nal);
+    }
+
+    #[test]
+    fn silu_min_constant_is_right() {
+        // numeric minimum of x*sigmoid(x)
+        let min = (0..40_000).map(|i| silu(-4.0 + i as f32 * 1e-4)).fold(f32::INFINITY, f32::min);
+        assert!((min - SILU_MIN).abs() < 1e-3, "min={min}");
+    }
+
+    #[test]
+    fn positive_only_is_nal() {
+        // e.g. post-softmax attention outputs: min >= 0 -> not AAL by our
+        // trough rule (nothing below zero to recover).
+        assert_eq!(classify(0.0, 5.0), LayerClass::Nal);
+    }
+
+    #[test]
+    fn symmetric_wide_negative_is_nal() {
+        assert_eq!(classify(-3.0, 3.0), LayerClass::Nal);
+    }
+
+    #[test]
+    fn asymmetry_diagnostic() {
+        assert!(asymmetry_ratio(-0.27, 6.0) > 20.0);
+        assert!((asymmetry_ratio(-3.0, 3.0) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,126 @@
+//! ExMy format space and the paper's search spaces (Table 6, Appendix B).
+
+use std::fmt;
+
+/// A floating-point format: e exponent bits, m mantissa bits. The sign bit
+/// is implied by how the format is used (signed: e+m = n-1; unsigned:
+/// e+m = n).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FpFormat {
+    pub e_bits: i32,
+    pub m_bits: i32,
+}
+
+impl FpFormat {
+    pub fn new(e_bits: i32, m_bits: i32) -> FpFormat {
+        FpFormat { e_bits, m_bits }
+    }
+
+    /// Total data bits when used signed (adds the sign bit).
+    pub fn signed_bits(&self) -> i32 {
+        self.e_bits + self.m_bits + 1
+    }
+
+    /// Total data bits when used unsigned.
+    pub fn unsigned_bits(&self) -> i32 {
+        self.e_bits + self.m_bits
+    }
+}
+
+impl fmt::Display for FpFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "E{}M{}", self.e_bits, self.m_bits)
+    }
+}
+
+/// Weight-format search space per bit-width (paper Table 6: the four most
+/// expressive signed formats per n).
+pub fn weight_formats(bits: i32) -> Vec<FpFormat> {
+    match bits {
+        4 => vec![FpFormat::new(3, 0), FpFormat::new(2, 1), FpFormat::new(1, 2), FpFormat::new(0, 3)],
+        6 => vec![FpFormat::new(4, 1), FpFormat::new(3, 2), FpFormat::new(2, 3), FpFormat::new(1, 4)],
+        8 => vec![FpFormat::new(5, 2), FpFormat::new(4, 3), FpFormat::new(3, 4), FpFormat::new(2, 5)],
+        n => {
+            // general fallback: all signed splits
+            (0..n).map(|e| FpFormat::new(e, n - 1 - e)).collect()
+        }
+    }
+}
+
+/// Activation signed-format space: ALL splits e+m = n-1 (Appendix B:
+/// "we include all possible formats ... within the search space").
+pub fn act_signed_formats(bits: i32) -> Vec<FpFormat> {
+    (0..bits).map(|e| FpFormat::new(e, bits - 1 - e)).collect()
+}
+
+/// Activation unsigned-format space: all splits e+m = n with m >= 1
+/// (the freed sign bit becomes exponent/mantissa width — paper §4.1).
+pub fn act_unsigned_formats(bits: i32) -> Vec<FpFormat> {
+    (0..bits).map(|e| FpFormat::new(e, bits - e)).collect()
+}
+
+/// The weight maxval search interval per bit-width, as fractions of
+/// maxval_0 (Appendix B Table 6 / Table 5 exploration).
+pub fn weight_maxval_space(bits: i32) -> (f32, f32) {
+    match bits {
+        4 => (0.8, 2.0),
+        _ => (0.9, 2.0),
+    }
+}
+
+/// Zero-point search space: linspace(-0.3, 0, 6) — the SiLU trough
+/// min is -0.278 (paper Appendix B).
+pub fn zp_space() -> Vec<f32> {
+    (0..6).map(|i| -0.3 + 0.06 * i as f32).collect()
+}
+
+/// SiLU's global minimum value: min_x x·sigmoid(x) ≈ -0.2785.
+pub const SILU_MIN: f32 = -0.2785;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_weight_formats() {
+        assert_eq!(
+            weight_formats(4).iter().map(|f| f.to_string()).collect::<Vec<_>>(),
+            vec!["E3M0", "E2M1", "E1M2", "E0M3"]
+        );
+        assert_eq!(weight_formats(6)[0].to_string(), "E4M1");
+        assert_eq!(weight_formats(8)[3].to_string(), "E2M5");
+    }
+
+    #[test]
+    fn bit_budgets_hold() {
+        for bits in [4, 6, 8] {
+            for f in weight_formats(bits) {
+                assert_eq!(f.signed_bits(), bits);
+            }
+            for f in act_signed_formats(bits) {
+                assert_eq!(f.signed_bits(), bits);
+            }
+            for f in act_unsigned_formats(bits) {
+                assert_eq!(f.unsigned_bits(), bits, "{f}");
+            }
+        }
+    }
+
+    #[test]
+    fn unsigned_has_one_extra_bit_of_width() {
+        // the paper's freed-sign-bit argument: for the same n, unsigned
+        // formats carry one more exponent+mantissa bit than signed ones.
+        let s: i32 = act_signed_formats(4).iter().map(|f| f.e_bits + f.m_bits).max().unwrap();
+        let u: i32 = act_unsigned_formats(4).iter().map(|f| f.e_bits + f.m_bits).max().unwrap();
+        assert_eq!(u, s + 1);
+    }
+
+    #[test]
+    fn zp_space_covers_silu_trough() {
+        let zs = zp_space();
+        assert_eq!(zs.len(), 6);
+        assert!((zs[0] + 0.3).abs() < 1e-6);
+        assert!(zs[5].abs() < 1e-6);
+        assert!(zs.iter().any(|&z| (z - SILU_MIN).abs() < 0.04));
+    }
+}

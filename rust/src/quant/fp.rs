@@ -1,0 +1,195 @@
+//! Floating-point fake quantize-dequantize — bit-exact Rust mirror of the
+//! deployed Pallas kernel (numerics contract in python/compile/kernels/ref.py).
+//!
+//! The MSFP search (Algorithm 1) evaluates millions of candidate-quantizer
+//! MSEs against calibration samples; it MUST use the exact arithmetic the
+//! serving kernel applies, or the search optimizes the wrong objective.
+//! Agreement is pinned by tests/golden.rs against artifacts generated from
+//! the Python reference.
+
+/// Exact 2^k for k in [-126, 127], via bit assembly.
+#[inline]
+pub fn exp2_int(k: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&k));
+    f32::from_bits(((k + 127) as u32) << 23)
+}
+
+/// floor(log2(x)) for x >= 0 via IEEE-754 exponent extraction (exact).
+/// x == 0 returns the sentinel -200 (callers clamp).
+#[inline]
+pub fn floor_log2(x: f32) -> i32 {
+    let bits = x.to_bits();
+    let e = ((bits >> 23) & 0xFF) as i32;
+    let m = bits & 0x007F_FFFF;
+    if e == 0 {
+        if m == 0 {
+            -200
+        } else {
+            (31 - m.leading_zeros() as i32) - 149
+        }
+    } else {
+        e - 127
+    }
+}
+
+/// Deterministic half-up rounding: floor(v + 0.5).
+#[inline]
+pub fn rnd(v: f32) -> f32 {
+    (v + 0.5).floor()
+}
+
+/// Smallest normal binade exponent for an e-bit exponent field, floored at
+/// -100 so `step = 2^(e_min - m)` stays a normal f32 for any mantissa width
+/// (part of the shared numerics contract — ref.py applies the same floor).
+#[inline]
+pub fn e_min_of(e_bits: i32) -> i32 {
+    (-((1i64 << e_bits) - 1)).max(-100) as i32
+}
+
+/// Signed ExMy fake-qdq (paper Eq. 6), grid anchored at `maxval`.
+#[inline]
+pub fn fp_qdq_signed(x: f32, maxval: f32, e_bits: i32, m_bits: i32) -> f32 {
+    let full = 2.0 - exp2_int(-m_bits);
+    let a = maxval / full;
+    let y = (x / a).clamp(-full, full);
+    let e = floor_log2(y.abs()).clamp(e_min_of(e_bits), 0);
+    let step = exp2_int(e - m_bits);
+    rnd(y / step) * step * a
+}
+
+/// Unsigned ExMy fake-qdq with zero point (paper Eq. 8).
+#[inline]
+pub fn fp_qdq_unsigned(x: f32, maxval: f32, e_bits: i32, m_bits: i32, zp: f32) -> f32 {
+    let full = 2.0 - exp2_int(-m_bits);
+    let a = maxval / full;
+    let y = ((x - zp) / a).clamp(0.0, full);
+    let e = floor_log2(y).clamp(e_min_of(e_bits), 0);
+    let step = exp2_int(e - m_bits);
+    rnd(y / step) * step * a + zp
+}
+
+/// Signed grid with an added zero point — NOT part of the deployed kernel;
+/// used only by the Figure-4 strategy analysis (the paper shows it brings
+/// minimal benefit, motivating MSFP's zp-only-for-unsigned choice).
+#[inline]
+pub fn fp_qdq_signed_zp(x: f32, maxval: f32, e_bits: i32, m_bits: i32, zp: f32) -> f32 {
+    fp_qdq_signed(x - zp, maxval, e_bits, m_bits) + zp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp2_exactness() {
+        assert_eq!(exp2_int(0), 1.0);
+        assert_eq!(exp2_int(3), 8.0);
+        assert_eq!(exp2_int(-4), 0.0625);
+        assert_eq!(exp2_int(-126), f32::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn floor_log2_cases() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(1.999), 0);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(0.5), -1);
+        assert_eq!(floor_log2(0.49), -2);
+        assert_eq!(floor_log2(3e-39), -128); // subnormal
+        assert_eq!(floor_log2(0.0), -200);
+    }
+
+    #[test]
+    fn rnd_half_up() {
+        assert_eq!(rnd(0.5), 1.0);
+        assert_eq!(rnd(-0.5), 0.0);
+        assert_eq!(rnd(1.49), 1.0);
+        assert_eq!(rnd(-1.5), -1.0);
+    }
+
+    #[test]
+    fn signed_idempotent_and_bounded() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..2000 {
+            let x = rng.normal() * 4.0;
+            let q = fp_qdq_signed(x, 2.5, 2, 1);
+            assert!(q.abs() <= 2.5 * (1.0 + 1e-6));
+            let q2 = fp_qdq_signed(q, 2.5, 2, 1);
+            assert!((q - q2).abs() <= 1e-6, "x={x} q={q} q2={q2}");
+        }
+    }
+
+    #[test]
+    fn signed_odd_symmetry() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..2000 {
+            let x = rng.normal() * 3.0;
+            let q = fp_qdq_signed(x, 1.7, 3, 2);
+            let qn = fp_qdq_signed(-x, 1.7, 3, 2);
+            assert_eq!(q, -qn);
+        }
+    }
+
+    #[test]
+    fn signed_hits_maxval() {
+        // the top grid point is exactly maxval
+        let q = fp_qdq_signed(100.0, 2.5, 2, 1);
+        assert!((q - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unsigned_floor_at_zp() {
+        let zp = -0.25;
+        for x in [-5.0f32, -0.3, -0.25, -0.1, 0.0, 0.5, 10.0] {
+            let q = fp_qdq_unsigned(x, 2.0, 2, 2, zp);
+            assert!(q >= zp - 1e-6, "x={x} q={q}");
+            assert!(q <= 2.0 + zp + 1e-5);
+        }
+    }
+
+    #[test]
+    fn unsigned_preserves_subzero_info() {
+        // Paper's Observation 1 fix: with zp = -0.278, sub-zero SiLU values
+        // retain resolution the signed grid lacks at 4 bits.
+        let zp = -0.278f32;
+        let xs: Vec<f32> = (0..100).map(|i| -0.278 + 0.00278 * i as f32).collect();
+        let mse_unsigned: f32 = xs
+            .iter()
+            .map(|&x| (fp_qdq_unsigned(x, 3.0 - zp, 1, 3, zp) - x).powi(2))
+            .sum::<f32>()
+            / xs.len() as f32;
+        let mse_signed: f32 = xs
+            .iter()
+            .map(|&x| (fp_qdq_signed(x, 3.0, 1, 2) - x).powi(2))
+            .sum::<f32>()
+            / xs.len() as f32;
+        assert!(mse_unsigned < mse_signed, "{mse_unsigned} vs {mse_signed}");
+    }
+
+    #[test]
+    fn e0_formats_are_uniform_grids() {
+        // E0M3 signed: uniform step everywhere = INT-like
+        let m = 3;
+        let maxval = 1.75f32;
+        let a = maxval / (2.0 - exp2_int(-m));
+        let step = a * exp2_int(-m);
+        for i in -14..=14 {
+            let x = i as f32 * step;
+            let q = fp_qdq_signed(x, maxval, 0, m);
+            assert!((q - x).abs() < 1e-6, "grid point {x} not preserved -> {q}");
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_step_top_binade() {
+        let maxval = 1.0f32;
+        let m = 2;
+        let a = maxval / (2.0 - exp2_int(-m));
+        let top_step = a * exp2_int(-m);
+        for i in 0..100 {
+            let x = 0.55 + 0.0045 * i as f32;
+            let q = fp_qdq_signed(x, maxval, 2, m);
+            assert!((q - x).abs() <= top_step / 2.0 + 1e-7);
+        }
+    }
+}

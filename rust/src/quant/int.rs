@@ -1,0 +1,83 @@
+//! Uniform INT fake quantize-dequantize — the baseline quantizers
+//! (Q-Diffusion / EfficientDM / LSQ-like comparators run on these).
+//! Bit-exact mirror of ref.int_qdq_{sym,asym}.
+
+use super::fp::rnd;
+
+/// Symmetric uniform INT fake-qdq: grid {-2^(n-1) .. 2^(n-1)-1} · s.
+#[inline]
+pub fn int_qdq_sym(x: f32, maxval: f32, n_bits: i32) -> f32 {
+    let qmax = ((1i64 << (n_bits - 1)) - 1) as f32;
+    let s = maxval / qmax;
+    rnd(x / s).clamp(-qmax - 1.0, qmax) * s
+}
+
+/// Asymmetric uniform INT fake-qdq on [lo, hi].
+#[inline]
+pub fn int_qdq_asym(x: f32, lo: f32, hi: f32, n_bits: i32) -> f32 {
+    let levels = ((1i64 << n_bits) - 1) as f32;
+    let mut s = (hi - lo) / levels;
+    if s <= 0.0 {
+        s = 1.0;
+    }
+    let z = rnd(-lo / s);
+    ((rnd(x / s) + z).clamp(0.0, levels) - z) * s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sym_grid_points_preserved() {
+        let n = 4;
+        let maxval = 3.5f32;
+        let s = maxval / 7.0;
+        for q in -8..=7 {
+            let x = q as f32 * s;
+            assert!((int_qdq_sym(x, maxval, n) - x).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sym_clamps() {
+        assert!((int_qdq_sym(100.0, 3.5, 4) - 3.5).abs() < 1e-6);
+        assert!((int_qdq_sym(-100.0, 3.5, 4) + 4.0).abs() < 1e-6); // -qmax-1 level
+    }
+
+    #[test]
+    fn asym_range_respected() {
+        for x in [-10.0f32, -0.3, 0.0, 1.0, 10.0] {
+            let q = int_qdq_asym(x, -0.3, 2.0, 4);
+            assert!(q >= -0.3 - 0.2 && q <= 2.0 + 0.2, "x={x} q={q}");
+        }
+    }
+
+    #[test]
+    fn asym_idempotent() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..1000 {
+            let x = rng.normal() * 2.0;
+            let q = int_qdq_asym(x, -0.5, 1.8, 4);
+            let q2 = int_qdq_asym(q, -0.5, 1.8, 4);
+            assert!((q - q2).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn degenerate_range_safe() {
+        // lo == hi must not divide by zero
+        let q = int_qdq_asym(0.7, 1.0, 1.0, 4);
+        assert!(q.is_finite());
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let xs: Vec<f32> = (0..5000).map(|_| rng.normal()).collect();
+        let mse = |n: i32| {
+            xs.iter().map(|&x| (int_qdq_sym(x, 3.0, n) - x).powi(2)).sum::<f32>() / xs.len() as f32
+        };
+        assert!(mse(8) < mse(6) && mse(6) < mse(4) && mse(4) < mse(2));
+    }
+}

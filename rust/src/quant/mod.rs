@@ -1,0 +1,15 @@
+//! The paper's quantization stack: FP/INT fake-quant numerics (bit-exact
+//! mirror of the Pallas kernel — see python/compile/kernels/ref.py for the
+//! shared contract), the ExMy format space, AAL/NAL classification, the
+//! search-based initialization (Algorithm 1) and the MSFP framework that
+//! assigns a quantizer to every layer.
+
+pub mod format;
+pub mod fp;
+pub mod int;
+pub mod search;
+pub mod classify;
+pub mod msfp;
+
+pub use format::FpFormat;
+pub use msfp::{LayerQuant, QuantScheme};

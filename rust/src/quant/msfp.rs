@@ -1,0 +1,265 @@
+//! The MSFP framework: assemble a per-layer quantization scheme for a whole
+//! model from calibration data (paper §4.1 + Appendix B/C).
+//!
+//! Per layer: classify AAL/NAL from calibration stats, search the weight
+//! quantizer over the tensor itself, search the activation quantizer over
+//! calibration samples (mixup stage-2 for AALs), and encode everything as
+//! the qparams[L, 8] runtime input of the serving/fine-tune graphs.
+
+use crate::util::threadpool::parallel_map;
+
+use super::classify::{classify, LayerClass};
+use super::search::{
+    search_act_int, search_act_msfp, search_weight_fp, search_weight_int, Quantizer,
+};
+
+/// Calibration data for one quantized layer.
+#[derive(Debug, Clone)]
+pub struct LayerCalib {
+    pub name: String,
+    /// subsampled input activations (from the *_calib artifact)
+    pub acts: Vec<f32>,
+    pub min: f32,
+    pub max: f32,
+    /// architecture ground truth (layer follows SiLU); used for reporting,
+    /// the scheme itself classifies from stats
+    pub aal_hint: bool,
+}
+
+/// Quantization decision for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerQuant {
+    pub name: String,
+    pub weight: Quantizer,
+    pub act: Quantizer,
+    pub w_mse: f64,
+    pub a_mse: f64,
+    pub class: LayerClass,
+}
+
+/// Whole-model scheme: one row per quantized layer, graph-encodable.
+#[derive(Debug, Clone)]
+pub struct QuantScheme {
+    pub layers: Vec<LayerQuant>,
+}
+
+/// Which initialization to run (ours vs the baseline families).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// MSFP: signed FP everywhere + mixup unsigned+zp on AALs (ours).
+    Msfp,
+    /// Signed FP only (the paper's ablation baseline, Table 4 row 1).
+    SignedFp,
+    /// Symmetric min-max INT (LSQ-init / naive PTQ).
+    IntMinMax,
+    /// MSE-searched INT (Q-Diffusion / EDA-DM / EfficientDM-style PTQ).
+    IntMse,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantOpts {
+    pub method: Method,
+    /// per-layer weight bit-width (IO layers typically 8, rest 4/6)
+    pub wbits: Vec<i32>,
+    /// per-layer activation bit-width
+    pub abits: Vec<i32>,
+    /// Table-5 override of the weight maxval space (fractions of maxval0)
+    pub weight_space: Option<(f32, f32)>,
+    /// maxval grid resolution (activations use Appendix B's 100)
+    pub maxval_points: usize,
+    pub threads: usize,
+}
+
+impl QuantOpts {
+    pub fn new(method: Method, n_layers: usize, wbits: i32, abits: i32) -> QuantOpts {
+        QuantOpts {
+            method,
+            wbits: vec![wbits; n_layers],
+            abits: vec![abits; n_layers],
+            weight_space: None,
+            maxval_points: 40,
+            threads: 0,
+        }
+    }
+
+    /// Paper's standard config: input & output layers at 8 bits.
+    pub fn with_io_8bit(mut self, io_layers: &[usize]) -> QuantOpts {
+        for &i in io_layers {
+            if i < self.wbits.len() {
+                self.wbits[i] = 8;
+                self.abits[i] = 8;
+            }
+        }
+        self
+    }
+}
+
+/// Run the initialization over all layers. `weights[l]` is layer l's weight
+/// tensor (sliced from the flat param store by the manifest).
+pub fn quantize_model(weights: &[Vec<f32>], calib: &[LayerCalib], opts: &QuantOpts) -> QuantScheme {
+    assert_eq!(weights.len(), calib.len());
+    let idx: Vec<usize> = (0..calib.len()).collect();
+    let layers = parallel_map(&idx, opts.threads, |_, &l| {
+        let c = &calib[l];
+        let wbits = opts.wbits[l];
+        let abits = opts.abits[l];
+        let class = classify(c.min, c.max);
+        let maxval0 = c.acts.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+
+        let (weight, w_mse, act, a_mse) = match opts.method {
+            Method::Msfp | Method::SignedFp => {
+                let w = search_weight_fp(&weights[l], wbits, opts.weight_space, opts.maxval_points);
+                let mixup = opts.method == Method::Msfp && class == LayerClass::Aal;
+                let a = search_act_msfp(&c.acts, abits, maxval0, mixup, opts.maxval_points.max(50));
+                (w.quantizer, w.mse, a.quantizer, a.mse)
+            }
+            Method::IntMinMax => {
+                let w = super::search::int_weight_minmax(&weights[l], wbits);
+                let a = Quantizer::IntAsym { n_bits: abits, lo: c.min.min(0.0), hi: c.max.max(1e-8) };
+                (w, w.mse(&weights[l]), a, a.mse(&c.acts))
+            }
+            Method::IntMse => {
+                let w = search_weight_int(&weights[l], wbits, opts.maxval_points);
+                let a = search_act_int(&c.acts, abits, c.min, c.max, opts.maxval_points.max(20));
+                (w.quantizer, w.mse, a.quantizer, a.mse)
+            }
+        };
+        LayerQuant { name: c.name.clone(), weight, act, w_mse, a_mse, class }
+    });
+    QuantScheme { layers }
+}
+
+impl QuantScheme {
+    /// Flatten into the qparams[L, 8] runtime input:
+    /// [w_maxval, w_ebits, w_mbits, a_sign, a_maxval, a_ebits, a_mbits, a_zp]
+    pub fn qparams_rows(&self) -> Vec<f32> {
+        let mut rows = Vec::with_capacity(self.layers.len() * 8);
+        for l in &self.layers {
+            let w = l.weight.encode_weight();
+            let a = l.act.encode_act();
+            rows.extend_from_slice(&[w[0], w[1], w[2], a[0], a[1], a[2], a[3], a[4]]);
+        }
+        rows
+    }
+
+    pub fn n_aal(&self) -> usize {
+        self.layers.iter().filter(|l| l.class == LayerClass::Aal).count()
+    }
+
+    /// Fraction of AALs where the mixup picked the unsigned quantizer
+    /// (paper: > 95%).
+    pub fn unsigned_fraction_on_aals(&self) -> f32 {
+        let aals: Vec<_> =
+            self.layers.iter().filter(|l| l.class == LayerClass::Aal).collect();
+        if aals.is_empty() {
+            return 0.0;
+        }
+        let unsigned = aals
+            .iter()
+            .filter(|l| matches!(l.act, Quantizer::UnsignedFp { .. }))
+            .count();
+        unsigned as f32 / aals.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn silu(x: f32) -> f32 {
+        x / (1.0 + (-x).exp())
+    }
+
+    fn fake_model(n_layers: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<LayerCalib>) {
+        let mut rng = Rng::new(seed);
+        let mut weights = Vec::new();
+        let mut calib = Vec::new();
+        for l in 0..n_layers {
+            weights.push(rng.normal_vec(512, 0.1));
+            let aal = l % 2 == 0;
+            let acts: Vec<f32> = (0..1024)
+                .map(|_| {
+                    let x = rng.normal() * 2.0;
+                    if aal {
+                        silu(x)
+                    } else {
+                        x
+                    }
+                })
+                .collect();
+            let min = acts.iter().cloned().fold(f32::INFINITY, f32::min);
+            let max = acts.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            calib.push(LayerCalib { name: format!("l{l}"), acts, min, max, aal_hint: aal });
+        }
+        (weights, calib)
+    }
+
+    #[test]
+    fn msfp_beats_signed_only_on_acts() {
+        let (w, c) = fake_model(6, 1);
+        let ours = quantize_model(&w, &c, &QuantOpts::new(Method::Msfp, 6, 4, 4));
+        let signed = quantize_model(&w, &c, &QuantOpts::new(Method::SignedFp, 6, 4, 4));
+        let ours_mse: f64 = ours.layers.iter().map(|l| l.a_mse).sum();
+        let signed_mse: f64 = signed.layers.iter().map(|l| l.a_mse).sum();
+        assert!(ours_mse < signed_mse, "{ours_mse} vs {signed_mse}");
+    }
+
+    #[test]
+    fn classification_matches_hints() {
+        let (w, c) = fake_model(8, 2);
+        let scheme = quantize_model(&w, &c, &QuantOpts::new(Method::Msfp, 8, 4, 4));
+        for (l, cal) in scheme.layers.iter().zip(&c) {
+            let is_aal = l.class == LayerClass::Aal;
+            assert_eq!(is_aal, cal.aal_hint, "layer {}", l.name);
+        }
+    }
+
+    #[test]
+    fn unsigned_dominates_on_aals() {
+        let (w, c) = fake_model(10, 3);
+        let scheme = quantize_model(&w, &c, &QuantOpts::new(Method::Msfp, 10, 4, 4));
+        assert!(scheme.unsigned_fraction_on_aals() >= 0.8,
+            "{}", scheme.unsigned_fraction_on_aals());
+    }
+
+    #[test]
+    fn qparams_rows_layout() {
+        let (w, c) = fake_model(3, 4);
+        let scheme = quantize_model(&w, &c, &QuantOpts::new(Method::Msfp, 3, 4, 4));
+        let rows = scheme.qparams_rows();
+        assert_eq!(rows.len(), 3 * 8);
+        for l in 0..3 {
+            assert!(rows[l * 8] > 0.0); // w_maxval
+            assert!(rows[l * 8 + 4] > 0.0); // a_maxval
+        }
+    }
+
+    #[test]
+    fn io_8bit_override() {
+        let opts = QuantOpts::new(Method::Msfp, 5, 4, 4).with_io_8bit(&[0, 4]);
+        assert_eq!(opts.wbits, vec![8, 4, 4, 4, 8]);
+        assert_eq!(opts.abits, vec![8, 4, 4, 4, 8]);
+    }
+
+    #[test]
+    fn int_mse_beats_minmax() {
+        let (w, c) = fake_model(4, 5);
+        let mm = quantize_model(&w, &c, &QuantOpts::new(Method::IntMinMax, 4, 4, 4));
+        let ms = quantize_model(&w, &c, &QuantOpts::new(Method::IntMse, 4, 4, 4));
+        let mm_mse: f64 = mm.layers.iter().map(|l| l.w_mse + l.a_mse).sum();
+        let ms_mse: f64 = ms.layers.iter().map(|l| l.w_mse + l.a_mse).sum();
+        assert!(ms_mse <= mm_mse + 1e-12);
+    }
+
+    #[test]
+    fn fp4_beats_int4_msfp_claim() {
+        // Appendix D's headline: FP PTQ beats INT PTQ on diffusion-style data
+        let (w, c) = fake_model(8, 6);
+        let fp = quantize_model(&w, &c, &QuantOpts::new(Method::Msfp, 8, 6, 6));
+        let int = quantize_model(&w, &c, &QuantOpts::new(Method::IntMse, 8, 6, 6));
+        let fp_mse: f64 = fp.layers.iter().map(|l| l.a_mse).sum();
+        let int_mse: f64 = int.layers.iter().map(|l| l.a_mse).sum();
+        assert!(fp_mse < int_mse * 1.5, "fp={fp_mse} int={int_mse}");
+    }
+}

@@ -1,0 +1,331 @@
+//! Search-based quantizer initialization — the paper's Algorithm 1.
+//!
+//! Every candidate (format × maxval × zp) is scored by the MSE between the
+//! calibration samples and their fake-quantized image, computed with the
+//! *deployed* numerics (quant::fp / quant::int). Stage 1 searches signed FP
+//! for all layers; stage 2 additionally searches unsigned FP + zero-point
+//! for AALs and keeps the winner (the mixup).
+
+use super::fp::{fp_qdq_signed, fp_qdq_signed_zp, fp_qdq_unsigned};
+use super::format::{self, FpFormat};
+use super::int::{int_qdq_asym, int_qdq_sym};
+
+/// A fully specified quantizer, encodable into a qparams row half
+/// (see manifest "qparams_row").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Quantizer {
+    SignedFp { fmt: FpFormat, maxval: f32 },
+    UnsignedFp { fmt: FpFormat, maxval: f32, zp: f32 },
+    IntSym { n_bits: i32, maxval: f32 },
+    IntAsym { n_bits: i32, lo: f32, hi: f32 },
+}
+
+impl Quantizer {
+    #[inline]
+    pub fn qdq(&self, x: f32) -> f32 {
+        match *self {
+            Quantizer::SignedFp { fmt, maxval } => fp_qdq_signed(x, maxval, fmt.e_bits, fmt.m_bits),
+            Quantizer::UnsignedFp { fmt, maxval, zp } => {
+                fp_qdq_unsigned(x, maxval, fmt.e_bits, fmt.m_bits, zp)
+            }
+            Quantizer::IntSym { n_bits, maxval } => int_qdq_sym(x, maxval, n_bits),
+            Quantizer::IntAsym { n_bits, lo, hi } => int_qdq_asym(x, lo, hi, n_bits),
+        }
+    }
+
+    /// MSE against samples under this quantizer.
+    pub fn mse(&self, xs: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for &x in xs {
+            let d = (self.qdq(x) - x) as f64;
+            acc += d * d;
+        }
+        acc / xs.len().max(1) as f64
+    }
+
+    /// Encode as the activation half of a qparams row:
+    /// [a_sign, a_maxval, a_ebits, a_mbits, a_zp].
+    pub fn encode_act(&self) -> [f32; 5] {
+        match *self {
+            Quantizer::SignedFp { fmt, maxval } => {
+                [1.0, maxval, fmt.e_bits as f32, fmt.m_bits as f32, 0.0]
+            }
+            Quantizer::UnsignedFp { fmt, maxval, zp } => {
+                [0.0, maxval, fmt.e_bits as f32, fmt.m_bits as f32, zp]
+            }
+            Quantizer::IntSym { n_bits, maxval } => [1.0, maxval, -1.0, n_bits as f32, 0.0],
+            Quantizer::IntAsym { n_bits, lo, hi } => [0.0, hi, -1.0, n_bits as f32, lo],
+        }
+    }
+
+    /// Encode as the weight half of a qparams row:
+    /// [w_maxval, w_ebits, w_mbits].
+    pub fn encode_weight(&self) -> [f32; 3] {
+        match *self {
+            Quantizer::SignedFp { fmt, maxval } => [maxval, fmt.e_bits as f32, fmt.m_bits as f32],
+            Quantizer::IntSym { n_bits, maxval } => [maxval, -1.0, n_bits as f32],
+            _ => panic!("weight quantizer must be signed ({self:?})"),
+        }
+    }
+}
+
+/// Result of a search: the winner and its calibration MSE.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchResult {
+    pub quantizer: Quantizer,
+    pub mse: f64,
+}
+
+fn argmin(cands: impl Iterator<Item = (Quantizer, f64)>) -> SearchResult {
+    let mut best = SearchResult {
+        quantizer: Quantizer::SignedFp { fmt: FpFormat::new(1, 1), maxval: 1.0 },
+        mse: f64::INFINITY,
+    };
+    for (q, mse) in cands {
+        if mse < best.mse {
+            best = SearchResult { quantizer: q, mse };
+        }
+    }
+    best
+}
+
+/// linspace with `n` points from lo to hi inclusive.
+pub fn linspace(lo: f32, hi: f32, n: usize) -> Vec<f32> {
+    if n == 1 {
+        return vec![lo];
+    }
+    (0..n).map(|i| lo + (hi - lo) * i as f32 / (n - 1) as f32).collect()
+}
+
+/// Stage-1 signed FP search (Algorithm 1 lines 6-16).
+pub fn search_signed(xs: &[f32], formats: &[FpFormat], maxvals: &[f32]) -> SearchResult {
+    argmin(formats.iter().flat_map(|&fmt| {
+        maxvals.iter().filter(|m| **m > 0.0).map(move |&maxval| {
+            let q = Quantizer::SignedFp { fmt, maxval };
+            (q, q.mse(xs))
+        })
+    }))
+}
+
+/// Stage-2 unsigned FP + zero-point search (Algorithm 1 lines 20-32).
+pub fn search_unsigned(
+    xs: &[f32],
+    formats: &[FpFormat],
+    maxvals: &[f32],
+    zps: &[f32],
+) -> SearchResult {
+    argmin(formats.iter().flat_map(|&fmt| {
+        maxvals.iter().filter(|m| **m > 0.0).flat_map(move |&maxval| {
+            zps.iter().map(move |&zp| {
+                let q = Quantizer::UnsignedFp { fmt, maxval, zp };
+                (q, q.mse(xs))
+            })
+        })
+    }))
+}
+
+/// Weight search: signed FP over the Table-6 spaces. `maxval0` is the
+/// absolute max of the tensor; `space` overrides the (lo,hi) fractions for
+/// the Table-5 sweep. `maxval_points` controls grid resolution.
+pub fn search_weight_fp(
+    w: &[f32],
+    bits: i32,
+    space: Option<(f32, f32)>,
+    maxval_points: usize,
+) -> SearchResult {
+    let maxval0 = w.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+    let (lo, hi) = space.unwrap_or_else(|| format::weight_maxval_space(bits));
+    let maxvals = linspace(lo * maxval0, hi * maxval0, maxval_points);
+    search_signed(w, &format::weight_formats(bits), &maxvals)
+}
+
+/// Activation MSFP search. `maxval0` comes from the random-forward capture
+/// (Appendix C); AALs run both stages and keep the winner.
+pub fn search_act_msfp(
+    xs: &[f32],
+    bits: i32,
+    maxval0: f32,
+    is_aal: bool,
+    maxval_points: usize,
+) -> SearchResult {
+    let maxvals = linspace(maxval0 / maxval_points as f32, maxval0, maxval_points);
+    let mut best = search_signed(xs, &format::act_signed_formats(bits), &maxvals);
+    if is_aal {
+        let u = search_unsigned(xs, &format::act_unsigned_formats(bits), &maxvals, &format::zp_space());
+        if u.mse < best.mse {
+            best = u;
+        }
+    }
+    best
+}
+
+/// INT baseline searches -------------------------------------------------
+
+/// MinMax INT weight quantizer (Q-Diffusion-style start).
+pub fn int_weight_minmax(w: &[f32], bits: i32) -> Quantizer {
+    let maxval = w.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+    Quantizer::IntSym { n_bits: bits, maxval }
+}
+
+/// MSE-searched symmetric INT (Q-Diffusion/EDA-DM-style reconstruction).
+pub fn search_weight_int(w: &[f32], bits: i32, maxval_points: usize) -> SearchResult {
+    let maxval0 = w.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+    argmin(linspace(0.3 * maxval0, maxval0, maxval_points).into_iter().map(|m| {
+        let q = Quantizer::IntSym { n_bits: bits, maxval: m };
+        (q, q.mse(w))
+    }))
+}
+
+/// MSE-searched asymmetric INT for activations.
+pub fn search_act_int(xs: &[f32], bits: i32, min: f32, max: f32, points: usize) -> SearchResult {
+    let lo0 = min.min(0.0);
+    let hi0 = max.max(1e-8);
+    argmin(linspace(0.3, 1.0, points).into_iter().flat_map(|s| {
+        linspace(0.5, 1.0, (points / 2).max(1)).into_iter().map(move |sl| {
+            let q = Quantizer::IntAsym { n_bits: bits, lo: lo0 * sl, hi: hi0 * s };
+            (q, q.mse(xs))
+        })
+    }))
+}
+
+/// The four Figure-4 strategies evaluated on one AAL's samples, returning
+/// MSEs normalized against plain signed FP (strategy 1): signed, signed+zp,
+/// unsigned (no zp), unsigned+zp.
+pub fn fig4_strategies(xs: &[f32], bits: i32, maxval0: f32, points: usize) -> [f64; 4] {
+    let maxvals = linspace(maxval0 / points as f32, maxval0, points);
+    let zps = format::zp_space();
+    let signed = search_signed(xs, &format::act_signed_formats(bits), &maxvals).mse;
+
+    // signed + zp: offline-only variant (fp_qdq_signed_zp)
+    let mut signed_zp = f64::INFINITY;
+    for fmt in format::act_signed_formats(bits) {
+        for &m in &maxvals {
+            for &zp in &zps {
+                let mse = xs
+                    .iter()
+                    .map(|&x| {
+                        let d = (fp_qdq_signed_zp(x, m, fmt.e_bits, fmt.m_bits, zp) - x) as f64;
+                        d * d
+                    })
+                    .sum::<f64>()
+                    / xs.len().max(1) as f64;
+                signed_zp = signed_zp.min(mse);
+            }
+        }
+    }
+
+    let unsigned_nozp =
+        search_unsigned(xs, &format::act_unsigned_formats(bits), &maxvals, &[0.0]).mse;
+    let unsigned_zp =
+        search_unsigned(xs, &format::act_unsigned_formats(bits), &maxvals, &zps).mse;
+
+    let base = signed.max(1e-18);
+    [signed / base, signed_zp / base, unsigned_nozp / base, unsigned_zp / base]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn silu_samples(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let x = rng.normal() * 2.0;
+                x / (1.0 + (-x).exp())
+            })
+            .collect()
+    }
+
+    fn normal_samples(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn search_finds_low_mse_signed() {
+        let xs = normal_samples(2048, 1);
+        let r = search_signed(&xs, &format::act_signed_formats(6), &linspace(0.5, 5.0, 40));
+        assert!(r.mse < 1e-3, "mse={}", r.mse);
+    }
+
+    #[test]
+    fn aal_search_prefers_unsigned_at_4bit() {
+        // the paper's core claim (Fig. 4): unsigned+zp wins on > 95% of AALs
+        let xs = silu_samples(4096, 2);
+        let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let r = search_act_msfp(&xs, 4, maxval0 * 1.2, true, 40);
+        assert!(matches!(r.quantizer, Quantizer::UnsignedFp { .. }), "{:?}", r);
+    }
+
+    #[test]
+    fn nal_search_stays_signed() {
+        let xs = normal_samples(4096, 3);
+        let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let r = search_act_msfp(&xs, 4, maxval0, false, 40);
+        assert!(matches!(r.quantizer, Quantizer::SignedFp { .. }));
+    }
+
+    #[test]
+    fn mixup_never_worse_than_signed_only() {
+        for seed in 0..5 {
+            let xs = silu_samples(2048, 100 + seed);
+            let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+            let signed = search_act_msfp(&xs, 4, maxval0, false, 30);
+            let mixup = search_act_msfp(&xs, 4, maxval0, true, 30);
+            assert!(mixup.mse <= signed.mse + 1e-12);
+        }
+    }
+
+    #[test]
+    fn weight_search_beats_minmax_int() {
+        let w = normal_samples(4096, 5);
+        let fp = search_weight_fp(&w, 4, None, 40);
+        let int_mm = int_weight_minmax(&w, 4);
+        assert!(fp.mse < int_mm.mse(&w), "{} vs {}", fp.mse, int_mm.mse(&w));
+    }
+
+    #[test]
+    fn int_mse_search_beats_minmax() {
+        let w = normal_samples(4096, 6);
+        let s = search_weight_int(&w, 4, 40);
+        assert!(s.mse <= int_weight_minmax(&w, 4).mse(&w));
+    }
+
+    #[test]
+    fn fig4_unsigned_zp_wins_on_silu() {
+        let xs = silu_samples(4096, 7);
+        let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let [s, _szp, _u, uzp] = fig4_strategies(&xs, 4, maxval0 * 1.3, 25);
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(uzp < 1.0, "unsigned+zp should beat signed: {uzp}");
+    }
+
+    #[test]
+    fn encode_roundtrip_semantics() {
+        let q = Quantizer::UnsignedFp { fmt: FpFormat::new(2, 2), maxval: 1.5, zp: -0.18 };
+        let e = q.encode_act();
+        assert_eq!(e, [0.0, 1.5, 2.0, 2.0, -0.18]);
+        let w = Quantizer::IntSym { n_bits: 4, maxval: 2.0 };
+        assert_eq!(w.encode_weight(), [2.0, -1.0, 4.0]);
+    }
+
+    #[test]
+    fn mse_higher_bits_monotone() {
+        let xs = silu_samples(2048, 8);
+        let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let m4 = search_act_msfp(&xs, 4, maxval0, true, 30).mse;
+        let m6 = search_act_msfp(&xs, 6, maxval0, true, 30).mse;
+        let m8 = search_act_msfp(&xs, 8, maxval0, true, 30).mse;
+        assert!(m8 < m6 && m6 < m4, "{m8} {m6} {m4}");
+    }
+
+    #[test]
+    fn linspace_endpoints() {
+        let v = linspace(1.0, 2.0, 5);
+        assert_eq!(v.len(), 5);
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[4], 2.0);
+    }
+}

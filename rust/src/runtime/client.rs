@@ -1,0 +1,146 @@
+//! PJRT client + compiled-executable cache.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::log_info;
+
+/// A compiled artifact, shareable across threads.
+///
+/// SAFETY of the Send/Sync impls: `PjRtLoadedExecutable` wraps a PJRT
+/// executable handle plus a refcounted client handle. The PJRT C API
+/// guarantees `Execute` is thread-safe on immutable loaded executables, and
+/// the CPU client is internally synchronized; the Rust wrapper is !Send only
+/// because it holds raw pointers. We never mutate the executable after
+/// compilation and never destroy it while workers hold an Arc.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute on f32 input vectors shaped per `dims` (row-major). Returns
+    /// the flattened f32 outputs of the tuple result, in order.
+    pub fn run(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let l = xla::Literal::vec1(data);
+                if dims.len() == 1 {
+                    Ok(l)
+                } else {
+                    l.reshape(dims).map_err(anyhow::Error::from)
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(anyhow::Error::from))
+            .collect()
+    }
+}
+
+/// The engine owns the PJRT client and a by-path cache of compiled
+/// executables (compile once per process; execution is hot-path).
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
+}
+
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        log_info!("PJRT client up: platform={}", client.platform_name());
+        Ok(Engine {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load + compile (or fetch from cache) an artifact by file name.
+    pub fn load(&self, file: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(file) {
+            return Ok(Arc::clone(e));
+        }
+        let path = self.artifacts_dir.join(file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {file}"))?;
+        log_info!("compiled {file} in {:.2}s", t0.elapsed().as_secs_f64());
+        let exe = Arc::new(Executable { exe, name: file.to_string() });
+        self.cache.lock().unwrap().insert(file.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_and_runs_features_artifact() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = Engine::new(&dir).unwrap();
+        let exe = engine.load("features16.hlo.txt").unwrap();
+        let img = vec![0.1f32; 32 * 16 * 16 * 3];
+        let out = exe.run(&[(&img, &[32, 16, 16, 3])]).unwrap();
+        assert_eq!(out.len(), 3); // feat, sfeat, logits
+        assert_eq!(out[0].len(), 32 * 64);
+        assert_eq!(out[1].len(), 32 * 256);
+        assert_eq!(out[2].len(), 32 * 10);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn cache_returns_same_arc() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let engine = Engine::new(&dir).unwrap();
+        let a = engine.load("features16.hlo.txt").unwrap();
+        let b = engine.load("features16.hlo.txt").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let engine = Engine::new(&dir).unwrap();
+        assert!(engine.load("nope.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,357 @@
+//! High-level denoiser façade over the compiled artifacts.
+//!
+//! Handles batch-size-class selection (artifacts are compiled for fixed
+//! batch sizes; requests are padded up to the smallest fitting class and
+//! outputs truncated), input marshalling per the manifest ABI, and the
+//! quantized path's router-driven LoRA selection.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::lora::hub::AllocStrategy;
+use crate::lora::Router;
+use crate::model::manifest::ModelInfo;
+use crate::util::rng::Rng;
+
+use super::client::{Engine, Executable};
+
+/// Everything the quantized graphs need beyond the FP params.
+#[derive(Debug, Clone)]
+pub struct QuantState {
+    /// qparams[L, 8] rows (from quant::msfp::QuantScheme::qparams_rows)
+    pub qparams: Vec<f32>,
+    /// flat LoRA hub
+    pub lora: Vec<f32>,
+    /// trained router weights (selection mirror)
+    pub router: Router,
+    /// active-hub mask (h=2 masks slots 2,3 of the H=4 hub)
+    pub hub_mask: Vec<f32>,
+    /// allocation strategy (Learned = use the router)
+    pub strategy: AllocStrategy,
+    /// total schedule steps (for the fixed strategies' t split)
+    pub t_total: usize,
+}
+
+impl QuantState {
+    /// Selection matrix [L, H] for timestep t.
+    pub fn selection(&self, t: f32, rng: &mut Rng) -> Vec<f32> {
+        match self.strategy.fixed_slot(t as usize, self.t_total, rng) {
+            Some(slot) => {
+                crate::lora::hub::uniform_selection(self.router.n_layers, self.router.h, slot)
+                    .expect("slot in range")
+            }
+            None => self.router.selection_onehot(t, &self.hub_mask),
+        }
+    }
+
+    /// Persist a quantized model (qparams + LoRA hub + router + mask) so
+    /// serving can start without re-running the search/fine-tune.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut s = crate::util::io::Store::new();
+        s.put("qparams", self.qparams.clone());
+        s.put("lora", self.lora.clone());
+        s.put("router", self.router.flat.clone());
+        s.put("hub_mask", self.hub_mask.clone());
+        s.put("t_total", vec![self.t_total as f32]);
+        s.save(path)
+    }
+
+    /// Load a quantized model saved by [`QuantState::save`]. The allocation
+    /// strategy is Learned (fixed strategies are experiment-only).
+    pub fn load(info: &ModelInfo, path: &std::path::Path) -> Result<QuantState> {
+        let s = crate::util::io::Store::load(path)?;
+        let router = Router::new(info, s.get("router")?.to_vec())?;
+        let qparams = s.get("qparams")?.to_vec();
+        if qparams.len() != info.n_layers * 8 {
+            bail!("qparams len {} != L*8", qparams.len());
+        }
+        let lora = s.get("lora")?.to_vec();
+        if lora.len() != info.lora_size {
+            bail!("lora len {} != lora_size {}", lora.len(), info.lora_size);
+        }
+        Ok(QuantState {
+            qparams,
+            lora,
+            router,
+            hub_mask: s.get("hub_mask")?.to_vec(),
+            strategy: AllocStrategy::Learned,
+            t_total: s.get("t_total")?[0] as usize,
+        })
+    }
+}
+
+pub struct Denoiser {
+    pub info: ModelInfo,
+    engine: Arc<Engine>,
+    /// (batch class, artifact file) — compiled lazily through the engine
+    /// cache (XLA-compiling an unused batch class costs ~30 s, so eager
+    /// loading is a tax on every pipeline stage)
+    fp_files: Vec<(usize, String)>,
+    q_files: Vec<(usize, String)>,
+    calib_file: String,
+}
+
+impl Denoiser {
+    pub fn new(engine: Arc<Engine>, info: &ModelInfo) -> Result<Denoiser> {
+        let mut fp_files = Vec::new();
+        for &b in &info.batches_fp {
+            fp_files.push((b, info.artifact(&format!("fp_b{b}"))?.to_string()));
+        }
+        let mut q_files = Vec::new();
+        for &b in &info.batches_q {
+            q_files.push((b, info.artifact(&format!("q_b{b}"))?.to_string()));
+        }
+        let calib_file = info.artifact(&format!("calib_b{}", info.calib_b))?.to_string();
+        Ok(Denoiser { info: info.clone(), engine, fp_files, q_files, calib_file })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Largest compiled quantized batch class.
+    pub fn max_batch_q(&self) -> usize {
+        self.q_files.iter().map(|(b, _)| *b).max().unwrap_or(1)
+    }
+
+    /// Compiled quantized batch classes (ascending).
+    pub fn batch_classes_q(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.q_files.iter().map(|(b, _)| *b).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn pick(&self, classes: &[(usize, String)], n: usize) -> Result<(usize, Arc<Executable>)> {
+        let (b, file) = classes
+            .iter()
+            .filter(|(b, _)| *b >= n)
+            .min_by_key(|(b, _)| *b)
+            .ok_or_else(|| anyhow::anyhow!("no compiled batch class >= {n}"))?;
+        Ok((*b, self.engine.load(file)?))
+    }
+
+    fn pad_to(&self, x: &[f32], n: usize, b: usize) -> Vec<f32> {
+        let per = x.len() / n;
+        let mut out = Vec::with_capacity(b * per);
+        out.extend_from_slice(x);
+        for _ in n..b {
+            out.extend_from_slice(&x[(n - 1) * per..n * per]); // repeat last
+        }
+        out
+    }
+
+    fn x_dims(&self, b: usize) -> [i64; 4] {
+        let hw = self.info.cfg.img_hw as i64;
+        [b as i64, hw, hw, self.info.cfg.in_ch as i64]
+    }
+
+    /// Full-precision eps_theta. x is n stacked samples; t/cond length n.
+    pub fn eps_fp(&self, params: &[f32], x: &[f32], t: &[f32], cond: &[f32]) -> Result<Vec<f32>> {
+        let n = t.len();
+        if x.len() != self.info.x_size(n) {
+            bail!("x len {} != expected {}", x.len(), self.info.x_size(n));
+        }
+        let (b, exe) = self.pick(&self.fp_files, n)?;
+        let xp = self.pad_to(x, n, b);
+        let tp = self.pad_to(t, n, b);
+        let cp = self.pad_to(cond, n, b);
+        let dims = self.x_dims(b);
+        let out = exe.run(&[
+            (params, &[params.len() as i64]),
+            (&xp, &dims),
+            (&tp, &[b as i64]),
+            (&cp, &[b as i64]),
+        ])?;
+        let mut eps = out.into_iter().next().unwrap();
+        eps.truncate(self.info.x_size(n));
+        Ok(eps)
+    }
+
+    /// Quantized eps_theta. The whole batch shares timestep `t` (the
+    /// TALoRA router picks one adapter per layer per timestep).
+    pub fn eps_q(
+        &self,
+        params: &[f32],
+        qs: &QuantState,
+        x: &[f32],
+        t: f32,
+        cond: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let sel = qs.selection(t, rng);
+        self.eps_q_with_sel(params, qs, &sel, x, t, cond)
+    }
+
+    /// Quantized eps with an explicit selection matrix (serving hot path
+    /// precomputes selections per step).
+    pub fn eps_q_with_sel(
+        &self,
+        params: &[f32],
+        qs: &QuantState,
+        sel: &[f32],
+        x: &[f32],
+        t: f32,
+        cond: &[f32],
+    ) -> Result<Vec<f32>> {
+        let n = cond.len();
+        if x.len() != self.info.x_size(n) {
+            bail!("x len {} != expected {}", x.len(), self.info.x_size(n));
+        }
+        let (b, exe) = self.pick(&self.q_files, n)?;
+        let xp = self.pad_to(x, n, b);
+        let tp = vec![t; b];
+        let cp = self.pad_to(cond, n, b);
+        let dims = self.x_dims(b);
+        let l = self.info.n_layers as i64;
+        let h = self.info.cfg.lora_hub as i64;
+        let out = exe.run(&[
+            (params, &[params.len() as i64]),
+            (&qs.qparams, &[l, 8]),
+            (&qs.lora, &[qs.lora.len() as i64]),
+            (sel, &[l, h]),
+            (&xp, &dims),
+            (&tp, &[b as i64]),
+            (&cp, &[b as i64]),
+        ])?;
+        let mut eps = out.into_iter().next().unwrap();
+        eps.truncate(self.info.x_size(n));
+        Ok(eps)
+    }
+
+    /// Calibration forward: (eps, per-layer activation samples [L, S],
+    /// per-layer min/max [L, 2]). Batch must equal the compiled calib_b.
+    pub fn calib_forward(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        t: &[f32],
+        cond: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let b = self.info.calib_b;
+        if t.len() != b {
+            bail!("calib batch must be {b}, got {}", t.len());
+        }
+        let dims = self.x_dims(b);
+        let out = self.engine.load(&self.calib_file)?.run(&[
+            (params, &[params.len() as i64]),
+            (x, &dims),
+            (t, &[b as i64]),
+            (cond, &[b as i64]),
+        ])?;
+        let mut it = out.into_iter();
+        Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use crate::model::ParamStore;
+    use std::path::PathBuf;
+
+    fn setup() -> Option<(Arc<Engine>, Manifest)> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some((Arc::new(Engine::new(&d).unwrap()), Manifest::load(&d).unwrap()))
+    }
+
+    #[test]
+    fn fp_forward_all_batch_classes() {
+        let Some((engine, m)) = setup() else { return };
+        let info = m.model("ddim16").unwrap();
+        let den = Denoiser::new(engine, info).unwrap();
+        let params = ParamStore::load_init(info, &m.dir).unwrap();
+        for n in [1usize, 3, 8] {
+            let x = vec![0.2f32; info.x_size(n)];
+            let t = vec![5.0; n];
+            let cond = vec![0.0; n];
+            let eps = den.eps_fp(&params.flat, &x, &t, &cond).unwrap();
+            assert_eq!(eps.len(), info.x_size(n));
+            assert!(eps.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn quantized_forward_runs() {
+        let Some((engine, m)) = setup() else { return };
+        let info = m.model("ddim16").unwrap();
+        let den = Denoiser::new(engine, info).unwrap();
+        let params = ParamStore::load_init(info, &m.dir).unwrap();
+        let mut rng = Rng::new(1);
+        let l = info.n_layers;
+        // simple 8-bit-ish qparams: signed FP E2M5-ish everywhere
+        let mut qp = Vec::new();
+        for _ in 0..l {
+            qp.extend_from_slice(&[1.0, 2.0, 5.0, 1.0, 6.0, 2.0, 5.0, 0.0]);
+        }
+        let qs = QuantState {
+            qparams: qp,
+            lora: vec![0.0; info.lora_size],
+            router: Router::init(info, &mut rng),
+            hub_mask: vec![1.0; info.cfg.lora_hub],
+            strategy: AllocStrategy::Learned,
+            t_total: 100,
+        };
+        let n = 2;
+        let x = vec![0.3f32; info.x_size(n)];
+        let cond = vec![0.0; n];
+        let eps = den.eps_q(&params.flat, &qs, &x, 7.0, &cond, &mut rng).unwrap();
+        assert_eq!(eps.len(), info.x_size(n));
+        assert!(eps.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quant_state_roundtrip() {
+        let Some((_, m)) = setup() else { return };
+        let info = m.model("ddim16").unwrap();
+        let mut rng = Rng::new(3);
+        let mut qp = Vec::new();
+        for _ in 0..info.n_layers {
+            qp.extend_from_slice(&[1.0, 2.0, 1.0, 0.0, 4.0, 2.0, 2.0, -0.25]);
+        }
+        let qs = QuantState {
+            qparams: qp,
+            lora: rng.normal_vec(info.lora_size, 0.01),
+            router: Router::init(info, &mut rng),
+            hub_mask: vec![1.0, 1.0, 0.0, 0.0],
+            strategy: AllocStrategy::Learned,
+            t_total: 100,
+        };
+        let path = std::env::temp_dir().join("msfp_qs_roundtrip.mts");
+        qs.save(&path).unwrap();
+        let qs2 = QuantState::load(info, &path).unwrap();
+        assert_eq!(qs.qparams, qs2.qparams);
+        assert_eq!(qs.lora, qs2.lora);
+        assert_eq!(qs.router.flat, qs2.router.flat);
+        assert_eq!(qs.hub_mask, qs2.hub_mask);
+        assert_eq!(qs2.t_total, 100);
+        // selections agree
+        let a = qs.selection(13.0, &mut Rng::new(1));
+        let b = qs2.selection(13.0, &mut Rng::new(1));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn calib_forward_shapes() {
+        let Some((engine, m)) = setup() else { return };
+        let info = m.model("ddim16").unwrap();
+        let den = Denoiser::new(engine, info).unwrap();
+        let params = ParamStore::load_init(info, &m.dir).unwrap();
+        let b = info.calib_b;
+        let x = vec![0.1f32; info.x_size(b)];
+        let t: Vec<f32> = (0..b).map(|i| i as f32 * 10.0).collect();
+        let cond = vec![0.0; b];
+        let (eps, acts, mm) = den.calib_forward(&params.flat, &x, &t, &cond).unwrap();
+        assert_eq!(eps.len(), info.x_size(b));
+        assert_eq!(acts.len(), info.n_layers * info.act_samples);
+        assert_eq!(mm.len(), info.n_layers * 2);
+        for l in 0..info.n_layers {
+            assert!(mm[l * 2] <= mm[l * 2 + 1], "layer {l} min > max");
+        }
+    }
+}

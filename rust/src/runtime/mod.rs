@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT-lowered HLO text, compile once, execute many.
+//!
+//! This is the only boundary between the Rust coordinator and the JAX/Pallas
+//! compute. Pattern follows /opt/xla-example/load_hlo: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`.
+
+pub mod client;
+pub mod denoiser;
+
+pub use client::{Engine, Executable};
+pub use denoiser::{Denoiser, QuantState};

@@ -1,0 +1,112 @@
+//! The DDPM noise schedule (paper Eq. 1-4).
+
+/// Linear-beta DDPM schedule over T steps.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub t_total: usize,
+    pub betas: Vec<f32>,
+    pub alphas: Vec<f32>,
+    /// ᾱ_t = Π α_i (paper Eq. 2)
+    pub abar: Vec<f32>,
+}
+
+impl Schedule {
+    /// Linear schedule; defaults follow DDPM's (1e-4, 0.02) scaled for T.
+    pub fn linear(t_total: usize) -> Schedule {
+        // Scale the 1000-step endpoints so total noise injected is similar:
+        // beta_end scaled by 1000/T keeps ᾱ_T small for short schedules.
+        let scale = (1000.0 / t_total as f32).min(10.0);
+        Self::linear_with(t_total, 1e-4 * scale, 0.02 * scale)
+    }
+
+    pub fn linear_with(t_total: usize, beta_start: f32, beta_end: f32) -> Schedule {
+        assert!(t_total >= 1);
+        let betas: Vec<f32> = (0..t_total)
+            .map(|i| {
+                if t_total == 1 {
+                    beta_start
+                } else {
+                    beta_start + (beta_end - beta_start) * i as f32 / (t_total - 1) as f32
+                }
+            })
+            .collect();
+        let alphas: Vec<f32> = betas.iter().map(|b| 1.0 - b).collect();
+        let mut abar = Vec::with_capacity(t_total);
+        let mut acc = 1.0f32;
+        for &a in &alphas {
+            acc *= a;
+            abar.push(acc);
+        }
+        Schedule { t_total, betas, alphas, abar }
+    }
+
+    /// The paper's denoising factor γ_t (Eq. 4): the weight of the
+    /// predicted noise in the reverse update — the DFA loss multiplier.
+    pub fn gamma(&self, t: usize) -> f32 {
+        let a = self.alphas[t];
+        (1.0 / a.sqrt()) * (1.0 - a) / (1.0 - self.abar[t]).sqrt()
+    }
+
+    /// ᾱ for the step *before* tau index i (ᾱ_{-1} := 1).
+    pub fn abar_prev(&self, tau: &[usize], i: usize) -> f32 {
+        if i + 1 < tau.len() {
+            self.abar[tau[i + 1]]
+        } else {
+            1.0
+        }
+    }
+
+    /// Forward process q(x_t | x_0) coefficients (Eq. 1).
+    pub fn forward_coeffs(&self, t: usize) -> (f32, f32) {
+        (self.abar[t].sqrt(), (1.0 - self.abar[t]).sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abar_monotone_decreasing() {
+        let s = Schedule::linear(100);
+        assert!(s.abar.windows(2).all(|w| w[1] < w[0]));
+        assert!(s.abar[0] < 1.0 && s.abar[0] > 0.99);
+        assert!(s.abar[99] < 0.05, "abar_T={}", s.abar[99]);
+    }
+
+    #[test]
+    fn gamma_positive_and_growing() {
+        // γ_t grows toward the end of the forward process (large t):
+        // the paper's Fig. 3 argument that eps matters most early in
+        // denoising (t near T).
+        let s = Schedule::linear(100);
+        for t in 0..100 {
+            assert!(s.gamma(t) > 0.0);
+        }
+        assert!(s.gamma(99) > s.gamma(0));
+    }
+
+    #[test]
+    fn forward_coeffs_norm() {
+        // a² + s² = 1 would hold for variance-preserving; check consistency
+        let s = Schedule::linear(100);
+        for t in [0, 50, 99] {
+            let (a, b) = s.forward_coeffs(t);
+            assert!((a * a + b * b - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn abar_prev_boundary() {
+        let s = Schedule::linear(10);
+        let tau = vec![9, 5, 0];
+        assert_eq!(s.abar_prev(&tau, 0), s.abar[5]);
+        assert_eq!(s.abar_prev(&tau, 2), 1.0);
+    }
+
+    #[test]
+    fn short_schedule_still_noisy() {
+        let s = Schedule::linear(20);
+        assert!(s.abar[19] < 0.2, "abar_T={}", s.abar[19]);
+    }
+}

@@ -1,0 +1,203 @@
+//! DPM-Solver-2 (Lu et al.) — the second fast solver of the paper's
+//! Table 10. Second-order midpoint method in log-SNR (λ) space; two model
+//! evaluations per step, expressed as a state machine so the serving
+//! coordinator can batch each evaluation independently.
+
+use std::sync::Arc;
+
+use crate::util::rng::Rng;
+
+use super::ddpm::Schedule;
+use super::Sampler;
+
+/// Continuous-time helpers: α̂ = sqrt(ᾱ), σ̂ = sqrt(1-ᾱ), λ = ln(α̂/σ̂).
+fn lambda_of(abar: f32) -> f32 {
+    let a = abar.sqrt();
+    let s = (1.0 - abar).sqrt().max(1e-12);
+    (a / s).ln()
+}
+
+enum Phase {
+    /// waiting for eps at t_i (start of step i)
+    First,
+    /// waiting for eps at the λ-midpoint; carries x_i and eps(t_i)
+    Mid { x_prev: Vec<f32> },
+}
+
+pub struct DpmSolver2 {
+    sched: Arc<Schedule>,
+    tau: Vec<usize>,
+    /// interpolated ᾱ at the midpoint of each (tau[i], tau[i+1]) pair
+    mid_abar: Vec<f32>,
+    i: usize,
+    phase: Phase,
+}
+
+impl DpmSolver2 {
+    pub fn new(sched: Arc<Schedule>, tau: Vec<usize>) -> DpmSolver2 {
+        assert!(tau.len() >= 2, "DPM-Solver-2 needs >= 2 timesteps");
+        // midpoint in λ-space between consecutive tau entries, realized as
+        // the ᾱ whose λ is the average.
+        let mid_abar = (0..tau.len() - 1)
+            .map(|i| {
+                let l0 = lambda_of(sched.abar[tau[i]]);
+                let l1 = lambda_of(sched.abar[tau[i + 1]]);
+                let lm = 0.5 * (l0 + l1);
+                // invert λ: ᾱ = sigmoid(2λ)
+                1.0 / (1.0 + (-2.0 * lm).exp())
+            })
+            .collect();
+        DpmSolver2 { sched, tau, mid_abar, i: 0, phase: Phase::First }
+    }
+
+    /// the ᾱ the *next requested evaluation* sees
+    fn eval_abar(&self) -> f32 {
+        match self.phase {
+            Phase::First => self.sched.abar[self.tau[self.i]],
+            Phase::Mid { .. } => self.mid_abar[self.i],
+        }
+    }
+
+    /// map an ᾱ to a (possibly fractional) model timestep by inverting the
+    /// discrete schedule with linear interpolation.
+    fn t_of_abar(&self, abar: f32) -> f32 {
+        let ab = &self.sched.abar;
+        if abar >= ab[0] {
+            return 0.0;
+        }
+        for t in 1..ab.len() {
+            if ab[t] <= abar {
+                let hi = ab[t - 1];
+                let lo = ab[t];
+                let frac = if hi > lo { (hi - abar) / (hi - lo) } else { 0.0 };
+                return (t - 1) as f32 + frac;
+            }
+        }
+        (ab.len() - 1) as f32
+    }
+}
+
+impl Sampler for DpmSolver2 {
+    fn current_t(&self) -> f32 {
+        self.t_of_abar(self.eval_abar())
+    }
+
+    fn observe(&mut self, x: &mut [f32], eps: &[f32], _rng: &mut Rng) {
+        let abar_i = self.sched.abar[self.tau[self.i]];
+        let abar_next = self.sched.abar[self.tau[self.i + 1]];
+        let (li, ln_) = (lambda_of(abar_i), lambda_of(abar_next));
+        let h = ln_ - li;
+        match std::mem::replace(&mut self.phase, Phase::First) {
+            Phase::First => {
+                // half step to the midpoint
+                let abar_m = self.mid_abar[self.i];
+                let (am, sm) = (abar_m.sqrt(), (1.0 - abar_m).sqrt());
+                let (ai, _si) = (abar_i.sqrt(), (1.0 - abar_i).sqrt());
+                let x_prev = x.to_vec();
+                let phi_half = ((h / 2.0).exp() - 1.0) as f32;
+                for (xm, (&xi, &ei)) in x.iter_mut().zip(x_prev.iter().zip(eps)) {
+                    *xm = (am / ai) * xi - sm * phi_half * ei;
+                }
+                self.phase = Phase::Mid { x_prev };
+            }
+            Phase::Mid { x_prev } => {
+                // full step using the midpoint slope
+                let (an, sn) = (abar_next.sqrt(), (1.0 - abar_next).sqrt());
+                let ai = abar_i.sqrt();
+                let phi = (h.exp() - 1.0) as f32;
+                for (xo, (&xi, &em)) in x.iter_mut().zip(x_prev.iter().zip(eps)) {
+                    *xo = (an / ai) * xi - sn * phi * em;
+                }
+                self.i += 1;
+                self.phase = Phase::First;
+            }
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.i >= self.tau.len() - 1
+    }
+
+    fn total_evals(&self) -> usize {
+        2 * (self.tau.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::timestep_subsequence;
+
+    #[test]
+    fn lambda_monotone_in_abar() {
+        let mut prev = f32::NEG_INFINITY;
+        for i in 1..20 {
+            let l = lambda_of(i as f32 / 20.0);
+            assert!(l > prev);
+            prev = l;
+        }
+    }
+
+    fn oracle_run(steps: usize) -> f32 {
+        let sched = Arc::new(Schedule::linear(100));
+        let tau = timestep_subsequence(100, steps);
+        let mut rng = Rng::new(4);
+        let x0: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let noise: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let (a, b) = sched.forward_coeffs(tau[0]);
+        let mut x: Vec<f32> = x0.iter().zip(&noise).map(|(x0, n)| a * x0 + b * n).collect();
+        let mut s = DpmSolver2::new(Arc::clone(&sched), tau);
+        while !s.done() {
+            // oracle eps at the (fractional) requested abar
+            let abar = s.eval_abar();
+            let (at, bt) = (abar.sqrt(), (1.0 - abar).sqrt());
+            let eps: Vec<f32> = x.iter().zip(&x0).map(|(xt, x0)| (xt - at * x0) / bt).collect();
+            s.observe(&mut x, &eps, &mut rng);
+        }
+        x.iter().zip(&x0).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max)
+    }
+
+    #[test]
+    fn recovers_x0_with_oracle_eps() {
+        // second-order solver: moderate error at 20 steps over a coarse
+        // 100-step schedule, and the error must shrink with more steps.
+        let e20 = oracle_run(20);
+        let e40 = oracle_run(40);
+        assert!(e20 < 0.15, "e20={e20}");
+        assert!(e40 < e20, "e40={e40} e20={e20}");
+    }
+
+    #[test]
+    fn eval_count_is_double() {
+        let sched = Arc::new(Schedule::linear(100));
+        let s = DpmSolver2::new(sched, timestep_subsequence(100, 20));
+        assert_eq!(s.total_evals(), 38);
+    }
+
+    #[test]
+    fn t_of_abar_inverts_schedule() {
+        let sched = Arc::new(Schedule::linear(100));
+        let s = DpmSolver2::new(Arc::clone(&sched), vec![99, 50, 0]);
+        for t in [0usize, 30, 70, 99] {
+            let back = s.t_of_abar(sched.abar[t]);
+            assert!((back - t as f32).abs() < 0.51, "t={t} back={back}");
+        }
+    }
+
+    #[test]
+    fn runs_to_completion() {
+        let sched = Arc::new(Schedule::linear(100));
+        let mut s = DpmSolver2::new(Arc::clone(&sched), timestep_subsequence(100, 10));
+        let mut rng = Rng::new(5);
+        let mut x = vec![0.2f32; 8];
+        let mut evals = 0;
+        while !s.done() {
+            let eps = vec![0.05f32; 8];
+            s.observe(&mut x, &eps, &mut rng);
+            evals += 1;
+            assert!(evals <= 100, "runaway sampler");
+        }
+        assert_eq!(evals, s.total_evals());
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}

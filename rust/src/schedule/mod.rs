@@ -1,0 +1,69 @@
+//! Diffusion schedule + samplers.
+//!
+//! The schedule owns the noise process (betas, ᾱ_t, the paper's denoising
+//! factor γ_t — Eq. 4) and the samplers consume per-step eps predictions as
+//! *state machines*: the serving coordinator batches model evaluations
+//! across requests, so a sampler never calls the model itself — it exposes
+//! the timestep it needs next and `observe()`s the prediction.
+
+pub mod ddpm;
+pub mod ddim;
+pub mod plms;
+pub mod dpm_solver;
+
+pub use ddim::DdimSampler;
+pub use ddpm::Schedule;
+pub use dpm_solver::DpmSolver2;
+pub use plms::PlmsSampler;
+
+use crate::util::rng::Rng;
+
+/// A sampler drives one request's latent through the reverse process.
+/// Contract: while `!done()`, the coordinator evaluates eps_theta(x, t)
+/// with `t = current_t()` and calls `observe(x, eps, rng)`, which mutates
+/// x in place (one eval may or may not complete a "step" — DPM-Solver-2
+/// uses two evals per step).
+pub trait Sampler: Send {
+    fn current_t(&self) -> f32;
+    fn observe(&mut self, x: &mut [f32], eps: &[f32], rng: &mut Rng);
+    fn done(&self) -> bool;
+    /// Total model evaluations this sampler will request.
+    fn total_evals(&self) -> usize;
+}
+
+/// Build the evenly spaced timestep subsequence tau (descending), e.g.
+/// T=100, steps=20 -> [95, 90, ..., 0].
+pub fn timestep_subsequence(t_total: usize, steps: usize) -> Vec<usize> {
+    assert!(steps >= 1 && steps <= t_total);
+    let stride = t_total as f64 / steps as f64;
+    let mut tau: Vec<usize> = (0..steps).map(|i| (i as f64 * stride) as usize).collect();
+    tau.dedup();
+    tau.reverse();
+    tau
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subsequence_full() {
+        let tau = timestep_subsequence(100, 100);
+        assert_eq!(tau.len(), 100);
+        assert_eq!(tau[0], 99);
+        assert_eq!(tau[99], 0);
+    }
+
+    #[test]
+    fn subsequence_strided() {
+        let tau = timestep_subsequence(100, 20);
+        assert_eq!(tau.len(), 20);
+        assert_eq!(*tau.last().unwrap(), 0);
+        assert!(tau.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn subsequence_single() {
+        assert_eq!(timestep_subsequence(100, 1), vec![0]);
+    }
+}

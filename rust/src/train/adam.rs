@@ -1,0 +1,100 @@
+//! Adam optimizer over flat f32 parameter vectors (Appendix C: Adam,
+//! lr = 1e-4 for both TALoRAs and the router).
+
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl Adam {
+    pub fn new(n: usize, lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    pub fn state(&self) -> (Vec<f32>, Vec<f32>, u32) {
+        (self.m.clone(), self.v.clone(), self.t)
+    }
+
+    pub fn restore(&mut self, m: Vec<f32>, v: Vec<f32>, t: u32) {
+        assert_eq!(m.len(), self.m.len());
+        self.m = m;
+        self.v = v;
+        self.t = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// minimize f(x) = sum((x - c)^2)
+    #[test]
+    fn converges_on_quadratic() {
+        let c = [3.0f32, -1.5, 0.25];
+        let mut x = vec![0.0f32; 3];
+        let mut opt = Adam::new(3, 0.1);
+        for _ in 0..500 {
+            let g: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| 2.0 * (xi - ci)).collect();
+            opt.step(&mut x, &g);
+        }
+        for (xi, ci) in x.iter().zip(&c) {
+            assert!((xi - ci).abs() < 1e-2, "{xi} vs {ci}");
+        }
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        let mut x = vec![0.0f32];
+        let mut opt = Adam::new(1, 0.01);
+        opt.step(&mut x, &[5.0]);
+        // Adam's first update is ~lr * sign(g)
+        assert!((x[0] + 0.01).abs() < 1e-3, "{}", x[0]);
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let mut a = Adam::new(4, 0.05);
+        let mut x = vec![1.0f32; 4];
+        for _ in 0..10 {
+            a.step(&mut x, &[0.3, -0.2, 0.1, 0.0]);
+        }
+        let (m, v, t) = a.state();
+        let mut b = Adam::new(4, 0.05);
+        b.restore(m, v, t);
+        let mut xa = x.clone();
+        let mut xb = x.clone();
+        a.step(&mut xa, &[0.1; 4]);
+        b.step(&mut xb, &[0.1; 4]);
+        assert_eq!(xa, xb);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_grad_panics() {
+        let mut a = Adam::new(2, 0.1);
+        let mut x = vec![0.0; 2];
+        a.step(&mut x, &[1.0]);
+    }
+}

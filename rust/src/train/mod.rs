@@ -1,0 +1,15 @@
+//! Training loops. Gradients come from the AOT-lowered JAX graphs (executed
+//! via PJRT); Rust owns the optimizer state, the data pipeline and the
+//! schedule, so every loop is deterministic from its seed.
+
+pub mod adam;
+pub mod pretrain;
+pub mod trajectory;
+pub mod calib;
+pub mod finetune;
+
+pub use adam::Adam;
+pub use calib::collect_calibration;
+pub use finetune::{finetune, FinetuneCfg, FinetuneStats};
+pub use pretrain::{pretrain, PretrainCfg};
+pub use trajectory::TrajectoryBuffer;

@@ -1,0 +1,117 @@
+//! Full-precision DDPM pretraining — builds the "pretrained diffusion
+//! model" the paper quantizes (repro band 0: no public checkpoints at this
+//! scale, so the repo trains its own; see DESIGN.md §2).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::{Corpus, PatchAutoencoder};
+use crate::log_info;
+use crate::model::manifest::ModelInfo;
+use crate::runtime::Engine;
+use crate::schedule::Schedule;
+use crate::util::rng::Rng;
+
+use super::adam::Adam;
+
+#[derive(Debug, Clone)]
+pub struct PretrainCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for PretrainCfg {
+    fn default() -> Self {
+        PretrainCfg { steps: 400, lr: 2e-3, seed: 0, log_every: 50 }
+    }
+}
+
+/// Map corpus pixels to model inputs (latent encode for LDM variants).
+pub fn corpus_batch(
+    corpus: Corpus,
+    info: &ModelInfo,
+    ae: &PatchAutoencoder,
+    rng: &mut Rng,
+    n: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let (px, cls) = corpus.batch(rng, n);
+    if corpus.hw() == info.cfg.img_hw {
+        (px, cls)
+    } else {
+        (ae.encode_batch(&px, n), cls)
+    }
+}
+
+/// Run the pretraining loop; returns final params + the loss curve.
+pub fn pretrain(
+    engine: &Arc<Engine>,
+    info: &ModelInfo,
+    sched: &Schedule,
+    corpus: Corpus,
+    mut params: Vec<f32>,
+    cfg: &PretrainCfg,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let exe = engine.load(info.artifact(&format!("pretrain_b{}", info.train_b))?)?;
+    let ae = PatchAutoencoder::default();
+    let mut rng = Rng::new(cfg.seed ^ 0x70726574);
+    let mut opt = Adam::new(params.len(), cfg.lr);
+    let b = info.train_b;
+    let hw = info.cfg.img_hw as i64;
+    let c = info.cfg.in_ch as i64;
+    let mut losses = Vec::with_capacity(cfg.steps);
+
+    for step in 0..cfg.steps {
+        let (x0, cond) = corpus_batch(corpus, info, &ae, &mut rng, b);
+        let noise: Vec<f32> = (0..x0.len()).map(|_| rng.normal()).collect();
+        let t: Vec<f32> = (0..b).map(|_| rng.below(sched.t_total) as f32).collect();
+        let abar: Vec<f32> = t.iter().map(|&ti| sched.abar[ti as usize]).collect();
+        let out = exe.run(&[
+            (&params, &[params.len() as i64]),
+            (&x0, &[b as i64, hw, hw, c]),
+            (&noise, &[b as i64, hw, hw, c]),
+            (&t, &[b as i64]),
+            (&abar, &[b as i64]),
+            (&cond, &[b as i64]),
+        ])?;
+        let loss = out[0][0];
+        let grad = &out[1];
+        opt.step(&mut params, grad);
+        losses.push(loss);
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            log_info!("pretrain[{}] step {step}/{} loss {loss:.4}", corpus.name(), cfg.steps);
+        }
+    }
+    Ok((params, losses))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use crate::model::ParamStore;
+    use std::path::PathBuf;
+
+    #[test]
+    fn loss_decreases_over_short_run() {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&d).unwrap();
+        let info = m.model("ddim16").unwrap();
+        let engine = Arc::new(Engine::new(&d).unwrap());
+        let params = ParamStore::load_init(info, &d).unwrap();
+        let sched = Schedule::linear(100);
+        let cfg = PretrainCfg { steps: 30, lr: 2e-3, seed: 1, log_every: 100 };
+        let (_, losses) =
+            pretrain(&engine, info, &sched, Corpus::CifarSyn, params.flat, &cfg).unwrap();
+        let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+        assert!(tail < head, "loss did not decrease: {head} -> {tail}");
+        assert!(losses.iter().all(|l| l.is_finite()));
+    }
+}

@@ -1,0 +1,148 @@
+//! Full-precision denoising trajectories — the fine-tuning dataset.
+//!
+//! The paper fine-tunes against the FP model's own denoising process
+//! (Observation 3 / Eq. 7): at each timestep t the quantized model sees the
+//! FP model's x_t and must match the FP model's eps. We roll the FP model
+//! from Gaussian noise with DDIM and record (x_t, eps_fp) at every step.
+
+use anyhow::Result;
+
+use crate::model::manifest::ModelInfo;
+use crate::runtime::Denoiser;
+use crate::schedule::{Sampler, Schedule};
+use crate::util::rng::Rng;
+
+/// Trajectories for a set of "calibration images": for each recorded step i
+/// (index into tau), the batch of x_t inputs and eps_fp targets.
+pub struct TrajectoryBuffer {
+    pub tau: Vec<usize>,
+    /// per tau-index: stacked x_t of all rollout samples [n, x_size]
+    pub x: Vec<Vec<f32>>,
+    /// per tau-index: stacked eps_fp targets
+    pub eps: Vec<Vec<f32>>,
+    /// per sample: class label
+    pub cond: Vec<f32>,
+    pub n: usize,
+}
+
+impl TrajectoryBuffer {
+    /// Roll `n` samples (multiple of the denoiser's fp batch classes is
+    /// fastest) through the FP model over `tau`, recording every step.
+    pub fn collect(
+        den: &Denoiser,
+        info: &ModelInfo,
+        sched: &Schedule,
+        tau: &[usize],
+        params: &[f32],
+        n: usize,
+        n_classes: usize,
+        rng: &mut Rng,
+    ) -> Result<TrajectoryBuffer> {
+        let xs = info.x_size(1);
+        let mut x: Vec<f32> = (0..n * xs).map(|_| rng.normal()).collect();
+        let cond: Vec<f32> =
+            (0..n).map(|_| if n_classes > 0 { rng.below(n_classes) as f32 } else { 0.0 }).collect();
+        let mut buf = TrajectoryBuffer {
+            tau: tau.to_vec(),
+            x: Vec::with_capacity(tau.len()),
+            eps: Vec::with_capacity(tau.len()),
+            cond,
+            n,
+        };
+        // one shared DDIM state machine (eta=0 for deterministic targets)
+        let mut sampler = crate::schedule::DdimSampler::new(
+            std::sync::Arc::new(sched.clone()),
+            tau.to_vec(),
+            0.0,
+        );
+        while !sampler.done() {
+            let t = sampler.current_t();
+            let tb = vec![t; n];
+            // chunk through the largest fp batch class
+            let mut eps = Vec::with_capacity(n * xs);
+            let chunk = *info.batches_fp.iter().max().unwrap();
+            let mut i = 0;
+            while i < n {
+                let m = chunk.min(n - i);
+                let e = den.eps_fp(
+                    params,
+                    &x[i * xs..(i + m) * xs],
+                    &tb[i..i + m],
+                    &buf.cond[i..i + m],
+                )?;
+                eps.extend(e);
+                i += m;
+            }
+            buf.x.push(x.clone());
+            buf.eps.push(eps.clone());
+            sampler.observe(&mut x, &eps, rng);
+        }
+        Ok(buf)
+    }
+
+    /// Sample a training mini-batch for tau index `i`: `b` random rollout
+    /// rows' (x_t, eps) pairs + their cond labels.
+    pub fn minibatch(
+        &self,
+        i: usize,
+        b: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let xs = self.x[i].len() / self.n;
+        let mut x = Vec::with_capacity(b * xs);
+        let mut e = Vec::with_capacity(b * xs);
+        let mut c = Vec::with_capacity(b);
+        for _ in 0..b {
+            let r = rng.below(self.n);
+            x.extend_from_slice(&self.x[i][r * xs..(r + 1) * xs]);
+            e.extend_from_slice(&self.eps[i][r * xs..(r + 1) * xs]);
+            c.push(self.cond[r]);
+        }
+        (x, e, c)
+    }
+
+    /// Final denoised images of the FP rollout (x after the last observe is
+    /// not stored; decode from the last recorded step): re-runs the last
+    /// DDIM update on the stored pair.
+    pub fn steps(&self) -> usize {
+        self.tau.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use crate::model::ParamStore;
+    use crate::runtime::Engine;
+    use crate::schedule::timestep_subsequence;
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    #[test]
+    fn collects_consistent_shapes() {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&d).unwrap();
+        let info = m.model("ddim16").unwrap();
+        let engine = Arc::new(Engine::new(&d).unwrap());
+        let den = Denoiser::new(engine, info).unwrap();
+        let params = ParamStore::load_init(info, &d).unwrap();
+        let sched = Schedule::linear(100);
+        let tau = timestep_subsequence(100, 6);
+        let mut rng = Rng::new(3);
+        let buf = TrajectoryBuffer::collect(&den, info, &sched, &tau, &params.flat, 4, 0, &mut rng)
+            .unwrap();
+        assert_eq!(buf.steps(), 6);
+        assert_eq!(buf.x[0].len(), 4 * info.x_size(1));
+        assert_eq!(buf.eps[3].len(), 4 * info.x_size(1));
+        let (x, e, c) = buf.minibatch(2, 8, &mut rng);
+        assert_eq!(x.len(), 8 * info.x_size(1));
+        assert_eq!(e.len(), 8 * info.x_size(1));
+        assert_eq!(c.len(), 8);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}

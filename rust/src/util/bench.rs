@@ -1,0 +1,106 @@
+//! Bench harness for `[[bench]] harness = false` targets (criterion is
+//! unavailable offline). Auto-calibrates iteration counts to a time budget
+//! and reports median / p10 / p90 per-iteration latency.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} {:>12}/iter  (p10 {}, p90 {}, n={})",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Measure `f`, auto-scaling within `budget`. Returns per-iter stats from
+/// (up to) 30 timed samples.
+pub fn bench_with_budget(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let samples: u64 = 30;
+    let per_sample = budget.as_nanos() as u64 / samples.max(1);
+    let iters_per_sample = (per_sample / once.as_nanos().max(1) as u64).clamp(1, 1_000_000);
+
+    let mut times: Vec<f64> = Vec::with_capacity(samples as usize);
+    let hard_stop = Instant::now() + budget * 2;
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        times.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        if Instant::now() > hard_stop {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| times[((times.len() - 1) as f64 * q) as usize];
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: iters_per_sample * times.len() as u64,
+        median_ns: pick(0.5),
+        p10_ns: pick(0.1),
+        p90_ns: pick(0.9),
+    };
+    res.print();
+    res
+}
+
+/// Default 1-second budget.
+pub fn bench(name: &str, f: impl FnMut()) -> BenchResult {
+    bench_with_budget(name, Duration::from_secs(1), f)
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench_with_budget("noop-ish", Duration::from_millis(50), || {
+            black_box(1u64.wrapping_add(2));
+        });
+        assert!(r.median_ns >= 0.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,158 @@
+//! Small CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `msfp <subcommand> [--flag] [--key value]... [positional]...`.
+//! Typed accessors with defaults; unknown-flag detection happens in
+//! `finish()` so commands list the flags they accept.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+    accessed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut it = items.into_iter().peekable();
+        let mut subcommand = None;
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Args { subcommand, flags, positional, accessed: Default::default() })
+    }
+
+    fn mark(&self, key: &str) {
+        self.accessed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> Result<f32> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on flags no accessor consumed (typo detection).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.accessed.borrow();
+        for k in self.flags.keys() {
+            if !seen.contains(k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        // NOTE grammar: a bare boolean flag followed by a non-flag token
+        // would consume it as a value, so positionals go first (or use
+        // --flag=true). This is the documented convention for this CLI.
+        let a = args("sample out.ppm --model ddim16 --steps 100 --fast");
+        assert_eq!(a.subcommand.as_deref(), Some("sample"));
+        assert_eq!(a.str("model", "x"), "ddim16");
+        assert_eq!(a.usize("steps", 0).unwrap(), 100);
+        assert!(a.bool("fast"));
+        assert_eq!(a.positional, vec!["out.ppm"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("run --k=v --n=3");
+        assert_eq!(a.str("k", ""), "v");
+        assert_eq!(a.usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("run");
+        assert_eq!(a.str("missing", "d"), "d");
+        assert_eq!(a.f32("lr", 0.1).unwrap(), 0.1);
+        assert!(!a.bool("nope"));
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = args("run --known 1 --typo 2");
+        a.usize("known", 0).unwrap();
+        assert!(a.finish().is_err());
+        a.usize("typo", 0).unwrap();
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = args("run --n abc");
+        assert!(a.usize("n", 0).is_err());
+    }
+}

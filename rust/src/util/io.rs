@@ -1,0 +1,161 @@
+//! Tensor store: raw little-endian f32 blobs + a sidecar-free named format.
+//!
+//! Two formats:
+//!  * `.f32` — a bare LE f32 vector (what aot.py emits for initial params);
+//!  * `.mts` — "msfp tensor store": magic + named sections, used for
+//!    checkpoints (params + optimizer state + qparams + lora + router) so a
+//!    pipeline stage can resume from disk.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"MSFPTS01";
+
+/// Read a bare little-endian f32 vector.
+pub fn read_f32_raw(path: &Path) -> Result<Vec<f32>> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+pub fn write_f32_raw(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Named tensor checkpoint.
+#[derive(Debug, Default, Clone)]
+pub struct Store {
+    pub sections: BTreeMap<String, Vec<f32>>,
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&mut self, name: &str, data: Vec<f32>) {
+        self.sections.insert(name.to_string(), data);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        self.sections
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("store missing section '{name}'"))
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&[f32]> {
+        self.sections.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut f = fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.sections.len() as u32).to_le_bytes())?;
+        for (name, data) in &self.sections {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(data.len() as u64).to_le_bytes())?;
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for v in data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Store> {
+        let mut f = fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not an MSFP tensor store", path.display());
+        }
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u32b)?;
+        let n = u32::from_le_bytes(u32b) as usize;
+        let mut sections = BTreeMap::new();
+        for _ in 0..n {
+            f.read_exact(&mut u32b)?;
+            let name_len = u32::from_le_bytes(u32b) as usize;
+            if name_len > 4096 {
+                bail!("corrupt store: name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let mut u64b = [0u8; 8];
+            f.read_exact(&mut u64b)?;
+            let len = u64::from_le_bytes(u64b) as usize;
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes)?;
+            let data =
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+            sections.insert(String::from_utf8(name)?, data);
+        }
+        Ok(Store { sections })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("msfp_io_tests");
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn raw_roundtrip() {
+        let p = tmp("raw.f32");
+        let data = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        write_f32_raw(&p, &data).unwrap();
+        assert_eq!(read_f32_raw(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn raw_rejects_bad_length() {
+        let p = tmp("bad.f32");
+        fs::write(&p, [1, 2, 3]).unwrap();
+        assert!(read_f32_raw(&p).is_err());
+    }
+
+    #[test]
+    fn store_roundtrip() {
+        let p = tmp("ckpt.mts");
+        let mut s = Store::new();
+        s.put("params", vec![1.0, 2.0, 3.0]);
+        s.put("adam.m", vec![-0.5; 10]);
+        s.put("empty", vec![]);
+        s.save(&p).unwrap();
+        let s2 = Store::load(&p).unwrap();
+        assert_eq!(s2.get("params").unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(s2.get("adam.m").unwrap().len(), 10);
+        assert_eq!(s2.get("empty").unwrap().len(), 0);
+        assert!(s2.get("nope").is_err());
+    }
+
+    #[test]
+    fn store_rejects_wrong_magic() {
+        let p = tmp("junk.mts");
+        fs::write(&p, b"NOTMAGIC????").unwrap();
+        assert!(Store::load(&p).is_err());
+    }
+}

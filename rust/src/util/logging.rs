@@ -1,0 +1,68 @@
+//! Leveled stderr logging with wall-clock-since-start prefixes.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=warn 2=info 3=debug
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn elapsed() -> f64 {
+    START.elapsed().as_secs_f64()
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::logging::level() >= 2 {
+            eprintln!("[{:8.2}s INFO] {}", $crate::util::logging::elapsed(), format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::util::logging::level() >= 1 {
+            eprintln!("[{:8.2}s WARN] {}", $crate::util::logging::elapsed(), format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::logging::level() >= 3 {
+            eprintln!("[{:8.2}s DBG ] {}", $crate::util::logging::elapsed(), format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_toggles() {
+        let old = level();
+        set_level(3);
+        assert_eq!(level(), 3);
+        set_level(old);
+    }
+
+    #[test]
+    fn elapsed_monotone() {
+        let a = elapsed();
+        let b = elapsed();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,13 @@
+//! Substrate utilities built in-repo (the offline image vendors only the
+//! `xla` crate's closure — no serde/clap/tokio/criterion), each unit-tested:
+//! JSON, RNG, tensor store, CLI parsing, thread pool, logging, and a
+//! property-test mini-harness.
+
+pub mod json;
+pub mod rng;
+pub mod io;
+pub mod cli;
+pub mod threadpool;
+pub mod logging;
+pub mod prop;
+pub mod bench;

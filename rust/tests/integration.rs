@@ -1,0 +1,133 @@
+//! End-to-end integration: the full public-API chain on tiny budgets, the
+//! quantized serving path, and failure handling. Skips (with a notice) when
+//! `make artifacts` has not run.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use msfp::config::{MethodSpec, Scale};
+use msfp::coordinator::{self, Request, ServeMode, ServerCfg};
+use msfp::data::Corpus;
+use msfp::eval::generate::SamplerKind;
+use msfp::pipeline::Pipeline;
+use msfp::runtime::Denoiser;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+fn tiny_scale() -> Scale {
+    Scale {
+        pretrain_steps: 20,
+        traj_samples: 4,
+        ft_epochs: 1,
+        eval_n: 32,
+        ref_n: 64,
+        steps: 4,
+        calib_rounds: 2,
+    }
+}
+
+#[test]
+fn quantize_then_serve_quantized() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_integ_runs"));
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let p = pl.prepare(Corpus::CifarSyn).unwrap();
+    let calib = pl.calibrate(&p).unwrap();
+
+    // MSFP 4-bit with a 1-epoch TALoRA fine-tune
+    let spec = MethodSpec::ours(4, 2, 1);
+    let q = pl.quantize(&p, &spec, &calib).unwrap();
+    assert!(q.scheme.n_aal() > 0);
+    assert!(q.scheme.unsigned_fraction_on_aals() > 0.5);
+    let stats = q.ft_stats.as_ref().unwrap();
+    assert!(stats.losses.iter().all(|l| l.is_finite()));
+
+    // serve the quantized model through the coordinator
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &p.info).unwrap());
+    let handle = coordinator::spawn(
+        den,
+        p.info.clone(),
+        pl.sched.clone(),
+        Arc::new(p.params.clone()),
+        ServerCfg { mode: ServeMode::Quant(q.state), decode_latents: false, seed: 7 },
+    );
+    let mut rxs = Vec::new();
+    for i in 0..4 {
+        let mut req = Request::new(0, 2, 4);
+        req.seed = i;
+        rxs.push(handle.submit(req));
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.n, 2);
+        assert!(resp.images.iter().all(|v| v.is_finite()));
+    }
+    let m = handle.shutdown();
+    assert_eq!(m.images_done, 8);
+    assert!(m.mean_batch() > 1.0, "quantized serving did not batch: {}", m.report());
+    std::env::remove_var("MSFP_RUNS");
+}
+
+#[test]
+fn serving_mixed_samplers_and_conditional() {
+    let Some(dir) = artifacts() else { return };
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let info = pl.manifest.model("ldm8c").unwrap().clone();
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(
+        msfp::model::ParamStore::load_init(&info, &dir).unwrap().flat,
+    );
+    let handle = coordinator::spawn(
+        den,
+        info,
+        pl.sched.clone(),
+        params,
+        ServerCfg { mode: ServeMode::Fp, decode_latents: true, seed: 1 },
+    );
+    let mut ddim = Request::new(0, 2, 4);
+    ddim.class = Some(3);
+    let mut plms = Request::new(0, 1, 4);
+    plms.sampler = SamplerKind::Plms;
+    let mut dpm = Request::new(0, 1, 3);
+    dpm.sampler = SamplerKind::DpmSolver2;
+    let rx1 = handle.submit(ddim);
+    let rx2 = handle.submit(plms);
+    let rx3 = handle.submit(dpm);
+    let r1 = rx1.recv().unwrap();
+    let r2 = rx2.recv().unwrap();
+    let r3 = rx3.recv().unwrap();
+    // latents decoded to 32x32 pixels
+    assert_eq!(r1.images.len(), 2 * 32 * 32 * 3);
+    assert_eq!(r2.images.len(), 32 * 32 * 3);
+    assert_eq!(r3.evals, 2 * (3 - 1)); // DPM-Solver-2: 2 evals per step
+    handle.shutdown();
+}
+
+#[test]
+fn missing_artifacts_fail_cleanly() {
+    let bad = std::env::temp_dir().join("msfp_no_artifacts");
+    std::fs::create_dir_all(&bad).unwrap();
+    match Pipeline::new(&bad, tiny_scale()) {
+        Ok(_) => panic!("pipeline must not build without a manifest"),
+        Err(err) => assert!(format!("{err:#}").contains("make artifacts")),
+    }
+}
+
+#[test]
+fn checkpoint_cache_reused() {
+    let Some(dir) = artifacts() else { return };
+    let runs = std::env::temp_dir().join("msfp_integ_cache");
+    let _ = std::fs::remove_dir_all(&runs);
+    std::env::set_var("MSFP_RUNS", &runs);
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let p1 = pl.prepare(Corpus::CelebaSyn).unwrap();
+    let p2 = pl.prepare(Corpus::CelebaSyn).unwrap(); // must hit the cache
+    assert_eq!(p1.params, p2.params);
+    std::env::remove_var("MSFP_RUNS");
+}

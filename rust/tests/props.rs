@@ -1,0 +1,241 @@
+//! Cross-module property tests (the in-repo prop harness; no artifacts
+//! needed): quantizer grid laws, search optimality relations, schedule and
+//! sampler identities, serialization fuzz.
+
+use msfp::linalg::stats::{frechet, mean_cov};
+use msfp::linalg::tensor::Mat;
+use msfp::quant::fp::{e_min_of, exp2_int, fp_qdq_signed, fp_qdq_unsigned};
+use msfp::quant::int::{int_qdq_asym, int_qdq_sym};
+use msfp::quant::search::{linspace, search_signed, Quantizer};
+use msfp::quant::format::act_signed_formats;
+use msfp::schedule::{timestep_subsequence, Schedule};
+use msfp::util::io::Store;
+use msfp::util::json::Json;
+use msfp::util::prop::{check, vec_f32};
+use msfp::util::rng::Rng;
+
+#[test]
+fn prop_signed_qdq_grid_membership() {
+    // every output is a fixed point of the quantizer (grid membership)
+    check(
+        "signed-grid-member",
+        300,
+        |r| {
+            let e = r.below(4) as i32;
+            let m = 1 + r.below(4) as i32;
+            let maxval = r.range(0.05, 20.0);
+            (vec_f32(r, 64, maxval), maxval, e, m)
+        },
+        |(xs, maxval, e, m)| {
+            xs.iter().all(|&x| {
+                let q = fp_qdq_signed(x, *maxval, *e, *m);
+                let q2 = fp_qdq_signed(q, *maxval, *e, *m);
+                (q - q2).abs() <= 1e-6 * maxval.max(1.0)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_unsigned_qdq_monotone() {
+    // fake quantization is monotone non-decreasing
+    check(
+        "unsigned-monotone",
+        200,
+        |r| {
+            let e = r.below(4) as i32;
+            let m = 1 + r.below(4) as i32;
+            let maxval = r.range(0.1, 8.0);
+            let zp = -r.range(0.0, 0.3);
+            let mut xs = vec_f32(r, 64, maxval);
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (xs, maxval, e, m, zp)
+        },
+        |(xs, maxval, e, m, zp)| {
+            xs.windows(2).all(|w| {
+                fp_qdq_unsigned(w[0], *maxval, *e, *m, *zp)
+                    <= fp_qdq_unsigned(w[1], *maxval, *e, *m, *zp) + 1e-7
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_int_qdq_error_bounded() {
+    // uniform INT error <= step/2 inside the representable range
+    check(
+        "int-error-bound",
+        300,
+        |r| {
+            let n = 2 + r.below(7) as i32;
+            let maxval = r.range(0.1, 10.0);
+            let x = r.range(-maxval * 0.99, maxval * 0.99);
+            (x, maxval, n)
+        },
+        |(x, maxval, n)| {
+            let qmax = ((1i64 << (n - 1)) - 1) as f32;
+            let step = maxval / qmax;
+            (int_qdq_sym(*x, *maxval, *n) - x).abs() <= step / 2.0 + 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_asym_int_covers_range_ends() {
+    check(
+        "asym-ends",
+        200,
+        |r| {
+            let lo = -r.range(0.0, 2.0);
+            let hi = r.range(0.1, 5.0);
+            let n = 2 + r.below(7) as i32;
+            (lo, hi, n)
+        },
+        |(lo, hi, n)| {
+            let levels = ((1i64 << n) - 1) as f32;
+            let step = (hi - lo) / levels;
+            // endpoints are representable to within one step
+            (int_qdq_asym(*lo, *lo, *hi, *n) - lo).abs() <= step + 1e-5
+                && (int_qdq_asym(*hi, *lo, *hi, *n) - hi).abs() <= step + 1e-5
+        },
+    );
+}
+
+#[test]
+fn prop_search_result_is_argmin_over_resample() {
+    // the searched quantizer's MSE is never beaten by a random candidate
+    // from the same space
+    check(
+        "search-argmin",
+        40,
+        |r| {
+            let xs = vec_f32(r, 512, 2.0);
+            let seed = r.next_u64();
+            (xs, seed)
+        },
+        |(xs, seed)| {
+            let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-6);
+            let maxvals = linspace(maxval0 / 20.0, maxval0, 20);
+            let best = search_signed(xs, &act_signed_formats(4), &maxvals);
+            let mut rng = Rng::new(*seed);
+            for _ in 0..30 {
+                let fmt = act_signed_formats(4)[rng.below(4)];
+                let maxval = maxvals[rng.below(20)];
+                let q = Quantizer::SignedFp { fmt, maxval };
+                if q.mse(xs) < best.mse - 1e-12 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_exp2_emin_consistency() {
+    for e_bits in 0..32 {
+        let emin = e_min_of(e_bits);
+        assert!(emin >= -100);
+        assert!(exp2_int(emin - 23) > 0.0); // step stays normal for m <= 23
+    }
+}
+
+#[test]
+fn prop_schedule_identities() {
+    check(
+        "schedule-ids",
+        50,
+        |r| 2 + r.below(500),
+        |&t_total| {
+            let s = Schedule::linear(t_total);
+            // abar strictly decreasing in (0,1); gamma positive
+            s.abar.windows(2).all(|w| w[1] < w[0] && w[1] > 0.0 && w[0] < 1.0)
+                && (0..t_total).all(|t| s.gamma(t) > 0.0 && s.gamma(t).is_finite())
+        },
+    );
+}
+
+#[test]
+fn prop_tau_subsequence_laws() {
+    check(
+        "tau-laws",
+        200,
+        |r| {
+            let t_total = 2 + r.below(500);
+            let steps = 1 + r.below(t_total);
+            (t_total, steps)
+        },
+        |&(t_total, steps)| {
+            let tau = timestep_subsequence(t_total, steps);
+            !tau.is_empty()
+                && *tau.last().unwrap() == 0
+                && tau[0] < t_total
+                && tau.windows(2).all(|w| w[0] > w[1])
+        },
+    );
+}
+
+#[test]
+fn prop_store_roundtrip_fuzz() {
+    check(
+        "store-fuzz",
+        40,
+        |r| {
+            let n_sections = 1 + r.below(6);
+            (0..n_sections)
+                .map(|i| (format!("s{i}_{}", r.below(1000)), vec_f32(r, 200, 100.0)))
+                .collect::<Vec<_>>()
+        },
+        |sections| {
+            let mut s = Store::new();
+            for (k, v) in sections {
+                s.put(k, v.clone());
+            }
+            let path = std::env::temp_dir().join(format!(
+                "msfp_prop_store_{}.mts",
+                std::process::id()
+            ));
+            s.save(&path).unwrap();
+            let s2 = Store::load(&path).unwrap();
+            sections.iter().all(|(k, v)| s2.get(k).unwrap() == v.as_slice())
+        },
+    );
+}
+
+#[test]
+fn prop_json_number_roundtrip() {
+    check(
+        "json-numbers",
+        300,
+        |r| (r.normal() * 10f32.powi(r.below(8) as i32 - 4)) as f64,
+        |&x| {
+            let j = Json::Num(x);
+            match Json::parse(&j.to_string()) {
+                Ok(Json::Num(y)) => (x - y).abs() <= 1e-9 * x.abs().max(1.0),
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_frechet_is_metric_like() {
+    // symmetry + identity + sensitivity on random gaussian clouds
+    check(
+        "frechet-metric",
+        10,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let a = Mat::from_vec(300, 5, (0..1500).map(|_| rng.normal()).collect()).unwrap();
+            let b =
+                Mat::from_vec(300, 5, (0..1500).map(|_| rng.normal() + 0.5).collect()).unwrap();
+            let (m1, c1) = mean_cov(&a).unwrap();
+            let (m2, c2) = mean_cov(&b).unwrap();
+            let dab = frechet(&m1, &c1, &m2, &c2).unwrap();
+            let dba = frechet(&m2, &c2, &m1, &c1).unwrap();
+            let daa = frechet(&m1, &c1, &m1, &c1).unwrap();
+            (dab - dba).abs() < 0.05 * dab.max(0.1) && daa < 0.05 && dab > daa
+        },
+    );
+}
