@@ -26,8 +26,10 @@ fn main() {
         for (name, xs) in [("NAL", &nal), ("AAL", &aal)] {
             let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
             let maxvals = linspace(maxval0 / 60.0, maxval0, 60);
-            let s = search_signed(xs, &act_signed_formats(bits), &maxvals);
-            let u = search_unsigned(xs, &act_unsigned_formats(bits), &maxvals, &zp_space());
+            let s = search_signed(xs, &act_signed_formats(bits), &maxvals)
+                .expect("signed search space is non-empty");
+            let u = search_unsigned(xs, &act_unsigned_formats(bits), &maxvals, &zp_space())
+                .expect("unsigned search space is non-empty");
             let (sq, uq) = (s.quantizer, u.quantizer);
             println!(
                 "{:<6} {:<10} {:>10.3e} {:>3} {:>10.3e} {:>3} {:>9.2}x",

@@ -1,47 +1,62 @@
 //! Perf bench (L3 hot paths, §Perf): fake-qdq throughput, MSFP search cost
-//! per layer and per model, batcher planning cost.
+//! per layer and per model (grid-segment engine vs the retained scalar
+//! oracle), batcher planning cost. Emits BENCH_quant.json (override the
+//! path with the BENCH_JSON env var) so the perf trajectory is
+//! machine-readable across PRs; `scripts/bench.sh` wraps the invocation.
+
+use std::path::Path;
 use std::time::Duration;
 
 use msfp::coordinator::batcher::{plan, Ticket};
 use msfp::quant::fp::{fp_qdq_signed, fp_qdq_unsigned};
 use msfp::quant::msfp::{quantize_model, LayerCalib, Method, QuantOpts};
-use msfp::quant::search::{search_act_msfp, search_weight_fp};
-use msfp::util::bench::{bench_with_budget, black_box};
+use msfp::quant::search::{scalar, search_act_msfp, search_weight_fp};
+use msfp::util::bench::{bench_with_budget, black_box, write_json};
 use msfp::util::rng::Rng;
 
 fn main() {
+    let mut results = Vec::new();
     let mut rng = Rng::new(1);
     let xs: Vec<f32> = (0..65536).map(|_| rng.normal() * 2.0).collect();
 
-    bench_with_budget("qdq_signed_64k_elems", Duration::from_secs(1), || {
+    results.push(bench_with_budget("qdq_signed_64k_elems", Duration::from_secs(1), || {
         let mut acc = 0.0f32;
         for &x in &xs {
             acc += fp_qdq_signed(x, 2.5, 2, 1);
         }
         black_box(acc);
-    });
-    bench_with_budget("qdq_unsigned_zp_64k_elems", Duration::from_secs(1), || {
+    }));
+    results.push(bench_with_budget("qdq_unsigned_zp_64k_elems", Duration::from_secs(1), || {
         let mut acc = 0.0f32;
         for &x in &xs {
             acc += fp_qdq_unsigned(x, 2.5, 2, 2, -0.25);
         }
         black_box(acc);
-    });
+    }));
 
     let acts: Vec<f32> = (0..4096).map(|_| {
         let v = rng.normal() * 2.0;
         v / (1.0 + (-v).exp())
     }).collect();
     let maxval0 = acts.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
-    bench_with_budget("msfp_act_search_1layer_4bit", Duration::from_secs(2), || {
+    results.push(bench_with_budget("msfp_act_search_1layer_4bit", Duration::from_secs(2), || {
         black_box(search_act_msfp(&acts, 4, maxval0, true, 100));
-    });
+    }));
+    // O(C·N) per-element oracle — the before/after-comparable baseline for
+    // the grid-segment engine (quant::grid); must select the same argmin.
+    results.push(bench_with_budget(
+        "msfp_act_search_1layer_4bit_scalar",
+        Duration::from_secs(2),
+        || {
+            black_box(scalar::search_act_msfp(&acts, 4, maxval0, true, 100));
+        },
+    ));
     let w: Vec<f32> = (0..9216).map(|_| rng.normal() * 0.1).collect();
-    bench_with_budget("weight_search_1layer_4bit", Duration::from_secs(2), || {
+    results.push(bench_with_budget("weight_search_1layer_4bit", Duration::from_secs(2), || {
         black_box(search_weight_fp(&w, 4, None, 40));
-    });
+    }));
 
-    // whole-model search (25 layers, parallel)
+    // whole-model search (25 layers, per-layer × per-candidate parallel)
     let mut weights = Vec::new();
     let mut calib = Vec::new();
     for l in 0..25 {
@@ -57,15 +72,23 @@ fn main() {
         calib.push(LayerCalib { name: format!("l{l}"), acts: a, min, max, aal_hint: l % 2 == 0 });
     }
     let opts = QuantOpts::new(Method::Msfp, 25, 4, 4);
-    bench_with_budget("msfp_full_model_search_25layers", Duration::from_secs(5), || {
+    results.push(bench_with_budget("msfp_full_model_search_25layers", Duration::from_secs(5), || {
         black_box(quantize_model(&weights, &calib, &opts));
-    });
+    }));
 
     // batcher planning
     let tickets: Vec<Ticket> = (0..64)
         .map(|i| Ticket { req: i, t: (i % 7) as f32, n: 1 + i % 5 })
         .collect();
-    bench_with_budget("batcher_plan_64_tickets", Duration::from_secs(1), || {
+    results.push(bench_with_budget("batcher_plan_64_tickets", Duration::from_secs(1), || {
         black_box(plan(&tickets, &[1, 2, 4, 8]));
-    });
+    }));
+
+    // non-fatal: the measurements above are already printed; don't discard
+    // a completed run over an unwritable path
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_quant.json".to_string());
+    match write_json(Path::new(&path), &results) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
 }

@@ -71,7 +71,8 @@ pub fn fig2(pl: &Pipeline, report: &Report, p: &Prepared) -> Result<()> {
         let mut nal = (0.0f64, 0usize);
         for c in &calib {
             let maxval0 = c.acts.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
-            let r = search_signed(&c.acts, &act_signed_formats(bits), &linspace(maxval0 / 50.0, maxval0, 50));
+            let r = search_signed(&c.acts, &act_signed_formats(bits), &linspace(maxval0 / 50.0, maxval0, 50))
+                .expect("signed search space is non-empty");
             // normalize by signal power so layers are comparable
             let power: f64 = c.acts.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
                 / c.acts.len() as f64;

@@ -1,0 +1,464 @@
+//! Closed-form grid-segment search engine for the MSFP initialization.
+//!
+//! The scalar search (quant::search::scalar) scores every candidate
+//! quantizer by re-running fake-qdq over all N calibration samples —
+//! O(C·N) per layer per stage. This engine replaces the per-element pass
+//! with a per-*grid-point* pass:
+//!
+//!  1. Sort the layer's samples once and build f64 prefix sums of Σx and
+//!     Σx² (`GridEngine::new`, O(N·log N), shared by every candidate and
+//!     both mixup stages).
+//!  2. For each candidate, enumerate its ≤2^bits distinct qdq output
+//!     values (its *grid*) from the same `quant::fp` / `quant::int`
+//!     primitives the deployed kernel uses (`quantizer_grid`).
+//!  3. Because every fake-qdq in the repo is monotone non-decreasing in x,
+//!     the sorted samples split into one contiguous run per grid point.
+//!     The run boundary for grid point g is located by binary search with
+//!     the predicate `qdq(x) <= g`, evaluated with the *scalar* qdq itself
+//!     — so clamping, the half-up tie rule (`rnd(v) = floor(v + 0.5)`
+//!     sends an exact midpoint to the upper grid point), and every f32
+//!     rounding in `x/a`, `y/step` etc. are honored bit-exactly instead of
+//!     being re-derived analytically.
+//!  4. Each run's squared error is closed-form from the prefix sums:
+//!     Σ(x−g)² = Σx² − 2·g·Σx + g²·n. Total cost per candidate is
+//!     O(G·log N) instead of O(N).
+//!
+//! ## Grid generation
+//!
+//! Grids are a (deduplicated) superset of the qdq image, computed with the
+//! *same f32 expressions* the scalar path applies so membership is
+//! bit-exact:
+//!
+//!  * `SignedFp`   — magnitudes k·2^(e−m)·a for every binade
+//!    e ∈ [e_min, 0] (k spans [2^m, 2^{m+1}], the subnormal binade starts
+//!    at 0, the top binade is clamped at full = 2 − 2^{−m}), evaluated as
+//!    `(k as f32) * step * a`, plus exact negations. A value the rounding
+//!    can never produce only yields an empty segment — it cannot corrupt
+//!    the score — so the enumeration errs on the inclusive side.
+//!  * `UnsignedFp` — the non-negative magnitudes, each shifted by the f32
+//!    add `+ zp` (the zero-point shift of paper Eq. 8).
+//!  * `IntSym`     — q·s for q ∈ [−qmax−1, qmax].
+//!  * `IntAsym`    — (q − z)·s for q ∈ [0, levels], with s and z computed
+//!    exactly as `int_qdq_asym` computes them (including the degenerate
+//!    `s <= 0 → s = 1` guard).
+//!
+//! ## Pruning rules
+//!
+//! `search_min` keeps the best fully-scored SSE so far in an atomic and
+//! hands it to each candidate as an abandon threshold: scoring stops as
+//! soon as the partial SSE exceeds it. Per-segment SSE is clamped at 0
+//! (the closed form can go a hair negative from f64 cancellation), which
+//! makes partial sums monotone, so an abandoned candidate provably scores
+//! strictly above the final minimum — the selected argmin (lowest index on
+//! ties, matching the scalar first-wins rule) is deterministic regardless
+//! of thread interleaving. Candidates within one layer are scored through
+//! `util::threadpool::parallel_map`, composing with the per-layer
+//! parallelism of `quant::msfp::quantize_model` (few-layer models hand
+//! their spare cores to the candidate level).
+//!
+//! Parity with the scalar oracle (same argmin, MSE within 1e-9 relative)
+//! is pinned by property tests here and in tests/props.rs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::threadpool::parallel_map;
+
+use super::fp::{e_min_of, exp2_int, rnd};
+use super::search::{Quantizer, SearchResult};
+
+/// Sorted calibration samples plus f64 prefix sums — built once per layer
+/// (O(N·log N)) and shared by every candidate and search stage.
+pub struct GridEngine {
+    /// samples, ascending
+    xs: Vec<f32>,
+    /// p1[i] = Σ xs[..i] in f64
+    p1: Vec<f64>,
+    /// p2[i] = Σ xs[..i]² in f64
+    p2: Vec<f64>,
+    /// poisoned-sample score matching the scalar oracle: Some(NAN) when any
+    /// sample is NaN (scalar MSE is NaN → unselectable), Some(INF) when any
+    /// is ±inf (scalar MSE is +inf for every candidate); the closed form
+    /// would otherwise turn both into inf−inf = NaN
+    poisoned: Option<f64>,
+}
+
+impl GridEngine {
+    pub fn new(samples: &[f32]) -> GridEngine {
+        let mut xs = samples.to_vec();
+        xs.sort_unstable_by(f32::total_cmp);
+        let mut p1 = Vec::with_capacity(xs.len() + 1);
+        let mut p2 = Vec::with_capacity(xs.len() + 1);
+        let (mut a1, mut a2) = (0.0f64, 0.0f64);
+        p1.push(0.0);
+        p2.push(0.0);
+        let mut poisoned = None;
+        for &x in &xs {
+            if x.is_nan() {
+                poisoned = Some(f64::NAN);
+            } else if x.is_infinite() && poisoned.is_none() {
+                poisoned = Some(f64::INFINITY);
+            }
+            let x = x as f64;
+            a1 += x;
+            a2 += x * x;
+            p1.push(a1);
+            p2.push(a2);
+        }
+        GridEngine { xs, p1, p2, poisoned }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Sum of squared errors of the monotone quantizer `qdq` whose output
+    /// grid (ascending, superset of the image) is `grid`. Returns None as
+    /// soon as the partial sum exceeds `abandon_above` (early abandon);
+    /// pass `f64::INFINITY` to force a full score.
+    pub fn sse_fn(
+        &self,
+        qdq: impl Fn(f32) -> f32,
+        grid: &[f32],
+        abandon_above: f64,
+    ) -> Option<f64> {
+        let n = self.xs.len();
+        if let Some(score) = self.poisoned {
+            return Some(score);
+        }
+        let mut acc = 0.0f64;
+        let mut lo = 0usize;
+        for (i, &g) in grid.iter().enumerate() {
+            if lo >= n {
+                break;
+            }
+            // Samples in [lo, hi) all quantize to exactly g: the grid
+            // covers the image and qdq is monotone, so the run boundary is
+            // the partition point of `qdq(x) <= g` over the sorted tail.
+            let hi = if i + 1 == grid.len() {
+                n
+            } else {
+                lo + self.xs[lo..].partition_point(|&x| qdq(x) <= g)
+            };
+            if hi > lo {
+                let cnt = (hi - lo) as f64;
+                let g = g as f64;
+                let s1 = self.p1[hi] - self.p1[lo];
+                let s2 = self.p2[hi] - self.p2[lo];
+                let seg = s2 - 2.0 * g * s1 + g * g * cnt;
+                if seg.is_nan() {
+                    // belt-and-braces: finite samples and grids cannot get
+                    // here, but never let max(0.0) hide a poisoned segment
+                    return Some(f64::NAN);
+                }
+                // clamp: the closed form can round a hair below zero, and
+                // monotone partial sums are what make abandonment exact
+                acc += seg.max(0.0);
+                if acc > abandon_above {
+                    return None;
+                }
+            }
+            lo = hi;
+        }
+        Some(acc)
+    }
+
+    /// Full (never-abandoned) MSE of `q` against the samples — the
+    /// engine-side equivalent of `Quantizer::mse`.
+    pub fn mse(&self, q: &Quantizer) -> f64 {
+        let grid = quantizer_grid(q);
+        let sse = self
+            .sse_fn(|x| q.qdq(x), &grid, f64::INFINITY)
+            .expect("abandon threshold is +inf");
+        sse / self.xs.len().max(1) as f64
+    }
+}
+
+/// Non-negative FP magnitudes k·2^(e−m)·a per binade, evaluated with the
+/// scalar path's exact expression `rnd * step * a`.
+fn fp_mag_grid(e_bits: i32, m_bits: i32, a: f32, out: &mut Vec<f32>, negate_too: bool) {
+    let e_min = e_min_of(e_bits);
+    let m = m_bits;
+    for e in e_min..=0 {
+        let step = exp2_int(e - m);
+        let kmin = if e == e_min { 0i64 } else { 1i64 << m };
+        let kmax = if e == 0 { (1i64 << (m + 1)) - 1 } else { 1i64 << (m + 1) };
+        for k in kmin..=kmax {
+            out.push((k as f32) * step * a);
+            if negate_too && k > 0 {
+                // exact: k·step is exact (integer times power of two) and
+                // IEEE multiplication rounds symmetrically in sign
+                out.push(-(k as f32) * step * a);
+            }
+        }
+    }
+}
+
+/// The exact qdq output grid of `q`, ascending and deduplicated. Values
+/// are computed with the same f32 expressions the scalar qdq applies, so
+/// membership is bit-exact. Candidates are expected to have positive
+/// maxval (the search spaces guarantee it).
+pub fn quantizer_grid(q: &Quantizer) -> Vec<f32> {
+    let mut g = Vec::new();
+    match *q {
+        Quantizer::SignedFp { fmt, maxval } => {
+            let full = 2.0 - exp2_int(-fmt.m_bits);
+            let a = maxval / full;
+            fp_mag_grid(fmt.e_bits, fmt.m_bits, a, &mut g, true);
+        }
+        Quantizer::UnsignedFp { fmt, maxval, zp } => {
+            let full = 2.0 - exp2_int(-fmt.m_bits);
+            let a = maxval / full;
+            fp_mag_grid(fmt.e_bits, fmt.m_bits, a, &mut g, false);
+            for v in &mut g {
+                *v += zp;
+            }
+        }
+        Quantizer::IntSym { n_bits, maxval } => {
+            let qmax_i = (1i64 << (n_bits - 1)) - 1;
+            let s = maxval / qmax_i as f32;
+            for qv in -qmax_i - 1..=qmax_i {
+                g.push(qv as f32 * s);
+            }
+        }
+        Quantizer::IntAsym { n_bits, lo, hi } => {
+            let levels_i = (1i64 << n_bits) - 1;
+            let mut s = (hi - lo) / levels_i as f32;
+            if s <= 0.0 {
+                s = 1.0;
+            }
+            let z = rnd(-lo / s);
+            for qv in 0..=levels_i {
+                g.push((qv as f32 - z) * s);
+            }
+        }
+    }
+    g.sort_unstable_by(f32::total_cmp);
+    g.dedup();
+    g
+}
+
+/// Score `cands` against the engine and return the argmin (lowest index on
+/// ties — the scalar first-wins rule) with its MSE, or None on an empty
+/// candidate set. `threads > 1` fans the candidates out over
+/// `parallel_map`; the result is identical for any thread count.
+pub fn search_min(
+    eng: &GridEngine,
+    cands: &[Quantizer],
+    threads: usize,
+) -> Option<SearchResult> {
+    if cands.is_empty() {
+        return None;
+    }
+    // best fully-scored SSE so far, shared across workers as f64 bits
+    let best = AtomicU64::new(f64::INFINITY.to_bits());
+    let sses = parallel_map(cands, threads.max(1), |_, q| {
+        let grid = quantizer_grid(q);
+        let abandon = f64::from_bits(best.load(Ordering::Relaxed));
+        let sse = eng.sse_fn(|x| q.qdq(x), &grid, abandon)?;
+        let mut cur = best.load(Ordering::Relaxed);
+        while sse < f64::from_bits(cur) {
+            match best.compare_exchange_weak(
+                cur,
+                sse.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        Some(sse)
+    });
+    let mut win: Option<(usize, f64)> = None;
+    for (i, sse) in sses.into_iter().enumerate() {
+        if let Some(sse) = sse {
+            // NaN scores (poisoned samples) are never selectable, matching
+            // the scalar argmin; all-NaN yields None
+            if !sse.is_nan() && win.map_or(true, |(_, b)| sse < b) {
+                win = Some((i, sse));
+            }
+        }
+    }
+    win.map(|(i, sse)| SearchResult {
+        quantizer: cands[i],
+        mse: sse / eng.len().max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::format::{self, FpFormat};
+    use crate::util::rng::Rng;
+
+    fn sample_set(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        let mut xs: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
+        // clamp-boundary coverage: exact maxval hits and far outliers
+        xs.push(scale);
+        xs.push(-scale);
+        xs.push(scale * 3.5);
+        xs.push(-scale * 3.5);
+        xs.push(0.0);
+        xs
+    }
+
+    fn random_quantizer(rng: &mut Rng, kind: usize, maxval: f32) -> Quantizer {
+        match kind {
+            0 => Quantizer::SignedFp {
+                fmt: FpFormat::new(rng.below(4) as i32, rng.below(4) as i32),
+                maxval,
+            },
+            1 => Quantizer::UnsignedFp {
+                fmt: FpFormat::new(rng.below(4) as i32, 1 + rng.below(3) as i32),
+                maxval,
+                zp: -rng.range(0.0, 0.3),
+            },
+            2 => Quantizer::IntSym { n_bits: 2 + rng.below(7) as i32, maxval },
+            _ => Quantizer::IntAsym {
+                n_bits: 2 + rng.below(7) as i32,
+                lo: -rng.range(0.0, 1.0),
+                hi: rng.range(0.1, 3.0),
+            },
+        }
+    }
+
+    #[test]
+    fn grid_covers_qdq_image_all_kinds() {
+        // every scalar qdq output must be bit-present in the grid
+        let mut rng = Rng::new(41);
+        for case in 0..200 {
+            let maxval = rng.range(0.2, 4.0);
+            let q = random_quantizer(&mut rng, case % 4, maxval);
+            let grid = quantizer_grid(&q);
+            assert!(!grid.is_empty());
+            assert!(grid.windows(2).all(|w| w[0] < w[1]), "grid not sorted: {q:?}");
+            for _ in 0..64 {
+                let x = rng.normal() * maxval * 2.0;
+                let v = q.qdq(x);
+                assert!(
+                    grid.iter().any(|&g| g == v),
+                    "qdq({x}) = {v} not in grid of {q:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sse_matches_per_element_sum() {
+        let mut rng = Rng::new(42);
+        for case in 0..120 {
+            let maxval = rng.range(0.2, 4.0);
+            let q = random_quantizer(&mut rng, case % 4, maxval);
+            let xs = sample_set(&mut rng, 300, maxval);
+            let eng = GridEngine::new(&xs);
+            let fast = eng.mse(&q);
+            let oracle = q.mse(&xs);
+            let power: f64 = xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+                / xs.len() as f64;
+            assert!(
+                (fast - oracle).abs() <= 1e-9 * oracle + 1e-12 * power + 1e-30,
+                "case {case}: engine {fast} vs scalar {oracle} for {q:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn search_min_is_true_argmin_and_thread_invariant() {
+        let mut rng = Rng::new(43);
+        let xs = sample_set(&mut rng, 600, 1.5);
+        let eng = GridEngine::new(&xs);
+        let maxvals: Vec<f32> = (1..=20).map(|i| 1.5 * i as f32 / 20.0).collect();
+        let mut cands = Vec::new();
+        for fmt in format::act_signed_formats(4) {
+            for &m in &maxvals {
+                cands.push(Quantizer::SignedFp { fmt, maxval: m });
+            }
+        }
+        let seq = search_min(&eng, &cands, 1).unwrap();
+        // pruning never changes the winner: exhaustive rescoring agrees
+        let mut best = (0usize, f64::INFINITY);
+        for (i, q) in cands.iter().enumerate() {
+            let mse = eng.mse(q);
+            if mse < best.1 {
+                best = (i, mse);
+            }
+        }
+        assert_eq!(seq.quantizer, cands[best.0]);
+        assert!((seq.mse - best.1).abs() <= 1e-15 * best.1.max(1e-18));
+        // deterministic under candidate-level parallelism
+        for threads in [2usize, 4, 8] {
+            let par = search_min(&eng, &cands, threads).unwrap();
+            assert_eq!(par.quantizer, seq.quantizer, "threads={threads}");
+            assert_eq!(par.mse, seq.mse, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_samples_and_empty_candidates() {
+        let eng = GridEngine::new(&[]);
+        assert!(eng.is_empty());
+        let q = Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 1.0 };
+        assert_eq!(eng.mse(&q), 0.0);
+        let r = search_min(&eng, &[q], 1).unwrap();
+        assert_eq!(r.quantizer, q);
+        assert_eq!(r.mse, 0.0);
+        assert!(search_min(&eng, &[], 4).is_none());
+    }
+
+    #[test]
+    fn poisoned_samples_match_scalar_semantics() {
+        let q = Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 1.0 };
+        // NaN sample: scalar MSE is NaN -> unselectable -> search yields None
+        let nan_xs = [0.1f32, f32::NAN, -0.4];
+        let eng = GridEngine::new(&nan_xs);
+        assert!(eng.mse(&q).is_nan());
+        assert!(search_min(&eng, &[q], 1).is_none());
+        assert!(q.mse(&nan_xs).is_nan());
+        // inf sample: scalar MSE is +inf for every candidate and the first
+        // candidate wins; the engine must do the same, not turn it to NaN
+        let inf_xs = [0.1f32, f32::INFINITY, -0.4];
+        let eng = GridEngine::new(&inf_xs);
+        assert_eq!(eng.mse(&q), f64::INFINITY);
+        let r = search_min(&eng, &[q], 1).unwrap();
+        assert_eq!(r.quantizer, q);
+        assert_eq!(r.mse, f64::INFINITY);
+        assert_eq!(q.mse(&inf_xs), f64::INFINITY);
+    }
+
+    #[test]
+    fn abandon_threshold_prunes() {
+        let mut rng = Rng::new(44);
+        let xs = sample_set(&mut rng, 400, 2.0);
+        let eng = GridEngine::new(&xs);
+        let q = Quantizer::IntSym { n_bits: 4, maxval: 0.01 }; // terrible fit
+        let grid = quantizer_grid(&q);
+        let full = eng.sse_fn(|x| q.qdq(x), &grid, f64::INFINITY).unwrap();
+        assert!(full > 0.0);
+        assert!(eng.sse_fn(|x| q.qdq(x), &grid, full / 2.0).is_none());
+        // threshold exactly at the full SSE must NOT abandon (strict >)
+        assert_eq!(eng.sse_fn(|x| q.qdq(x), &grid, full), Some(full));
+    }
+
+    #[test]
+    fn zp_shift_is_bit_exact() {
+        // unsigned grids are the signed magnitudes + zp as an f32 add;
+        // every unsigned qdq output must round-trip through the grid
+        let mut rng = Rng::new(45);
+        for _ in 0..100 {
+            let fmt = FpFormat::new(rng.below(4) as i32, 1 + rng.below(3) as i32);
+            let maxval = rng.range(0.3, 3.0);
+            let zp = -rng.range(0.0, 0.3);
+            let q = Quantizer::UnsignedFp { fmt, maxval, zp };
+            let grid = quantizer_grid(&q);
+            for _ in 0..32 {
+                let x = rng.normal() * maxval;
+                let v = q.qdq(x);
+                assert!(grid.iter().any(|&g| g == v), "{v} missing for {q:?}");
+            }
+        }
+    }
+}

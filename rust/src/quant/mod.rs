@@ -7,9 +7,11 @@
 pub mod format;
 pub mod fp;
 pub mod int;
+pub mod grid;
 pub mod search;
 pub mod classify;
 pub mod msfp;
 
 pub use format::FpFormat;
+pub use grid::GridEngine;
 pub use msfp::{LayerQuant, QuantScheme};

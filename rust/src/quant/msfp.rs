@@ -10,7 +10,7 @@ use crate::util::threadpool::parallel_map;
 
 use super::classify::{classify, LayerClass};
 use super::search::{
-    search_act_int, search_act_msfp, search_weight_fp, search_weight_int, Quantizer,
+    search_act_int_t, search_act_msfp_t, search_weight_fp_t, search_weight_int_t, Quantizer,
 };
 
 /// Calibration data for one quantized layer.
@@ -99,7 +99,13 @@ impl QuantOpts {
 pub fn quantize_model(weights: &[Vec<f32>], calib: &[LayerCalib], opts: &QuantOpts) -> QuantScheme {
     assert_eq!(weights.len(), calib.len());
     let idx: Vec<usize> = (0..calib.len()).collect();
-    let layers = parallel_map(&idx, opts.threads, |_, &l| {
+    // Nested parallelism: the outer parallel_map spreads layers across
+    // cores; cores left over when the model has fewer layers than cores go
+    // to candidate-level parallelism inside each layer's grid search.
+    let total = crate::util::threadpool::resolve_threads(opts.threads);
+    let outer = total.min(calib.len().max(1));
+    let inner = (total / outer).max(1); // outer·inner <= total: never oversubscribe
+    let layers = parallel_map(&idx, outer, |_, &l| {
         let c = &calib[l];
         let wbits = opts.wbits[l];
         let abits = opts.abits[l];
@@ -108,9 +114,22 @@ pub fn quantize_model(weights: &[Vec<f32>], calib: &[LayerCalib], opts: &QuantOp
 
         let (weight, w_mse, act, a_mse) = match opts.method {
             Method::Msfp | Method::SignedFp => {
-                let w = search_weight_fp(&weights[l], wbits, opts.weight_space, opts.maxval_points);
+                let w = search_weight_fp_t(
+                    &weights[l],
+                    wbits,
+                    opts.weight_space,
+                    opts.maxval_points,
+                    inner,
+                );
                 let mixup = opts.method == Method::Msfp && class == LayerClass::Aal;
-                let a = search_act_msfp(&c.acts, abits, maxval0, mixup, opts.maxval_points.max(50));
+                let a = search_act_msfp_t(
+                    &c.acts,
+                    abits,
+                    maxval0,
+                    mixup,
+                    opts.maxval_points.max(50),
+                    inner,
+                );
                 (w.quantizer, w.mse, a.quantizer, a.mse)
             }
             Method::IntMinMax => {
@@ -119,8 +138,17 @@ pub fn quantize_model(weights: &[Vec<f32>], calib: &[LayerCalib], opts: &QuantOp
                 (w, w.mse(&weights[l]), a, a.mse(&c.acts))
             }
             Method::IntMse => {
-                let w = search_weight_int(&weights[l], wbits, opts.maxval_points);
-                let a = search_act_int(&c.acts, abits, c.min, c.max, opts.maxval_points.max(20));
+                let w = search_weight_int_t(&weights[l], wbits, opts.maxval_points, inner)
+                    .expect("INT weight search failed: empty space (maxval_points == 0?) or NaN-poisoned weights");
+                let a = search_act_int_t(
+                    &c.acts,
+                    abits,
+                    c.min,
+                    c.max,
+                    opts.maxval_points.max(20),
+                    inner,
+                )
+                .expect("INT act search failed: empty space or NaN-poisoned calibration samples");
                 (w.quantizer, w.mse, a.quantizer, a.mse)
             }
         };

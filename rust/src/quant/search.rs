@@ -5,9 +5,16 @@
 //! *deployed* numerics (quant::fp / quant::int). Stage 1 searches signed FP
 //! for all layers; stage 2 additionally searches unsigned FP + zero-point
 //! for AALs and keeps the winner (the mixup).
+//!
+//! Scoring runs on the closed-form grid-segment engine (quant::grid):
+//! samples are sorted once per layer, each candidate costs O(G·log N)
+//! instead of O(N), and candidates early-abandon against the best score so
+//! far. The original O(C·N) per-element path is kept in [`scalar`] as the
+//! reference oracle (property tests + the perf_quant oracle bench).
 
-use super::fp::{fp_qdq_signed, fp_qdq_signed_zp, fp_qdq_unsigned};
 use super::format::{self, FpFormat};
+use super::fp::{fp_qdq_signed, fp_qdq_signed_zp, fp_qdq_unsigned};
+use super::grid::{self, quantizer_grid, GridEngine};
 use super::int::{int_qdq_asym, int_qdq_sym};
 
 /// A fully specified quantizer, encodable into a qparams row half
@@ -33,11 +40,14 @@ impl Quantizer {
         }
     }
 
-    /// MSE against samples under this quantizer.
+    /// MSE against samples under this quantizer (per-element reference;
+    /// the search paths score via quant::grid instead). The difference is
+    /// taken in f64 — an f32 subtraction loses up to 2^-24 relative on
+    /// clamped outliers, which would swamp the engine's 1e-9 parity bound.
     pub fn mse(&self, xs: &[f32]) -> f64 {
         let mut acc = 0.0f64;
         for &x in xs {
-            let d = (self.qdq(x) - x) as f64;
+            let d = self.qdq(x) as f64 - x as f64;
             acc += d * d;
         }
         acc / xs.len().max(1) as f64
@@ -76,14 +86,15 @@ pub struct SearchResult {
     pub mse: f64,
 }
 
-fn argmin(cands: impl Iterator<Item = (Quantizer, f64)>) -> SearchResult {
-    let mut best = SearchResult {
-        quantizer: Quantizer::SignedFp { fmt: FpFormat::new(1, 1), maxval: 1.0 },
-        mse: f64::INFINITY,
-    };
+/// First-wins argmin over pre-scored candidates; None on an empty set (the
+/// old behavior silently returned a dummy E1M1 quantizer with infinite MSE).
+fn argmin(cands: impl Iterator<Item = (Quantizer, f64)>) -> Option<SearchResult> {
+    let mut best: Option<SearchResult> = None;
     for (q, mse) in cands {
-        if mse < best.mse {
-            best = SearchResult { quantizer: q, mse };
+        // NaN-scored candidates (poisoned samples) are never selectable,
+        // mirroring the old INF-initialized strict-< loop
+        if !mse.is_nan() && best.map_or(true, |b| mse < b.mse) {
+            best = Some(SearchResult { quantizer: q, mse });
         }
     }
     best
@@ -97,14 +108,67 @@ pub fn linspace(lo: f32, hi: f32, n: usize) -> Vec<f32> {
     (0..n).map(|i| lo + (hi - lo) * i as f32 / (n - 1) as f32).collect()
 }
 
-/// Stage-1 signed FP search (Algorithm 1 lines 6-16).
-pub fn search_signed(xs: &[f32], formats: &[FpFormat], maxvals: &[f32]) -> SearchResult {
-    argmin(formats.iter().flat_map(|&fmt| {
-        maxvals.iter().filter(|m| **m > 0.0).map(move |&maxval| {
-            let q = Quantizer::SignedFp { fmt, maxval };
-            (q, q.mse(xs))
+/// Candidate enumerations — shared verbatim by the grid engine and the
+/// scalar oracle so both walk the same list in the same order (ties break
+/// identically).
+fn signed_cands(formats: &[FpFormat], maxvals: &[f32]) -> Vec<Quantizer> {
+    formats
+        .iter()
+        .flat_map(|&fmt| {
+            maxvals
+                .iter()
+                .filter(|m| **m > 0.0)
+                .map(move |&maxval| Quantizer::SignedFp { fmt, maxval })
         })
-    }))
+        .collect()
+}
+
+fn unsigned_cands(formats: &[FpFormat], maxvals: &[f32], zps: &[f32]) -> Vec<Quantizer> {
+    formats
+        .iter()
+        .flat_map(|&fmt| {
+            maxvals.iter().filter(|m| **m > 0.0).flat_map(move |&maxval| {
+                zps.iter().map(move |&zp| Quantizer::UnsignedFp { fmt, maxval, zp })
+            })
+        })
+        .collect()
+}
+
+fn weight_int_cands(bits: i32, maxval0: f32, maxval_points: usize) -> Vec<Quantizer> {
+    linspace(0.3 * maxval0, maxval0, maxval_points)
+        .into_iter()
+        .map(|m| Quantizer::IntSym { n_bits: bits, maxval: m })
+        .collect()
+}
+
+fn act_int_cands(bits: i32, min: f32, max: f32, points: usize) -> Vec<Quantizer> {
+    let lo0 = min.min(0.0);
+    let hi0 = max.max(1e-8);
+    linspace(0.3, 1.0, points)
+        .into_iter()
+        .flat_map(|s| {
+            linspace(0.5, 1.0, (points / 2).max(1)).into_iter().map(move |sl| {
+                Quantizer::IntAsym { n_bits: bits, lo: lo0 * sl, hi: hi0 * s }
+            })
+        })
+        .collect()
+}
+
+/// Stage-1 signed FP search (Algorithm 1 lines 6-16). None when the
+/// candidate set is empty (no formats, or no positive maxvals).
+pub fn search_signed(xs: &[f32], formats: &[FpFormat], maxvals: &[f32]) -> Option<SearchResult> {
+    search_signed_on(&GridEngine::new(xs), formats, maxvals, 1)
+}
+
+/// Stage-1 search on a pre-built engine (shares the sort/prefix work
+/// across stages; `threads` fans candidates out within the layer).
+pub fn search_signed_on(
+    eng: &GridEngine,
+    formats: &[FpFormat],
+    maxvals: &[f32],
+    threads: usize,
+) -> Option<SearchResult> {
+    grid::search_min(eng, &signed_cands(formats, maxvals), threads)
 }
 
 /// Stage-2 unsigned FP + zero-point search (Algorithm 1 lines 20-32).
@@ -113,15 +177,19 @@ pub fn search_unsigned(
     formats: &[FpFormat],
     maxvals: &[f32],
     zps: &[f32],
-) -> SearchResult {
-    argmin(formats.iter().flat_map(|&fmt| {
-        maxvals.iter().filter(|m| **m > 0.0).flat_map(move |&maxval| {
-            zps.iter().map(move |&zp| {
-                let q = Quantizer::UnsignedFp { fmt, maxval, zp };
-                (q, q.mse(xs))
-            })
-        })
-    }))
+) -> Option<SearchResult> {
+    search_unsigned_on(&GridEngine::new(xs), formats, maxvals, zps, 1)
+}
+
+/// Stage-2 search on a pre-built engine.
+pub fn search_unsigned_on(
+    eng: &GridEngine,
+    formats: &[FpFormat],
+    maxvals: &[f32],
+    zps: &[f32],
+    threads: usize,
+) -> Option<SearchResult> {
+    grid::search_min(eng, &unsigned_cands(formats, maxvals, zps), threads)
 }
 
 /// Weight search: signed FP over the Table-6 spaces. `maxval0` is the
@@ -133,10 +201,22 @@ pub fn search_weight_fp(
     space: Option<(f32, f32)>,
     maxval_points: usize,
 ) -> SearchResult {
+    search_weight_fp_t(w, bits, space, maxval_points, 1)
+}
+
+/// [`search_weight_fp`] with candidate-level parallelism.
+pub fn search_weight_fp_t(
+    w: &[f32],
+    bits: i32,
+    space: Option<(f32, f32)>,
+    maxval_points: usize,
+    threads: usize,
+) -> SearchResult {
     let maxval0 = w.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
     let (lo, hi) = space.unwrap_or_else(|| format::weight_maxval_space(bits));
     let maxvals = linspace(lo * maxval0, hi * maxval0, maxval_points);
-    search_signed(w, &format::weight_formats(bits), &maxvals)
+    search_signed_on(&GridEngine::new(w), &format::weight_formats(bits), &maxvals, threads)
+        .expect("weight FP search failed: empty space (maxval_points == 0?) or NaN-poisoned weights")
 }
 
 /// Activation MSFP search. `maxval0` comes from the random-forward capture
@@ -148,12 +228,35 @@ pub fn search_act_msfp(
     is_aal: bool,
     maxval_points: usize,
 ) -> SearchResult {
+    search_act_msfp_t(xs, bits, maxval0, is_aal, maxval_points, 1)
+}
+
+/// [`search_act_msfp`] with candidate-level parallelism. Both mixup stages
+/// share one engine (one sort + prefix pass over the samples).
+pub fn search_act_msfp_t(
+    xs: &[f32],
+    bits: i32,
+    maxval0: f32,
+    is_aal: bool,
+    maxval_points: usize,
+    threads: usize,
+) -> SearchResult {
     let maxvals = linspace(maxval0 / maxval_points as f32, maxval0, maxval_points);
-    let mut best = search_signed(xs, &format::act_signed_formats(bits), &maxvals);
+    let eng = GridEngine::new(xs);
+    let mut best = search_signed_on(&eng, &format::act_signed_formats(bits), &maxvals, threads)
+        .expect("signed act search failed: empty space (maxval_points == 0?) or NaN-poisoned samples");
     if is_aal {
-        let u = search_unsigned(xs, &format::act_unsigned_formats(bits), &maxvals, &format::zp_space());
-        if u.mse < best.mse {
-            best = u;
+        let u = search_unsigned_on(
+            &eng,
+            &format::act_unsigned_formats(bits),
+            &maxvals,
+            &format::zp_space(),
+            threads,
+        );
+        if let Some(u) = u {
+            if u.mse < best.mse {
+                best = u;
+            }
         }
     }
     best
@@ -168,24 +271,43 @@ pub fn int_weight_minmax(w: &[f32], bits: i32) -> Quantizer {
 }
 
 /// MSE-searched symmetric INT (Q-Diffusion/EDA-DM-style reconstruction).
-pub fn search_weight_int(w: &[f32], bits: i32, maxval_points: usize) -> SearchResult {
-    let maxval0 = w.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
-    argmin(linspace(0.3 * maxval0, maxval0, maxval_points).into_iter().map(|m| {
-        let q = Quantizer::IntSym { n_bits: bits, maxval: m };
-        (q, q.mse(w))
-    }))
+/// None when `maxval_points == 0`.
+pub fn search_weight_int(w: &[f32], bits: i32, maxval_points: usize) -> Option<SearchResult> {
+    search_weight_int_t(w, bits, maxval_points, 1)
 }
 
-/// MSE-searched asymmetric INT for activations.
-pub fn search_act_int(xs: &[f32], bits: i32, min: f32, max: f32, points: usize) -> SearchResult {
-    let lo0 = min.min(0.0);
-    let hi0 = max.max(1e-8);
-    argmin(linspace(0.3, 1.0, points).into_iter().flat_map(|s| {
-        linspace(0.5, 1.0, (points / 2).max(1)).into_iter().map(move |sl| {
-            let q = Quantizer::IntAsym { n_bits: bits, lo: lo0 * sl, hi: hi0 * s };
-            (q, q.mse(xs))
-        })
-    }))
+/// [`search_weight_int`] with candidate-level parallelism.
+pub fn search_weight_int_t(
+    w: &[f32],
+    bits: i32,
+    maxval_points: usize,
+    threads: usize,
+) -> Option<SearchResult> {
+    let maxval0 = w.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+    grid::search_min(&GridEngine::new(w), &weight_int_cands(bits, maxval0, maxval_points), threads)
+}
+
+/// MSE-searched asymmetric INT for activations. None when `points == 0`.
+pub fn search_act_int(
+    xs: &[f32],
+    bits: i32,
+    min: f32,
+    max: f32,
+    points: usize,
+) -> Option<SearchResult> {
+    search_act_int_t(xs, bits, min, max, points, 1)
+}
+
+/// [`search_act_int`] with candidate-level parallelism.
+pub fn search_act_int_t(
+    xs: &[f32],
+    bits: i32,
+    min: f32,
+    max: f32,
+    points: usize,
+    threads: usize,
+) -> Option<SearchResult> {
+    grid::search_min(&GridEngine::new(xs), &act_int_cands(bits, min, max, points), threads)
 }
 
 /// The four Figure-4 strategies evaluated on one AAL's samples, returning
@@ -194,33 +316,112 @@ pub fn search_act_int(xs: &[f32], bits: i32, min: f32, max: f32, points: usize) 
 pub fn fig4_strategies(xs: &[f32], bits: i32, maxval0: f32, points: usize) -> [f64; 4] {
     let maxvals = linspace(maxval0 / points as f32, maxval0, points);
     let zps = format::zp_space();
-    let signed = search_signed(xs, &format::act_signed_formats(bits), &maxvals).mse;
+    let eng = GridEngine::new(xs);
+    let n = xs.len().max(1) as f64;
 
-    // signed + zp: offline-only variant (fp_qdq_signed_zp)
-    let mut signed_zp = f64::INFINITY;
+    let signed = search_signed_on(&eng, &format::act_signed_formats(bits), &maxvals, 1)
+        .map_or(f64::INFINITY, |r| r.mse);
+
+    // signed + zp: offline-only variant (fp_qdq_signed_zp, not a deployed
+    // Quantizer). Scored on the engine too: its grid is the signed grid
+    // shifted by the exact f32 add `+ zp` the scalar path applies.
+    let mut best_sse = f64::INFINITY;
     for fmt in format::act_signed_formats(bits) {
         for &m in &maxvals {
+            if m <= 0.0 {
+                continue;
+            }
+            let base = quantizer_grid(&Quantizer::SignedFp { fmt, maxval: m });
             for &zp in &zps {
-                let mse = xs
-                    .iter()
-                    .map(|&x| {
-                        let d = (fp_qdq_signed_zp(x, m, fmt.e_bits, fmt.m_bits, zp) - x) as f64;
-                        d * d
-                    })
-                    .sum::<f64>()
-                    / xs.len().max(1) as f64;
-                signed_zp = signed_zp.min(mse);
+                let shifted: Vec<f32> = base.iter().map(|&g| g + zp).collect();
+                if let Some(sse) = eng.sse_fn(
+                    |x| fp_qdq_signed_zp(x, m, fmt.e_bits, fmt.m_bits, zp),
+                    &shifted,
+                    best_sse,
+                ) {
+                    best_sse = best_sse.min(sse);
+                }
             }
         }
     }
+    let signed_zp = best_sse / n;
 
     let unsigned_nozp =
-        search_unsigned(xs, &format::act_unsigned_formats(bits), &maxvals, &[0.0]).mse;
+        search_unsigned_on(&eng, &format::act_unsigned_formats(bits), &maxvals, &[0.0], 1)
+            .map_or(f64::INFINITY, |r| r.mse);
     let unsigned_zp =
-        search_unsigned(xs, &format::act_unsigned_formats(bits), &maxvals, &zps).mse;
+        search_unsigned_on(&eng, &format::act_unsigned_formats(bits), &maxvals, &zps, 1)
+            .map_or(f64::INFINITY, |r| r.mse);
 
     let base = signed.max(1e-18);
     [signed / base, signed_zp / base, unsigned_nozp / base, unsigned_zp / base]
+}
+
+/// The original O(C·N) per-element scoring, retained as the reference
+/// oracle for the grid-segment engine: property tests assert argmin and
+/// MSE parity, and `benches/perf_quant.rs` keeps a before/after-comparable
+/// `*_scalar` baseline. Not used on any hot path.
+pub mod scalar {
+    use super::*;
+
+    pub fn search_signed(
+        xs: &[f32],
+        formats: &[FpFormat],
+        maxvals: &[f32],
+    ) -> Option<SearchResult> {
+        argmin(signed_cands(formats, maxvals).into_iter().map(|q| (q, q.mse(xs))))
+    }
+
+    pub fn search_unsigned(
+        xs: &[f32],
+        formats: &[FpFormat],
+        maxvals: &[f32],
+        zps: &[f32],
+    ) -> Option<SearchResult> {
+        argmin(unsigned_cands(formats, maxvals, zps).into_iter().map(|q| (q, q.mse(xs))))
+    }
+
+    pub fn search_weight_int(w: &[f32], bits: i32, maxval_points: usize) -> Option<SearchResult> {
+        let maxval0 = w.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+        argmin(weight_int_cands(bits, maxval0, maxval_points).into_iter().map(|q| (q, q.mse(w))))
+    }
+
+    pub fn search_act_int(
+        xs: &[f32],
+        bits: i32,
+        min: f32,
+        max: f32,
+        points: usize,
+    ) -> Option<SearchResult> {
+        argmin(act_int_cands(bits, min, max, points).into_iter().map(|q| (q, q.mse(xs))))
+    }
+
+    /// Scalar mirror of [`super::search_act_msfp`] (both mixup stages).
+    pub fn search_act_msfp(
+        xs: &[f32],
+        bits: i32,
+        maxval0: f32,
+        is_aal: bool,
+        maxval_points: usize,
+    ) -> SearchResult {
+        let maxvals = linspace(maxval0 / maxval_points as f32, maxval0, maxval_points);
+        let mut best = search_signed(xs, &format::act_signed_formats(bits), &maxvals)
+            .expect("signed act search space is empty");
+        if is_aal {
+            let u = search_unsigned(
+                xs,
+                &format::act_unsigned_formats(bits),
+                &maxvals,
+                &format::zp_space(),
+            );
+            if let Some(u) = u {
+                if u.mse < best.mse {
+                    best = u;
+                }
+            }
+        }
+        best
+    }
 }
 
 #[cfg(test)]
@@ -246,8 +447,20 @@ mod tests {
     #[test]
     fn search_finds_low_mse_signed() {
         let xs = normal_samples(2048, 1);
-        let r = search_signed(&xs, &format::act_signed_formats(6), &linspace(0.5, 5.0, 40));
+        let r = search_signed(&xs, &format::act_signed_formats(6), &linspace(0.5, 5.0, 40))
+            .unwrap();
         assert!(r.mse < 1e-3, "mse={}", r.mse);
+    }
+
+    #[test]
+    fn empty_candidate_set_is_none() {
+        let xs = normal_samples(64, 9);
+        assert!(search_signed(&xs, &[], &linspace(0.5, 2.0, 5)).is_none());
+        assert!(search_signed(&xs, &format::act_signed_formats(4), &[]).is_none());
+        // all-nonpositive maxvals filter down to nothing
+        assert!(search_signed(&xs, &format::act_signed_formats(4), &[-1.0, 0.0]).is_none());
+        assert!(search_weight_int(&xs, 4, 0).is_none());
+        assert!(search_act_int(&xs, 4, -1.0, 1.0, 0).is_none());
     }
 
     #[test]
@@ -289,7 +502,7 @@ mod tests {
     #[test]
     fn int_mse_search_beats_minmax() {
         let w = normal_samples(4096, 6);
-        let s = search_weight_int(&w, 4, 40);
+        let s = search_weight_int(&w, 4, 40).unwrap();
         assert!(s.mse <= int_weight_minmax(&w, 4).mse(&w));
     }
 
@@ -319,6 +532,34 @@ mod tests {
         let m6 = search_act_msfp(&xs, 6, maxval0, true, 30).mse;
         let m8 = search_act_msfp(&xs, 8, maxval0, true, 30).mse;
         assert!(m8 < m6 && m6 < m4, "{m8} {m6} {m4}");
+    }
+
+    #[test]
+    fn engine_matches_scalar_oracle_msfp() {
+        // end-to-end mixup parity against the retained scalar path
+        for seed in [21u64, 22, 23] {
+            let xs = silu_samples(1536, seed);
+            let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+            let fast = search_act_msfp(&xs, 4, maxval0, true, 25);
+            let slow = scalar::search_act_msfp(&xs, 4, maxval0, true, 25);
+            assert_eq!(fast.quantizer, slow.quantizer, "seed {seed}");
+            assert!(
+                (fast.mse - slow.mse).abs() <= 1e-9 * slow.mse.max(1e-18),
+                "seed {seed}: {} vs {}",
+                fast.mse,
+                slow.mse
+            );
+        }
+    }
+
+    #[test]
+    fn threaded_search_matches_sequential() {
+        let xs = silu_samples(2048, 31);
+        let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let a = search_act_msfp_t(&xs, 4, maxval0, true, 40, 1);
+        let b = search_act_msfp_t(&xs, 4, maxval0, true, 40, 4);
+        assert_eq!(a.quantizer, b.quantizer);
+        assert_eq!(a.mse, b.mse);
     }
 
     #[test]

@@ -131,7 +131,11 @@ impl Denoiser {
         Ok((*b, self.engine.load(file)?))
     }
 
+    /// Pad `n` stacked samples up to batch class `b` by repeating the last
+    /// sample. Callers guarantee `n >= 1` (the eps entry points bail on an
+    /// empty batch before reaching this division).
     fn pad_to(&self, x: &[f32], n: usize, b: usize) -> Vec<f32> {
+        debug_assert!(n >= 1, "pad_to requires a non-empty batch");
         let per = x.len() / n;
         let mut out = Vec::with_capacity(b * per);
         out.extend_from_slice(x);
@@ -149,6 +153,9 @@ impl Denoiser {
     /// Full-precision eps_theta. x is n stacked samples; t/cond length n.
     pub fn eps_fp(&self, params: &[f32], x: &[f32], t: &[f32], cond: &[f32]) -> Result<Vec<f32>> {
         let n = t.len();
+        if n == 0 {
+            bail!("eps_fp called with an empty batch (t is empty)");
+        }
         if x.len() != self.info.x_size(n) {
             bail!("x len {} != expected {}", x.len(), self.info.x_size(n));
         }
@@ -195,6 +202,9 @@ impl Denoiser {
         cond: &[f32],
     ) -> Result<Vec<f32>> {
         let n = cond.len();
+        if n == 0 {
+            bail!("eps_q/eps_q_with_sel called with an empty batch (cond is empty)");
+        }
         if x.len() != self.info.x_size(n) {
             bail!("x len {} != expected {}", x.len(), self.info.x_size(n));
         }

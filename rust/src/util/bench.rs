@@ -1,8 +1,13 @@
 //! Bench harness for `[[bench]] harness = false` targets (criterion is
 //! unavailable offline). Auto-calibrates iteration counts to a time budget
-//! and reports median / p10 / p90 per-iteration latency.
+//! and reports median / p10 / p90 per-iteration latency, plus a JSON
+//! emitter (`write_json`) so BENCH_*.json files keep the perf trajectory
+//! machine-readable across PRs.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::{arr, num, obj, s, Json};
 
 pub struct BenchResult {
     pub name: String,
@@ -13,6 +18,17 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// JSON row for BENCH_*.json files.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("iters", num(self.iters as f64)),
+            ("median_ns", num(self.median_ns)),
+            ("p10_ns", num(self.p10_ns)),
+            ("p90_ns", num(self.p90_ns)),
+        ])
+    }
+
     pub fn print(&self) {
         println!(
             "bench {:<44} {:>12}/iter  (p10 {}, p90 {}, n={})",
@@ -83,6 +99,13 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Write bench results as `{"benches": [...]}` so the perf trajectory is
+/// machine-readable (diffable) across PRs.
+pub fn write_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
+    let j = obj(vec![("benches", arr(results.iter().map(|r| r.to_json())))]);
+    std::fs::write(path, j.to_string() + "\n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +117,24 @@ mod tests {
         });
         assert!(r.median_ns >= 0.0);
         assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            median_ns: 1.5,
+            p10_ns: 1.0,
+            p90_ns: 2.0,
+        };
+        let path = std::env::temp_dir().join(format!("msfp_bench_{}.json", std::process::id()));
+        write_json(&path, &[r]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = j.get("benches").unwrap().arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().str().unwrap(), "x");
+        assert_eq!(rows[0].get("median_ns").unwrap().f64().unwrap(), 1.5);
     }
 
     #[test]

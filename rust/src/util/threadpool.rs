@@ -77,6 +77,18 @@ impl Drop for Pool {
     }
 }
 
+/// Resolve a thread-count knob: `0` → available parallelism (fallback 4).
+/// Single source of truth for what `threads == 0` means, shared by
+/// [`parallel_map`] and callers that budget nested parallelism
+/// (e.g. quant::msfp::quantize_model's outer×inner split).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    } else {
+        threads
+    }
+}
+
 /// Fork-join parallel map preserving order. `threads == 0` → available
 /// parallelism. Work is distributed by atomic index so uneven items balance.
 pub fn parallel_map<T: Sync, R: Send>(
@@ -88,12 +100,7 @@ pub fn parallel_map<T: Sync, R: Send>(
     if n == 0 {
         return Vec::new();
     }
-    let threads = if threads == 0 {
-        thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
-    } else {
-        threads
-    }
-    .min(n);
+    let threads = resolve_threads(threads).min(n);
     if threads <= 1 {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }

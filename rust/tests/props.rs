@@ -5,9 +5,13 @@
 use msfp::linalg::stats::{frechet, mean_cov};
 use msfp::linalg::tensor::Mat;
 use msfp::quant::fp::{e_min_of, exp2_int, fp_qdq_signed, fp_qdq_unsigned};
+use msfp::quant::grid::{quantizer_grid, GridEngine};
 use msfp::quant::int::{int_qdq_asym, int_qdq_sym};
-use msfp::quant::search::{linspace, search_signed, Quantizer};
-use msfp::quant::format::act_signed_formats;
+use msfp::quant::search::{
+    linspace, scalar, search_act_int, search_signed, search_unsigned, search_weight_int,
+    Quantizer, SearchResult,
+};
+use msfp::quant::format::{act_signed_formats, act_unsigned_formats, zp_space, FpFormat};
 use msfp::schedule::{timestep_subsequence, Schedule};
 use msfp::util::io::Store;
 use msfp::util::json::Json;
@@ -116,7 +120,8 @@ fn prop_search_result_is_argmin_over_resample() {
         |(xs, seed)| {
             let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-6);
             let maxvals = linspace(maxval0 / 20.0, maxval0, 20);
-            let best = search_signed(xs, &act_signed_formats(4), &maxvals);
+            let best = search_signed(xs, &act_signed_formats(4), &maxvals)
+                .expect("non-empty search space");
             let mut rng = Rng::new(*seed);
             for _ in 0..30 {
                 let fmt = act_signed_formats(4)[rng.below(4)];
@@ -214,6 +219,154 @@ fn prop_json_number_roundtrip() {
                 Ok(Json::Num(y)) => (x - y).abs() <= 1e-9 * x.abs().max(1.0),
                 _ => false,
             }
+        },
+    );
+}
+
+// Grid-segment engine vs scalar oracle --------------------------------
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Random "layer": SiLU-shaped (AAL) or gaussian (NAL) samples, with exact
+/// clamp-boundary hits and out-of-range outliers appended so the top grid
+/// point's clamping segment is always exercised.
+fn random_layer(rng: &mut Rng, n: usize, aal: bool) -> Vec<f32> {
+    let mut xs: Vec<f32> = (0..n)
+        .map(|_| {
+            let v = rng.normal() * 2.0;
+            if aal {
+                silu(v)
+            } else {
+                v
+            }
+        })
+        .collect();
+    let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-6);
+    xs.push(maxval0);
+    xs.push(-maxval0);
+    xs.push(maxval0 * 2.5);
+    xs.push(-maxval0 * 2.5);
+    xs
+}
+
+fn assert_same_result(fast: &SearchResult, slow: &SearchResult, what: &str) {
+    assert_eq!(
+        fast.quantizer, slow.quantizer,
+        "{what}: engine picked {:?} (mse {}), scalar picked {:?} (mse {})",
+        fast.quantizer, fast.mse, slow.quantizer, slow.mse
+    );
+    assert!(
+        (fast.mse - slow.mse).abs() <= 1e-9 * slow.mse.max(1e-18),
+        "{what}: engine mse {} vs scalar mse {}",
+        fast.mse,
+        slow.mse
+    );
+}
+
+#[test]
+fn prop_grid_segment_mse_matches_scalar() {
+    // per-candidate closed-form MSE == per-element MSE within 1e-9
+    // relative, for all four quantizer kinds incl. zp-shifted unsigned
+    check(
+        "grid-mse-oracle",
+        120,
+        |r| {
+            let maxval = r.range(0.2, 4.0);
+            let mut xs = vec_f32(r, 400, maxval);
+            xs.push(maxval);
+            xs.push(-maxval);
+            xs.push(maxval * 3.0);
+            xs.push(-maxval * 3.0);
+            let q = match r.below(4) {
+                0 => Quantizer::SignedFp {
+                    fmt: FpFormat::new(r.below(4) as i32, r.below(4) as i32),
+                    maxval,
+                },
+                1 => Quantizer::UnsignedFp {
+                    fmt: FpFormat::new(r.below(4) as i32, 1 + r.below(3) as i32),
+                    maxval,
+                    zp: -r.range(0.0, 0.3),
+                },
+                2 => Quantizer::IntSym { n_bits: 2 + r.below(7) as i32, maxval },
+                _ => Quantizer::IntAsym {
+                    n_bits: 2 + r.below(7) as i32,
+                    lo: -r.range(0.0, 1.0),
+                    hi: r.range(0.1, 3.0),
+                },
+            };
+            (xs, q)
+        },
+        |(xs, q)| {
+            let eng = GridEngine::new(xs);
+            let fast = eng.mse(q);
+            let oracle = q.mse(xs);
+            let power: f64 =
+                xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / xs.len() as f64;
+            (fast - oracle).abs() <= 1e-9 * oracle + 1e-12 * power + 1e-30
+        },
+    );
+}
+
+#[test]
+fn grid_engine_argmin_matches_scalar_all_kinds() {
+    // the satellite contract: identical argmin quantizer across >= 20
+    // random layers for all four search entry points
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(4000 + seed);
+        let n = 512 + (seed as usize % 3) * 256;
+        let xs = random_layer(&mut rng, n, seed % 2 == 0);
+        let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-6);
+        let maxvals = linspace(maxval0 / 25.0, maxval0, 25);
+        let zps = zp_space();
+
+        let fast = search_signed(&xs, &act_signed_formats(4), &maxvals).unwrap();
+        let slow = scalar::search_signed(&xs, &act_signed_formats(4), &maxvals).unwrap();
+        assert_same_result(&fast, &slow, &format!("signed seed {seed}"));
+
+        let fast = search_unsigned(&xs, &act_unsigned_formats(4), &maxvals, &zps).unwrap();
+        let slow =
+            scalar::search_unsigned(&xs, &act_unsigned_formats(4), &maxvals, &zps).unwrap();
+        assert_same_result(&fast, &slow, &format!("unsigned+zp seed {seed}"));
+
+        let fast = search_weight_int(&xs, 4, 25).unwrap();
+        let slow = scalar::search_weight_int(&xs, 4, 25).unwrap();
+        assert_same_result(&fast, &slow, &format!("int-sym seed {seed}"));
+
+        let (mn, mx) = xs
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(a, b), &x| (a.min(x), b.max(x)));
+        let fast = search_act_int(&xs, 4, mn, mx, 12).unwrap();
+        let slow = scalar::search_act_int(&xs, 4, mn, mx, 12).unwrap();
+        assert_same_result(&fast, &slow, &format!("int-asym seed {seed}"));
+    }
+}
+
+#[test]
+fn prop_grid_covers_image_under_fuzz() {
+    // the engine's correctness hinges on grid ⊇ qdq image; fuzz it across
+    // formats, maxvals and zero points
+    check(
+        "grid-image-cover",
+        200,
+        |r| {
+            let e = r.below(4) as i32;
+            let m = r.below(4) as i32;
+            let maxval = r.range(0.05, 8.0);
+            let zp = -r.range(0.0, 0.3);
+            let signed = r.below(2) == 0;
+            let x = r.normal() * maxval * 2.0;
+            (e, m, maxval, zp, signed, x)
+        },
+        |&(e, m, maxval, zp, signed, x)| {
+            let q = if signed {
+                Quantizer::SignedFp { fmt: FpFormat::new(e, m), maxval }
+            } else {
+                Quantizer::UnsignedFp { fmt: FpFormat::new(e, m.max(1)), maxval, zp }
+            };
+            let v = q.qdq(x);
+            quantizer_grid(&q).iter().any(|&g| g == v)
         },
     );
 }

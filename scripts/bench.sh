@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Perf gate for the quantization hot paths.
+#
+# Builds --release, runs the perf_quant bench target, and leaves a
+# machine-readable BENCH_quant.json at the repo root so the perf
+# trajectory (grid-segment engine vs the retained *_scalar oracle) is
+# comparable across PRs.
+#
+#   scripts/bench.sh
+#
+# Env:
+#   BENCH_JSON   output path (default: <repo>/BENCH_quant.json)
+#
+# Tier-1 verify stays `cargo build --release && cargo test -q` (run in
+# rust/); this script is the perf companion, not a replacement.
+set -euo pipefail
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$root/rust"
+export BENCH_JSON="${BENCH_JSON:-$root/BENCH_quant.json}"
+
+if [ ! -f Cargo.toml ]; then
+    echo "error: rust/Cargo.toml not found — this checkout has no build" >&2
+    echo "manifest (the crate manifest and vendored xla dep are provided" >&2
+    echo "by the build environment). Run from a toolchain-equipped tree." >&2
+    exit 1
+fi
+
+cargo build --release
+cargo bench --bench perf_quant
+
+echo "bench results: $BENCH_JSON"
