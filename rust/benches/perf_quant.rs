@@ -11,6 +11,7 @@ use msfp::coordinator::batcher::{plan, Ticket};
 use msfp::quant::fp::{fp_qdq_signed, fp_qdq_unsigned};
 use msfp::quant::msfp::{quantize_model, LayerCalib, Method, QuantOpts};
 use msfp::quant::search::{scalar, search_act_msfp, search_weight_fp};
+use msfp::quant::QuantSession;
 use msfp::util::bench::{bench_with_budget, black_box, write_json};
 use msfp::util::rng::Rng;
 
@@ -74,6 +75,47 @@ fn main() {
     let opts = QuantOpts::new(Method::Msfp, 25, 4, 4);
     results.push(bench_with_budget("msfp_full_model_search_25layers", Duration::from_secs(5), || {
         black_box(quantize_model(&weights, &calib, &opts));
+    }));
+
+    // Table-5-style weight-space sweep (7 points, W6/A8 like exp::tables::
+    // table5): "cold" rebuilds the per-tensor engines and re-runs every
+    // sub-search at each point; "session" builds one QuantSession, shares
+    // the sort/prefix preprocessing, and memoizes the weight-space-
+    // invariant activation searches across points.
+    let mut t5_weights = Vec::new();
+    let mut t5_calib = Vec::new();
+    for l in 0..8 {
+        t5_weights.push(rng.normal_vec(4096, 0.1));
+        let a: Vec<f32> = (0..2048)
+            .map(|_| {
+                let v = rng.normal() * 2.0;
+                if l % 2 == 0 { v / (1.0 + (-v).exp()) } else { v }
+            })
+            .collect();
+        let min = a.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = a.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        t5_calib.push(LayerCalib { name: format!("t5l{l}"), acts: a, min, max, aal_hint: l % 2 == 0 });
+    }
+    let t5_spaces =
+        [(0.0001f32, 1.0f32), (0.0001, 2.0), (0.6, 2.0), (0.7, 2.0), (0.8, 2.0), (0.9, 2.0), (1.0, 2.0)];
+    let t5_opts: Vec<QuantOpts> = t5_spaces
+        .iter()
+        .map(|&space| {
+            let mut o = QuantOpts::new(Method::Msfp, 8, 6, 8);
+            o.weight_space = Some(space);
+            o
+        })
+        .collect();
+    results.push(bench_with_budget("msfp_table5_sweep_cold", Duration::from_secs(6), || {
+        for o in &t5_opts {
+            black_box(quantize_model(&t5_weights, &t5_calib, o));
+        }
+    }));
+    results.push(bench_with_budget("msfp_table5_sweep_session", Duration::from_secs(6), || {
+        let session = QuantSession::new(&t5_weights, &t5_calib);
+        for o in &t5_opts {
+            black_box(session.quantize(o));
+        }
     }));
 
     // batcher planning

@@ -11,8 +11,7 @@ use crate::eval::{generate_images, GenerateCfg, ModelMode};
 use crate::pipeline::{Pipeline, Prepared};
 use crate::quant::classify::LayerClass;
 use crate::quant::format::act_signed_formats;
-use crate::quant::msfp::LayerCalib;
-use crate::quant::search::{fig4_strategies, linspace, search_signed};
+use crate::quant::search::{fig4_strategies_on, linspace, search_signed_on};
 use crate::schedule::Sampler;
 
 use super::report::Report;
@@ -62,22 +61,28 @@ pub fn fig1(pl: &Pipeline, report: &Report, p: &Prepared) -> Result<()> {
 }
 
 /// Figure 2: representation capacity (signed-FP search MSE) vs bit-width,
-/// AALs vs NALs.
+/// AALs vs NALs. One session engine per layer is shared across all six
+/// bit-widths instead of re-sorting the samples per (layer, bits) pair.
 pub fn fig2(pl: &Pipeline, report: &Report, p: &Prepared) -> Result<()> {
-    let calib = pl.calibrate(p)?;
+    let session = pl.build_session(p)?;
     let mut rows = Vec::new();
     for bits in 3..=8 {
         let mut aal = (0.0f64, 0usize);
         let mut nal = (0.0f64, 0usize);
-        for c in &calib {
-            let maxval0 = c.acts.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
-            let r = search_signed(&c.acts, &act_signed_formats(bits), &linspace(maxval0 / 50.0, maxval0, 50))
-                .expect("signed search space is non-empty");
+        for (l, c) in session.calib().iter().enumerate() {
+            let maxval0 = session.act_maxval0(l);
+            let r = search_signed_on(
+                session.act_engine(l),
+                &act_signed_formats(bits),
+                &linspace(maxval0 / 50.0, maxval0, 50),
+                1,
+            )
+            .expect("signed search space is non-empty");
             // normalize by signal power so layers are comparable
             let power: f64 = c.acts.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
                 / c.acts.len() as f64;
             let nmse = r.mse / power.max(1e-18);
-            match crate::quant::classify::classify(c.min, c.max) {
+            match session.class(l) {
                 LayerClass::Aal => {
                     aal.0 += nmse;
                     aal.1 += 1;
@@ -100,9 +105,9 @@ pub fn fig2(pl: &Pipeline, report: &Report, p: &Prepared) -> Result<()> {
 /// Figure 3: fine-tune loss vs the actual per-step performance gap, with
 /// and without DFA alignment.
 pub fn fig3(pl: &Pipeline, report: &Report, p: &Prepared) -> Result<()> {
-    let calib = pl.calibrate(p)?;
+    let session = pl.build_session(p)?;
     let spec = MethodSpec::ours(4, 2, pl.scale.ft_epochs);
-    let q = pl.quantize(p, &spec, &calib)?;
+    let q = pl.quantize_with_session(p, &session, &spec)?;
     let stats = q.ft_stats.as_ref().unwrap();
     // actual gap: MSE(x_{t-1}^fp, x_{t-1}^q) along a shared FP trajectory
     let tau = crate::schedule::timestep_subsequence(pl.sched.t_total, pl.scale.steps);
@@ -152,18 +157,20 @@ pub fn fig3(pl: &Pipeline, report: &Report, p: &Prepared) -> Result<()> {
 }
 
 /// Figure 4: per-AAL activation MSE under the four quantizer strategies,
-/// normalized to plain signed FP.
+/// normalized to plain signed FP. Strategies borrow the session's
+/// per-layer engines (one sort per layer, shared by all four).
 pub fn fig4(pl: &Pipeline, report: &Report, p: &Prepared, bits: i32) -> Result<(usize, usize)> {
-    let calib = pl.calibrate(p)?;
-    let aals: Vec<&LayerCalib> = calib
-        .iter()
-        .filter(|c| crate::quant::classify::classify(c.min, c.max) == LayerClass::Aal)
-        .collect();
+    let session = pl.build_session(p)?;
     let mut improved = 0;
+    let mut n_aal = 0;
     let mut rows = Vec::new();
-    for c in &aals {
-        let maxval0 = c.acts.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
-        let [s, szp, u, uzp] = fig4_strategies(&c.acts, bits, maxval0, 25);
+    for (l, c) in session.calib().iter().enumerate() {
+        if session.class(l) != LayerClass::Aal {
+            continue;
+        }
+        n_aal += 1;
+        let [s, szp, u, uzp] =
+            fig4_strategies_on(session.act_engine(l), bits, session.act_maxval0(l), 25);
         if uzp < 1.0 {
             improved += 1;
         }
@@ -181,16 +188,16 @@ pub fn fig4(pl: &Pipeline, report: &Report, p: &Prepared, bits: i32) -> Result<(
         &rows,
     )?;
     println!(
-        "fig4: unsigned+zp improves {improved}/{} AALs ({:.0}%) at {bits} bits (paper: >95%)",
-        aals.len(),
-        100.0 * improved as f32 / aals.len().max(1) as f32
+        "fig4: unsigned+zp improves {improved}/{n_aal} AALs ({:.0}%) at {bits} bits (paper: >95%)",
+        100.0 * improved as f32 / n_aal.max(1) as f32
     );
-    Ok((improved, aals.len()))
+    Ok((improved, n_aal))
 }
 
 /// Figure 6 (and 10/11): sample grids at FP / 6-bit / 4-bit.
 pub fn fig6(pl: &Pipeline, report: &Report, p: &Prepared) -> Result<()> {
-    let calib = pl.calibrate(p)?;
+    // one session: the 6- and 4-bit grids re-score the same engines
+    let session = pl.build_session(p)?;
     let n = 16;
     let cfg = GenerateCfg { n, steps: pl.scale.steps, eta: 0.0, sampler: SamplerKind::Ddim, seed: 5 };
     let (fp_px, _) = generate_images(
@@ -199,7 +206,7 @@ pub fn fig6(pl: &Pipeline, report: &Report, p: &Prepared) -> Result<()> {
     write_grid_ppm(&report.dir.join("fig6_fp32.ppm"), &fp_px, n, p.corpus.hw(), 4)?;
     for bits in [6, 4] {
         let spec = MethodSpec::ours(bits, 2, pl.scale.ft_epochs);
-        let q = pl.quantize(p, &spec, &calib)?;
+        let q = pl.quantize_with_session(p, &session, &spec)?;
         let (px, _) = generate_images(
             &p.den, &p.info, &pl.sched, p.corpus, &p.params, ModelMode::Quant(&q.state), &cfg,
         )?;
@@ -211,9 +218,9 @@ pub fn fig6(pl: &Pipeline, report: &Report, p: &Prepared) -> Result<()> {
 
 /// Figures 7 & 9: router LoRA-allocation distribution over timesteps.
 pub fn fig7_9(pl: &Pipeline, report: &Report, p: &Prepared, h: usize) -> Result<Vec<Vec<f32>>> {
-    let calib = pl.calibrate(p)?;
+    let session = pl.build_session(p)?;
     let spec = MethodSpec::ours(4, h, pl.scale.ft_epochs);
-    let q = pl.quantize(p, &spec, &calib)?;
+    let q = pl.quantize_with_session(p, &session, &spec)?;
     let dist = q.state.router.allocation_distribution(pl.sched.t_total, &q.state.hub_mask);
     let mut rows = Vec::new();
     for (t, hist) in dist.iter().enumerate() {

@@ -32,9 +32,12 @@ fn eval_rows(
     eta: f32,
 ) -> Result<Vec<TableRow>> {
     let p = pl.prepare(corpus)?;
+    // one search session per prepared model: every quantized row re-scores
+    // against the same per-tensor engines (FP rows skip quantization)
+    let session = pl.build_session(&p)?;
     let mut rows = Vec::new();
     for (spec, bits) in specs {
-        let (result, _) = pl.evaluate_spec(&p, spec, sampler, eta, 42)?;
+        let (result, _) = pl.evaluate_spec_with_session(&p, &session, spec, sampler, eta, 42)?;
         rows.push(TableRow { method: spec.label.clone(), bits: bits.to_string(), result });
     }
     Ok(rows)
@@ -163,9 +166,9 @@ pub fn table4(pl: &Pipeline, report: &Report) -> Result<Vec<TableRow>> {
 /// end FID of a weights-only-quantized model.
 pub fn table5(pl: &Pipeline, report: &Report) -> Result<()> {
     let p = pl.prepare(Corpus::CelebaSyn)?;
-    let calib = pl.calibrate(&p)?;
-    let store = crate::model::ParamStore::from_vec(&p.info, p.params.clone())?;
-    let weights = store.layer_weights(&p.info)?;
+    // one session: every (lo, hi) sweep point re-scores against the same
+    // per-tensor engines instead of re-sorting the whole model per point
+    let session = pl.build_session(&p)?;
     let spaces: Vec<(String, Option<(f32, f32)>)> = vec![
         ("[0, maxval_0]".into(), Some((0.0001, 1.0))),
         ("[0, 2 maxval_0]".into(), Some((0.0001, 2.0))),
@@ -179,7 +182,12 @@ pub fn table5(pl: &Pipeline, report: &Report) -> Result<()> {
     for (label, space) in spaces {
         let mut opts = crate::quant::msfp::QuantOpts::new(Method::Msfp, p.info.n_layers, 6, 8);
         opts.weight_space = space;
-        let scheme = crate::quant::msfp::quantize_model(&weights, &calib, &opts);
+        let scheme = session.quantize(&opts);
+        if scheme.layers.is_empty() {
+            // zero-layer manifest: an explicit error row beats a NaN mean
+            rows.push(vec![label, "6/32".to_string(), "error: no quantized layers".to_string()]);
+            continue;
+        }
         let w_mse: f64 = scheme.layers.iter().map(|l| l.w_mse).sum::<f64>()
             / scheme.layers.len() as f64;
         rows.push(vec![label, "6/32".to_string(), format!("{w_mse:.3e}")]);

@@ -19,7 +19,8 @@ use crate::log_info;
 use crate::lora::{LoraHub, Router};
 use crate::model::manifest::{Manifest, ModelInfo};
 use crate::model::ParamStore;
-use crate::quant::msfp::{quantize_model, LayerCalib, QuantOpts, QuantScheme};
+use crate::quant::msfp::{LayerCalib, QuantOpts, QuantScheme};
+use crate::quant::session::QuantSession;
 use crate::runtime::{Denoiser, Engine, QuantState};
 use crate::schedule::{timestep_subsequence, Schedule};
 use crate::train::{collect_calibration, finetune, pretrain, FinetuneStats, PretrainCfg, TrajectoryBuffer};
@@ -123,17 +124,42 @@ impl Pipeline {
         )
     }
 
-    /// Quantize per a method spec (and optionally fine-tune).
+    /// Build a reusable quantization search session for a prepared model:
+    /// calibration data plus the per-tensor grid engines, so every
+    /// method spec and sweep point re-scores against one preprocessing
+    /// pass (`quant::session`).
+    pub fn build_session(&self, p: &Prepared) -> Result<QuantSession<'static>> {
+        let calib = self.calibrate(p)?;
+        let store = ParamStore::from_vec(&p.info, p.params.clone())?;
+        let weights = store.layer_weights(&p.info)?;
+        Ok(QuantSession::from_owned(weights, calib))
+    }
+
+    /// Quantize per a method spec (and optionally fine-tune). One-shot
+    /// compatibility wrapper over [`Pipeline::quantize_with_session`];
+    /// callers evaluating several specs should share a session instead.
     pub fn quantize(
         &self,
         p: &Prepared,
         spec: &MethodSpec,
         calib: &[LayerCalib],
     ) -> Result<Quantized> {
+        let store = ParamStore::from_vec(&p.info, p.params.clone())?;
+        let weights = store.layer_weights(&p.info)?;
+        let session = QuantSession::new(&weights, calib);
+        self.quantize_with_session(p, &session, spec)
+    }
+
+    /// Quantize per a method spec against a pre-built session (and
+    /// optionally fine-tune).
+    pub fn quantize_with_session(
+        &self,
+        p: &Prepared,
+        session: &QuantSession<'_>,
+        spec: &MethodSpec,
+    ) -> Result<Quantized> {
         let method = spec.method.expect("quantize() requires a quantization method");
         let info = &p.info;
-        let store = ParamStore::from_vec(info, p.params.clone())?;
-        let weights = store.layer_weights(info)?;
         let mut opts = QuantOpts::new(method, info.n_layers, spec.wbits, spec.abits)
             .with_io_8bit(&info.io_layer_indices());
         if spec.partial {
@@ -141,7 +167,7 @@ impl Pipeline {
             let skip = info.skip_layer_indices();
             opts = opts.with_io_8bit(&skip);
         }
-        let scheme = quantize_model(&weights, calib, &opts);
+        let scheme = session.quantize(&opts);
         log_info!(
             "quantized {} [{}] w{}a{}: {} AALs, unsigned on {:.0}%",
             p.corpus.name(),
@@ -205,10 +231,38 @@ impl Pipeline {
     }
 
     /// Generate + evaluate a method spec end to end; FP spec short-circuits
-    /// the quantization stages.
+    /// the quantization stages. Builds a one-shot session for quantized
+    /// specs — table runners evaluating several specs share one via
+    /// [`Pipeline::evaluate_spec_with_session`].
     pub fn evaluate_spec(
         &self,
         p: &Prepared,
+        spec: &MethodSpec,
+        sampler: SamplerKind,
+        eta: f32,
+        seed: u64,
+    ) -> Result<(EvalResult, Option<Quantized>)> {
+        self.eval_spec_inner(p, None, spec, sampler, eta, seed)
+    }
+
+    /// [`Pipeline::evaluate_spec`] against a pre-built session (FP specs
+    /// ignore it).
+    pub fn evaluate_spec_with_session(
+        &self,
+        p: &Prepared,
+        session: &QuantSession<'_>,
+        spec: &MethodSpec,
+        sampler: SamplerKind,
+        eta: f32,
+        seed: u64,
+    ) -> Result<(EvalResult, Option<Quantized>)> {
+        self.eval_spec_inner(p, Some(session), spec, sampler, eta, seed)
+    }
+
+    fn eval_spec_inner(
+        &self,
+        p: &Prepared,
+        session: Option<&QuantSession<'_>>,
         spec: &MethodSpec,
         sampler: SamplerKind,
         eta: f32,
@@ -229,8 +283,15 @@ impl Pipeline {
             )?;
             (None, px)
         } else {
-            let calib = self.calibrate(p)?;
-            let q = self.quantize(p, spec, &calib)?;
+            let built;
+            let session = match session {
+                Some(s) => s,
+                None => {
+                    built = self.build_session(p)?;
+                    &built
+                }
+            };
+            let q = self.quantize_with_session(p, session, spec)?;
             let (px, _) = generate_images(
                 &p.den,
                 &p.info,

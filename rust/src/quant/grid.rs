@@ -250,15 +250,48 @@ pub fn search_min(
     cands: &[Quantizer],
     threads: usize,
 ) -> Option<SearchResult> {
+    search_min_impl(eng, cands, None, threads)
+}
+
+/// [`search_min`] over candidates whose output grids were precomputed by
+/// the caller (`grids[i]` belongs to `cands[i]`). This is how
+/// `search_unsigned_on` shares one base magnitude grid across all zp
+/// candidates of a (format, maxval) pair: the shifted grids stay ascending
+/// (an f32 `+ zp` is monotone) and may contain adjacent duplicates, which
+/// only produce empty segments — scores are bit-identical to regenerating
+/// each grid with [`quantizer_grid`].
+pub fn search_min_pregrids(
+    eng: &GridEngine,
+    cands: &[Quantizer],
+    grids: &[Vec<f32>],
+    threads: usize,
+) -> Option<SearchResult> {
+    assert_eq!(cands.len(), grids.len(), "one grid per candidate");
+    search_min_impl(eng, cands, Some(grids), threads)
+}
+
+fn search_min_impl(
+    eng: &GridEngine,
+    cands: &[Quantizer],
+    grids: Option<&[Vec<f32>]>,
+    threads: usize,
+) -> Option<SearchResult> {
     if cands.is_empty() {
         return None;
     }
     // best fully-scored SSE so far, shared across workers as f64 bits
     let best = AtomicU64::new(f64::INFINITY.to_bits());
-    let sses = parallel_map(cands, threads.max(1), |_, q| {
-        let grid = quantizer_grid(q);
+    let sses = parallel_map(cands, threads.max(1), |i, q| {
+        let owned;
+        let grid: &[f32] = match grids {
+            Some(gs) => &gs[i],
+            None => {
+                owned = quantizer_grid(q);
+                &owned
+            }
+        };
         let abandon = f64::from_bits(best.load(Ordering::Relaxed));
-        let sse = eng.sse_fn(|x| q.qdq(x), &grid, abandon)?;
+        let sse = eng.sse_fn(|x| q.qdq(x), grid, abandon)?;
         let mut cur = best.load(Ordering::Relaxed);
         while sse < f64::from_bits(cur) {
             match best.compare_exchange_weak(
@@ -278,7 +311,11 @@ pub fn search_min(
         if let Some(sse) = sse {
             // NaN scores (poisoned samples) are never selectable, matching
             // the scalar argmin; all-NaN yields None
-            if !sse.is_nan() && win.map_or(true, |(_, b)| sse < b) {
+            let better = match win {
+                Some((_, b)) => sse < b,
+                None => true,
+            };
+            if !sse.is_nan() && better {
                 win = Some((i, sse));
             }
         }
@@ -427,6 +464,39 @@ mod tests {
         assert_eq!(r.quantizer, q);
         assert_eq!(r.mse, f64::INFINITY);
         assert_eq!(q.mse(&inf_xs), f64::INFINITY);
+    }
+
+    #[test]
+    fn pregrids_match_per_candidate_generation() {
+        // shared-base-grid scoring (search_min_pregrids) is bit-identical
+        // to regenerating every candidate's grid inside search_min, even
+        // when the pre-shifted grids carry adjacent duplicates
+        let mut rng = Rng::new(46);
+        let xs = sample_set(&mut rng, 500, 1.2);
+        let eng = GridEngine::new(&xs);
+        for threads in [1usize, 4] {
+            let mut cands = Vec::new();
+            let mut grids = Vec::new();
+            for e in 0..3 {
+                for m in 1..3 {
+                    let fmt = FpFormat::new(e, m);
+                    for i in 1..=8 {
+                        let maxval = 1.2 * i as f32 / 8.0;
+                        let base =
+                            quantizer_grid(&Quantizer::UnsignedFp { fmt, maxval, zp: 0.0 });
+                        for z in 0..4 {
+                            let zp = -0.09 * z as f32;
+                            cands.push(Quantizer::UnsignedFp { fmt, maxval, zp });
+                            grids.push(base.iter().map(|&g| g + zp).collect());
+                        }
+                    }
+                }
+            }
+            let pre = search_min_pregrids(&eng, &cands, &grids, threads).unwrap();
+            let per_cand = search_min(&eng, &cands, threads).unwrap();
+            assert_eq!(pre.quantizer, per_cand.quantizer, "threads={threads}");
+            assert_eq!(pre.mse.to_bits(), per_cand.mse.to_bits(), "threads={threads}");
+        }
     }
 
     #[test]

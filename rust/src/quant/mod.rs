@@ -11,7 +11,9 @@ pub mod grid;
 pub mod search;
 pub mod classify;
 pub mod msfp;
+pub mod session;
 
 pub use format::FpFormat;
 pub use grid::GridEngine;
 pub use msfp::{LayerQuant, QuantScheme};
+pub use session::QuantSession;

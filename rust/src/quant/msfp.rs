@@ -6,12 +6,9 @@
 //! calibration samples (mixup stage-2 for AALs), and encode everything as
 //! the qparams[L, 8] runtime input of the serving/fine-tune graphs.
 
-use crate::util::threadpool::parallel_map;
-
-use super::classify::{classify, LayerClass};
-use super::search::{
-    search_act_int_t, search_act_msfp_t, search_weight_fp_t, search_weight_int_t, Quantizer,
-};
+use super::classify::LayerClass;
+use super::search::Quantizer;
+use super::session::QuantSession;
 
 /// Calibration data for one quantized layer.
 #[derive(Debug, Clone)]
@@ -96,65 +93,14 @@ impl QuantOpts {
 
 /// Run the initialization over all layers. `weights[l]` is layer l's weight
 /// tensor (sliced from the flat param store by the manifest).
+///
+/// Compatibility shim over a one-shot [`QuantSession`]: callers scoring
+/// more than one knob setting on the same model (table sweeps, method
+/// comparisons) should build the session themselves so the per-tensor
+/// sort/prefix preprocessing and knob-invariant sub-searches are shared
+/// across points.
 pub fn quantize_model(weights: &[Vec<f32>], calib: &[LayerCalib], opts: &QuantOpts) -> QuantScheme {
-    assert_eq!(weights.len(), calib.len());
-    let idx: Vec<usize> = (0..calib.len()).collect();
-    // Nested parallelism: the outer parallel_map spreads layers across
-    // cores; cores left over when the model has fewer layers than cores go
-    // to candidate-level parallelism inside each layer's grid search.
-    let total = crate::util::threadpool::resolve_threads(opts.threads);
-    let outer = total.min(calib.len().max(1));
-    let inner = (total / outer).max(1); // outer·inner <= total: never oversubscribe
-    let layers = parallel_map(&idx, outer, |_, &l| {
-        let c = &calib[l];
-        let wbits = opts.wbits[l];
-        let abits = opts.abits[l];
-        let class = classify(c.min, c.max);
-        let maxval0 = c.acts.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
-
-        let (weight, w_mse, act, a_mse) = match opts.method {
-            Method::Msfp | Method::SignedFp => {
-                let w = search_weight_fp_t(
-                    &weights[l],
-                    wbits,
-                    opts.weight_space,
-                    opts.maxval_points,
-                    inner,
-                );
-                let mixup = opts.method == Method::Msfp && class == LayerClass::Aal;
-                let a = search_act_msfp_t(
-                    &c.acts,
-                    abits,
-                    maxval0,
-                    mixup,
-                    opts.maxval_points.max(50),
-                    inner,
-                );
-                (w.quantizer, w.mse, a.quantizer, a.mse)
-            }
-            Method::IntMinMax => {
-                let w = super::search::int_weight_minmax(&weights[l], wbits);
-                let a = Quantizer::IntAsym { n_bits: abits, lo: c.min.min(0.0), hi: c.max.max(1e-8) };
-                (w, w.mse(&weights[l]), a, a.mse(&c.acts))
-            }
-            Method::IntMse => {
-                let w = search_weight_int_t(&weights[l], wbits, opts.maxval_points, inner)
-                    .expect("INT weight search failed: empty space (maxval_points == 0?) or NaN-poisoned weights");
-                let a = search_act_int_t(
-                    &c.acts,
-                    abits,
-                    c.min,
-                    c.max,
-                    opts.maxval_points.max(20),
-                    inner,
-                )
-                .expect("INT act search failed: empty space or NaN-poisoned calibration samples");
-                (w.quantizer, w.mse, a.quantizer, a.mse)
-            }
-        };
-        LayerQuant { name: c.name.clone(), weight, act, w_mse, a_mse, class }
-    });
-    QuantScheme { layers }
+    QuantSession::new(weights, calib).quantize(opts)
 }
 
 impl QuantScheme {

@@ -93,7 +93,11 @@ fn argmin(cands: impl Iterator<Item = (Quantizer, f64)>) -> Option<SearchResult>
     for (q, mse) in cands {
         // NaN-scored candidates (poisoned samples) are never selectable,
         // mirroring the old INF-initialized strict-< loop
-        if !mse.is_nan() && best.map_or(true, |b| mse < b.mse) {
+        let better = match best {
+            Some(b) => mse < b.mse,
+            None => true,
+        };
+        if !mse.is_nan() && better {
             best = Some(SearchResult { quantizer: q, mse });
         }
     }
@@ -123,15 +127,30 @@ fn signed_cands(formats: &[FpFormat], maxvals: &[f32]) -> Vec<Quantizer> {
         .collect()
 }
 
+/// Enumerate the unsigned candidate space in its canonical order
+/// (format → positive maxval → zp). Both the scalar oracle's candidate
+/// list and the engine path's shared-base-grid builder walk this exact
+/// enumeration, so ties break identically everywhere.
+fn for_each_unsigned(
+    formats: &[FpFormat],
+    maxvals: &[f32],
+    mut f: impl FnMut(FpFormat, f32),
+) {
+    for &fmt in formats {
+        for &maxval in maxvals.iter().filter(|m| **m > 0.0) {
+            f(fmt, maxval);
+        }
+    }
+}
+
 fn unsigned_cands(formats: &[FpFormat], maxvals: &[f32], zps: &[f32]) -> Vec<Quantizer> {
-    formats
-        .iter()
-        .flat_map(|&fmt| {
-            maxvals.iter().filter(|m| **m > 0.0).flat_map(move |&maxval| {
-                zps.iter().map(move |&zp| Quantizer::UnsignedFp { fmt, maxval, zp })
-            })
-        })
-        .collect()
+    let mut out = Vec::new();
+    for_each_unsigned(formats, maxvals, |fmt, maxval| {
+        for &zp in zps {
+            out.push(Quantizer::UnsignedFp { fmt, maxval, zp });
+        }
+    });
+    out
 }
 
 fn weight_int_cands(bits: i32, maxval0: f32, maxval_points: usize) -> Vec<Quantizer> {
@@ -181,7 +200,12 @@ pub fn search_unsigned(
     search_unsigned_on(&GridEngine::new(xs), formats, maxvals, zps, 1)
 }
 
-/// Stage-2 search on a pre-built engine.
+/// Stage-2 search on a pre-built engine. The base magnitude grid is
+/// generated once per (format, maxval) pair and each zp candidate reuses
+/// it through the exact f32 shift `+ zp` — the same add `quantizer_grid`
+/// applies — instead of regenerating (and re-sorting) the grid per
+/// candidate. Scores are bit-identical: the shift is monotone, and any
+/// post-shift duplicate only yields an empty segment.
 pub fn search_unsigned_on(
     eng: &GridEngine,
     formats: &[FpFormat],
@@ -189,7 +213,16 @@ pub fn search_unsigned_on(
     zps: &[f32],
     threads: usize,
 ) -> Option<SearchResult> {
-    grid::search_min(eng, &unsigned_cands(formats, maxvals, zps), threads)
+    let mut cands: Vec<Quantizer> = Vec::new();
+    let mut grids: Vec<Vec<f32>> = Vec::new();
+    for_each_unsigned(formats, maxvals, |fmt, maxval| {
+        let base = quantizer_grid(&Quantizer::UnsignedFp { fmt, maxval, zp: 0.0 });
+        for &zp in zps {
+            cands.push(Quantizer::UnsignedFp { fmt, maxval, zp });
+            grids.push(base.iter().map(|&g| g + zp).collect());
+        }
+    });
+    grid::search_min_pregrids(eng, &cands, &grids, threads)
 }
 
 /// Weight search: signed FP over the Table-6 spaces. `maxval0` is the
@@ -213,9 +246,22 @@ pub fn search_weight_fp_t(
     threads: usize,
 ) -> SearchResult {
     let maxval0 = w.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+    search_weight_fp_on(&GridEngine::new(w), maxval0, bits, space, maxval_points, threads)
+}
+
+/// [`search_weight_fp`] on a pre-built engine. `maxval0` is the absolute
+/// max of the tensor (cached alongside the engine by `quant::session`).
+pub fn search_weight_fp_on(
+    eng: &GridEngine,
+    maxval0: f32,
+    bits: i32,
+    space: Option<(f32, f32)>,
+    maxval_points: usize,
+    threads: usize,
+) -> SearchResult {
     let (lo, hi) = space.unwrap_or_else(|| format::weight_maxval_space(bits));
     let maxvals = linspace(lo * maxval0, hi * maxval0, maxval_points);
-    search_signed_on(&GridEngine::new(w), &format::weight_formats(bits), &maxvals, threads)
+    search_signed_on(eng, &format::weight_formats(bits), &maxvals, threads)
         .expect("weight FP search failed: empty space (maxval_points == 0?) or NaN-poisoned weights")
 }
 
@@ -241,13 +287,25 @@ pub fn search_act_msfp_t(
     maxval_points: usize,
     threads: usize,
 ) -> SearchResult {
+    search_act_msfp_on(&GridEngine::new(xs), bits, maxval0, is_aal, maxval_points, threads)
+}
+
+/// [`search_act_msfp`] on a pre-built engine (both mixup stages re-score
+/// against the caller's sort/prefix pass).
+pub fn search_act_msfp_on(
+    eng: &GridEngine,
+    bits: i32,
+    maxval0: f32,
+    is_aal: bool,
+    maxval_points: usize,
+    threads: usize,
+) -> SearchResult {
     let maxvals = linspace(maxval0 / maxval_points as f32, maxval0, maxval_points);
-    let eng = GridEngine::new(xs);
-    let mut best = search_signed_on(&eng, &format::act_signed_formats(bits), &maxvals, threads)
+    let mut best = search_signed_on(eng, &format::act_signed_formats(bits), &maxvals, threads)
         .expect("signed act search failed: empty space (maxval_points == 0?) or NaN-poisoned samples");
     if is_aal {
         let u = search_unsigned_on(
-            &eng,
+            eng,
             &format::act_unsigned_formats(bits),
             &maxvals,
             &format::zp_space(),
@@ -284,7 +342,19 @@ pub fn search_weight_int_t(
     threads: usize,
 ) -> Option<SearchResult> {
     let maxval0 = w.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
-    grid::search_min(&GridEngine::new(w), &weight_int_cands(bits, maxval0, maxval_points), threads)
+    search_weight_int_on(&GridEngine::new(w), maxval0, bits, maxval_points, threads)
+}
+
+/// [`search_weight_int`] on a pre-built engine; `maxval0` is the absolute
+/// max of the tensor.
+pub fn search_weight_int_on(
+    eng: &GridEngine,
+    maxval0: f32,
+    bits: i32,
+    maxval_points: usize,
+    threads: usize,
+) -> Option<SearchResult> {
+    grid::search_min(eng, &weight_int_cands(bits, maxval0, maxval_points), threads)
 }
 
 /// MSE-searched asymmetric INT for activations. None when `points == 0`.
@@ -307,19 +377,37 @@ pub fn search_act_int_t(
     points: usize,
     threads: usize,
 ) -> Option<SearchResult> {
-    grid::search_min(&GridEngine::new(xs), &act_int_cands(bits, min, max, points), threads)
+    search_act_int_on(&GridEngine::new(xs), bits, min, max, points, threads)
+}
+
+/// [`search_act_int`] on a pre-built engine (min/max come from the
+/// calibration stats, not the engine).
+pub fn search_act_int_on(
+    eng: &GridEngine,
+    bits: i32,
+    min: f32,
+    max: f32,
+    points: usize,
+    threads: usize,
+) -> Option<SearchResult> {
+    grid::search_min(eng, &act_int_cands(bits, min, max, points), threads)
 }
 
 /// The four Figure-4 strategies evaluated on one AAL's samples, returning
 /// MSEs normalized against plain signed FP (strategy 1): signed, signed+zp,
 /// unsigned (no zp), unsigned+zp.
 pub fn fig4_strategies(xs: &[f32], bits: i32, maxval0: f32, points: usize) -> [f64; 4] {
+    fig4_strategies_on(&GridEngine::new(xs), bits, maxval0, points)
+}
+
+/// [`fig4_strategies`] on a pre-built engine, so figure runners borrow a
+/// `QuantSession`'s per-layer engine instead of re-sorting per strategy.
+pub fn fig4_strategies_on(eng: &GridEngine, bits: i32, maxval0: f32, points: usize) -> [f64; 4] {
     let maxvals = linspace(maxval0 / points as f32, maxval0, points);
     let zps = format::zp_space();
-    let eng = GridEngine::new(xs);
-    let n = xs.len().max(1) as f64;
+    let n = eng.len().max(1) as f64;
 
-    let signed = search_signed_on(&eng, &format::act_signed_formats(bits), &maxvals, 1)
+    let signed = search_signed_on(eng, &format::act_signed_formats(bits), &maxvals, 1)
         .map_or(f64::INFINITY, |r| r.mse);
 
     // signed + zp: offline-only variant (fp_qdq_signed_zp, not a deployed
@@ -347,10 +435,10 @@ pub fn fig4_strategies(xs: &[f32], bits: i32, maxval0: f32, points: usize) -> [f
     let signed_zp = best_sse / n;
 
     let unsigned_nozp =
-        search_unsigned_on(&eng, &format::act_unsigned_formats(bits), &maxvals, &[0.0], 1)
+        search_unsigned_on(eng, &format::act_unsigned_formats(bits), &maxvals, &[0.0], 1)
             .map_or(f64::INFINITY, |r| r.mse);
     let unsigned_zp =
-        search_unsigned_on(&eng, &format::act_unsigned_formats(bits), &maxvals, &zps, 1)
+        search_unsigned_on(eng, &format::act_unsigned_formats(bits), &maxvals, &zps, 1)
             .map_or(f64::INFINITY, |r| r.mse);
 
     let base = signed.max(1e-18);
@@ -550,6 +638,24 @@ mod tests {
                 slow.mse
             );
         }
+    }
+
+    #[test]
+    fn shared_zp_base_grid_matches_per_candidate_grids() {
+        // the ROADMAP micro-opt: one base grid per (format, maxval),
+        // shifted per zp candidate — must score bit-identically to the
+        // per-candidate quantizer_grid path, same tie-breaking included
+        let xs = silu_samples(2048, 77);
+        let maxval0 = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let maxvals = linspace(maxval0 / 30.0, maxval0, 30);
+        let zps = format::zp_space();
+        let fmts = format::act_unsigned_formats(4);
+        let eng = GridEngine::new(&xs);
+        let shared = search_unsigned_on(&eng, &fmts, &maxvals, &zps, 1).unwrap();
+        let per_cand =
+            grid::search_min(&eng, &unsigned_cands(&fmts, &maxvals, &zps), 1).unwrap();
+        assert_eq!(shared.quantizer, per_cand.quantizer);
+        assert_eq!(shared.mse.to_bits(), per_cand.mse.to_bits());
     }
 
     #[test]

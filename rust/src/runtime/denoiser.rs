@@ -70,11 +70,17 @@ impl QuantState {
         if lora.len() != info.lora_size {
             bail!("lora len {} != lora_size {}", lora.len(), info.lora_size);
         }
+        let hub_mask = s.get("hub_mask")?.to_vec();
+        if hub_mask.len() != info.cfg.lora_hub {
+            // a truncated mask would silently corrupt router selections at
+            // serve time (selection_onehot indexes mask[0..H])
+            bail!("hub_mask len {} != lora_hub {}", hub_mask.len(), info.cfg.lora_hub);
+        }
         Ok(QuantState {
             qparams,
             lora,
             router,
-            hub_mask: s.get("hub_mask")?.to_vec(),
+            hub_mask,
             strategy: AllocStrategy::Learned,
             t_total: s.get("t_total")?[0] as usize,
         })
@@ -344,6 +350,30 @@ mod tests {
         let a = qs.selection(13.0, &mut Rng::new(1));
         let b = qs2.selection(13.0, &mut Rng::new(1));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn load_rejects_truncated_hub_mask() {
+        let Some((_, m)) = setup() else { return };
+        let info = m.model("ddim16").unwrap();
+        let mut rng = Rng::new(4);
+        let mut qp = Vec::new();
+        for _ in 0..info.n_layers {
+            qp.extend_from_slice(&[1.0, 2.0, 1.0, 0.0, 4.0, 2.0, 2.0, -0.25]);
+        }
+        let qs = QuantState {
+            qparams: qp,
+            lora: rng.normal_vec(info.lora_size, 0.01),
+            router: Router::init(info, &mut rng),
+            // truncated mask (one slot short of the compiled hub width)
+            hub_mask: vec![1.0; info.cfg.lora_hub - 1],
+            strategy: AllocStrategy::Learned,
+            t_total: 100,
+        };
+        let path = std::env::temp_dir().join("msfp_qs_truncated.mts");
+        qs.save(&path).unwrap();
+        let err = QuantState::load(info, &path).unwrap_err();
+        assert!(err.to_string().contains("hub_mask"), "{err}");
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::util::rng::Rng;
 /// x_t = sqrt(abar) * x0_proxy + sqrt(1-abar) * eps with x0_proxy drawn from
 /// a previous FP denoising (here: pure-noise rollouts are close enough at
 /// init; callers pass real x0s for trained models).
+#[allow(clippy::too_many_arguments)]
 pub fn collect_calibration(
     den: &Denoiser,
     info: &ModelInfo,

@@ -28,6 +28,7 @@ pub struct TrajectoryBuffer {
 impl TrajectoryBuffer {
     /// Roll `n` samples (multiple of the denoiser's fp batch classes is
     /// fastest) through the FP model over `tau`, recording every step.
+    #[allow(clippy::too_many_arguments)]
     pub fn collect(
         den: &Denoiser,
         info: &ModelInfo,

@@ -4,14 +4,20 @@
 
 use msfp::linalg::stats::{frechet, mean_cov};
 use msfp::linalg::tensor::Mat;
+use msfp::quant::classify::{classify, LayerClass};
 use msfp::quant::fp::{e_min_of, exp2_int, fp_qdq_signed, fp_qdq_unsigned};
 use msfp::quant::grid::{quantizer_grid, GridEngine};
 use msfp::quant::int::{int_qdq_asym, int_qdq_sym};
+use msfp::quant::msfp::{quantize_model, LayerCalib, Method, QuantOpts};
 use msfp::quant::search::{
     linspace, scalar, search_act_int, search_signed, search_unsigned, search_weight_int,
     Quantizer, SearchResult,
 };
-use msfp::quant::format::{act_signed_formats, act_unsigned_formats, zp_space, FpFormat};
+use msfp::quant::format::{
+    act_signed_formats, act_unsigned_formats, weight_formats, weight_maxval_space, zp_space,
+    FpFormat,
+};
+use msfp::quant::{QuantScheme, QuantSession};
 use msfp::schedule::{timestep_subsequence, Schedule};
 use msfp::util::io::Store;
 use msfp::util::json::Json;
@@ -369,6 +375,142 @@ fn prop_grid_covers_image_under_fuzz() {
             quantizer_grid(&q).iter().any(|&g| g == v)
         },
     );
+}
+
+// QuantSession vs cold quantize_model vs scalar oracle -----------------
+
+/// Random model for session parity checks: SiLU-shaped (AAL) activations
+/// on even layers, gaussian (NAL) on odd ones.
+fn session_model(seed: u64, n_layers: usize) -> (Vec<Vec<f32>>, Vec<LayerCalib>) {
+    let mut rng = Rng::new(seed);
+    let mut weights = Vec::new();
+    let mut calib = Vec::new();
+    for l in 0..n_layers {
+        weights.push((0..384).map(|_| rng.normal() * 0.1).collect());
+        let aal = l % 2 == 0;
+        let acts: Vec<f32> = (0..768)
+            .map(|_| {
+                let v = rng.normal() * 2.0;
+                if aal {
+                    silu(v)
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let min = acts.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = acts.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        calib.push(LayerCalib { name: format!("l{l}"), acts, min, max, aal_hint: aal });
+    }
+    (weights, calib)
+}
+
+fn assert_schemes_bit_identical(a: &QuantScheme, b: &QuantScheme, what: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+    for (x, y) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(x.weight, y.weight, "{what}: weight of {}", x.name);
+        assert_eq!(x.act, y.act, "{what}: act of {}", x.name);
+        assert_eq!(x.w_mse.to_bits(), y.w_mse.to_bits(), "{what}: w_mse of {}", x.name);
+        assert_eq!(x.a_mse.to_bits(), y.a_mse.to_bits(), "{what}: a_mse of {}", x.name);
+        assert_eq!(x.class, y.class, "{what}: class of {}", x.name);
+    }
+}
+
+#[test]
+fn session_reuse_matches_cold_quantize_model_all_methods() {
+    // the satellite contract: a reused session is bit-identical to a cold
+    // quantize_model across methods, random bit-widths, weight_space
+    // overrides, and repeated (memoized) calls
+    let n_layers = 5;
+    let (weights, calib) = session_model(6001, n_layers);
+    let session = QuantSession::new(&weights, &calib);
+    let methods = [Method::Msfp, Method::SignedFp, Method::IntMinMax, Method::IntMse];
+    let spaces = [None, Some((0.0001f32, 1.0f32)), Some((0.6, 2.0)), Some((1.0, 2.0))];
+    let mut rng = Rng::new(6002);
+    for round in 0..12 {
+        let method = methods[round % methods.len()];
+        let mut opts = QuantOpts::new(
+            method,
+            n_layers,
+            3 + rng.below(6) as i32, // 3..=8
+            3 + rng.below(6) as i32,
+        );
+        opts.weight_space = spaces[rng.below(spaces.len())];
+        opts.maxval_points = 10 + rng.below(3) * 5;
+        // per-layer IO-style overrides
+        opts.wbits[rng.below(n_layers)] = 8;
+        opts.abits[rng.below(n_layers)] = 8;
+        let what = format!("round {round} {method:?}");
+        let cold = quantize_model(&weights, &calib, &opts);
+        let warm = session.quantize(&opts);
+        assert_schemes_bit_identical(&cold, &warm, &what);
+        let replay = session.quantize(&opts); // memo hit must replay exactly
+        assert_schemes_bit_identical(&warm, &replay, &format!("{what} (memo)"));
+    }
+}
+
+#[test]
+fn session_msfp_matches_scalar_oracle() {
+    // session results stay within the 1e-9 relative bound of the scalar
+    // per-element oracle, including the shifted-zp unsigned grid path on
+    // AAL layers (mixup stage 2)
+    let (weights, calib) = session_model(6101, 6);
+    let session = QuantSession::new(&weights, &calib);
+    let mut opts = QuantOpts::new(Method::Msfp, 6, 4, 4);
+    opts.weight_space = Some((0.7, 2.0));
+    let scheme = session.quantize(&opts);
+    let mut saw_unsigned = false;
+    for (l, (c, lq)) in calib.iter().zip(&scheme.layers).enumerate() {
+        let mixup = classify(c.min, c.max) == LayerClass::Aal;
+        let maxval0 = c.acts.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+        let slow_a =
+            scalar::search_act_msfp(&c.acts, 4, maxval0, mixup, opts.maxval_points.max(50));
+        assert_eq!(lq.act, slow_a.quantizer, "act argmin, layer {l}");
+        assert!(
+            (lq.a_mse - slow_a.mse).abs() <= 1e-9 * slow_a.mse.max(1e-18),
+            "act mse, layer {l}: {} vs {}",
+            lq.a_mse,
+            slow_a.mse
+        );
+        saw_unsigned |= matches!(lq.act, Quantizer::UnsignedFp { .. });
+
+        let w0 = weights[l].iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+        let maxvals = linspace(0.7 * w0, 2.0 * w0, opts.maxval_points);
+        let slow_w = scalar::search_signed(&weights[l], &weight_formats(4), &maxvals).unwrap();
+        assert_eq!(lq.weight, slow_w.quantizer, "weight argmin, layer {l}");
+        assert!(
+            (lq.w_mse - slow_w.mse).abs() <= 1e-9 * slow_w.mse.max(1e-18),
+            "weight mse, layer {l}: {} vs {}",
+            lq.w_mse,
+            slow_w.mse
+        );
+    }
+    assert!(saw_unsigned, "no AAL picked the unsigned+zp grid — mixup path not exercised");
+}
+
+#[test]
+fn session_default_weight_space_matches_scalar_oracle() {
+    // weight_space = None resolves to the Table-6 per-bit-width interval
+    let (weights, calib) = session_model(6201, 2);
+    let session = QuantSession::new(&weights, &calib);
+    for bits in [4, 6, 8] {
+        let opts = QuantOpts::new(Method::Msfp, 2, bits, bits);
+        let scheme = session.quantize(&opts);
+        let (lo, hi) = weight_maxval_space(bits);
+        for (l, lq) in scheme.layers.iter().enumerate() {
+            let w0 = weights[l].iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+            let maxvals = linspace(lo * w0, hi * w0, opts.maxval_points);
+            let slow =
+                scalar::search_signed(&weights[l], &weight_formats(bits), &maxvals).unwrap();
+            assert_eq!(lq.weight, slow.quantizer, "bits {bits}, layer {l}");
+            assert!(
+                (lq.w_mse - slow.mse).abs() <= 1e-9 * slow.mse.max(1e-18),
+                "bits {bits}, layer {l}: {} vs {}",
+                lq.w_mse,
+                slow.mse
+            );
+        }
+    }
 }
 
 #[test]

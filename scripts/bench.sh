@@ -3,8 +3,9 @@
 #
 # Builds --release, runs the perf_quant bench target, and leaves a
 # machine-readable BENCH_quant.json at the repo root so the perf
-# trajectory (grid-segment engine vs the retained *_scalar oracle) is
-# comparable across PRs.
+# trajectory (grid-segment engine vs the retained *_scalar oracle, and
+# the msfp_table5_sweep_cold vs msfp_table5_sweep_session QuantSession
+# amortization pair) is comparable across PRs.
 #
 #   scripts/bench.sh
 #

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# CI gate for the crate: formatting, lints, then the tier-1 verify.
+#
+#   scripts/ci.sh
+#
+# Runs, in order:
+#   cargo fmt --check            formatting drift fails the gate
+#   cargo clippy -- -D warnings  lint findings fail the gate
+#   cargo build --release        tier-1 verify, part 1
+#   cargo test -q                tier-1 verify, part 2
+#
+# Perf companion: scripts/bench.sh (perf_quant → BENCH_quant.json).
+set -euo pipefail
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$root/rust"
+
+if [ ! -f Cargo.toml ]; then
+    echo "error: rust/Cargo.toml not found — this checkout has no build" >&2
+    echo "manifest (the crate manifest and vendored xla dep are provided" >&2
+    echo "by the build environment). Run from a toolchain-equipped tree." >&2
+    exit 1
+fi
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy -D warnings =="
+cargo clippy -- -D warnings
+
+echo "== tier-1 verify =="
+cargo build --release
+cargo test -q
+
+echo "ci.sh: all gates passed"
