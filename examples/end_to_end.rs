@@ -78,16 +78,18 @@ fn main() -> Result<()> {
         p.info.clone(),
         pl.sched.clone(),
         Arc::new(p.params.clone()),
-        ServerCfg { mode: ServeMode::Quant(ours.state), decode_latents: false, seed: 9 },
+        ServerCfg { mode: ServeMode::Quant(ours.state), decode_latents: false, seed: 9, workers: 0 },
     );
     let t_serve = Instant::now();
-    let rxs: Vec<_> = (0..8)
-        .map(|i| {
-            let mut r = Request::new(0, 2, pl.scale.steps);
-            r.seed = i;
-            handle.submit(r)
-        })
-        .collect();
+    let rxs = handle.submit_many(
+        (0..8)
+            .map(|i| {
+                let mut r = Request::new(0, 2, pl.scale.steps);
+                r.seed = i;
+                r
+            })
+            .collect(),
+    )?;
     for rx in rxs {
         rx.recv()?;
     }

@@ -32,7 +32,7 @@ fn main() -> Result<()> {
         p.info.clone(),
         pl.sched.clone(),
         Arc::new(p.params.clone()),
-        ServerCfg { mode: ServeMode::Quant(q.state), decode_latents: false, seed: 4 },
+        ServerCfg { mode: ServeMode::Quant(q.state), decode_latents: false, seed: 4, workers: 0 },
     );
 
     // mixed workload: bursts of small interactive requests + large batch
@@ -45,9 +45,9 @@ fn main() -> Result<()> {
         if i % 5 == 4 {
             req.sampler = SamplerKind::Plms;
         }
-        rxs.push(handle.submit(req));
+        rxs.push(handle.submit(req)?);
     }
-    rxs.push(handle.submit(Request::new(0, 12, pl.scale.steps))); // batch job
+    rxs.push(handle.submit(Request::new(0, 12, pl.scale.steps))?); // batch job
 
     for rx in rxs {
         let r = rx.recv()?;

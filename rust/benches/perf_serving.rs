@@ -1,9 +1,21 @@
-//! Perf bench (§Perf headline): end-to-end serving throughput/latency by
-//! batch size, quantized-vs-FP step latency, and coordinator overhead.
+//! Perf bench (§Perf headline): per-eval latency by batch class (fp vs
+//! quantized), and coordinator throughput with the sequential round
+//! executor (workers=1, the pre-parallelism baseline) vs the parallel
+//! round executor (workers=auto) on a multi-timestep workload — the shape
+//! continuous batching actually produces (requests at different denoising
+//! phases ⇒ several distinct-t batches per round, which only the parallel
+//! executor can overlap).
+//!
+//! Emits machine-readable rows to BENCH_serving.json (path override:
+//! BENCH_SERVING_JSON) via util::bench::write_json_rows:
+//!   * `serve_eval_{fp,q}_b{B}` timing rows (per-eval latency by class);
+//!   * `coordinator_sequential_exec` / `coordinator_parallel` img/s rows;
+//!   * `selection_cache_hit_rate` + round exec/sched split metric rows.
+use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use msfp::coordinator::{self, Request, ServeMode, ServerCfg};
+use msfp::coordinator::{self, Metrics, Request, ServeMode, ServerCfg};
 use msfp::lora::hub::AllocStrategy;
 use msfp::lora::Router;
 use msfp::model::manifest::Manifest;
@@ -11,7 +23,52 @@ use msfp::model::ParamStore;
 use msfp::pipeline::Pipeline;
 use msfp::runtime::{Denoiser, Engine, QuantState};
 use msfp::schedule::Schedule;
+use msfp::util::bench::{bench_with_budget, metric_row, write_json_rows};
+use msfp::util::json::Json;
 use msfp::util::rng::Rng;
+
+/// ≥ 8 concurrent requests at ≥ 2 distinct t per round: half the
+/// requests run 6 denoising steps, half run 9, so every round packs (at
+/// least) two distinct-t batches.
+fn workload() -> Vec<Request> {
+    (0..16u64)
+        .map(|i| {
+            let mut r = Request::new(0, 2, if i % 2 == 0 { 6 } else { 9 });
+            r.seed = i;
+            r
+        })
+        .collect()
+}
+
+fn serve_workload(
+    den: &Arc<Denoiser>,
+    info: &msfp::model::manifest::ModelInfo,
+    sched: &Schedule,
+    params: &Arc<Vec<f32>>,
+    qs: &QuantState,
+    workers: usize,
+) -> (f64, Metrics) {
+    let handle = coordinator::spawn(
+        Arc::clone(den),
+        info.clone(),
+        sched.clone(),
+        Arc::clone(params),
+        ServerCfg {
+            mode: ServeMode::Quant(qs.clone()),
+            decode_latents: false,
+            seed: 1,
+            workers,
+        },
+    );
+    let t0 = Instant::now();
+    let rxs = handle.submit_many(workload()).unwrap();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = handle.shutdown();
+    (m.images_done as f64 / wall, m)
+}
 
 fn main() {
     let dir = Pipeline::default_artifacts_dir();
@@ -26,6 +83,7 @@ fn main() {
     let params = Arc::new(ParamStore::load_init(&info, &dir).unwrap().flat);
     let sched = Schedule::linear(100);
     let mut rng = Rng::new(5);
+    let mut rows: Vec<Json> = Vec::new();
 
     // --- raw step latency by batch class (fp vs quantized) ----------------
     let mut qp = Vec::new();
@@ -48,67 +106,57 @@ fn main() {
         // warmup (compile)
         den.eps_fp(&params, &x, &t, &cond).unwrap();
         den.eps_q(&params, &qs, &x, 5.0, &cond, &mut rng).unwrap();
-        let n = 10;
-        let t0 = Instant::now();
-        for _ in 0..n {
+        let fp = bench_with_budget(&format!("serve_eval_fp_b{b}"), Duration::from_secs(1), || {
             den.eps_fp(&params, &x, &t, &cond).unwrap();
-        }
-        let fp_ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
-        let t0 = Instant::now();
-        for _ in 0..n {
+        });
+        let q = bench_with_budget(&format!("serve_eval_q_b{b}"), Duration::from_secs(1), || {
             den.eps_q(&params, &qs, &x, 5.0, &cond, &mut rng).unwrap();
-        }
-        let q_ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+        });
         println!(
-            "  b={b}: fp {fp_ms:8.2} ms/eval ({:6.1} img/s)   q {q_ms:8.2} ms/eval ({:6.1} img/s)   q/fp {:.2}x",
-            b as f64 / (fp_ms / 1e3),
-            b as f64 / (q_ms / 1e3),
-            q_ms / fp_ms
+            "  b={b}: fp {:8.2} ms/eval ({:6.1} img/s)   q {:8.2} ms/eval ({:6.1} img/s)   q/fp {:.2}x",
+            fp.median_ns / 1e6,
+            b as f64 / (fp.median_ns / 1e9),
+            q.median_ns / 1e6,
+            b as f64 / (q.median_ns / 1e9),
+            q.median_ns / fp.median_ns
         );
+        rows.push(fp.to_json());
+        rows.push(q.to_json());
     }
 
-    // --- serving throughput: sequential vs batched coordinator -------------
-    println!("\n-- coordinator throughput (16 requests x 2 images x 6 steps, quantized) --");
-    {
-        let label = "batched";
-        let handle = coordinator::spawn(
-            Arc::clone(&den),
-            info.clone(),
-            sched.clone(),
-            Arc::clone(&params),
-            ServerCfg { mode: ServeMode::Quant(qs.clone()), decode_latents: false, seed: 1 },
-        );
-        let t0 = Instant::now();
-        let rxs: Vec<_> = (0..16)
-            .map(|i| {
-                let mut r = Request::new(0, 2, 6);
-                r.seed = i;
-                handle.submit(r)
-            })
-            .collect();
-        for rx in rxs {
-            rx.recv().unwrap();
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let m = handle.shutdown();
-        println!("  {label}: {} ({wall:.2}s wall)", m.report());
-    }
+    // --- coordinator throughput: sequential vs parallel round executor ----
+    println!("\n-- coordinator throughput (16 requests x 2 images, 6/9 steps mixed, quantized) --");
+    // warmup run so the executor comparison is not confounded by lazy
+    // artifact compilation
+    serve_workload(&den, &info, &sched, &params, &qs, 1);
 
-    // sequential baseline: one request at a time
-    let handle = coordinator::spawn(
-        Arc::clone(&den),
-        info.clone(),
-        sched.clone(),
-        Arc::clone(&params),
-        ServerCfg { mode: ServeMode::Quant(qs.clone()), decode_latents: false, seed: 1 },
+    let (seq_thpt, seq_m) = serve_workload(&den, &info, &sched, &params, &qs, 1);
+    println!("  sequential-exec (workers=1): {}", seq_m.report());
+    let (par_thpt, par_m) = serve_workload(&den, &info, &sched, &params, &qs, 0);
+    println!("  parallel-exec   (workers=auto): {}", par_m.report());
+    println!(
+        "  parallel/sequential throughput: {:.2}x  (sel-cache hit rate {:.0}%)",
+        par_thpt / seq_thpt,
+        par_m.sel_hit_rate() * 100.0
     );
-    let t0 = Instant::now();
-    for i in 0..16 {
-        let mut r = Request::new(0, 2, 6);
-        r.seed = i;
-        handle.submit(r).recv().unwrap();
+    rows.push(metric_row("coordinator_sequential_exec", seq_thpt, "img/s"));
+    rows.push(metric_row("coordinator_parallel", par_thpt, "img/s"));
+    rows.push(metric_row("selection_cache_hit_rate", par_m.sel_hit_rate(), "ratio"));
+    rows.push(metric_row(
+        "coordinator_parallel_exec_fraction",
+        par_m.exec_fraction(),
+        "ratio",
+    ));
+    rows.push(metric_row(
+        "coordinator_sequential_exec_fraction",
+        seq_m.exec_fraction(),
+        "ratio",
+    ));
+
+    let path =
+        std::env::var("BENCH_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    match write_json_rows(Path::new(&path), rows) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
     }
-    let wall = t0.elapsed().as_secs_f64();
-    let m = handle.shutdown();
-    println!("  sequential: {} ({wall:.2}s wall)", m.report());
 }

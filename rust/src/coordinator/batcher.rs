@@ -78,6 +78,32 @@ pub fn plan(tickets: &[Ticket], classes: &[usize]) -> Vec<Batch> {
     out
 }
 
+/// Per-batch, per-ticket start offsets (in samples) into each request's
+/// sample array, assigned in plan order.
+///
+/// Split tickets of one request keep sample order across batches, so a
+/// request's k-th planned sample always lands at offset k. Fixing every
+/// offset *before* execution is what lets the round executor run batches
+/// in parallel with a bit-identical scatter, and what keeps a failing
+/// batch from shifting the slices of its neighbors (each surviving batch
+/// still writes to its own pre-assigned range).
+pub fn ticket_offsets(batches: &[Batch], n_reqs: usize) -> Vec<Vec<usize>> {
+    let mut next = vec![0usize; n_reqs];
+    batches
+        .iter()
+        .map(|b| {
+            b.tickets
+                .iter()
+                .map(|tk| {
+                    let off = next[tk.req];
+                    next[tk.req] += tk.n;
+                    off
+                })
+                .collect()
+        })
+        .collect()
+}
+
 fn close_batch(tickets: Vec<Ticket>, classes: &[usize]) -> Batch {
     let used: usize = tickets.iter().map(|t| t.n).sum();
     let class = *classes.iter().find(|&&c| c >= used).unwrap_or(classes.last().unwrap());
@@ -141,6 +167,77 @@ mod tests {
         assert_eq!(plan[0].tickets[0].req, 7);
         assert_eq!(plan[0].tickets[1].req, 8);
         assert_eq!(plan[1].tickets[0].req, 9); // no starvation / reorder
+    }
+
+    #[test]
+    fn ticket_offsets_follow_plan_order() {
+        // one oversized request split across three batches, interleaved
+        // with a small same-t request
+        let tickets = vec![
+            Ticket { req: 0, t: 2.0, n: 19 },
+            Ticket { req: 1, t: 2.0, n: 3 },
+        ];
+        let batches = plan(&tickets, CLASSES);
+        let offs = ticket_offsets(&batches, 2);
+        assert_eq!(offs.len(), batches.len());
+        // request 0's chunks cover [0,8), [8,16), [16,19) in plan order
+        let mut seen0 = Vec::new();
+        let mut seen1 = Vec::new();
+        for (b, off) in batches.iter().zip(&offs) {
+            for (tk, &start) in b.tickets.iter().zip(off) {
+                if tk.req == 0 {
+                    seen0.push((start, tk.n));
+                } else {
+                    seen1.push((start, tk.n));
+                }
+            }
+        }
+        let mut expect = 0;
+        for (start, n) in seen0 {
+            assert_eq!(start, expect);
+            expect += n;
+        }
+        assert_eq!(expect, 19);
+        assert_eq!(seen1, vec![(0, 3)]);
+    }
+
+    #[test]
+    fn prop_ticket_offsets_are_contiguous_per_request() {
+        prop::check(
+            "ticket-offsets-contiguous",
+            200,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(12);
+                (0..n)
+                    .map(|i| Ticket {
+                        req: i,
+                        t: rng.below(4) as f32,
+                        n: 1 + rng.below(20),
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |tickets| {
+                let batches = plan(tickets, CLASSES);
+                let offs = ticket_offsets(&batches, tickets.len());
+                // per request, collected (start, n) chunks tile [0, n_req)
+                let mut chunks: Vec<Vec<(usize, usize)>> = vec![Vec::new(); tickets.len()];
+                for (b, off) in batches.iter().zip(&offs) {
+                    for (tk, &start) in b.tickets.iter().zip(off) {
+                        chunks[tk.req].push((start, tk.n));
+                    }
+                }
+                tickets.iter().all(|tk| {
+                    let mut expect = 0;
+                    for &(start, n) in &chunks[tk.req] {
+                        if start != expect {
+                            return false;
+                        }
+                        expect += n;
+                    }
+                    expect == tk.n
+                })
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,367 @@
+//! The parallel round executor: fans one scheduling round's planned
+//! batches out across a persistent worker pool and scatters the results
+//! back **by batch index**, so the merged round is bit-identical and
+//! order-deterministic regardless of worker count.
+//!
+//! Design invariants:
+//!  * every input (x slice, cond slice, t, selection) is gathered on the
+//!    scheduler thread *before* fan-out, at offsets fixed by
+//!    [`super::batcher::ticket_offsets`] — worker timing cannot change
+//!    what any batch computes;
+//!  * results are collected into a slot array indexed by batch position,
+//!    then consumed in plan order — worker timing cannot change the order
+//!    anything is observed in;
+//!  * a failing (or panicking) batch yields an `Err` slot and nothing
+//!    else: neighbors' slots and buffer ranges are untouched.
+//!
+//! The same pool doubles as the completion offload lane
+//! ([`RoundExecutor::offload`]): latent decode and response sends run here
+//! so the scheduler can start planning the next round immediately.
+//!
+//! Marshalling buffers (gather x/cond, pad scratch, eps outputs) are
+//! recycled through a shared store, so steady-state rounds allocate O(1)
+//! regardless of batch count.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Denoiser, EpsScratch, QuantState};
+use crate::util::threadpool::{resolve_threads, Pool};
+
+/// Serve-mode model flavor, shared (read-only) with every worker.
+#[derive(Clone)]
+pub enum ExecMode {
+    Fp,
+    Quant(Arc<QuantState>),
+}
+
+/// Everything a worker needs to evaluate a batch.
+pub struct EvalCtx {
+    pub den: Arc<Denoiser>,
+    pub params: Arc<Vec<f32>>,
+    pub mode: ExecMode,
+}
+
+/// One gathered batch, ready to evaluate: `idx` is its position in the
+/// round plan (and the slot its result scatters back into).
+pub struct BatchJob {
+    pub idx: usize,
+    pub t: f32,
+    pub x: Vec<f32>,
+    pub cond: Vec<f32>,
+    /// precomputed `[L, H]` selection (quant mode; None for FP)
+    pub sel: Option<Arc<Vec<f32>>>,
+}
+
+/// A batch's outcome, returned in plan order. The job rides along so its
+/// gather buffers can be recycled.
+pub struct BatchResult {
+    pub idx: usize,
+    pub eps: Result<Vec<f32>>,
+    pub job: BatchJob,
+}
+
+/// Batch evaluation function: fills `out` with the eps for the job, using
+/// `pad` as marshalling scratch. `Arc`'d so the pool's `'static` jobs can
+/// share it; the production closure is built by [`eval_closure`].
+pub type EvalFn = dyn Fn(&BatchJob, &mut EpsScratch, &mut Vec<f32>) -> Result<()> + Send + Sync;
+
+/// The production eval closure over a [`EvalCtx`]: FP batches go through
+/// the uniform-t marshalling path, quantized batches through
+/// `eps_q_with_sel_into` with the job's precomputed (cached) selection.
+pub fn eval_closure(ctx: EvalCtx) -> Arc<EvalFn> {
+    Arc::new(move |job: &BatchJob, pad: &mut EpsScratch, out: &mut Vec<f32>| match &ctx.mode {
+        ExecMode::Fp => {
+            ctx.den.eps_fp_uniform_into(&ctx.params, &job.x, job.t, &job.cond, pad, out)
+        }
+        ExecMode::Quant(qs) => {
+            let sel = job.sel.as_ref().expect("quant batch without selection");
+            ctx.den.eps_q_with_sel_into(&ctx.params, qs, sel, &job.x, job.t, &job.cond, pad, out)
+        }
+    })
+}
+
+/// Recycled marshalling storage shared between the scheduler thread
+/// (gather buffers) and the workers (pad scratch, output buffers).
+#[derive(Default)]
+struct BufStore {
+    gathers: Vec<(Vec<f32>, Vec<f32>)>,
+    pads: Vec<EpsScratch>,
+    outs: Vec<Vec<f32>>,
+}
+
+pub struct RoundExecutor {
+    /// None ⇒ single-worker mode: batches run in-line on the caller's
+    /// thread, in plan order (the sequential reference path).
+    pool: Option<Pool>,
+    bufs: Arc<Mutex<BufStore>>,
+    res_tx: mpsc::Sender<BatchResult>,
+    res_rx: mpsc::Receiver<BatchResult>,
+}
+
+impl RoundExecutor {
+    /// `workers == 0` ⇒ available parallelism; `workers == 1` ⇒ in-line
+    /// sequential execution (no pool threads at all).
+    pub fn new(workers: usize) -> RoundExecutor {
+        let workers = resolve_threads(workers);
+        let pool = (workers > 1).then(|| Pool::new(workers));
+        let (res_tx, res_rx) = mpsc::channel();
+        RoundExecutor { pool, bufs: Arc::new(Mutex::new(BufStore::default())), res_tx, res_rx }
+    }
+
+    /// A cleared (x, cond) gather-buffer pair, recycled when available.
+    pub fn gather_bufs(&self) -> (Vec<f32>, Vec<f32>) {
+        self.bufs.lock().unwrap().gathers.pop().unwrap_or_default()
+    }
+
+    /// Return a consumed job's buffers (and its scattered eps vector) to
+    /// the store for the next round.
+    pub fn recycle(&self, mut job: BatchJob, eps: Option<Vec<f32>>) {
+        job.x.clear();
+        job.cond.clear();
+        let mut bufs = self.bufs.lock().unwrap();
+        bufs.gathers.push((job.x, job.cond));
+        if let Some(mut e) = eps {
+            e.clear();
+            bufs.outs.push(e);
+        }
+    }
+
+    /// Execute a round. `jobs[i].idx` must equal `i` (plan position).
+    /// Returns one [`BatchResult`] per job, **in plan order**, regardless
+    /// of which worker finished first. A failing batch becomes an `Err`
+    /// slot; the other slots are unaffected.
+    pub fn run_with(&self, eval: &Arc<EvalFn>, jobs: Vec<BatchJob>) -> Vec<BatchResult> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        debug_assert!(jobs.iter().enumerate().all(|(i, j)| j.idx == i));
+        match &self.pool {
+            None => jobs
+                .into_iter()
+                .map(|job| eval_one(&self.bufs, eval.as_ref(), job))
+                .collect(),
+            Some(pool) => {
+                for job in jobs {
+                    let eval = Arc::clone(eval);
+                    let bufs = Arc::clone(&self.bufs);
+                    let tx = self.res_tx.clone();
+                    pool.submit(move || {
+                        let _ = tx.send(eval_one(&bufs, eval.as_ref(), job));
+                    });
+                }
+                let mut slots: Vec<Option<BatchResult>> = (0..n).map(|_| None).collect();
+                for _ in 0..n {
+                    let r = self.res_rx.recv().expect("round executor pool died");
+                    let idx = r.idx;
+                    slots[idx] = Some(r);
+                }
+                slots.into_iter().map(|s| s.expect("missing batch result")).collect()
+            }
+        }
+    }
+
+    /// Run `f` off the scheduler thread (in-line in single-worker mode).
+    /// Used for completion work: latent decode + response send. Panics are
+    /// contained (by the pool's worker guard, or by catch_unwind on the
+    /// in-line path) so one poisoned completion can't kill the scheduler.
+    pub fn offload(&self, f: impl FnOnce() + Send + 'static) {
+        match &self.pool {
+            Some(pool) => pool.submit(f),
+            None => {
+                if std::panic::catch_unwind(AssertUnwindSafe(f)).is_err() {
+                    crate::log_warn!("offloaded completion job panicked");
+                }
+            }
+        }
+    }
+
+    /// Block until every submitted job — batch evals and offloaded
+    /// completions — has finished.
+    pub fn join(&self) {
+        if let Some(pool) = &self.pool {
+            pool.join();
+        }
+    }
+}
+
+/// Evaluate one batch with recycled scratch. Panics inside `eval` are
+/// contained to an `Err` result so one poisoned batch can neither deadlock
+/// the round collection nor kill a pool worker.
+fn eval_one(bufs: &Mutex<BufStore>, eval: &EvalFn, job: BatchJob) -> BatchResult {
+    let (mut pad, mut out) = {
+        let mut b = bufs.lock().unwrap();
+        (b.pads.pop().unwrap_or_default(), b.outs.pop().unwrap_or_default())
+    };
+    let res = std::panic::catch_unwind(AssertUnwindSafe(|| eval(&job, &mut pad, &mut out)));
+    let eps = match res {
+        Ok(Ok(())) => Ok(std::mem::take(&mut out)),
+        Ok(Err(e)) => Err(e),
+        Err(_) => Err(anyhow!(
+            "batch eval panicked (t={}, n={})",
+            job.t,
+            job.cond.len()
+        )),
+    };
+    {
+        let mut b = bufs.lock().unwrap();
+        b.pads.push(pad);
+        if eps.is_err() {
+            out.clear();
+            b.outs.push(out);
+        }
+    }
+    BatchResult { idx: job.idx, eps, job }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Deterministic synthetic eval: eps[i] = 2*x[i] + t (+ cond broadcast
+    /// per sample), failing or panicking on request.
+    fn fake_eval(fail_t: Option<f32>, panic_t: Option<f32>) -> Arc<EvalFn> {
+        Arc::new(move |job: &BatchJob, _pad: &mut EpsScratch, out: &mut Vec<f32>| {
+            if Some(job.t) == fail_t {
+                anyhow::bail!("injected failure at t={}", job.t);
+            }
+            if Some(job.t) == panic_t {
+                panic!("injected panic at t={}", job.t);
+            }
+            out.clear();
+            let per = job.x.len() / job.cond.len().max(1);
+            for (i, &v) in job.x.iter().enumerate() {
+                out.push(2.0 * v + job.t + job.cond[i / per.max(1)]);
+            }
+            Ok(())
+        })
+    }
+
+    fn mixed_jobs() -> Vec<BatchJob> {
+        // uneven sizes so worker finish order scrambles under parallelism
+        (0..24)
+            .map(|i| {
+                let n = 1 + (i * 7) % 5;
+                let per = 3;
+                BatchJob {
+                    idx: i,
+                    t: (i % 6) as f32 * 1.25,
+                    x: (0..n * per).map(|k| (i * 31 + k) as f32 * 0.125).collect(),
+                    cond: (0..n).map(|k| k as f32).collect(),
+                    sel: None,
+                }
+            })
+            .collect()
+    }
+
+    fn run_round(workers: usize, eval: &Arc<EvalFn>) -> Vec<Result<Vec<f32>>> {
+        let exec = RoundExecutor::new(workers);
+        exec.run_with(eval, mixed_jobs()).into_iter().map(|r| r.eps).collect()
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_sequential() {
+        let eval = fake_eval(None, None);
+        let seq = run_round(1, &eval);
+        for workers in [2, 4, 8] {
+            let par = run_round(workers, &eval);
+            assert_eq!(seq.len(), par.len());
+            for (a, b) in seq.iter().zip(&par) {
+                let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+                assert_eq!(a.len(), b.len());
+                assert!(
+                    a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "workers={workers} changed bits"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn failing_batch_isolated_from_neighbors() {
+        let clean: Vec<_> = run_round(4, &fake_eval(None, None));
+        let t_fail = 2.5; // hits several of the mixed jobs
+        let with_fail = run_round(4, &fake_eval(Some(t_fail), None));
+        let mut failed = 0;
+        for (i, (c, f)) in clean.iter().zip(&with_fail).enumerate() {
+            let job_t = (i % 6) as f32 * 1.25;
+            if job_t == t_fail {
+                assert!(f.is_err(), "job {i} at fail t must error");
+                failed += 1;
+            } else {
+                assert_eq!(c.as_ref().unwrap(), f.as_ref().unwrap(), "neighbor {i} corrupted");
+            }
+        }
+        assert!(failed > 0, "fail t never hit — test is vacuous");
+    }
+
+    #[test]
+    fn panicking_batch_contained_and_executor_reusable() {
+        let exec = RoundExecutor::new(4);
+        let eval = fake_eval(None, Some(0.0));
+        let results = exec.run_with(&eval, mixed_jobs());
+        assert_eq!(results.len(), 24);
+        for r in &results {
+            let job_t = (r.idx % 6) as f32 * 1.25;
+            if job_t == 0.0 {
+                let msg = format!("{:#}", r.eps.as_ref().unwrap_err());
+                assert!(msg.contains("panicked"), "{msg}");
+            } else {
+                assert!(r.eps.is_ok());
+            }
+        }
+        // the pool survived: a clean round still works afterwards
+        let ok = exec.run_with(&fake_eval(None, None), mixed_jobs());
+        assert!(ok.iter().all(|r| r.eps.is_ok()));
+    }
+
+    #[test]
+    fn results_arrive_in_plan_order() {
+        let exec = RoundExecutor::new(8);
+        let results = exec.run_with(&fake_eval(None, None), mixed_jobs());
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.idx, i);
+        }
+    }
+
+    #[test]
+    fn buffers_recycle_across_rounds() {
+        let exec = RoundExecutor::new(1);
+        let eval = fake_eval(None, None);
+        let results = exec.run_with(&eval, mixed_jobs());
+        for r in results {
+            let eps = r.eps.ok();
+            exec.recycle(r.job, eps);
+        }
+        // next round's gather bufs come from the store, already allocated
+        let (x, cond) = exec.gather_bufs();
+        assert!(x.capacity() > 0 && x.is_empty());
+        assert!(cond.capacity() > 0 && cond.is_empty());
+    }
+
+    #[test]
+    fn offload_runs_and_join_waits() {
+        for workers in [1usize, 4] {
+            let exec = RoundExecutor::new(workers);
+            let counter = Arc::new(AtomicUsize::new(0));
+            for _ in 0..20 {
+                let c = Arc::clone(&counter);
+                exec.offload(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            exec.join();
+            assert_eq!(counter.load(Ordering::SeqCst), 20);
+        }
+    }
+
+    #[test]
+    fn empty_round_is_a_noop() {
+        let exec = RoundExecutor::new(4);
+        assert!(exec.run_with(&fake_eval(None, None), Vec::new()).is_empty());
+    }
+}

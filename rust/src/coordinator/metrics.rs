@@ -1,4 +1,6 @@
-//! Serving metrics: latency percentiles, throughput, batching efficiency.
+//! Serving metrics: latency percentiles, throughput, batching efficiency,
+//! and the round-execution vs scheduling-overhead split of the parallel
+//! round executor.
 
 use std::time::Duration;
 
@@ -10,9 +12,21 @@ pub struct Metrics {
     pub batch_sizes: Vec<usize>,
     pub batch_fills: Vec<f32>,
     pub wall: Duration,
+    /// scheduling rounds executed
+    pub rounds: usize,
+    /// time inside the round executor (model evals, fan-out to scatter)
+    pub round_exec: Duration,
+    /// scheduler-side overhead: planning, gather, scatter, observe
+    pub round_sched: Duration,
+    /// per-timestep selection cache outcomes (quant serving)
+    pub sel_hits: u64,
+    pub sel_misses: u64,
 }
 
 impl Metrics {
+    /// Lower (floor-index) latency percentile, q in [0, 1]: the sorted
+    /// element at index `floor((len-1) * q)`. For p95 over 10 samples this
+    /// is the 9th element, one below the nearest-rank definition.
     pub fn latency_p(&self, q: f64) -> Duration {
         if self.latencies.is_empty() {
             return Duration::ZERO;
@@ -44,17 +58,41 @@ impl Metrics {
         self.batch_fills.iter().map(|f| *f as f64).sum::<f64>() / self.batch_fills.len() as f64
     }
 
+    /// Fraction of round wall time spent executing batches (vs scheduler
+    /// overhead). 0.0 when nothing has been measured.
+    pub fn exec_fraction(&self) -> f64 {
+        let total = self.round_exec + self.round_sched;
+        if total.is_zero() {
+            return 0.0;
+        }
+        self.round_exec.as_secs_f64() / total.as_secs_f64()
+    }
+
+    /// Selection-cache hit rate over the serve lifetime (quant mode).
+    pub fn sel_hit_rate(&self) -> f64 {
+        let total = self.sel_hits + self.sel_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.sel_hits as f64 / total as f64
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests {:4}  images {:5}  evals {:6}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%",
+            "requests {:4}  images {:5}  evals {:6}  rounds {:5}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%  exec {:6.1} ms / sched {:6.1} ms ({:3.0}% exec)  sel-hit {:3.0}%",
             self.latencies.len(),
             self.images_done,
             self.evals,
+            self.rounds,
             self.throughput(),
             self.latency_p(0.5).as_secs_f64() * 1e3,
             self.latency_p(0.95).as_secs_f64() * 1e3,
             self.mean_batch(),
-            self.mean_fill() * 100.0
+            self.mean_fill() * 100.0,
+            self.round_exec.as_secs_f64() * 1e3,
+            self.round_sched.as_secs_f64() * 1e3,
+            self.exec_fraction() * 100.0,
+            self.sel_hit_rate() * 100.0
         )
     }
 }
@@ -72,6 +110,31 @@ mod tests {
         assert_eq!(m.latency_p(0.5), Duration::from_millis(50));
         assert_eq!(m.latency_p(0.0), Duration::from_millis(10));
         assert_eq!(m.latency_p(1.0), Duration::from_millis(100));
+        assert_eq!(m.latency_p(0.95), Duration::from_millis(90));
+    }
+
+    #[test]
+    fn percentiles_odd_count_and_unsorted_input() {
+        let mut m = Metrics::default();
+        // insertion order must not matter
+        for ms in [70u64, 10, 50, 90, 30] {
+            m.latencies.push(Duration::from_millis(ms));
+        }
+        assert_eq!(m.latency_p(0.5), Duration::from_millis(50));
+        assert_eq!(m.latency_p(0.25), Duration::from_millis(30));
+        assert_eq!(m.latency_p(0.95), Duration::from_millis(70));
+        assert_eq!(m.latency_p(1.0), Duration::from_millis(90));
+    }
+
+    #[test]
+    fn percentiles_single_element() {
+        let m = Metrics {
+            latencies: vec![Duration::from_millis(42)],
+            ..Default::default()
+        };
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(m.latency_p(q), Duration::from_millis(42));
+        }
     }
 
     #[test]
@@ -81,11 +144,35 @@ mod tests {
     }
 
     #[test]
+    fn exec_sched_split() {
+        let m = Metrics {
+            round_exec: Duration::from_millis(300),
+            round_sched: Duration::from_millis(100),
+            ..Default::default()
+        };
+        assert!((m.exec_fraction() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sel_hit_rate_math() {
+        let m = Metrics { sel_hits: 9, sel_misses: 1, ..Default::default() };
+        assert!((m.sel_hit_rate() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_fill_math() {
+        let m = Metrics { batch_fills: vec![1.0, 0.5, 0.75], ..Default::default() };
+        assert!((m.mean_fill() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
     fn empty_metrics_safe() {
         let m = Metrics::default();
         assert_eq!(m.latency_p(0.5), Duration::ZERO);
         assert_eq!(m.throughput(), 0.0);
         assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.exec_fraction(), 0.0);
+        assert_eq!(m.sel_hit_rate(), 0.0);
         let _ = m.report();
     }
 }

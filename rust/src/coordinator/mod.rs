@@ -4,9 +4,11 @@
 
 pub mod request;
 pub mod batcher;
+pub mod exec;
 pub mod metrics;
 pub mod server;
 
+pub use exec::RoundExecutor;
 pub use metrics::Metrics;
 pub use request::{Request, Response};
 pub use server::{spawn, ServeMode, ServerCfg, ServerHandle};

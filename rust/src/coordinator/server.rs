@@ -6,39 +6,66 @@
 //!     per-request response receiver;
 //!   * the scheduler thread owns all request state (sampler state machines,
 //!     latents) and loops: drain arrivals → collect each active request's
-//!     next evaluation ticket → `batcher::plan` → execute batches (model
-//!     eval) → `observe` results into the samplers → emit completions;
+//!     next evaluation ticket → `batcher::plan` → gather batch inputs at
+//!     offsets fixed by `batcher::ticket_offsets` → fan the batches out
+//!     across the `exec::RoundExecutor` worker pool → scatter eps back in
+//!     plan order → `observe` results into the samplers;
+//!   * completed requests are decoded and answered *on the pool*
+//!     (`RoundExecutor::offload`), so the next scheduling round starts
+//!     while decode/send of the previous one is still in flight;
+//!   * quantized selections are memoized per timestep in a
+//!     `lora::SelectionCache` — every batch eval goes through
+//!     `eps_q_with_sel` with an `Arc`'d cached selection;
 //!   * new requests join at the next round (continuous batching): a long
 //!     request never blocks a short one, same-t requests share compute.
+//!
+//! Determinism: batch composition is fixed by the plan before execution
+//! and results scatter by batch index, so a server with N workers produces
+//! bit-identical images to a server with 1 worker given the same rounds
+//! (pinned by `rust/tests/integration.rs`).
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use anyhow::{anyhow, Result};
 
 use crate::data::PatchAutoencoder;
+use crate::lora::SelectionCache;
 use crate::model::manifest::ModelInfo;
 use crate::runtime::{Denoiser, QuantState};
 use crate::schedule::{timestep_subsequence, DdimSampler, DpmSolver2, PlmsSampler, Sampler, Schedule};
 use crate::util::rng::Rng;
 
-use super::batcher::{plan, Ticket};
+use super::batcher::{plan, ticket_offsets, Ticket};
+use super::exec::{eval_closure, BatchJob, EvalCtx, ExecMode, RoundExecutor};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 
 use crate::eval::generate::SamplerKind;
 
 enum Msg {
-    Submit(Request, mpsc::Sender<Response>),
+    Submit(Vec<(Request, mpsc::Sender<Response>)>),
     Shutdown(mpsc::Sender<Metrics>),
 }
+
+/// Consecutive failed rounds before a request is dropped (its response
+/// channel closes, so the client's `recv()` errors instead of hanging).
+/// Bounds both the retry spin and `shutdown()` when a batch fails
+/// deterministically (e.g. a missing/corrupt artifact for one class).
+const MAX_FAILED_ROUNDS: usize = 3;
 
 struct Active {
     req: Request,
     sampler: Box<dyn Sampler>,
     x: Vec<f32>,
     cond: Vec<f32>,
+    /// round-scoped eps landing zone (x.len()); persists across rounds so
+    /// scatter never allocates
+    eps_buf: Vec<f32>,
+    /// consecutive rounds lost to failed batch evals
+    fail_rounds: usize,
     rng: Rng,
     tx: mpsc::Sender<Response>,
     submitted: Instant,
@@ -52,11 +79,31 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    pub fn submit(&self, mut req: Request) -> mpsc::Receiver<Response> {
-        req.id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-        let (tx, rx) = mpsc::channel();
-        self.tx.send(Msg::Submit(req, tx)).expect("server down");
-        rx
+    /// Submit one request. Errors if the scheduler thread has exited
+    /// (e.g. after a panic) instead of panicking in the caller. If the
+    /// request itself later fails repeatedly (MAX_FAILED_ROUNDS), its
+    /// receiver's `recv()` returns `Err(RecvError)` — the channel closes
+    /// rather than blocking forever.
+    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Response>> {
+        Ok(self.submit_many(vec![req])?.pop().expect("one receiver per request"))
+    }
+
+    /// Submit a group of requests atomically: all of them join the same
+    /// scheduling round, so round composition (and therefore output bits)
+    /// does not depend on the race between arrivals and round execution.
+    pub fn submit_many(&self, reqs: Vec<Request>) -> Result<Vec<mpsc::Receiver<Response>>> {
+        let mut rxs = Vec::with_capacity(reqs.len());
+        let mut batch = Vec::with_capacity(reqs.len());
+        for mut req in reqs {
+            req.id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            let (tx, rx) = mpsc::channel();
+            batch.push((req, tx));
+            rxs.push(rx);
+        }
+        self.tx
+            .send(Msg::Submit(batch))
+            .map_err(|_| anyhow!("serving coordinator is down (scheduler thread exited)"))?;
+        Ok(rxs)
     }
 
     /// Stop the scheduler (after finishing in-flight requests) and collect
@@ -93,6 +140,9 @@ pub struct ServerCfg {
     /// decode latents to pixels before responding (LDM variants)
     pub decode_latents: bool,
     pub seed: u64,
+    /// round-executor worker threads: 0 = available parallelism,
+    /// 1 = sequential in-line execution on the scheduler thread
+    pub workers: usize,
 }
 
 /// Spawn the coordinator. `den`/`params` are shared with the scheduler
@@ -127,13 +177,30 @@ fn scheduler_loop(
     params: Arc<Vec<f32>>,
     cfg: ServerCfg,
 ) {
+    let ServerCfg { mode, decode_latents, seed, workers } = cfg;
     let mut active: Vec<Active> = Vec::new();
+    // samples received per active request in the current round
+    let mut got: Vec<usize> = Vec::new();
     let mut metrics = Metrics::default();
     let mut shutdown: Option<mpsc::Sender<Metrics>> = None;
     let classes = den.batch_classes_q();
-    let ae = PatchAutoencoder::default();
+    let ae = Arc::new(PatchAutoencoder::default());
     let t0 = Instant::now();
     let xs = info.x_size(1);
+
+    let exec = RoundExecutor::new(workers);
+    let mut sel_cache = SelectionCache::new();
+    // completion stats flow back from offloaded decode/send jobs
+    let (done_tx, done_rx) = mpsc::channel::<Duration>();
+    let mode = match mode {
+        ServeMode::Fp => ExecMode::Fp,
+        ServeMode::Quant(qs) => ExecMode::Quant(Arc::new(qs)),
+    };
+    let evalf = eval_closure(EvalCtx {
+        den: Arc::clone(&den),
+        params: Arc::clone(&params),
+        mode: mode.clone(),
+    });
 
     loop {
         // drain arrivals; block only when idle and not shutting down
@@ -141,7 +208,10 @@ fn scheduler_loop(
             let msg = if active.is_empty() && shutdown.is_none() {
                 match rx.recv() {
                     Ok(m) => m,
-                    Err(_) => return,
+                    Err(_) => {
+                        exec.join(); // flush offloaded completions
+                        return;
+                    }
                 }
             } else {
                 match rx.try_recv() {
@@ -149,6 +219,7 @@ fn scheduler_loop(
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
                         if active.is_empty() {
+                            exec.join();
                             return;
                         }
                         break;
@@ -156,35 +227,50 @@ fn scheduler_loop(
                 }
             };
             match msg {
-                Msg::Submit(req, tx) => {
-                    let mut rng = Rng::new(req.seed ^ 0x73657276);
-                    let x: Vec<f32> = (0..req.n * xs).map(|_| rng.normal()).collect();
-                    let cond: Vec<f32> = (0..req.n)
-                        .map(|_| match req.class {
-                            Some(c) => c as f32,
-                            None if info.cfg.n_classes > 0 => {
-                                rng.below(info.cfg.n_classes) as f32
-                            }
-                            None => 0.0,
-                        })
-                        .collect();
-                    active.push(Active {
-                        sampler: make_sampler(&req, &sched),
-                        x,
-                        cond,
-                        rng,
-                        tx,
-                        submitted: Instant::now(),
-                        evals: 0,
-                        req,
-                    });
+                Msg::Submit(reqs) => {
+                    for (req, tx) in reqs {
+                        let mut rng = Rng::new(req.seed ^ 0x73657276);
+                        let x: Vec<f32> = (0..req.n * xs).map(|_| rng.normal()).collect();
+                        let cond: Vec<f32> = (0..req.n)
+                            .map(|_| match req.class {
+                                Some(c) => c as f32,
+                                None if info.cfg.n_classes > 0 => {
+                                    rng.below(info.cfg.n_classes) as f32
+                                }
+                                None => 0.0,
+                            })
+                            .collect();
+                        active.push(Active {
+                            sampler: make_sampler(&req, &sched),
+                            eps_buf: vec![0.0; x.len()],
+                            x,
+                            cond,
+                            fail_rounds: 0,
+                            rng,
+                            tx,
+                            submitted: Instant::now(),
+                            evals: 0,
+                            req,
+                        });
+                    }
                 }
                 Msg::Shutdown(tx) => shutdown = Some(tx),
             }
         }
 
+        // absorb stats from completions that finished since last round
+        while let Ok(latency) = done_rx.try_recv() {
+            metrics.latencies.push(latency);
+        }
+
         if active.is_empty() {
             if let Some(tx) = shutdown.take() {
+                exec.join(); // flush in-flight decode/send jobs
+                while let Ok(latency) = done_rx.try_recv() {
+                    metrics.latencies.push(latency);
+                }
+                metrics.sel_hits = sel_cache.hits;
+                metrics.sel_misses = sel_cache.misses;
                 metrics.wall = t0.elapsed();
                 let _ = tx.send(metrics.clone());
                 return;
@@ -192,86 +278,127 @@ fn scheduler_loop(
             continue;
         }
 
-        // one scheduling round: plan same-t batches over all active requests
+        // one scheduling round: plan same-t batches over all active
+        // requests, gather every batch's inputs at pre-assigned offsets
+        let sched_t0 = Instant::now();
         let tickets: Vec<Ticket> = active
             .iter()
             .enumerate()
             .map(|(i, a)| Ticket { req: i, t: a.sampler.current_t(), n: a.req.n })
             .collect();
         let batches = plan(&tickets, &classes);
-
-        // execute each batch and scatter eps back per request
-        let mut eps_per_req: Vec<Vec<f32>> = active.iter().map(|_| Vec::new()).collect();
-        for batch in &batches {
-            let mut x = Vec::with_capacity(batch.used() * xs);
-            let mut cond = Vec::with_capacity(batch.used());
-            for tk in &batch.tickets {
-                // NOTE: split tickets (n > max class) keep sample order, so
-                // offsets reconstruct by arrival order per request
+        let offsets = ticket_offsets(&batches, active.len());
+        let mut jobs = Vec::with_capacity(batches.len());
+        for (bi, batch) in batches.iter().enumerate() {
+            let (mut x, mut cond) = exec.gather_bufs();
+            for (tk, &start) in batch.tickets.iter().zip(&offsets[bi]) {
                 let a = &active[tk.req];
-                let done = eps_per_req[tk.req].len() / xs;
-                x.extend_from_slice(&a.x[done * xs..(done + tk.n) * xs]);
-                cond.extend_from_slice(&a.cond[done..done + tk.n]);
+                x.extend_from_slice(&a.x[start * xs..(start + tk.n) * xs]);
+                cond.extend_from_slice(&a.cond[start..start + tk.n]);
             }
-            let eps = match &cfg.mode {
-                ServeMode::Fp => {
-                    let t = vec![batch.t; cond.len()];
-                    den.eps_fp(&params, &x, &t, &cond)
-                }
-                ServeMode::Quant(qs) => {
-                    // selection computed once per batch (one t): serving
-                    // hot path shares it across the whole batch
-                    let mut rng = Rng::new(cfg.seed ^ batch.t.to_bits() as u64);
-                    den.eps_q(&params, qs, &x, batch.t, &cond, &mut rng)
-                }
+            let sel = match &mode {
+                ExecMode::Fp => None,
+                ExecMode::Quant(qs) => Some(sel_cache.get_or_compute(batch.t, || {
+                    // fixed strategies draw from a per-t seeded rng, so
+                    // even DualRandom selections are a pure function of
+                    // (seed, t) and cache exactly
+                    let mut rng = Rng::new(seed ^ batch.t.to_bits() as u64);
+                    qs.selection(batch.t, &mut rng)
+                })),
             };
-            let eps = match eps {
-                Ok(e) => e,
+            jobs.push(BatchJob { idx: bi, t: batch.t, x, cond, sel });
+        }
+        metrics.round_sched += sched_t0.elapsed();
+
+        // fan out; results come back in plan order regardless of workers
+        let exec_t0 = Instant::now();
+        let results = exec.run_with(&evalf, jobs);
+        metrics.round_exec += exec_t0.elapsed();
+
+        // scatter eps into each request's pre-assigned range
+        let scatter_t0 = Instant::now();
+        got.clear();
+        got.resize(active.len(), 0);
+        for r in results {
+            let batch = &batches[r.idx];
+            match r.eps {
+                Ok(eps) => {
+                    metrics.evals += 1;
+                    metrics.batch_sizes.push(batch.used());
+                    metrics.batch_fills.push(batch.fill());
+                    let mut off = 0;
+                    for (tk, &start) in batch.tickets.iter().zip(&offsets[r.idx]) {
+                        let a = &mut active[tk.req];
+                        a.eps_buf[start * xs..(start + tk.n) * xs]
+                            .copy_from_slice(&eps[off * xs..(off + tk.n) * xs]);
+                        got[tk.req] += tk.n;
+                        off += tk.n;
+                    }
+                    exec.recycle(r.job, Some(eps));
+                }
                 Err(err) => {
+                    // the failed batch's requests simply miss this round
+                    // (retried next round); every other batch already
+                    // scattered into its own pre-assigned ranges
                     crate::log_warn!("batch eval failed: {err:#}");
-                    continue;
+                    exec.recycle(r.job, None);
                 }
-            };
-            metrics.evals += 1;
-            metrics.batch_sizes.push(batch.used());
-            metrics.batch_fills.push(batch.fill());
-            let mut off = 0;
-            for tk in &batch.tickets {
-                eps_per_req[tk.req].extend_from_slice(&eps[off * xs..(off + tk.n) * xs]);
-                off += tk.n;
             }
         }
 
-        // observe + complete
+        // observe + complete (completions run on the pool)
         let mut i = 0;
         while i < active.len() {
-            let eps = std::mem::take(&mut eps_per_req[i]);
-            if eps.len() == active[i].x.len() {
+            if got[i] == active[i].req.n {
                 let a = &mut active[i];
+                let eps = std::mem::take(&mut a.eps_buf);
                 a.sampler.observe(&mut a.x, &eps, &mut a.rng);
+                a.eps_buf = eps;
                 a.evals += 1;
+                a.fail_rounds = 0;
+            } else {
+                // every active request is fully ticketed each round, so a
+                // shortfall means one of its batches failed; cap retries
+                // so a deterministic failure can't spin the scheduler or
+                // hang shutdown forever
+                active[i].fail_rounds += 1;
+                if active[i].fail_rounds >= MAX_FAILED_ROUNDS {
+                    let a = active.swap_remove(i);
+                    got.swap_remove(i);
+                    crate::log_warn!(
+                        "dropping request {} after {MAX_FAILED_ROUNDS} failed rounds",
+                        a.req.id
+                    );
+                    // dropping a.tx closes the response channel: the
+                    // client's recv() errors instead of blocking forever
+                    continue;
+                }
             }
             if active[i].sampler.done() {
                 let a = active.swap_remove(i);
-                eps_per_req.swap_remove(i);
-                let images = if cfg.decode_latents {
-                    ae.decode_batch(&a.x, a.req.n)
-                } else {
-                    a.x
-                };
+                got.swap_remove(i);
                 metrics.images_done += a.req.n;
-                metrics.latencies.push(a.submitted.elapsed());
-                let _ = a.tx.send(Response {
-                    id: a.req.id,
-                    images,
-                    n: a.req.n,
-                    latency: a.submitted.elapsed(),
-                    evals: a.evals,
+                let ae = Arc::clone(&ae);
+                let done_tx = done_tx.clone();
+                exec.offload(move || {
+                    let images =
+                        if decode_latents { ae.decode_batch(&a.x, a.req.n) } else { a.x };
+                    let latency = a.submitted.elapsed();
+                    let _ = done_tx.send(latency);
+                    let _ = a.tx.send(Response {
+                        id: a.req.id,
+                        images,
+                        n: a.req.n,
+                        latency,
+                        evals: a.evals,
+                    });
                 });
             } else {
                 i += 1;
             }
         }
+        metrics.round_sched += scatter_t0.elapsed();
+        metrics.rounds += 1;
     }
 }
 
@@ -306,11 +433,11 @@ mod tests {
             info,
             sched,
             params,
-            ServerCfg { mode: ServeMode::Fp, decode_latents: false, seed: 1 },
+            ServerCfg { mode: ServeMode::Fp, decode_latents: false, seed: 1, workers: 0 },
         );
-        let rx1 = handle.submit(Request::new(0, 3, 4));
-        let rx2 = handle.submit(Request::new(0, 2, 4));
-        let rx3 = handle.submit(Request::new(0, 1, 6)); // different step count
+        let rx1 = handle.submit(Request::new(0, 3, 4)).unwrap();
+        let rx2 = handle.submit(Request::new(0, 2, 4)).unwrap();
+        let rx3 = handle.submit(Request::new(0, 1, 6)).unwrap(); // different step count
         let r1 = rx1.recv().unwrap();
         let r2 = rx2.recv().unwrap();
         let r3 = rx3.recv().unwrap();
@@ -321,7 +448,62 @@ mod tests {
         let m = handle.shutdown();
         assert_eq!(m.images_done, 6);
         assert!(m.evals > 0);
+        assert!(m.rounds > 0);
+        assert_eq!(m.latencies.len(), 3, "every completion must report back");
         // same-steps requests must have shared batches at least once
         assert!(m.mean_batch() > 1.0, "no batching happened: {}", m.report());
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors_instead_of_panicking() {
+        let Some((den, info, params)) = setup() else { return };
+        let sched = Schedule::linear(100);
+        let handle = spawn(
+            den,
+            info,
+            sched,
+            params,
+            ServerCfg { mode: ServeMode::Fp, decode_latents: false, seed: 1, workers: 1 },
+        );
+        // steal the sender's counterpart by shutting the scheduler down
+        // out from under a clone of the handle's channel
+        let tx = handle.tx.clone();
+        let m = handle.shutdown();
+        assert_eq!(m.images_done, 0);
+        // the scheduler thread is gone; a late submit must surface an Err
+        let stale = ServerHandle {
+            tx,
+            join: None,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        };
+        assert!(stale.submit(Request::new(0, 1, 2)).is_err());
+    }
+
+    #[test]
+    fn submit_many_joins_one_round() {
+        let Some((den, info, params)) = setup() else { return };
+        let sched = Schedule::linear(100);
+        let handle = spawn(
+            den,
+            info,
+            sched,
+            params,
+            ServerCfg { mode: ServeMode::Fp, decode_latents: false, seed: 1, workers: 0 },
+        );
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| {
+                let mut r = Request::new(0, 1, 4);
+                r.seed = i;
+                r
+            })
+            .collect();
+        let rxs = handle.submit_many(reqs).unwrap();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().images.iter().all(|v| v.is_finite()));
+        }
+        let m = handle.shutdown();
+        assert_eq!(m.images_done, 4);
+        // all four single-sample requests shared batches from round one
+        assert!(m.mean_batch() > 3.0, "bulk submit did not share rounds: {}", m.report());
     }
 }

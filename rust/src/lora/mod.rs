@@ -8,4 +8,4 @@ pub mod hub;
 pub mod router;
 
 pub use hub::LoraHub;
-pub use router::Router;
+pub use router::{Router, SelectionCache};

@@ -9,6 +9,9 @@
 //! integration test (argmax selections must match on ≥ 95% of cases;
 //! sin/cos/exp may differ by 1 ulp near ties).
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::model::manifest::ModelInfo;
@@ -113,6 +116,62 @@ impl Router {
     }
 }
 
+/// Serve-mode memo of per-timestep selection matrices.
+///
+/// A learned selection depends only on `(t, hub_mask)` and the fixed
+/// strategies only on `(t, serve seed)` — all constant for a coordinator's
+/// lifetime — so selections are cached by t's exact bit pattern and shared
+/// (`Arc`) across every batch eval at that timestep. Continuous batching
+/// revisits the same timesteps constantly (every request walks the same
+/// tau subsequences), so the steady-state hit rate approaches 1.
+#[derive(Debug, Default)]
+pub struct SelectionCache {
+    map: HashMap<u32, Arc<Vec<f32>>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl SelectionCache {
+    /// Retention bound: a long-lived server seeing many distinct step
+    /// counts (each tau subsequence yields new t values) must not grow
+    /// without limit, so the map is reset when it would exceed this —
+    /// selections are cheap to recompute and the working set of t values
+    /// in flight at any moment is far smaller.
+    pub const MAX_ENTRIES: usize = 4096;
+
+    pub fn new() -> SelectionCache {
+        SelectionCache::default()
+    }
+
+    /// The cached selection for `t`, computing (and retaining) it on miss.
+    pub fn get_or_compute(
+        &mut self,
+        t: f32,
+        compute: impl FnOnce() -> Vec<f32>,
+    ) -> Arc<Vec<f32>> {
+        let key = t.to_bits();
+        if let Some(e) = self.map.get(&key) {
+            self.hits += 1;
+            return Arc::clone(e);
+        }
+        self.misses += 1;
+        if self.map.len() >= Self::MAX_ENTRIES {
+            self.map.clear();
+        }
+        let v = Arc::new(compute());
+        self.map.insert(key, Arc::clone(&v));
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +227,36 @@ mod tests {
         for row in dist {
             assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn selection_cache_hits_and_shares_arcs() {
+        let r = tiny_router();
+        let mask = vec![1.0; 4];
+        let mut cache = SelectionCache::new();
+        let a = cache.get_or_compute(13.0, || r.selection_onehot(13.0, &mask));
+        let b = cache.get_or_compute(13.0, || panic!("must not recompute on hit"));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!(*a, r.selection_onehot(13.0, &mask));
+        // a different t (even by one ulp) is a distinct entry
+        let c = cache.get_or_compute(f32::from_bits(13.0f32.to_bits() + 1), || vec![0.0; 12]);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+        assert_eq!((cache.hits, cache.misses), (1, 2));
+    }
+
+    #[test]
+    fn selection_cache_is_bounded() {
+        let mut cache = SelectionCache::new();
+        for i in 0..(SelectionCache::MAX_ENTRIES as u32 + 100) {
+            cache.get_or_compute(f32::from_bits(0x3f80_0000 + i), || vec![1.0]);
+        }
+        assert!(cache.len() <= SelectionCache::MAX_ENTRIES);
+        assert!(!cache.is_empty());
+        // a re-request after the reset still round-trips correctly
+        let v = cache.get_or_compute(f32::from_bits(0x3f80_0000), || vec![2.0]);
+        assert!(*v == vec![1.0] || *v == vec![2.0]);
     }
 
     #[test]

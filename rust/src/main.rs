@@ -5,7 +5,7 @@
 //!   quantize  --corpus <name> --bits 4 [--method msfp|signed|int-mse|int-minmax]
 //!   sample    --corpus <name> [--bits N] [--n N] [--steps N] [--out grid.ppm]
 //!   eval      --corpus <name> [--bits N] [--method ...]     FID/sFID/IS proxy
-//!   serve     --corpus <name> [--requests N] [--n N]        serving demo/load
+//!   serve     --corpus <name> [--requests N] [--n N] [--workers N]  serving demo/load
 //!   repro     --exp t1..t11,f1..f9|all                      paper tables/figures
 //!
 //! Scale: MSFP_SCALE=fast|full (default fast). Artifacts dir: MSFP_ARTIFACTS
@@ -155,6 +155,7 @@ fn run() -> Result<()> {
             let requests = args.usize("requests", 12)?;
             let per = args.usize("n", 2)?;
             let steps = args.usize("steps", scale.steps)?;
+            let workers = args.usize("workers", 0)?;
             args.finish()?;
             let pl = Pipeline::new(&artifacts, scale)?;
             let p = pl.prepare(corpus)?;
@@ -177,11 +178,10 @@ fn run() -> Result<()> {
                 p.info.clone(),
                 pl.sched.clone(),
                 Arc::new(p.params.clone()),
-                ServerCfg { mode, decode_latents: decode, seed: 3 },
+                ServerCfg { mode, decode_latents: decode, seed: 3, workers },
             );
-            let rxs: Vec<_> = (0..requests)
-                .map(|i| handle.submit(Request::new(i as u64, per, steps)))
-                .collect();
+            let rxs = handle
+                .submit_many((0..requests).map(|i| Request::new(i as u64, per, steps)).collect())?;
             for rx in rxs {
                 let resp = rx.recv()?;
                 println!(

@@ -2,9 +2,10 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::log_info;
 
@@ -52,12 +53,29 @@ impl Executable {
     }
 }
 
+/// Per-artifact compile slot: the first thread to miss the cache becomes
+/// the builder; concurrent loaders of the same key wait on the condvar
+/// instead of compiling the same ~30 s artifact a second time.
+enum Slot {
+    Building,
+    Ready(Arc<Executable>),
+    Failed(String),
+}
+
+struct SlotCell {
+    state: Mutex<Slot>,
+    cv: Condvar,
+}
+
 /// The engine owns the PJRT client and a by-path cache of compiled
 /// executables (compile once per process; execution is hot-path).
 pub struct Engine {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
-    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
+    cache: Mutex<BTreeMap<String, Arc<SlotCell>>>,
+    /// number of actual compilations (cache-hit / wait paths excluded) —
+    /// observable so tests can pin the single-flight guarantee
+    compiles: AtomicUsize,
 }
 
 unsafe impl Send for Engine {}
@@ -71,6 +89,7 @@ impl Engine {
             client,
             artifacts_dir: artifacts_dir.to_path_buf(),
             cache: Mutex::new(BTreeMap::new()),
+            compiles: AtomicUsize::new(0),
         })
     }
 
@@ -78,11 +97,86 @@ impl Engine {
         &self.artifacts_dir
     }
 
+    /// How many artifacts this engine actually compiled (as opposed to
+    /// served from cache or waited on another thread for).
+    pub fn compiled_count(&self) -> usize {
+        self.compiles.load(Ordering::SeqCst)
+    }
+
     /// Load + compile (or fetch from cache) an artifact by file name.
+    ///
+    /// Concurrent loads of the same file are single-flight: the first
+    /// caller compiles, the rest block until it finishes and share the
+    /// result. A failed compile is reported to every waiter and then
+    /// evicted, so a later load retries instead of caching the error.
     pub fn load(&self, file: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(file) {
-            return Ok(Arc::clone(e));
+        let (cell, builder) = {
+            let mut map = self.cache.lock().unwrap();
+            match map.get(file) {
+                Some(c) => (Arc::clone(c), false),
+                None => {
+                    let c = Arc::new(SlotCell {
+                        state: Mutex::new(Slot::Building),
+                        cv: Condvar::new(),
+                    });
+                    map.insert(file.to_string(), Arc::clone(&c));
+                    (c, true)
+                }
+            }
+        };
+        if builder {
+            // unwind guard: if compile() panics (e.g. inside the xla FFI),
+            // mark the slot Failed, evict it and wake every waiter — a slot
+            // stuck at Building would hang all current and future loaders
+            struct BuildGuard<'a> {
+                cell: &'a SlotCell,
+                cache: &'a Mutex<BTreeMap<String, Arc<SlotCell>>>,
+                file: &'a str,
+                armed: bool,
+            }
+            impl Drop for BuildGuard<'_> {
+                fn drop(&mut self) {
+                    if !self.armed {
+                        return;
+                    }
+                    *self.cell.state.lock().unwrap() =
+                        Slot::Failed("compile panicked".to_string());
+                    self.cache.lock().unwrap().remove(self.file);
+                    self.cell.cv.notify_all();
+                }
+            }
+            let mut guard = BuildGuard { cell: &cell, cache: &self.cache, file, armed: true };
+            let res = self.compile(file);
+            guard.armed = false;
+            drop(guard);
+            {
+                let mut st = cell.state.lock().unwrap();
+                match &res {
+                    Ok(e) => *st = Slot::Ready(Arc::clone(e)),
+                    Err(e) => {
+                        *st = Slot::Failed(format!("{e:#}"));
+                        self.cache.lock().unwrap().remove(file);
+                    }
+                }
+            }
+            cell.cv.notify_all();
+            res
+        } else {
+            let mut st = cell.state.lock().unwrap();
+            while matches!(*st, Slot::Building) {
+                st = cell.cv.wait(st).unwrap();
+            }
+            match &*st {
+                Slot::Ready(e) => Ok(Arc::clone(e)),
+                Slot::Failed(msg) => {
+                    Err(anyhow!("compiling {file} failed in another thread: {msg}"))
+                }
+                Slot::Building => unreachable!("condvar wait ended while Building"),
+            }
         }
+    }
+
+    fn compile(&self, file: &str) -> Result<Arc<Executable>> {
         let path = self.artifacts_dir.join(file);
         let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
@@ -91,10 +185,9 @@ impl Engine {
         .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).with_context(|| format!("compiling {file}"))?;
+        self.compiles.fetch_add(1, Ordering::SeqCst);
         log_info!("compiled {file} in {:.2}s", t0.elapsed().as_secs_f64());
-        let exe = Arc::new(Executable { exe, name: file.to_string() });
-        self.cache.lock().unwrap().insert(file.to_string(), Arc::clone(&exe));
-        Ok(exe)
+        Ok(Arc::new(Executable { exe, name: file.to_string() }))
     }
 }
 
@@ -142,5 +235,45 @@ mod tests {
         };
         let engine = Engine::new(&dir).unwrap();
         assert!(engine.load("nope.hlo.txt").is_err());
+        // a failed compile must not be cached: the retry takes the builder
+        // path again (and fails again, rather than seeing a stale slot)
+        assert!(engine.load("nope.hlo.txt").is_err());
+        assert_eq!(engine.compiled_count(), 0);
+    }
+
+    #[test]
+    fn concurrent_loads_compile_once() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let engine = Arc::new(Engine::new(&dir).unwrap());
+        let exes: Vec<Arc<Executable>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let engine = Arc::clone(&engine);
+                    s.spawn(move || engine.load("features16.hlo.txt").unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(engine.compiled_count(), 1, "exactly one thread must compile");
+        assert!(exes.iter().all(|e| Arc::ptr_eq(e, &exes[0])));
+    }
+
+    #[test]
+    fn concurrent_missing_loads_all_error() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let engine = Arc::new(Engine::new(&dir).unwrap());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let engine = Arc::clone(&engine);
+                    s.spawn(move || engine.load("nope.hlo.txt").is_err())
+                })
+                .collect();
+            assert!(handles.into_iter().all(|h| h.join().unwrap()));
+        });
     }
 }

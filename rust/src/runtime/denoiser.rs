@@ -87,6 +87,29 @@ impl QuantState {
     }
 }
 
+/// Caller-owned marshalling scratch for the `eps_*_into` entry points: the
+/// pad-to-batch-class staging buffers. The serving round executor keeps one
+/// per worker so per-round allocations stop scaling with batch count.
+#[derive(Debug, Default)]
+pub struct EpsScratch {
+    xp: Vec<f32>,
+    tp: Vec<f32>,
+    cp: Vec<f32>,
+}
+
+/// Pad `n` stacked samples up to batch class `b` into `buf` by repeating
+/// the last sample (capacity is reused across calls).
+fn pad_into(buf: &mut Vec<f32>, src: &[f32], n: usize, b: usize) {
+    debug_assert!(n >= 1, "pad_into requires a non-empty batch");
+    let per = src.len() / n;
+    buf.clear();
+    buf.reserve(b * per);
+    buf.extend_from_slice(src);
+    for _ in n..b {
+        buf.extend_from_within((n - 1) * per..n * per); // repeat last
+    }
+}
+
 pub struct Denoiser {
     pub info: ModelInfo,
     engine: Arc<Engine>,
@@ -137,20 +160,6 @@ impl Denoiser {
         Ok((*b, self.engine.load(file)?))
     }
 
-    /// Pad `n` stacked samples up to batch class `b` by repeating the last
-    /// sample. Callers guarantee `n >= 1` (the eps entry points bail on an
-    /// empty batch before reaching this division).
-    fn pad_to(&self, x: &[f32], n: usize, b: usize) -> Vec<f32> {
-        debug_assert!(n >= 1, "pad_to requires a non-empty batch");
-        let per = x.len() / n;
-        let mut out = Vec::with_capacity(b * per);
-        out.extend_from_slice(x);
-        for _ in n..b {
-            out.extend_from_slice(&x[(n - 1) * per..n * per]); // repeat last
-        }
-        out
-    }
-
     fn x_dims(&self, b: usize) -> [i64; 4] {
         let hw = self.info.cfg.img_hw as i64;
         [b as i64, hw, hw, self.info.cfg.in_ch as i64]
@@ -158,6 +167,23 @@ impl Denoiser {
 
     /// Full-precision eps_theta. x is n stacked samples; t/cond length n.
     pub fn eps_fp(&self, params: &[f32], x: &[f32], t: &[f32], cond: &[f32]) -> Result<Vec<f32>> {
+        let mut s = EpsScratch::default();
+        let mut out = Vec::new();
+        self.eps_fp_into(params, x, t, cond, &mut s, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Denoiser::eps_fp`] with caller-owned pad scratch and output buffer
+    /// (the serving round executor reuses both across rounds).
+    pub fn eps_fp_into(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        t: &[f32],
+        cond: &[f32],
+        s: &mut EpsScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let n = t.len();
         if n == 0 {
             bail!("eps_fp called with an empty batch (t is empty)");
@@ -166,19 +192,60 @@ impl Denoiser {
             bail!("x len {} != expected {}", x.len(), self.info.x_size(n));
         }
         let (b, exe) = self.pick(&self.fp_files, n)?;
-        let xp = self.pad_to(x, n, b);
-        let tp = self.pad_to(t, n, b);
-        let cp = self.pad_to(cond, n, b);
+        pad_into(&mut s.xp, x, n, b);
+        pad_into(&mut s.tp, t, n, b);
+        pad_into(&mut s.cp, cond, n, b);
+        self.run_fp(params, n, b, &exe, s, out)
+    }
+
+    /// [`Denoiser::eps_fp_into`] for a same-t batch (the serving round
+    /// executor's shape): t is marshalled straight into the pad scratch.
+    pub fn eps_fp_uniform_into(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        t: f32,
+        cond: &[f32],
+        s: &mut EpsScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let n = cond.len();
+        if n == 0 {
+            bail!("eps_fp called with an empty batch (cond is empty)");
+        }
+        if x.len() != self.info.x_size(n) {
+            bail!("x len {} != expected {}", x.len(), self.info.x_size(n));
+        }
+        let (b, exe) = self.pick(&self.fp_files, n)?;
+        pad_into(&mut s.xp, x, n, b);
+        s.tp.clear();
+        s.tp.resize(b, t);
+        pad_into(&mut s.cp, cond, n, b);
+        self.run_fp(params, n, b, &exe, s, out)
+    }
+
+    /// Shared tail of the FP eps paths: execute on the padded scratch and
+    /// truncate the result into `out`.
+    fn run_fp(
+        &self,
+        params: &[f32],
+        n: usize,
+        b: usize,
+        exe: &Executable,
+        s: &EpsScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let dims = self.x_dims(b);
-        let out = exe.run(&[
+        let res = exe.run(&[
             (params, &[params.len() as i64]),
-            (&xp, &dims),
-            (&tp, &[b as i64]),
-            (&cp, &[b as i64]),
+            (&s.xp, &dims),
+            (&s.tp, &[b as i64]),
+            (&s.cp, &[b as i64]),
         ])?;
-        let mut eps = out.into_iter().next().unwrap();
-        eps.truncate(self.info.x_size(n));
-        Ok(eps)
+        let eps = res.into_iter().next().unwrap();
+        out.clear();
+        out.extend_from_slice(&eps[..self.info.x_size(n)]);
+        Ok(())
     }
 
     /// Quantized eps_theta. The whole batch shares timestep `t` (the
@@ -207,6 +274,26 @@ impl Denoiser {
         t: f32,
         cond: &[f32],
     ) -> Result<Vec<f32>> {
+        let mut s = EpsScratch::default();
+        let mut out = Vec::new();
+        self.eps_q_with_sel_into(params, qs, sel, x, t, cond, &mut s, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Denoiser::eps_q_with_sel`] with caller-owned pad scratch and output
+    /// buffer (the serving round executor reuses both across rounds).
+    #[allow(clippy::too_many_arguments)]
+    pub fn eps_q_with_sel_into(
+        &self,
+        params: &[f32],
+        qs: &QuantState,
+        sel: &[f32],
+        x: &[f32],
+        t: f32,
+        cond: &[f32],
+        s: &mut EpsScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let n = cond.len();
         if n == 0 {
             bail!("eps_q/eps_q_with_sel called with an empty batch (cond is empty)");
@@ -215,24 +302,26 @@ impl Denoiser {
             bail!("x len {} != expected {}", x.len(), self.info.x_size(n));
         }
         let (b, exe) = self.pick(&self.q_files, n)?;
-        let xp = self.pad_to(x, n, b);
-        let tp = vec![t; b];
-        let cp = self.pad_to(cond, n, b);
+        pad_into(&mut s.xp, x, n, b);
+        s.tp.clear();
+        s.tp.resize(b, t);
+        pad_into(&mut s.cp, cond, n, b);
         let dims = self.x_dims(b);
         let l = self.info.n_layers as i64;
         let h = self.info.cfg.lora_hub as i64;
-        let out = exe.run(&[
+        let res = exe.run(&[
             (params, &[params.len() as i64]),
             (&qs.qparams, &[l, 8]),
             (&qs.lora, &[qs.lora.len() as i64]),
             (sel, &[l, h]),
-            (&xp, &dims),
-            (&tp, &[b as i64]),
-            (&cp, &[b as i64]),
+            (&s.xp, &dims),
+            (&s.tp, &[b as i64]),
+            (&s.cp, &[b as i64]),
         ])?;
-        let mut eps = out.into_iter().next().unwrap();
-        eps.truncate(self.info.x_size(n));
-        Ok(eps)
+        let eps = res.into_iter().next().unwrap();
+        out.clear();
+        out.extend_from_slice(&eps[..self.info.x_size(n)]);
+        Ok(())
     }
 
     /// Calibration forward: (eps, per-layer activation samples [L, S],
@@ -267,6 +356,20 @@ mod tests {
     use crate::model::ParamStore;
     use std::path::PathBuf;
 
+    #[test]
+    fn pad_into_repeats_last_sample_and_reuses_capacity() {
+        let mut buf = Vec::new();
+        pad_into(&mut buf, &[1.0, 2.0, 3.0, 4.0], 2, 4); // 2 samples of 2
+        assert_eq!(buf, vec![1.0, 2.0, 3.0, 4.0, 3.0, 4.0, 3.0, 4.0]);
+        let cap = buf.capacity();
+        pad_into(&mut buf, &[5.0, 6.0], 1, 3);
+        assert_eq!(buf, vec![5.0, 6.0, 5.0, 6.0, 5.0, 6.0]);
+        assert_eq!(buf.capacity(), cap, "pad_into must reuse the allocation");
+        // exact-fit batch: no padding appended
+        pad_into(&mut buf, &[7.0, 8.0], 2, 2);
+        assert_eq!(buf, vec![7.0, 8.0]);
+    }
+
     fn setup() -> Option<(Arc<Engine>, Manifest)> {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !d.join("manifest.json").exists() {
@@ -290,6 +393,32 @@ mod tests {
             assert_eq!(eps.len(), info.x_size(n));
             assert!(eps.iter().all(|v| v.is_finite()));
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_paths_bitwise() {
+        let Some((engine, m)) = setup() else { return };
+        let info = m.model("ddim16").unwrap();
+        let den = Denoiser::new(engine, info).unwrap();
+        let params = ParamStore::load_init(info, &m.dir).unwrap();
+        let n = 3;
+        let x = vec![0.2f32; info.x_size(n)];
+        let t = vec![5.0; n];
+        let cond = vec![0.0; n];
+        let base = den.eps_fp(&params.flat, &x, &t, &cond).unwrap();
+        let mut s = EpsScratch::default();
+        let mut out = Vec::new();
+        den.eps_fp_into(&params.flat, &x, &t, &cond, &mut s, &mut out).unwrap();
+        assert_eq!(base, out);
+        den.eps_fp_uniform_into(&params.flat, &x, 5.0, &cond, &mut s, &mut out).unwrap();
+        assert!(
+            base.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "uniform-t marshalling must be bit-identical to the t-slice path"
+        );
+        // a second call reuses the pad scratch allocations
+        let cap = s.xp.capacity();
+        den.eps_fp_uniform_into(&params.flat, &x, 5.0, &cond, &mut s, &mut out).unwrap();
+        assert_eq!(s.xp.capacity(), cap);
     }
 
     #[test]

@@ -8,4 +8,4 @@ pub mod client;
 pub mod denoiser;
 
 pub use client::{Engine, Executable};
-pub use denoiser::{Denoiser, QuantState};
+pub use denoiser::{Denoiser, EpsScratch, QuantState};

@@ -99,10 +99,22 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// A non-timing metric row for BENCH_*.json files (e.g. a throughput in
+/// img/s or a cache hit rate): `{"name": ..., "value": ..., "unit": ...}`.
+pub fn metric_row(name: &str, value: f64, unit: &str) -> Json {
+    obj(vec![("name", s(name)), ("value", num(value)), ("unit", s(unit))])
+}
+
 /// Write bench results as `{"benches": [...]}` so the perf trajectory is
 /// machine-readable (diffable) across PRs.
 pub fn write_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
-    let j = obj(vec![("benches", arr(results.iter().map(|r| r.to_json())))]);
+    write_json_rows(path, results.iter().map(|r| r.to_json()).collect())
+}
+
+/// [`write_json`] for a mix of timing rows ([`BenchResult::to_json`]) and
+/// [`metric_row`]s.
+pub fn write_json_rows(path: &Path, rows: Vec<Json>) -> std::io::Result<()> {
+    let j = obj(vec![("benches", arr(rows))]);
     std::fs::write(path, j.to_string() + "\n")
 }
 
@@ -135,6 +147,30 @@ mod tests {
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].get("name").unwrap().str().unwrap(), "x");
         assert_eq!(rows[0].get("median_ns").unwrap().f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn mixed_rows_roundtrip() {
+        let timing = BenchResult {
+            name: "t".into(),
+            iters: 1,
+            median_ns: 2.0,
+            p10_ns: 1.0,
+            p90_ns: 3.0,
+        };
+        let path =
+            std::env::temp_dir().join(format!("msfp_bench_rows_{}.json", std::process::id()));
+        write_json_rows(
+            &path,
+            vec![timing.to_json(), metric_row("coordinator_parallel", 123.5, "img/s")],
+        )
+        .unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = j.get("benches").unwrap().arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("name").unwrap().str().unwrap(), "coordinator_parallel");
+        assert_eq!(rows[1].get("value").unwrap().f64().unwrap(), 123.5);
+        assert_eq!(rows[1].get("unit").unwrap().str().unwrap(), "img/s");
     }
 
     #[test]

@@ -36,7 +36,15 @@ impl Pool {
                     };
                     match job {
                         Ok(job) => {
-                            job();
+                            // contain panics: a panicking job must neither
+                            // kill this worker nor leak its pending count
+                            // (which would deadlock join())
+                            let r = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(job),
+                            );
+                            if r.is_err() {
+                                crate::log_warn!("thread-pool job panicked");
+                            }
                             let (lock, cv) = &*pending;
                             let mut p = lock.lock().unwrap();
                             *p -= 1;
@@ -155,6 +163,21 @@ mod tests {
             pool.join();
             assert_eq!(counter.load(Ordering::SeqCst), (round + 1) * 10);
         }
+    }
+
+    #[test]
+    fn panicking_job_does_not_deadlock_or_kill_workers() {
+        let pool = Pool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        pool.submit(|| panic!("injected"));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join(); // must not hang on the panicked job's pending count
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
     }
 
     #[test]

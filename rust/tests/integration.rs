@@ -9,8 +9,11 @@ use msfp::config::{MethodSpec, Scale};
 use msfp::coordinator::{self, Request, ServeMode, ServerCfg};
 use msfp::data::Corpus;
 use msfp::eval::generate::SamplerKind;
+use msfp::lora::hub::AllocStrategy;
+use msfp::lora::Router;
 use msfp::pipeline::Pipeline;
-use msfp::runtime::Denoiser;
+use msfp::runtime::{Denoiser, QuantState};
+use msfp::util::rng::Rng;
 
 fn artifacts() -> Option<PathBuf> {
     let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -55,13 +58,13 @@ fn quantize_then_serve_quantized() {
         p.info.clone(),
         pl.sched.clone(),
         Arc::new(p.params.clone()),
-        ServerCfg { mode: ServeMode::Quant(q.state), decode_latents: false, seed: 7 },
+        ServerCfg { mode: ServeMode::Quant(q.state), decode_latents: false, seed: 7, workers: 0 },
     );
     let mut rxs = Vec::new();
     for i in 0..4 {
         let mut req = Request::new(0, 2, 4);
         req.seed = i;
-        rxs.push(handle.submit(req));
+        rxs.push(handle.submit(req).unwrap());
     }
     for rx in rxs {
         let resp = rx.recv().unwrap();
@@ -88,7 +91,7 @@ fn serving_mixed_samplers_and_conditional() {
         info,
         pl.sched.clone(),
         params,
-        ServerCfg { mode: ServeMode::Fp, decode_latents: true, seed: 1 },
+        ServerCfg { mode: ServeMode::Fp, decode_latents: true, seed: 1, workers: 0 },
     );
     let mut ddim = Request::new(0, 2, 4);
     ddim.class = Some(3);
@@ -96,9 +99,9 @@ fn serving_mixed_samplers_and_conditional() {
     plms.sampler = SamplerKind::Plms;
     let mut dpm = Request::new(0, 1, 3);
     dpm.sampler = SamplerKind::DpmSolver2;
-    let rx1 = handle.submit(ddim);
-    let rx2 = handle.submit(plms);
-    let rx3 = handle.submit(dpm);
+    let rx1 = handle.submit(ddim).unwrap();
+    let rx2 = handle.submit(plms).unwrap();
+    let rx3 = handle.submit(dpm).unwrap();
     let r1 = rx1.recv().unwrap();
     let r2 = rx2.recv().unwrap();
     let r3 = rx3.recv().unwrap();
@@ -107,6 +110,78 @@ fn serving_mixed_samplers_and_conditional() {
     assert_eq!(r2.images.len(), 32 * 32 * 3);
     assert_eq!(r3.evals, 2 * (3 - 1)); // DPM-Solver-2: 2 evals per step
     handle.shutdown();
+}
+
+/// The round executor's determinism contract: a mixed-sampler, mixed-steps,
+/// mixed-n workload served with 1 worker produces bit-identical images per
+/// request to the same workload served with N workers. `submit_many` pins
+/// the round composition (all requests join round one), so the only thing
+/// varying across runs is worker-pool scheduling — which must not matter.
+#[test]
+fn parallel_round_executor_is_bit_identical_to_sequential() {
+    let Some(dir) = artifacts() else { return };
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let info = pl.manifest.model("ddim16").unwrap().clone();
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(msfp::model::ParamStore::load_init(&info, &dir).unwrap().flat);
+    let mut rng = Rng::new(7);
+    let mut qp = Vec::new();
+    for _ in 0..info.n_layers {
+        qp.extend_from_slice(&[1.0, 2.0, 1.0, 1.0, 4.0, 2.0, 1.0, -0.2]);
+    }
+    let qs = QuantState {
+        qparams: qp,
+        lora: vec![0.0; info.lora_size],
+        router: Router::init(&info, &mut rng),
+        hub_mask: vec![1.0, 1.0, 0.0, 0.0],
+        strategy: AllocStrategy::Learned,
+        t_total: 100,
+    };
+
+    // ≥ 8 concurrent requests, ≥ 2 distinct t per round (mixed step
+    // counts and samplers), mixed n
+    let workload = || -> Vec<Request> {
+        (0..10u64)
+            .map(|i| {
+                let mut r = Request::new(0, 1 + (i as usize % 3), if i % 2 == 0 { 4 } else { 6 });
+                r.seed = 100 + i;
+                r.sampler = match i % 3 {
+                    0 => SamplerKind::Ddim,
+                    1 => SamplerKind::Plms,
+                    _ => SamplerKind::DpmSolver2,
+                };
+                r
+            })
+            .collect()
+    };
+
+    let run = |workers: usize| -> Vec<Vec<u32>> {
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            ServerCfg {
+                mode: ServeMode::Quant(qs.clone()),
+                decode_latents: false,
+                seed: 11,
+                workers,
+            },
+        );
+        let rxs = handle.submit_many(workload()).unwrap();
+        let out = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().images.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        let m = handle.shutdown();
+        assert_eq!(m.images_done, workload().iter().map(|r| r.n).sum::<usize>());
+        out
+    };
+
+    let seq = run(1);
+    for workers in [2usize, 4] {
+        assert_eq!(seq, run(workers), "workers={workers} changed output bits");
+    }
 }
 
 #[test]

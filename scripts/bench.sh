@@ -1,16 +1,21 @@
 #!/usr/bin/env bash
-# Perf gate for the quantization hot paths.
+# Perf gate for the quantization and serving hot paths.
 #
-# Builds --release, runs the perf_quant bench target, and leaves a
-# machine-readable BENCH_quant.json at the repo root so the perf
-# trajectory (grid-segment engine vs the retained *_scalar oracle, and
-# the msfp_table5_sweep_cold vs msfp_table5_sweep_session QuantSession
-# amortization pair) is comparable across PRs.
+# Builds --release, runs the perf_quant and perf_serving bench targets,
+# and leaves machine-readable BENCH_quant.json / BENCH_serving.json at
+# the repo root so the perf trajectory is comparable across PRs:
+#   * BENCH_quant.json — grid-segment engine vs the retained *_scalar
+#     oracle, and the msfp_table5_sweep_cold vs msfp_table5_sweep_session
+#     QuantSession amortization pair;
+#   * BENCH_serving.json — per-eval latency by batch class, the
+#     coordinator_sequential_exec vs coordinator_parallel round-executor
+#     throughput pair, and the selection-cache hit rate.
 #
 #   scripts/bench.sh
 #
 # Env:
-#   BENCH_JSON   output path (default: <repo>/BENCH_quant.json)
+#   BENCH_JSON           quant output path  (default: <repo>/BENCH_quant.json)
+#   BENCH_SERVING_JSON   serving output path (default: <repo>/BENCH_serving.json)
 #
 # Tier-1 verify stays `cargo build --release && cargo test -q` (run in
 # rust/); this script is the perf companion, not a replacement.
@@ -19,6 +24,7 @@ set -euo pipefail
 root="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$root/rust"
 export BENCH_JSON="${BENCH_JSON:-$root/BENCH_quant.json}"
+export BENCH_SERVING_JSON="${BENCH_SERVING_JSON:-$root/BENCH_serving.json}"
 
 if [ ! -f Cargo.toml ]; then
     echo "error: rust/Cargo.toml not found — this checkout has no build" >&2
@@ -29,5 +35,7 @@ fi
 
 cargo build --release
 cargo bench --bench perf_quant
+cargo bench --bench perf_serving
 
 echo "bench results: $BENCH_JSON"
+echo "               $BENCH_SERVING_JSON"
