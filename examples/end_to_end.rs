@@ -78,7 +78,7 @@ fn main() -> Result<()> {
         p.info.clone(),
         pl.sched.clone(),
         Arc::new(p.params.clone()),
-        ServerCfg { mode: ServeMode::Quant(ours.state), decode_latents: false, seed: 9, workers: 0 },
+        ServerCfg { seed: 9, ..ServerCfg::new(ServeMode::Quant(ours.state)) },
     );
     let t_serve = Instant::now();
     let rxs = handle.submit_many(

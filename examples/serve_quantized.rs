@@ -1,18 +1,23 @@
 //! Serving scenario: a mixed workload of generation requests (different
 //! sizes, step counts and samplers) against the 4-bit quantized model,
-//! demonstrating step-level continuous batching and reporting
-//! latency/throughput — the edge-deployment story of the paper's intro.
+//! demonstrating step-level continuous batching, plus the online
+//! recalibration loop: a (simulated) drifted activation stream fed into
+//! the coordinator's sketch handle triggers a background drift check and
+//! a between-rounds qparams hot-swap — the edge-deployment story of the
+//! paper's intro carried into long-running serving.
 //!
 //!   make artifacts && cargo run --release --example serve_quantized
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 use msfp::config::{MethodSpec, Scale};
-use msfp::coordinator::{self, Request, ServeMode, ServerCfg};
+use msfp::coordinator::{self, Request, ServeMode, ServeRecal, ServerCfg};
 use msfp::data::Corpus;
 use msfp::eval::generate::SamplerKind;
 use msfp::pipeline::Pipeline;
+use msfp::quant::msfp::{Method, QuantOpts};
+use msfp::recal::SketchSet;
 use msfp::runtime::Denoiser;
 use msfp::util::rng::Rng;
 
@@ -20,11 +25,43 @@ fn main() -> Result<()> {
     let pl = Pipeline::new(&Pipeline::default_artifacts_dir(), Scale::from_env())?;
     let p = pl.prepare(Corpus::CifarSyn)?;
 
-    // quantize to W4A4 (PTQ-only here: serving setup time matters)
-    let calib = pl.calibrate(&p)?;
+    // quantize to W4A4 (PTQ-only here: serving setup time matters), keeping
+    // the search session alive — it is the recalibration baseline
+    let session = pl.build_session(&p)?;
     let mut spec = MethodSpec::ours(4, 2, 0);
     spec.finetune = None;
-    let q = pl.quantize(&p, &spec, &calib)?;
+    let q = pl.quantize_with_session(&p, &session, &spec)?;
+
+    // online recalibration: producers feed per-layer activation sketches
+    // through this handle; here we simulate drift on layer 0 by replaying
+    // its calibration stream shifted and rescaled
+    let info = &p.info;
+    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4)
+        .with_io_8bit(&info.io_layer_indices());
+    let sketches = Arc::new(Mutex::new(SketchSet::new(
+        info.n_layers,
+        4,
+        256,
+        pl.sched.t_total,
+        7,
+    )));
+    {
+        let mut set = sketches.lock().unwrap();
+        let mut rng = Rng::new(8);
+        for (l, c) in session.calib().iter().enumerate() {
+            let (scale, shift) = if l == 0 { (1.6, 0.4) } else { (1.0, 0.0) };
+            for chunk in c.acts.chunks(128) {
+                let t = rng.range(0.0, pl.sched.t_total as f32);
+                let vals: Vec<f32> = chunk.iter().map(|v| v * scale + shift).collect();
+                set.observe(l, t, &vals);
+            }
+            // exact extrema: the subsampled acts miss the full-tensor
+            // min/max the baseline carries
+            set.widen_layer(l, 0.0, c.min * scale + shift, c.max * scale + shift);
+        }
+    }
+    let mut recal = ServeRecal::new(session, opts, Arc::clone(&sketches));
+    recal.every_rounds = 4;
 
     let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &p.info)?);
     let handle = coordinator::spawn(
@@ -32,7 +69,7 @@ fn main() -> Result<()> {
         p.info.clone(),
         pl.sched.clone(),
         Arc::new(p.params.clone()),
-        ServerCfg { mode: ServeMode::Quant(q.state), decode_latents: false, seed: 4, workers: 0 },
+        ServerCfg { seed: 4, recal: Some(recal), ..ServerCfg::new(ServeMode::Quant(q.state)) },
     );
 
     // mixed workload: bursts of small interactive requests + large batch
@@ -65,6 +102,10 @@ fn main() -> Result<()> {
         "continuous batching lifted mean batch to {:.1} ({}% slot fill)",
         m.mean_batch(),
         (m.mean_fill() * 100.0) as u32
+    );
+    println!(
+        "online recalibration: {} drift check(s), {} hot-swap(s) covering {} layer(s)",
+        m.recal_checks, m.recal_swaps, m.recal_layers
     );
     Ok(())
 }

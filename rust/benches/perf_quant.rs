@@ -7,7 +7,7 @@
 use std::path::Path;
 use std::time::Duration;
 
-use msfp::coordinator::batcher::{plan, Ticket};
+use msfp::coordinator::batcher::{plan, plan_mode, PlanMode, Ticket};
 use msfp::quant::fp::{fp_qdq_signed, fp_qdq_unsigned};
 use msfp::quant::msfp::{quantize_model, LayerCalib, Method, QuantOpts};
 use msfp::quant::search::{scalar, search_act_msfp, search_weight_fp};
@@ -118,6 +118,42 @@ fn main() {
         }
     }));
 
+    // Online-recalibration cost (the incremental-rebuild headline): after a
+    // drift check flags ONE layer of a 12-layer model, `recal_one_layer`
+    // applies update_layer_calib + re-quantize on the warm session (one
+    // activation engine rebuilt, one layer's searches re-scored, eleven
+    // layers replayed from memo) vs `rebuild_full_session`, the cold path a
+    // session-less consumer pays (every engine re-sorted, every search
+    // re-run). The acceptance gate: recal_one_layer must beat
+    // rebuild_full_session.
+    let mut rc_weights = Vec::new();
+    let mut rc_calib = Vec::new();
+    for l in 0..12 {
+        rc_weights.push(rng.normal_vec(4096, 0.1));
+        let a: Vec<f32> = (0..2048)
+            .map(|_| {
+                let v = rng.normal() * 2.0;
+                if l % 2 == 0 { v / (1.0 + (-v).exp()) } else { v }
+            })
+            .collect();
+        rc_calib.push(LayerCalib::from_samples(format!("rc{l}"), a, l % 2 == 0));
+    }
+    let rc_opts = QuantOpts::new(Method::Msfp, 12, 4, 4);
+    let drifted: Vec<f32> = rc_calib[5].acts.iter().map(|v| v * 1.3 + 0.4).collect();
+    let drifted = LayerCalib::from_samples("rc5", drifted, rc_calib[5].aal_hint);
+    let mut rc_updated = rc_calib.clone();
+    rc_updated[5] = drifted.clone();
+
+    let mut warm = QuantSession::new(&rc_weights, &rc_calib);
+    black_box(warm.quantize(&rc_opts)); // build engines + memos once
+    results.push(bench_with_budget("recal_one_layer", Duration::from_secs(4), || {
+        warm.update_layer_calib(5, drifted.clone());
+        black_box(warm.quantize(&rc_opts));
+    }));
+    results.push(bench_with_budget("rebuild_full_session", Duration::from_secs(6), || {
+        black_box(QuantSession::new(&rc_weights, &rc_updated).quantize(&rc_opts));
+    }));
+
     // batcher planning
     let tickets: Vec<Ticket> = (0..64)
         .map(|i| Ticket { req: i, t: (i % 7) as f32, n: 1 + i % 5 })
@@ -125,6 +161,13 @@ fn main() {
     results.push(bench_with_budget("batcher_plan_64_tickets", Duration::from_secs(1), || {
         black_box(plan(&tickets, &[1, 2, 4, 8]));
     }));
+    results.push(bench_with_budget(
+        "batcher_plan_mixed_t_64_tickets",
+        Duration::from_secs(1),
+        || {
+            black_box(plan_mode(&tickets, &[1, 2, 4, 8], PlanMode::MixedT));
+        },
+    ));
 
     // non-fatal: the measurements above are already printed; don't discard
     // a completed run over an unwritable path

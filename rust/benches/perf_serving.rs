@@ -10,17 +10,25 @@
 //! BENCH_SERVING_JSON) via util::bench::write_json_rows:
 //!   * `serve_eval_{fp,q}_b{B}` timing rows (per-eval latency by class);
 //!   * `coordinator_sequential_exec` / `coordinator_parallel` img/s rows;
-//!   * `selection_cache_hit_rate` + round exec/sched split metric rows.
+//!   * `selection_cache_hit_rate` + round exec/sched split metric rows;
+//!   * `hot_swap_stall`: mean-round-latency delta of a serve run whose
+//!     background recalibration lands qparams hot-swaps vs the same run
+//!     without recalibration (the cost of swap application + check
+//!     scheduling as seen by the scheduler loop, NOT of the search itself,
+//!     which runs on the pool).
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use msfp::coordinator::{self, Metrics, Request, ServeMode, ServerCfg};
+use msfp::coordinator::{self, Metrics, Request, ServeMode, ServeRecal, ServerCfg};
 use msfp::lora::hub::AllocStrategy;
 use msfp::lora::Router;
 use msfp::model::manifest::Manifest;
 use msfp::model::ParamStore;
 use msfp::pipeline::Pipeline;
+use msfp::quant::msfp::{LayerCalib, Method, QuantOpts};
+use msfp::quant::QuantSession;
+use msfp::recal::SketchSet;
 use msfp::runtime::{Denoiser, Engine, QuantState};
 use msfp::schedule::Schedule;
 use msfp::util::bench::{bench_with_budget, metric_row, write_json_rows};
@@ -47,18 +55,14 @@ fn serve_workload(
     params: &Arc<Vec<f32>>,
     qs: &QuantState,
     workers: usize,
+    recal: Option<ServeRecal>,
 ) -> (f64, Metrics) {
     let handle = coordinator::spawn(
         Arc::clone(den),
         info.clone(),
         sched.clone(),
         Arc::clone(params),
-        ServerCfg {
-            mode: ServeMode::Quant(qs.clone()),
-            decode_latents: false,
-            seed: 1,
-            workers,
-        },
+        ServerCfg { seed: 1, workers, recal, ..ServerCfg::new(ServeMode::Quant(qs.clone())) },
     );
     let t0 = Instant::now();
     let rxs = handle.submit_many(workload()).unwrap();
@@ -68,6 +72,14 @@ fn serve_workload(
     let wall = t0.elapsed().as_secs_f64();
     let m = handle.shutdown();
     (m.images_done as f64 / wall, m)
+}
+
+/// Mean scheduler-observed round latency in ms (exec + sched over rounds).
+fn mean_round_ms(m: &Metrics) -> f64 {
+    if m.rounds == 0 {
+        return 0.0;
+    }
+    (m.round_exec + m.round_sched).as_secs_f64() * 1e3 / m.rounds as f64
 }
 
 fn main() {
@@ -128,11 +140,11 @@ fn main() {
     println!("\n-- coordinator throughput (16 requests x 2 images, 6/9 steps mixed, quantized) --");
     // warmup run so the executor comparison is not confounded by lazy
     // artifact compilation
-    serve_workload(&den, &info, &sched, &params, &qs, 1);
+    serve_workload(&den, &info, &sched, &params, &qs, 1, None);
 
-    let (seq_thpt, seq_m) = serve_workload(&den, &info, &sched, &params, &qs, 1);
+    let (seq_thpt, seq_m) = serve_workload(&den, &info, &sched, &params, &qs, 1, None);
     println!("  sequential-exec (workers=1): {}", seq_m.report());
-    let (par_thpt, par_m) = serve_workload(&den, &info, &sched, &params, &qs, 0);
+    let (par_thpt, par_m) = serve_workload(&den, &info, &sched, &params, &qs, 0, None);
     println!("  parallel-exec   (workers=auto): {}", par_m.report());
     println!(
         "  parallel/sequential throughput: {:.2}x  (sel-cache hit rate {:.0}%)",
@@ -152,6 +164,71 @@ fn main() {
         seq_m.exec_fraction(),
         "ratio",
     ));
+
+    // --- hot-swap stall: round latency with a recal swap landing ----------
+    // The recal session runs over the real layer weights with a synthetic
+    // calibration; its sketches replay that calibration *shifted*, so the
+    // first background check flags every layer and a hot-swap lands while
+    // the workload is in flight. The stall metric compares the scheduler's
+    // mean round latency against the no-recal parallel run above.
+    println!("\n-- hot-swap stall (same workload, background recal swap mid-serve) --");
+    let weights = ParamStore::from_vec(&info, (*params).clone())
+        .unwrap()
+        .layer_weights(&info)
+        .unwrap();
+    let calib: Vec<LayerCalib> = (0..info.n_layers)
+        .map(|l| {
+            let a: Vec<f32> = (0..1024)
+                .map(|_| {
+                    let v = rng.normal() * 2.0;
+                    if l % 2 == 0 { v / (1.0 + (-v).exp()) } else { v }
+                })
+                .collect();
+            LayerCalib::from_samples(format!("serve_l{l}"), a, l % 2 == 0)
+        })
+        .collect();
+    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4);
+    let session = QuantSession::from_owned(weights, calib.clone());
+    let _ = session.quantize(&opts); // warm: the background job pays only the drifted layers
+    let sketches = Arc::new(Mutex::new(SketchSet::new(
+        info.n_layers,
+        4,
+        256,
+        sched.t_total,
+        3,
+    )));
+    {
+        let mut set = sketches.lock().unwrap();
+        let mut feed = Rng::new(9);
+        for (l, c) in calib.iter().enumerate() {
+            for chunk in c.acts.chunks(128) {
+                let t = feed.range(0.0, sched.t_total as f32);
+                let vals: Vec<f32> = chunk.iter().map(|v| v + 0.8).collect();
+                set.observe(l, t, &vals);
+            }
+            set.widen_layer(l, 0.0, c.min + 0.8, c.max + 0.8);
+        }
+    }
+    let mut recal = ServeRecal::new(session, opts, sketches);
+    recal.every_rounds = 2;
+    let (_swap_thpt, swap_m) = serve_workload(&den, &info, &sched, &params, &qs, 0, Some(recal));
+    println!("  with-recal (workers=auto): {}", swap_m.report());
+    let stall = mean_round_ms(&swap_m) - mean_round_ms(&par_m);
+    println!(
+        "  mean round {:.3} ms vs {:.3} ms without recal -> stall {:+.3} ms ({} swap(s), {} layer(s))",
+        mean_round_ms(&swap_m),
+        mean_round_ms(&par_m),
+        stall,
+        swap_m.recal_swaps,
+        swap_m.recal_layers
+    );
+    if swap_m.recal_swaps == 0 {
+        println!("  WARNING: no swap landed during the workload; stall row reflects checks only");
+    }
+    rows.push(metric_row("coordinator_round_ms_no_recal", mean_round_ms(&par_m), "ms"));
+    rows.push(metric_row("coordinator_round_ms_recal_swap", mean_round_ms(&swap_m), "ms"));
+    rows.push(metric_row("hot_swap_stall", stall, "ms"));
+    rows.push(metric_row("hot_swap_count", swap_m.recal_swaps as f64, "swaps"));
 
     let path =
         std::env::var("BENCH_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".to_string());

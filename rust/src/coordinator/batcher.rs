@@ -5,6 +5,15 @@
 //! a batch. Each scheduling round takes every pending evaluation ticket,
 //! groups by t, packs FIFO-greedily into the compiled batch-size classes,
 //! and returns the execution plan.
+//!
+//! The FP graph has no such constraint — it takes per-sample t — so FP
+//! rounds may plan *mixed-t* batches ([`PlanMode::MixedT`]): tickets pack
+//! FIFO across timesteps, cutting the number of (padded) evaluations per
+//! round when concurrent requests sit at different denoising phases.
+//! Per-sample results are unchanged — a batch slot computes the same
+//! function of its own (x, t, cond) regardless of batchmates — and the
+//! executor-level parity test (`coordinator::exec`) plus the FP serving
+//! integration test pin the mixed-t scatter bitwise against same-t plans.
 
 /// One pending model evaluation: request `req` needs its `n` samples
 /// evaluated at timestep `t`.
@@ -15,7 +24,19 @@ pub struct Ticket {
     pub n: usize,
 }
 
-/// A planned batch: same-t tickets packed to `class` slots.
+/// Whether a round's batches must share a timestep (quantized serving:
+/// TALoRA routes per timestep) or may mix them (FP serving: the graph
+/// takes per-sample t).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanMode {
+    SameT,
+    MixedT,
+}
+
+/// A planned batch: tickets packed to `class` slots. Under
+/// [`PlanMode::SameT`] all tickets share `t`; under [`PlanMode::MixedT`]
+/// `t` is the first ticket's timestep (a label only — consumers needing
+/// per-sample timesteps read them off the tickets).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Batch {
     pub t: f32,
@@ -34,9 +55,20 @@ impl Batch {
     }
 }
 
-/// Pack tickets into batches. `classes` must be the ascending compiled
-/// batch sizes. Tickets larger than the max class are split.
+/// Pack tickets into same-t batches (the quantized-serving constraint).
+/// `classes` must be the ascending compiled batch sizes. Tickets larger
+/// than the max class are split. Equivalent to
+/// `plan_mode(.., PlanMode::SameT)`.
 pub fn plan(tickets: &[Ticket], classes: &[usize]) -> Vec<Batch> {
+    plan_mode(tickets, classes, PlanMode::SameT)
+}
+
+/// Mode-aware packing: [`PlanMode::SameT`] groups by exact t bits before
+/// packing (samplers produce identical t for identical phases);
+/// [`PlanMode::MixedT`] packs all tickets FIFO into one stream regardless
+/// of timestep. Ticket order within a request is preserved in both modes,
+/// so [`ticket_offsets`] assigns identical per-request sample ranges.
+pub fn plan_mode(tickets: &[Ticket], classes: &[usize], mode: PlanMode) -> Vec<Batch> {
     assert!(!classes.is_empty());
     let max = *classes.last().unwrap();
     // split oversized tickets
@@ -49,18 +81,22 @@ pub fn plan(tickets: &[Ticket], classes: &[usize]) -> Vec<Batch> {
             left -= take;
         }
     }
-    // group by t (exact bits; samplers produce identical t for identical
-    // phases)
-    let mut groups: Vec<(u32, Vec<Ticket>)> = Vec::new();
-    for tk in items {
-        let key = tk.t.to_bits();
-        match groups.iter_mut().find(|(k, _)| *k == key) {
-            Some((_, v)) => v.push(tk),
-            None => groups.push((key, vec![tk])),
+    let groups: Vec<Vec<Ticket>> = match mode {
+        PlanMode::MixedT => vec![items],
+        PlanMode::SameT => {
+            let mut groups: Vec<(u32, Vec<Ticket>)> = Vec::new();
+            for tk in items {
+                let key = tk.t.to_bits();
+                match groups.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, v)) => v.push(tk),
+                    None => groups.push((key, vec![tk])),
+                }
+            }
+            groups.into_iter().map(|(_, v)| v).collect()
         }
-    }
+    };
     let mut out = Vec::new();
-    for (_, group) in groups {
+    for group in groups {
         let mut current: Vec<Ticket> = Vec::new();
         let mut used = 0usize;
         for tk in group {
@@ -266,6 +302,89 @@ mod tests {
                         .all(|b| b.tickets.iter().all(|tk| tk.t == b.t))
             },
         );
+    }
+
+    #[test]
+    fn mixed_t_merges_across_timesteps() {
+        let tickets =
+            vec![Ticket { req: 0, t: 5.0, n: 2 }, Ticket { req: 1, t: 6.0, n: 3 }];
+        // same-t: two batches; mixed-t: one class-8 batch
+        assert_eq!(plan(&tickets, CLASSES).len(), 2);
+        let mixed = plan_mode(&tickets, CLASSES, PlanMode::MixedT);
+        assert_eq!(mixed.len(), 1);
+        assert_eq!(mixed[0].used(), 5);
+        assert_eq!(mixed[0].class, 8);
+        // per-ticket timesteps survive in the plan
+        assert_eq!(mixed[0].tickets[0].t, 5.0);
+        assert_eq!(mixed[0].tickets[1].t, 6.0);
+    }
+
+    #[test]
+    fn mixed_t_equals_same_t_on_uniform_timesteps() {
+        let tickets: Vec<Ticket> =
+            (0..7).map(|i| Ticket { req: i, t: 3.0, n: 1 + i % 4 }).collect();
+        assert_eq!(
+            plan(&tickets, CLASSES),
+            plan_mode(&tickets, CLASSES, PlanMode::MixedT)
+        );
+    }
+
+    #[test]
+    fn prop_mixed_t_conservation_and_offsets() {
+        prop::check(
+            "mixed-t-conservation",
+            200,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(16);
+                (0..n)
+                    .map(|i| Ticket {
+                        req: i,
+                        t: rng.below(6) as f32,
+                        n: 1 + rng.below(14),
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |tickets| {
+                let batches = plan_mode(tickets, CLASSES, PlanMode::MixedT);
+                let total_in: usize = tickets.iter().map(|t| t.n).sum();
+                let total_out: usize = batches.iter().map(|b| b.used()).sum();
+                if total_in != total_out || batches.iter().any(|b| b.used() > b.class) {
+                    return false;
+                }
+                // offsets tile each request's samples contiguously, exactly
+                // as under same-t planning
+                let offs = ticket_offsets(&batches, tickets.len());
+                let mut chunks: Vec<Vec<(usize, usize)>> = vec![Vec::new(); tickets.len()];
+                for (b, off) in batches.iter().zip(&offs) {
+                    for (tk, &start) in b.tickets.iter().zip(off) {
+                        chunks[tk.req].push((start, tk.n));
+                    }
+                }
+                tickets.iter().all(|tk| {
+                    let mut expect = 0;
+                    for &(start, n) in &chunks[tk.req] {
+                        if start != expect {
+                            return false;
+                        }
+                        expect += n;
+                    }
+                    expect == tk.n
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn mixed_t_cuts_batches_on_scattered_singletons() {
+        // the serving shape: one small ticket per request, timesteps spread
+        // across denoising phases — same-t planning yields one tiny batch
+        // per distinct t, mixed-t packs them into full classes
+        let tickets: Vec<Ticket> =
+            (0..12).map(|i| Ticket { req: i, t: i as f32, n: 1 }).collect();
+        assert_eq!(plan(&tickets, CLASSES).len(), 12);
+        let mixed = plan_mode(&tickets, CLASSES, PlanMode::MixedT);
+        assert_eq!(mixed.len(), 2); // 8 + 4
+        assert!(mixed.iter().all(|b| b.fill() >= 0.99));
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! ([`RoundExecutor::offload`]): latent decode and response sends run here
 //! so the scheduler can start planning the next round immediately.
 //!
-//! Marshalling buffers (gather x/cond, pad scratch, eps outputs) are
+//! Marshalling buffers (gather x/ts/cond, pad scratch, eps outputs) are
 //! recycled through a shared store, so steady-state rounds allocate O(1)
 //! regardless of batch count.
 
@@ -30,29 +30,32 @@ use anyhow::{anyhow, Result};
 use crate::runtime::{Denoiser, EpsScratch, QuantState};
 use crate::util::threadpool::{resolve_threads, Pool};
 
-/// Serve-mode model flavor, shared (read-only) with every worker.
-#[derive(Clone)]
-pub enum ExecMode {
-    Fp,
-    Quant(Arc<QuantState>),
-}
-
-/// Everything a worker needs to evaluate a batch.
+/// Everything a worker needs to evaluate a batch. The model flavor rides
+/// on each [`BatchJob`] (`qs`), not here: the scheduler pins the
+/// `QuantState` per round when it builds the jobs, which is what lets a
+/// background recalibration hot-swap the state *between* rounds without
+/// any worker observing a mid-round change.
 pub struct EvalCtx {
     pub den: Arc<Denoiser>,
     pub params: Arc<Vec<f32>>,
-    pub mode: ExecMode,
 }
 
 /// One gathered batch, ready to evaluate: `idx` is its position in the
 /// round plan (and the slot its result scatters back into).
 pub struct BatchJob {
     pub idx: usize,
+    /// the batch's (first ticket's) timestep — the quantized path's
+    /// uniform t, and a display label for FP mixed-t batches
     pub t: f32,
     pub x: Vec<f32>,
+    /// per-sample timesteps (len == sample count); uniform under same-t
+    /// planning, mixed for FP `PlanMode::MixedT` batches
+    pub ts: Vec<f32>,
     pub cond: Vec<f32>,
     /// precomputed `[L, H]` selection (quant mode; None for FP)
     pub sel: Option<Arc<Vec<f32>>>,
+    /// quantized state pinned for this round (None => FP path)
+    pub qs: Option<Arc<QuantState>>,
 }
 
 /// A batch's outcome, returned in plan order. The job rides along so its
@@ -69,14 +72,15 @@ pub struct BatchResult {
 pub type EvalFn = dyn Fn(&BatchJob, &mut EpsScratch, &mut Vec<f32>) -> Result<()> + Send + Sync;
 
 /// The production eval closure over a [`EvalCtx`]: FP batches go through
-/// the uniform-t marshalling path, quantized batches through
-/// `eps_q_with_sel_into` with the job's precomputed (cached) selection.
+/// the per-sample-t marshalling path (`eps_fp_into`; bit-identical to the
+/// old uniform-t path when all ts agree — pinned by the Denoiser
+/// `into_variants` test — and required for mixed-t batches), quantized
+/// batches through `eps_q_with_sel_into` with the job's pinned state and
+/// precomputed (cached) selection.
 pub fn eval_closure(ctx: EvalCtx) -> Arc<EvalFn> {
-    Arc::new(move |job: &BatchJob, pad: &mut EpsScratch, out: &mut Vec<f32>| match &ctx.mode {
-        ExecMode::Fp => {
-            ctx.den.eps_fp_uniform_into(&ctx.params, &job.x, job.t, &job.cond, pad, out)
-        }
-        ExecMode::Quant(qs) => {
+    Arc::new(move |job: &BatchJob, pad: &mut EpsScratch, out: &mut Vec<f32>| match &job.qs {
+        None => ctx.den.eps_fp_into(&ctx.params, &job.x, &job.ts, &job.cond, pad, out),
+        Some(qs) => {
             let sel = job.sel.as_ref().expect("quant batch without selection");
             ctx.den.eps_q_with_sel_into(&ctx.params, qs, sel, &job.x, job.t, &job.cond, pad, out)
         }
@@ -87,7 +91,7 @@ pub fn eval_closure(ctx: EvalCtx) -> Arc<EvalFn> {
 /// (gather buffers) and the workers (pad scratch, output buffers).
 #[derive(Default)]
 struct BufStore {
-    gathers: Vec<(Vec<f32>, Vec<f32>)>,
+    gathers: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
     pads: Vec<EpsScratch>,
     outs: Vec<Vec<f32>>,
 }
@@ -111,8 +115,9 @@ impl RoundExecutor {
         RoundExecutor { pool, bufs: Arc::new(Mutex::new(BufStore::default())), res_tx, res_rx }
     }
 
-    /// A cleared (x, cond) gather-buffer pair, recycled when available.
-    pub fn gather_bufs(&self) -> (Vec<f32>, Vec<f32>) {
+    /// A cleared (x, ts, cond) gather-buffer triple, recycled when
+    /// available.
+    pub fn gather_bufs(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         self.bufs.lock().unwrap().gathers.pop().unwrap_or_default()
     }
 
@@ -120,9 +125,10 @@ impl RoundExecutor {
     /// the store for the next round.
     pub fn recycle(&self, mut job: BatchJob, eps: Option<Vec<f32>>) {
         job.x.clear();
+        job.ts.clear();
         job.cond.clear();
         let mut bufs = self.bufs.lock().unwrap();
-        bufs.gathers.push((job.x, job.cond));
+        bufs.gathers.push((job.x, job.ts, job.cond));
         if let Some(mut e) = eps {
             e.clear();
             bufs.outs.push(e);
@@ -220,10 +226,12 @@ fn eval_one(bufs: &Mutex<BufStore>, eval: &EvalFn, job: BatchJob) -> BatchResult
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::batcher::{plan_mode, ticket_offsets, PlanMode, Ticket};
     use std::sync::atomic::{AtomicUsize, Ordering};
 
-    /// Deterministic synthetic eval: eps[i] = 2*x[i] + t (+ cond broadcast
-    /// per sample), failing or panicking on request.
+    /// Deterministic *per-sample* synthetic eval: eps for sample j is a
+    /// pure function of (x_j, ts_j, cond_j) — the same batch-composition
+    /// independence the FP graph has — failing or panicking on request.
     fn fake_eval(fail_t: Option<f32>, panic_t: Option<f32>) -> Arc<EvalFn> {
         Arc::new(move |job: &BatchJob, _pad: &mut EpsScratch, out: &mut Vec<f32>| {
             if Some(job.t) == fail_t {
@@ -235,7 +243,8 @@ mod tests {
             out.clear();
             let per = job.x.len() / job.cond.len().max(1);
             for (i, &v) in job.x.iter().enumerate() {
-                out.push(2.0 * v + job.t + job.cond[i / per.max(1)]);
+                let j = i / per.max(1);
+                out.push(2.0 * v + job.ts[j] + job.cond[j]);
             }
             Ok(())
         })
@@ -247,15 +256,101 @@ mod tests {
             .map(|i| {
                 let n = 1 + (i * 7) % 5;
                 let per = 3;
+                let t = (i % 6) as f32 * 1.25;
                 BatchJob {
                     idx: i,
-                    t: (i % 6) as f32 * 1.25,
+                    t,
                     x: (0..n * per).map(|k| (i * 31 + k) as f32 * 0.125).collect(),
+                    ts: vec![t; n],
                     cond: (0..n).map(|k| k as f32).collect(),
                     sel: None,
+                    qs: None,
                 }
             })
             .collect()
+    }
+
+    /// Gather jobs from a plan the way the scheduler does: request `req`'s
+    /// sample `k` has x = req·16 + k (3 values per sample) and cond = req.
+    fn jobs_from_plan(
+        batches: &[crate::coordinator::batcher::Batch],
+        offsets: &[Vec<usize>],
+        per: usize,
+    ) -> Vec<BatchJob> {
+        batches
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| {
+                let mut x = Vec::new();
+                let mut ts = Vec::new();
+                let mut cond = Vec::new();
+                for (tk, &start) in b.tickets.iter().zip(&offsets[bi]) {
+                    for k in start..start + tk.n {
+                        for d in 0..per {
+                            x.push((tk.req * 16 + k) as f32 + d as f32 * 0.25);
+                        }
+                        ts.push(tk.t);
+                        cond.push(tk.req as f32);
+                    }
+                }
+                BatchJob { idx: bi, t: b.t, x, ts, cond, sel: None, qs: None }
+            })
+            .collect()
+    }
+
+    /// The FP mixed-t satellite's bitwise pin at the executor level: the
+    /// same tickets planned same-t vs mixed-t, evaluated by a per-sample
+    /// function and scattered at ticket_offsets, produce bit-identical
+    /// per-request results — batch composition does not leak into any
+    /// sample.
+    #[test]
+    fn mixed_t_plan_scatters_bit_identical_to_same_t() {
+        let per = 3;
+        let tickets: Vec<Ticket> = (0..9)
+            .map(|i| Ticket { req: i, t: (i % 4) as f32 * 2.5, n: 1 + i % 3 })
+            .collect();
+        let classes = &[1usize, 2, 4, 8];
+        let eval = fake_eval(None, None);
+
+        let run = |mode: PlanMode, workers: usize| -> Vec<Vec<u32>> {
+            let batches = plan_mode(&tickets, classes, mode);
+            let offsets = ticket_offsets(&batches, tickets.len());
+            let exec = RoundExecutor::new(workers);
+            let results = exec.run_with(&eval, jobs_from_plan(&batches, &offsets, per));
+            // scatter into per-request sample ranges, exactly like the
+            // scheduler loop
+            let mut out: Vec<Vec<u32>> =
+                tickets.iter().map(|tk| vec![0u32; tk.n * per]).collect();
+            for r in results {
+                let eps = r.eps.unwrap();
+                let batch = &batches[r.idx];
+                let mut off = 0;
+                for (tk, &start) in batch.tickets.iter().zip(&offsets[r.idx]) {
+                    for (slot, &v) in out[tk.req][start * per..(start + tk.n) * per]
+                        .iter_mut()
+                        .zip(&eps[off * per..(off + tk.n) * per])
+                    {
+                        *slot = v.to_bits();
+                    }
+                    off += tk.n;
+                }
+            }
+            out
+        };
+
+        let same = run(PlanMode::SameT, 1);
+        for workers in [1usize, 4] {
+            assert_eq!(
+                same,
+                run(PlanMode::MixedT, workers),
+                "mixed-t scatter diverged (workers={workers})"
+            );
+        }
+        // sanity: the plans actually differed (the pin is not vacuous)
+        assert_ne!(
+            plan_mode(&tickets, classes, PlanMode::SameT).len(),
+            plan_mode(&tickets, classes, PlanMode::MixedT).len()
+        );
     }
 
     fn run_round(workers: usize, eval: &Arc<EvalFn>) -> Vec<Result<Vec<f32>>> {
@@ -338,8 +433,9 @@ mod tests {
             exec.recycle(r.job, eps);
         }
         // next round's gather bufs come from the store, already allocated
-        let (x, cond) = exec.gather_bufs();
+        let (x, ts, cond) = exec.gather_bufs();
         assert!(x.capacity() > 0 && x.is_empty());
+        assert!(ts.capacity() > 0 && ts.is_empty());
         assert!(cond.capacity() > 0 && cond.is_empty());
     }
 

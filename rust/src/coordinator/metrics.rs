@@ -21,6 +21,12 @@ pub struct Metrics {
     /// per-timestep selection cache outcomes (quant serving)
     pub sel_hits: u64,
     pub sel_misses: u64,
+    /// background drift checks launched (online recalibration)
+    pub recal_checks: usize,
+    /// qparams hot-swaps applied at round boundaries
+    pub recal_swaps: usize,
+    /// drifted layers recalibrated across all swaps
+    pub recal_layers: usize,
 }
 
 impl Metrics {
@@ -79,7 +85,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests {:4}  images {:5}  evals {:6}  rounds {:5}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%  exec {:6.1} ms / sched {:6.1} ms ({:3.0}% exec)  sel-hit {:3.0}%",
+            "requests {:4}  images {:5}  evals {:6}  rounds {:5}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%  exec {:6.1} ms / sched {:6.1} ms ({:3.0}% exec)  sel-hit {:3.0}%  recal {}/{} swaps ({} layers)",
             self.latencies.len(),
             self.images_done,
             self.evals,
@@ -92,7 +98,10 @@ impl Metrics {
             self.round_exec.as_secs_f64() * 1e3,
             self.round_sched.as_secs_f64() * 1e3,
             self.exec_fraction() * 100.0,
-            self.sel_hit_rate() * 100.0
+            self.sel_hit_rate() * 100.0,
+            self.recal_swaps,
+            self.recal_checks,
+            self.recal_layers
         )
     }
 }
@@ -173,6 +182,19 @@ mod tests {
         assert_eq!(m.mean_batch(), 0.0);
         assert_eq!(m.exec_fraction(), 0.0);
         assert_eq!(m.sel_hit_rate(), 0.0);
+        assert_eq!((m.recal_checks, m.recal_swaps, m.recal_layers), (0, 0, 0));
         let _ = m.report();
+    }
+
+    #[test]
+    fn recal_counters_render_in_report() {
+        let m = Metrics {
+            recal_checks: 5,
+            recal_swaps: 2,
+            recal_layers: 7,
+            ..Default::default()
+        };
+        let r = m.report();
+        assert!(r.contains("recal 2/5 swaps (7 layers)"), "{r}");
     }
 }

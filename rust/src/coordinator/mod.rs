@@ -11,4 +11,4 @@ pub mod server;
 pub use exec::RoundExecutor;
 pub use metrics::Metrics;
 pub use request::{Request, Response};
-pub use server::{spawn, ServeMode, ServerCfg, ServerHandle};
+pub use server::{spawn, ServeMode, ServeRecal, ServerCfg, ServerHandle};

@@ -16,6 +16,15 @@
 //!   * quantized selections are memoized per timestep in a
 //!     `lora::SelectionCache` — every batch eval goes through
 //!     `eps_q_with_sel` with an `Arc`'d cached selection;
+//!   * FP rounds plan *mixed-t* batches by default (the FP graph takes
+//!     per-sample t; only the quantized TALoRA path is same-t
+//!     constrained), so scattered denoising phases still pack full
+//!     batches;
+//!   * a quantized server may carry a [`ServeRecal`] config: drift checks
+//!     against externally fed activation sketches run as background jobs
+//!     on the worker pool, and re-searched qparams hot-swap atomically at
+//!     round boundaries (never mid-round — each round's batches pin the
+//!     `QuantState` they were planned with);
 //!   * new requests join at the next round (continuous batching): a long
 //!     request never blocks a short one, same-t requests share compute.
 //!
@@ -24,8 +33,8 @@
 //! bit-identical images to a server with 1 worker given the same rounds
 //! (pinned by `rust/tests/integration.rs`).
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -34,12 +43,15 @@ use anyhow::{anyhow, Result};
 use crate::data::PatchAutoencoder;
 use crate::lora::SelectionCache;
 use crate::model::manifest::ModelInfo;
+use crate::quant::msfp::QuantOpts;
+use crate::quant::session::QuantSession;
+use crate::recal::{RecalPlanner, SketchSet};
 use crate::runtime::{Denoiser, QuantState};
 use crate::schedule::{timestep_subsequence, DdimSampler, DpmSolver2, PlmsSampler, Sampler, Schedule};
 use crate::util::rng::Rng;
 
-use super::batcher::{plan, ticket_offsets, Ticket};
-use super::exec::{eval_closure, BatchJob, EvalCtx, ExecMode, RoundExecutor};
+use super::batcher::{plan_mode, ticket_offsets, PlanMode, Ticket};
+use super::exec::{eval_closure, BatchJob, EvalCtx, RoundExecutor};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 
@@ -135,6 +147,85 @@ pub enum ServeMode {
     Quant(QuantState),
 }
 
+/// Online-recalibration configuration for a quantized server (the serving
+/// consumer of `crate::recal`). External producers — a fine-tune loop, a
+/// shadow calibration prober, a monitoring sidecar — feed activation
+/// sketches through the shared `sketches` handle; every `every_rounds`
+/// scheduling rounds the coordinator runs the drift check → plan →
+/// incremental re-search as a background job on its worker pool, and the
+/// scheduler atomically swaps the re-searched qparams in **between**
+/// rounds (a round's batches pin the `QuantState` they were planned with,
+/// so no evaluation ever observes a mid-round change). TALoRA selections
+/// depend only on the router/hub-mask/strategy, none of which a qparams
+/// swap touches, so the per-timestep selection cache stays valid across
+/// swaps.
+pub struct ServeRecal {
+    /// the session the serving qparams were searched on — owns the drift
+    /// baseline, which advances as updates are applied
+    pub session: QuantSession<'static>,
+    /// knobs matching the original search (untouched layers replay their
+    /// memoized winners)
+    pub opts: QuantOpts,
+    pub planner: RecalPlanner,
+    /// live activation sketches (shared with the producers)
+    pub sketches: Arc<Mutex<SketchSet>>,
+    /// drift-check cadence in scheduling rounds
+    pub every_rounds: usize,
+}
+
+impl ServeRecal {
+    pub fn new(
+        session: QuantSession<'static>,
+        opts: QuantOpts,
+        sketches: Arc<Mutex<SketchSet>>,
+    ) -> ServeRecal {
+        ServeRecal { session, opts, planner: RecalPlanner::default(), sketches, every_rounds: 8 }
+    }
+}
+
+/// Shared state of the background recalibration job (scheduler thread +
+/// pool workers).
+struct RecalShared {
+    session: Mutex<QuantSession<'static>>,
+    sketches: Arc<Mutex<SketchSet>>,
+    planner: RecalPlanner,
+    opts: QuantOpts,
+    every_rounds: usize,
+    /// re-searched qparams + drifted-layer count, awaiting the next round
+    /// boundary
+    outcome: Mutex<Option<(Vec<f32>, usize)>>,
+    inflight: AtomicBool,
+}
+
+impl RecalShared {
+    /// The background job: snapshot the sketches, score drift against the
+    /// session's current calibration, and on any drifted layer apply the
+    /// incremental updates + re-search and park the new qparams for the
+    /// scheduler. `inflight` is cleared on every exit path (guard) so a
+    /// panic inside the search can't wedge the cadence.
+    fn run_check(&self) {
+        struct Clear<'a>(&'a AtomicBool);
+        impl Drop for Clear<'_> {
+            fn drop(&mut self) {
+                self.0.store(false, Ordering::SeqCst);
+            }
+        }
+        let _clear = Clear(&self.inflight);
+        let snapshot = self.sketches.lock().unwrap().clone();
+        let mut session = self.session.lock().unwrap();
+        let plan = self.planner.plan(session.calib(), &snapshot);
+        if plan.is_empty() {
+            return;
+        }
+        let drifted = plan.layers.len();
+        for rl in plan.layers {
+            session.update_layer_calib(rl.layer, rl.calib);
+        }
+        let scheme = session.quantize(&self.opts);
+        *self.outcome.lock().unwrap() = Some((scheme.qparams_rows(), drifted));
+    }
+}
+
 pub struct ServerCfg {
     pub mode: ServeMode,
     /// decode latents to pixels before responding (LDM variants)
@@ -143,6 +234,28 @@ pub struct ServerCfg {
     /// round-executor worker threads: 0 = available parallelism,
     /// 1 = sequential in-line execution on the scheduler thread
     pub workers: usize,
+    /// FP rounds batch mixed-t tickets (the FP graph takes per-sample t;
+    /// quantized planning is always same-t). On by default; turn off to
+    /// reproduce same-t FP plans (the mixed-t parity test pins both modes
+    /// bit-identical per request)
+    pub fp_mixed_t: bool,
+    /// background drift-tracked recalibration (quantized serving only)
+    pub recal: Option<ServeRecal>,
+}
+
+impl ServerCfg {
+    /// Defaults: no latent decode, seed 0, auto workers, FP mixed-t
+    /// batching on, no recalibration.
+    pub fn new(mode: ServeMode) -> ServerCfg {
+        ServerCfg {
+            mode,
+            decode_latents: false,
+            seed: 0,
+            workers: 0,
+            fp_mixed_t: true,
+            recal: None,
+        }
+    }
 }
 
 /// Spawn the coordinator. `den`/`params` are shared with the scheduler
@@ -177,7 +290,7 @@ fn scheduler_loop(
     params: Arc<Vec<f32>>,
     cfg: ServerCfg,
 ) {
-    let ServerCfg { mode, decode_latents, seed, workers } = cfg;
+    let ServerCfg { mode, decode_latents, seed, workers, fp_mixed_t, recal } = cfg;
     let mut active: Vec<Active> = Vec::new();
     // samples received per active request in the current round
     let mut got: Vec<usize> = Vec::new();
@@ -192,14 +305,36 @@ fn scheduler_loop(
     let mut sel_cache = SelectionCache::new();
     // completion stats flow back from offloaded decode/send jobs
     let (done_tx, done_rx) = mpsc::channel::<Duration>();
-    let mode = match mode {
-        ServeMode::Fp => ExecMode::Fp,
-        ServeMode::Quant(qs) => ExecMode::Quant(Arc::new(qs)),
+    // the scheduler owns the current quantized state; batches pin the Arc
+    // they were planned with, so recalibration swaps are round-atomic
+    let mut qs_cur: Option<Arc<QuantState>> = match mode {
+        ServeMode::Fp => None,
+        ServeMode::Quant(qs) => Some(Arc::new(qs)),
     };
+    let recal: Option<Arc<RecalShared>> = match (recal, qs_cur.is_some()) {
+        (Some(r), true) => Some(Arc::new(RecalShared {
+            session: Mutex::new(r.session),
+            sketches: r.sketches,
+            planner: r.planner,
+            opts: r.opts,
+            every_rounds: r.every_rounds.max(1),
+            outcome: Mutex::new(None),
+            inflight: AtomicBool::new(false),
+        })),
+        (Some(_), false) => {
+            crate::log_warn!("recalibration configured on an FP server: ignored");
+            None
+        }
+        (None, _) => None,
+    };
+    let mut last_check_round = 0usize;
+    // FP graphs take per-sample t, so FP rounds may batch mixed-t tickets;
+    // the quantized TALoRA path stays same-t constrained
+    let pmode =
+        if qs_cur.is_none() && fp_mixed_t { PlanMode::MixedT } else { PlanMode::SameT };
     let evalf = eval_closure(EvalCtx {
         den: Arc::clone(&den),
         params: Arc::clone(&params),
-        mode: mode.clone(),
     });
 
     loop {
@@ -278,27 +413,56 @@ fn scheduler_loop(
             continue;
         }
 
-        // one scheduling round: plan same-t batches over all active
-        // requests, gather every batch's inputs at pre-assigned offsets
+        // between rounds: land a finished recalibration (atomic hot-swap —
+        // the new state only affects batches planned from here on) and
+        // kick off the next drift check on the worker pool when due
+        if let Some(rs) = &recal {
+            if let Some((qparams, drifted)) = rs.outcome.lock().unwrap().take() {
+                if let Some(qs) = &mut qs_cur {
+                    let mut swapped = (**qs).clone();
+                    swapped.qparams = qparams;
+                    *qs = Arc::new(swapped);
+                    metrics.recal_swaps += 1;
+                    metrics.recal_layers += drifted;
+                    crate::log_info!(
+                        "recalibration hot-swap: {drifted} drifted layer(s) at round {}",
+                        metrics.rounds
+                    );
+                }
+            }
+            if metrics.rounds >= last_check_round + rs.every_rounds
+                && !rs.inflight.swap(true, Ordering::SeqCst)
+            {
+                last_check_round = metrics.rounds;
+                metrics.recal_checks += 1;
+                let rs = Arc::clone(rs);
+                exec.offload(move || rs.run_check());
+            }
+        }
+
+        // one scheduling round: plan batches over all active requests
+        // (same-t for quant, mixed-t for FP when enabled), gather every
+        // batch's inputs at pre-assigned offsets
         let sched_t0 = Instant::now();
         let tickets: Vec<Ticket> = active
             .iter()
             .enumerate()
             .map(|(i, a)| Ticket { req: i, t: a.sampler.current_t(), n: a.req.n })
             .collect();
-        let batches = plan(&tickets, &classes);
+        let batches = plan_mode(&tickets, &classes, pmode);
         let offsets = ticket_offsets(&batches, active.len());
         let mut jobs = Vec::with_capacity(batches.len());
         for (bi, batch) in batches.iter().enumerate() {
-            let (mut x, mut cond) = exec.gather_bufs();
+            let (mut x, mut ts, mut cond) = exec.gather_bufs();
             for (tk, &start) in batch.tickets.iter().zip(&offsets[bi]) {
                 let a = &active[tk.req];
                 x.extend_from_slice(&a.x[start * xs..(start + tk.n) * xs]);
+                ts.resize(ts.len() + tk.n, tk.t);
                 cond.extend_from_slice(&a.cond[start..start + tk.n]);
             }
-            let sel = match &mode {
-                ExecMode::Fp => None,
-                ExecMode::Quant(qs) => Some(sel_cache.get_or_compute(batch.t, || {
+            let sel = match &qs_cur {
+                None => None,
+                Some(qs) => Some(sel_cache.get_or_compute(batch.t, || {
                     // fixed strategies draw from a per-t seeded rng, so
                     // even DualRandom selections are a pure function of
                     // (seed, t) and cache exactly
@@ -306,7 +470,7 @@ fn scheduler_loop(
                     qs.selection(batch.t, &mut rng)
                 })),
             };
-            jobs.push(BatchJob { idx: bi, t: batch.t, x, cond, sel });
+            jobs.push(BatchJob { idx: bi, t: batch.t, x, ts, cond, sel, qs: qs_cur.clone() });
         }
         metrics.round_sched += sched_t0.elapsed();
 
@@ -433,7 +597,7 @@ mod tests {
             info,
             sched,
             params,
-            ServerCfg { mode: ServeMode::Fp, decode_latents: false, seed: 1, workers: 0 },
+            ServerCfg { seed: 1, ..ServerCfg::new(ServeMode::Fp) },
         );
         let rx1 = handle.submit(Request::new(0, 3, 4)).unwrap();
         let rx2 = handle.submit(Request::new(0, 2, 4)).unwrap();
@@ -463,7 +627,7 @@ mod tests {
             info,
             sched,
             params,
-            ServerCfg { mode: ServeMode::Fp, decode_latents: false, seed: 1, workers: 1 },
+            ServerCfg { seed: 1, workers: 1, ..ServerCfg::new(ServeMode::Fp) },
         );
         // steal the sender's counterpart by shutting the scheduler down
         // out from under a clone of the handle's channel
@@ -488,7 +652,7 @@ mod tests {
             info,
             sched,
             params,
-            ServerCfg { mode: ServeMode::Fp, decode_latents: false, seed: 1, workers: 0 },
+            ServerCfg { seed: 1, ..ServerCfg::new(ServeMode::Fp) },
         );
         let reqs: Vec<Request> = (0..4)
             .map(|i| {

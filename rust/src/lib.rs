@@ -18,6 +18,7 @@
 pub mod util;
 pub mod linalg;
 pub mod quant;
+pub mod recal;
 pub mod schedule;
 pub mod model;
 pub mod lora;

@@ -178,7 +178,7 @@ fn run() -> Result<()> {
                 p.info.clone(),
                 pl.sched.clone(),
                 Arc::new(p.params.clone()),
-                ServerCfg { mode, decode_latents: decode, seed: 3, workers },
+                ServerCfg { decode_latents: decode, seed: 3, workers, ..ServerCfg::new(mode) },
             );
             let rxs = handle
                 .submit_many((0..requests).map(|i| Request::new(i as u64, per, steps)).collect())?;

@@ -23,7 +23,10 @@ use crate::quant::msfp::{LayerCalib, QuantOpts, QuantScheme};
 use crate::quant::session::QuantSession;
 use crate::runtime::{Denoiser, Engine, QuantState};
 use crate::schedule::{timestep_subsequence, Schedule};
-use crate::train::{collect_calibration, finetune, pretrain, FinetuneStats, PretrainCfg, TrajectoryBuffer};
+use crate::train::{
+    collect_calibration, finetune, finetune_recal, pretrain, FinetuneRecal, FinetuneStats,
+    PretrainCfg, TrajectoryBuffer,
+};
 use crate::util::io::Store;
 use crate::util::rng::Rng;
 
@@ -150,14 +153,15 @@ impl Pipeline {
         self.quantize_with_session(p, &session, spec)
     }
 
-    /// Quantize per a method spec against a pre-built session (and
-    /// optionally fine-tune).
-    pub fn quantize_with_session(
+    /// The PTQ half of a method spec: resolve the search knobs, run (or
+    /// replay) the initialization against the session, and assemble the
+    /// pre-fine-tune `QuantState`.
+    fn search_spec(
         &self,
         p: &Prepared,
         session: &QuantSession<'_>,
         spec: &MethodSpec,
-    ) -> Result<Quantized> {
+    ) -> Result<(QuantOpts, QuantScheme, QuantState)> {
         let method = spec.method.expect("quantize() requires a quantization method");
         let info = &p.info;
         let mut opts = QuantOpts::new(method, info.n_layers, spec.wbits, spec.abits)
@@ -181,7 +185,7 @@ impl Pipeline {
         let mut rng = Rng::new(23);
         let lora = LoraHub::init(info, &mut rng);
         let router_flat = rng.normal_vec(info.router_size, 0.05);
-        let mut state = QuantState {
+        let state = QuantState {
             qparams: scheme.qparams_rows(),
             lora: lora.flat,
             router: Router::new(info, router_flat)?,
@@ -192,20 +196,38 @@ impl Pipeline {
             strategy: spec.alloc,
             t_total: self.sched.t_total,
         };
+        Ok((opts, scheme, state))
+    }
 
+    /// The FP-rollout trajectory buffer the fine-tune loop trains on.
+    fn collect_traj(&self, p: &Prepared) -> Result<TrajectoryBuffer> {
+        let tau = timestep_subsequence(self.sched.t_total, self.scale.steps);
+        let mut rng = Rng::new(31);
+        TrajectoryBuffer::collect(
+            &p.den,
+            &p.info,
+            &self.sched,
+            &tau,
+            &p.params,
+            self.scale.traj_samples,
+            p.info.cfg.n_classes,
+            &mut rng,
+        )
+    }
+
+    /// Quantize per a method spec against a pre-built session (and
+    /// optionally fine-tune). The session is shared read-only; for the
+    /// recalibrate-while-tuning variant see [`Pipeline::quantize_recal`].
+    pub fn quantize_with_session(
+        &self,
+        p: &Prepared,
+        session: &QuantSession<'_>,
+        spec: &MethodSpec,
+    ) -> Result<Quantized> {
+        let info = &p.info;
+        let (_opts, scheme, mut state) = self.search_spec(p, session, spec)?;
         let ft_stats = if let Some(ft) = &spec.finetune {
-            let tau = timestep_subsequence(self.sched.t_total, self.scale.steps);
-            let mut rng = Rng::new(31);
-            let traj = TrajectoryBuffer::collect(
-                &p.den,
-                info,
-                &self.sched,
-                &tau,
-                &p.params,
-                self.scale.traj_samples,
-                info.cfg.n_classes,
-                &mut rng,
-            )?;
+            let traj = self.collect_traj(p)?;
             let mut lora_flat = state.lora.clone();
             let mut router_flat = state.router.flat.clone();
             let mut cfg = ft.clone();
@@ -221,6 +243,62 @@ impl Pipeline {
                 &mut router_flat,
                 &cfg,
             )?;
+            state.lora = lora_flat;
+            state.router = Router::new(info, router_flat)?;
+            Some(stats)
+        } else {
+            None
+        };
+        Ok(Quantized { scheme, state, ft_stats })
+    }
+
+    /// [`Pipeline::quantize_with_session`] with the online-recalibration
+    /// cadence: when the spec's `FinetuneCfg::recal_every > 0`, the
+    /// fine-tune loop probes for activation drift every `recal_every`
+    /// epochs, applies `QuantSession::update_layer_calib` to drifted
+    /// layers and continues training on the re-searched qparams
+    /// (`recal` module; EfficientDM-style recalibrate-while-tuning).
+    /// Takes the session mutably because applied updates advance its
+    /// calibration baseline; don't share one session between a recal run
+    /// and unrelated sweep points afterwards.
+    pub fn quantize_recal(
+        &self,
+        p: &Prepared,
+        session: &mut QuantSession<'static>,
+        spec: &MethodSpec,
+    ) -> Result<Quantized> {
+        let info = &p.info;
+        let (opts, mut scheme, mut state) = self.search_spec(p, &*session, spec)?;
+        let ft_stats = if let Some(ft) = &spec.finetune {
+            let traj = self.collect_traj(p)?;
+            let mut lora_flat = state.lora.clone();
+            let mut router_flat = state.router.flat.clone();
+            let mut qparams = state.qparams.clone();
+            let mut cfg = ft.clone();
+            cfg.epochs = cfg.epochs.max(1);
+            let recal_ctx = if cfg.recal_every > 0 {
+                Some(FinetuneRecal::new(&p.den, &mut *session, opts.clone()))
+            } else {
+                None
+            };
+            let stats = finetune_recal(
+                &self.engine,
+                info,
+                &self.sched,
+                &traj,
+                &p.params,
+                &mut qparams,
+                &mut lora_flat,
+                &mut router_flat,
+                &cfg,
+                recal_ctx,
+            )?;
+            if !stats.recal_events.is_empty() {
+                // replay (memoized) so the returned scheme matches the
+                // recalibrated qparams the state now carries
+                scheme = session.quantize(&opts);
+            }
+            state.qparams = qparams;
             state.lora = lora_flat;
             state.router = Router::new(info, router_flat)?;
             Some(stats)
@@ -347,6 +425,19 @@ mod tests {
         let q = q.unwrap();
         assert!(q.scheme.n_aal() > 0, "UNet must expose AALs");
         assert!(q.ft_stats.is_some());
+
+        // recalibrate-while-tuning entry point: same spec with the drift
+        // cadence enabled, driven against a mutable session
+        let mut session = pl.build_session(&p).unwrap();
+        let mut spec = MethodSpec::ours(4, 2, 2);
+        spec.finetune.as_mut().unwrap().recal_every = 1;
+        let qr = pl.quantize_recal(&p, &mut session, &spec).unwrap();
+        let stats = qr.ft_stats.unwrap();
+        assert!(stats.losses.iter().all(|l| l.is_finite()));
+        assert_eq!(qr.state.qparams.len(), p.info.n_layers * 8);
+        // scheme and served qparams stay consistent whether or not any
+        // layer actually crossed the drift threshold on this tiny budget
+        assert_eq!(qr.scheme.qparams_rows(), qr.state.qparams);
         std::env::remove_var("MSFP_RUNS");
     }
 }

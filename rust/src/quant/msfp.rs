@@ -23,6 +23,18 @@ pub struct LayerCalib {
     pub aal_hint: bool,
 }
 
+impl LayerCalib {
+    /// Build a calibration layer from raw samples, deriving min/max.
+    /// Used by synthetic-model tests/benches and by recalibration paths
+    /// that only have a sample pool (callers with exact extrema — e.g.
+    /// `recal::sketch` — construct the struct directly instead).
+    pub fn from_samples(name: impl Into<String>, acts: Vec<f32>, aal_hint: bool) -> LayerCalib {
+        let min = acts.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = acts.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        LayerCalib { name: name.into(), acts, min, max, aal_hint }
+    }
+}
+
 /// Quantization decision for one layer.
 #[derive(Debug, Clone)]
 pub struct LayerQuant {

@@ -23,10 +23,19 @@
 //! `quantize_model` itself is a compatibility shim over a one-shot
 //! session, and tests/props.rs pins the reused-session parity.
 //!
+//! Sessions are also *incrementally updatable*: when online recalibration
+//! (`crate::recal`) finds a drifted layer,
+//! [`QuantSession::update_layer_calib`] swaps in that layer's fresh
+//! calibration, rebuilding exactly one activation engine and invalidating
+//! only that layer's memoized activation sub-searches — every other
+//! layer's preprocessing and winners are reused, and the next `quantize`
+//! call is bit-identical to a cold session on the updated calibration.
+//!
 //! [`quantize_model`]: super::msfp::quantize_model
 
 use std::borrow::Cow;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 use crate::util::threadpool::{parallel_map, resolve_threads};
@@ -64,6 +73,10 @@ struct LayerCache {
     w_eng: OnceLock<GridEngine>,
     /// engine over the layer's calibration activations
     a_eng: OnceLock<GridEngine>,
+    /// times each engine was actually constructed — observable so tests
+    /// can pin that `update_layer_calib` rebuilds exactly one engine
+    w_builds: AtomicUsize,
+    a_builds: AtomicUsize,
     /// absolute max of the weight tensor, floored at 1e-8
     w_maxval0: f32,
     /// absolute max of the activation samples, floored at 1e-8
@@ -71,6 +84,22 @@ struct LayerCache {
     class: LayerClass,
     w_results: Memo<WeightKey>,
     a_results: Memo<ActKey>,
+}
+
+impl LayerCache {
+    fn new(w: &[f32], c: &LayerCalib) -> LayerCache {
+        LayerCache {
+            w_eng: OnceLock::new(),
+            a_eng: OnceLock::new(),
+            w_builds: AtomicUsize::new(0),
+            a_builds: AtomicUsize::new(0),
+            w_maxval0: w.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8),
+            a_maxval0: c.acts.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8),
+            class: classify(c.min, c.max),
+            w_results: Mutex::new(HashMap::new()),
+            a_results: Mutex::new(HashMap::new()),
+        }
+    }
 }
 
 /// A reusable model-level search session: per-tensor engines + stats built
@@ -113,20 +142,36 @@ impl<'a> QuantSession<'a> {
 
     fn build(weights: Cow<'a, [Vec<f32>]>, calib: Cow<'a, [LayerCalib]>) -> QuantSession<'a> {
         assert_eq!(weights.len(), calib.len());
-        let layers = weights
-            .iter()
-            .zip(calib.iter())
-            .map(|(w, c)| LayerCache {
-                w_eng: OnceLock::new(),
-                a_eng: OnceLock::new(),
-                w_maxval0: w.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8),
-                a_maxval0: c.acts.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8),
-                class: classify(c.min, c.max),
-                w_results: Mutex::new(HashMap::new()),
-                a_results: Mutex::new(HashMap::new()),
-            })
-            .collect();
+        let layers =
+            weights.iter().zip(calib.iter()).map(|(w, c)| LayerCache::new(w, c)).collect();
         QuantSession { weights, calib, layers }
+    }
+
+    /// Replace layer `l`'s calibration data (the online-recalibration entry
+    /// point, `recal`): the layer's activation engine is dropped (rebuilt
+    /// lazily from the new samples on next use), its cached activation
+    /// stats and AAL/NAL class are recomputed, and its memoized activation
+    /// sub-searches are invalidated. Everything else — every other layer's
+    /// engines and memos, and this layer's *weight* engine and memo (the
+    /// tensor did not change) — survives untouched, so re-quantizing after
+    /// an update re-scores exactly one layer's activation searches.
+    ///
+    /// The result is bit-identical to building a cold session from the
+    /// updated calibration: engines are deterministic functions of the
+    /// samples and surviving memo entries replay values an identical
+    /// search would recompute (pinned by unit tests and tests/props.rs).
+    ///
+    /// A borrowed session (`QuantSession::new`) clones its calibration
+    /// slice on first update (`Cow::to_mut`); sessions built with
+    /// [`QuantSession::from_owned`] update in place.
+    pub fn update_layer_calib(&mut self, l: usize, calib: LayerCalib) {
+        assert!(l < self.layers.len(), "layer {l} out of range ({})", self.layers.len());
+        let lc = &mut self.layers[l];
+        lc.a_eng = OnceLock::new();
+        lc.a_maxval0 = calib.acts.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+        lc.class = classify(calib.min, calib.max);
+        lc.a_results.lock().unwrap().clear();
+        self.calib.to_mut()[l] = calib;
     }
 
     pub fn n_layers(&self) -> usize {
@@ -155,13 +200,44 @@ impl<'a> QuantSession<'a> {
 
     /// Grid engine over layer `l`'s weight tensor (built on first use).
     pub fn weight_engine(&self, l: usize) -> &GridEngine {
-        self.layers[l].w_eng.get_or_init(|| GridEngine::new(&self.weights[l]))
+        let lc = &self.layers[l];
+        lc.w_eng.get_or_init(|| {
+            lc.w_builds.fetch_add(1, Ordering::Relaxed);
+            GridEngine::new(&self.weights[l])
+        })
     }
 
     /// Grid engine over layer `l`'s activation samples (built on first
     /// use).
     pub fn act_engine(&self, l: usize) -> &GridEngine {
-        self.layers[l].a_eng.get_or_init(|| GridEngine::new(&self.calib[l].acts))
+        let lc = &self.layers[l];
+        lc.a_eng.get_or_init(|| {
+            lc.a_builds.fetch_add(1, Ordering::Relaxed);
+            GridEngine::new(&self.calib[l].acts)
+        })
+    }
+
+    /// How many times layer `l`'s weight engine has been constructed over
+    /// the session's lifetime (stays put across calib updates).
+    pub fn weight_engine_builds(&self, l: usize) -> usize {
+        self.layers[l].w_builds.load(Ordering::Relaxed)
+    }
+
+    /// How many times layer `l`'s activation engine has been constructed
+    /// (increments once per `update_layer_calib` + re-quantize cycle).
+    pub fn act_engine_builds(&self, l: usize) -> usize {
+        self.layers[l].a_builds.load(Ordering::Relaxed)
+    }
+
+    /// Memoized weight sub-search entries for layer `l`.
+    pub fn weight_memo_len(&self, l: usize) -> usize {
+        self.layers[l].w_results.lock().unwrap().len()
+    }
+
+    /// Memoized activation sub-search entries for layer `l` (drops to 0 on
+    /// `update_layer_calib`).
+    pub fn act_memo_len(&self, l: usize) -> usize {
+        self.layers[l].a_results.lock().unwrap().len()
     }
 
     /// Run the initialization for one knob setting against the cached
@@ -335,6 +411,90 @@ mod tests {
             let second = session.quantize(&opts);
             assert_identical(&first, &second, &format!("{method:?}"));
         }
+    }
+
+    /// Shifted + rescaled activations for one layer (enough drift to move
+    /// the argmin and, with the sign flip of the silu trough, the class).
+    fn shifted_layer_calib(seed: u64, name: &str) -> LayerCalib {
+        let mut rng = Rng::new(seed);
+        LayerCalib::from_samples(
+            name,
+            (0..768).map(|_| rng.normal() * 3.0 + 0.8).collect(),
+            false,
+        )
+    }
+
+    #[test]
+    fn update_layer_calib_matches_cold_rebuild_bitwise() {
+        let (w, c) = fake_model(5, 21);
+        for method in [Method::Msfp, Method::SignedFp, Method::IntMinMax, Method::IntMse] {
+            let opts = QuantOpts::new(method, 5, 4, 4);
+            let mut session = QuantSession::new(&w, &c);
+            let _ = session.quantize(&opts); // warm every memo
+            let updated = shifted_layer_calib(77, "l2");
+            session.update_layer_calib(2, updated.clone());
+            let warm = session.quantize(&opts);
+            let mut c2 = c.clone();
+            c2[2] = updated;
+            let cold = QuantSession::new(&w, &c2).quantize(&opts);
+            assert_identical(&warm, &cold, &format!("incremental vs cold ({method:?})"));
+        }
+    }
+
+    #[test]
+    fn update_layer_calib_invalidates_only_that_layer() {
+        let (w, c) = fake_model(4, 22);
+        let mut session = QuantSession::new(&w, &c);
+        let opts = QuantOpts::new(Method::Msfp, 4, 4, 4);
+        let _ = session.quantize(&opts);
+        for l in 0..4 {
+            assert_eq!(session.act_engine_builds(l), 1, "layer {l}");
+            assert_eq!(session.weight_engine_builds(l), 1, "layer {l}");
+            assert_eq!(session.act_memo_len(l), 1, "layer {l}");
+            assert_eq!(session.weight_memo_len(l), 1, "layer {l}");
+        }
+
+        let updated = shifted_layer_calib(78, "l1");
+        session.update_layer_calib(1, updated.clone());
+        // only layer 1's activation memo dropped; its weight memo and every
+        // other layer's memos survive
+        assert_eq!(session.act_memo_len(1), 0);
+        assert_eq!(session.weight_memo_len(1), 1);
+        for l in [0usize, 2, 3] {
+            assert_eq!(session.act_memo_len(l), 1, "layer {l}");
+        }
+        // cached stats track the new calibration
+        let a0 = updated.acts.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-8);
+        assert_eq!(session.act_maxval0(1), a0);
+        assert_eq!(session.class(1), classify(updated.min, updated.max));
+        assert_eq!(session.calib()[1].acts, updated.acts);
+
+        let _ = session.quantize(&opts);
+        // exactly one activation engine was rebuilt; weight engines and the
+        // untouched layers' activation engines were reused as-is
+        assert_eq!(session.act_engine_builds(1), 2);
+        for l in [0usize, 2, 3] {
+            assert_eq!(session.act_engine_builds(l), 1, "layer {l}");
+        }
+        for l in 0..4 {
+            assert_eq!(session.weight_engine_builds(l), 1, "layer {l}");
+        }
+        assert_eq!(session.act_memo_len(1), 1); // re-scored fresh
+    }
+
+    #[test]
+    fn update_layer_calib_on_owned_session() {
+        let (w, c) = fake_model(3, 23);
+        let opts = QuantOpts::new(Method::Msfp, 3, 4, 6);
+        let mut session = QuantSession::from_owned(w.clone(), c.clone());
+        let _ = session.quantize(&opts);
+        let updated = shifted_layer_calib(79, "l0");
+        session.update_layer_calib(0, updated.clone());
+        let warm = session.quantize(&opts);
+        let mut c2 = c;
+        c2[0] = updated;
+        let cold = QuantSession::new(&w, &c2).quantize(&opts);
+        assert_identical(&warm, &cold, "owned incremental vs cold");
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Drift scoring — the *detector* stage of the online recalibration
+//! pipeline: compare a layer's live activation sketch against the
+//! `LayerCalib` baseline its current quantizer was searched on.
+//!
+//! The score is scale-normalized so one threshold works across layers of
+//! very different amplitudes:
+//!
+//!  * **quantile term** — mean absolute displacement of the inner
+//!    quantiles (deciles by default) between the baseline samples and the
+//!    sketch reservoir, divided by the baseline amplitude. Catches shape
+//!    and location changes (the SiLU-trough vs gaussian switch that flips
+//!    AAL/NAL classification shows up here immediately);
+//!  * **range term** — displacement of the observed min/max relative to
+//!    the baseline amplitude. Catches tail growth that quantile averages
+//!    smooth over — exactly the failure mode of a stale `maxval` search
+//!    space (clipped outliers dominate 4-bit MSE).
+//!
+//! The final score is the max of the two terms: 0 for an identical
+//! distribution, ~1 when the distribution moved by about one baseline
+//! amplitude. Typical thresholds sit at 0.05–0.15 (see
+//! `recal::planner::RecalPlanner`).
+
+use crate::quant::msfp::LayerCalib;
+
+use super::sketch::LayerSketch;
+
+/// Drift verdict for one layer.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftScore {
+    pub layer: usize,
+    /// scale-normalized drift (see module docs); 0 = no drift
+    pub score: f32,
+    /// samples the sketch had observed when scored
+    pub samples: usize,
+}
+
+/// `n` inner quantile points of an ascending-sorted slice (e.g. `n = 9`
+/// gives the deciles q10..q90). Empty input yields an empty vector.
+pub fn quantiles_sorted(sorted: &[f32], n: usize) -> Vec<f32> {
+    if sorted.is_empty() || n == 0 {
+        return Vec::new();
+    }
+    (1..=n)
+        .map(|i| {
+            let q = i as f64 / (n + 1) as f64;
+            sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+        })
+        .collect()
+}
+
+/// Baseline amplitude used to normalize displacement (the larger of
+/// |min| and |max|, floored so all-zero layers cannot divide by zero).
+pub fn baseline_scale(base: &LayerCalib) -> f32 {
+    base.min.abs().max(base.max.abs()).max(1e-6)
+}
+
+/// Score a layer's live sketch against its calibration baseline.
+/// `n_quantiles` controls the resolution of the quantile term.
+pub fn drift_score(
+    layer: usize,
+    base: &LayerCalib,
+    live: &LayerSketch,
+    n_quantiles: usize,
+) -> DriftScore {
+    let samples = live.count();
+    if samples == 0 || base.acts.is_empty() {
+        return DriftScore { layer, score: 0.0, samples };
+    }
+    let scale = baseline_scale(base);
+
+    let mut bs = base.acts.clone();
+    bs.sort_unstable_by(f32::total_cmp);
+    let mut ls = live.samples().to_vec();
+    ls.sort_unstable_by(f32::total_cmp);
+    let bq = quantiles_sorted(&bs, n_quantiles);
+    let lq = quantiles_sorted(&ls, n_quantiles);
+    let qterm = if bq.is_empty() {
+        0.0
+    } else {
+        bq.iter().zip(&lq).map(|(a, b)| (a - b).abs()).sum::<f32>() / bq.len() as f32 / scale
+    };
+
+    let rterm = ((live.min - base.min).abs().max((live.max - base.max).abs())) / scale;
+
+    DriftScore { layer, score: qterm.max(rterm), samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn calib_of(acts: Vec<f32>) -> LayerCalib {
+        LayerCalib::from_samples("l", acts, false)
+    }
+
+    fn sketch_of(vals: &[f32]) -> LayerSketch {
+        let mut sk = LayerSketch::new(vals.len().max(1), 3);
+        for &v in vals {
+            sk.push(v);
+        }
+        sk
+    }
+
+    #[test]
+    fn quantiles_of_known_sequence() {
+        let xs: Vec<f32> = (0..=100).map(|i| i as f32).collect();
+        let q = quantiles_sorted(&xs, 9);
+        assert_eq!(q.len(), 9);
+        assert!((q[0] - 10.0).abs() <= 1.0);
+        assert!((q[4] - 50.0).abs() <= 1.0);
+        assert!((q[8] - 90.0).abs() <= 1.0);
+        assert!(quantiles_sorted(&[], 9).is_empty());
+    }
+
+    #[test]
+    fn identical_distribution_scores_near_zero() {
+        let mut rng = Rng::new(5);
+        let vals: Vec<f32> = (0..2000).map(|_| rng.normal()).collect();
+        let base = calib_of(vals.clone());
+        let live = sketch_of(&vals);
+        let d = drift_score(0, &base, &live, 9);
+        assert_eq!(d.samples, 2000);
+        assert!(d.score < 1e-6, "score={}", d.score);
+    }
+
+    #[test]
+    fn shift_scores_proportionally() {
+        let mut rng = Rng::new(6);
+        let vals: Vec<f32> = (0..4000).map(|_| rng.normal()).collect();
+        let base = calib_of(vals.clone());
+        let shifted: Vec<f32> = vals.iter().map(|v| v + 1.0).collect();
+        let d = drift_score(0, &base, &sketch_of(&shifted), 9);
+        // amplitude ~3.5σ, shift 1σ -> score around 0.28
+        assert!(d.score > 0.15 && d.score < 0.6, "score={}", d.score);
+
+        let small: Vec<f32> = vals.iter().map(|v| v + 0.02).collect();
+        let d_small = drift_score(0, &base, &sketch_of(&small), 9);
+        assert!(d_small.score < d.score / 3.0, "{} vs {}", d_small.score, d.score);
+    }
+
+    #[test]
+    fn tail_growth_caught_by_range_term() {
+        let mut rng = Rng::new(7);
+        let vals: Vec<f32> = (0..2000).map(|_| rng.normal() * 0.5).collect();
+        let base = calib_of(vals.clone());
+        // same bulk, one 4x outlier: quantiles barely move, range does
+        let mut tail = vals.clone();
+        let amp = baseline_scale(&base);
+        tail.push(amp * 4.0);
+        let d = drift_score(0, &base, &sketch_of(&tail), 9);
+        assert!(d.score > 1.0, "range term must dominate: {}", d.score);
+    }
+
+    #[test]
+    fn empty_sketch_scores_zero() {
+        let base = calib_of(vec![0.1, 0.2, 0.3]);
+        let live = LayerSketch::new(8, 1);
+        let d = drift_score(3, &base, &live, 9);
+        assert_eq!(d.layer, 3);
+        assert_eq!(d.score, 0.0);
+        assert_eq!(d.samples, 0);
+    }
+}

@@ -1,0 +1,36 @@
+//! Online recalibration: drift-tracked activation sketches with
+//! incremental `QuantSession` rebuilds — the EfficientDM-style
+//! recalibrate-while-tuning loop, plus a serving-side hot-swap.
+//!
+//! The MSFP search ranges are frozen at the initial calibration pass, but
+//! TALoRA fine-tuning (and any distribution shift in serving traffic)
+//! moves per-layer activation distributions out from under them. This
+//! subsystem closes that loop as a producer → detector → planner →
+//! applier pipeline:
+//!
+//!  1. **sketch** ([`sketch`]) — producers feed cheap streaming per-layer
+//!     activation sketches (reservoir + min/max/moments, keyed by layer
+//!     and timestep bucket) from `Denoiser::calib_forward` outputs;
+//!  2. **drift** ([`drift`]) — each layer's live sketch is scored against
+//!     the `LayerCalib` baseline its current quantizer was searched on;
+//!  3. **plan** ([`planner`]) — layers whose drift crosses the threshold
+//!     get a replacement calibration built from the sketch;
+//!  4. **apply** — `quant::session::QuantSession::update_layer_calib`
+//!     rebuilds exactly one activation grid engine and invalidates only
+//!     that layer's memoized activation sub-searches; the resulting
+//!     scheme is bit-identical to a cold full-session rebuild on the same
+//!     calibration (pinned by session unit tests and `tests/props.rs`).
+//!
+//! Consumers: `train::finetune` recalibrates drifted layers mid-run on a
+//! `recal_every` epoch cadence, and the serving coordinator
+//! (`coordinator::server`) runs the same loop as a background job on its
+//! worker pool, atomically hot-swapping the updated qparams between
+//! scheduling rounds (never mid-round).
+
+pub mod drift;
+pub mod planner;
+pub mod sketch;
+
+pub use drift::{drift_score, DriftScore};
+pub use planner::{RecalLayer, RecalPlan, RecalPlanner};
+pub use sketch::{LayerSketch, SketchSet};

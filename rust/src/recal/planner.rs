@@ -1,0 +1,185 @@
+//! Recalibration planning — the *planner* stage of the online
+//! recalibration pipeline: turn per-layer drift scores into the minimal
+//! set of `QuantSession::update_layer_calib` applications.
+//!
+//! A plan contains one [`RecalLayer`] per layer whose drift crossed the
+//! threshold *and* whose sketch has observed enough samples to trust: the
+//! replacement `LayerCalib` is built from the sketch's merged reservoir
+//! (acts) and exact running extrema (min/max), with the baseline's name
+//! and architecture hint carried over. Layers below threshold are left
+//! alone — their engines, memoized sub-searches and quantizers survive
+//! untouched, which is what makes the incremental rebuild cheap.
+
+use crate::quant::msfp::LayerCalib;
+
+use super::drift::{drift_score, DriftScore};
+use super::sketch::SketchSet;
+
+/// Thresholds for when a layer is worth recalibrating.
+#[derive(Debug, Clone)]
+pub struct RecalPlanner {
+    /// scale-normalized drift above which a layer is recalibrated
+    /// (see `recal::drift` for the score's semantics)
+    pub threshold: f32,
+    /// minimum observed samples before a layer's sketch is trusted
+    pub min_samples: usize,
+    /// quantile resolution of the drift score
+    pub n_quantiles: usize,
+}
+
+impl Default for RecalPlanner {
+    fn default() -> Self {
+        RecalPlanner { threshold: 0.08, min_samples: 64, n_quantiles: 9 }
+    }
+}
+
+/// One planned layer update.
+#[derive(Debug, Clone)]
+pub struct RecalLayer {
+    pub layer: usize,
+    pub score: f32,
+    /// replacement calibration built from the live sketch
+    pub calib: LayerCalib,
+}
+
+/// The planner's output: drifted layers (with their replacement calib)
+/// plus every layer's score for observability.
+#[derive(Debug, Clone, Default)]
+pub struct RecalPlan {
+    pub layers: Vec<RecalLayer>,
+    pub scores: Vec<DriftScore>,
+}
+
+impl RecalPlan {
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+}
+
+impl RecalPlanner {
+    /// Score every layer's sketch against its baseline and plan updates
+    /// for the ones that crossed the threshold. `baseline[l]` must be the
+    /// calibration the layer's current quantizer was searched on (a
+    /// `QuantSession::calib()` slice keeps itself current across applied
+    /// updates, so drift is always measured since the *last*
+    /// recalibration, not since cold start).
+    pub fn plan(&self, baseline: &[LayerCalib], sketches: &SketchSet) -> RecalPlan {
+        let mut plan = RecalPlan::default();
+        let n = baseline.len().min(sketches.n_layers());
+        for l in 0..n {
+            // under-sampled layers skip the merge + sort entirely, so an
+            // idle producer makes checks nearly free; a trusted layer pays
+            // one baseline sort + one reservoir sort per check (small at
+            // calibration sizes — revisit with a per-baseline quantile
+            // cache if L·N grows)
+            let count = sketches.layer_count(l);
+            if count < self.min_samples.max(1) {
+                plan.scores.push(DriftScore { layer: l, score: 0.0, samples: count });
+                continue;
+            }
+            let live = sketches.layer_merged(l);
+            let d = drift_score(l, &baseline[l], &live, self.n_quantiles);
+            plan.scores.push(d);
+            if d.samples >= self.min_samples.max(1) && d.score > self.threshold {
+                let base = &baseline[l];
+                plan.layers.push(RecalLayer {
+                    layer: l,
+                    score: d.score,
+                    calib: LayerCalib {
+                        name: base.name.clone(),
+                        acts: live.samples().to_vec(),
+                        min: live.min,
+                        max: live.max,
+                        aal_hint: base.aal_hint,
+                    },
+                });
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// 3-layer fixture: layer 1's live stream is its baseline shifted by
+    /// +1.5, layers 0 and 2 replay their baselines exactly (so only
+    /// reservoir-subsampling noise separates them — deterministically far
+    /// below any reasonable threshold).
+    fn fixture() -> (Vec<LayerCalib>, SketchSet) {
+        let mut rng = Rng::new(11);
+        let base: Vec<LayerCalib> = (0..3)
+            .map(|l| {
+                LayerCalib::from_samples(
+                    format!("l{l}"),
+                    (0..1500).map(|_| rng.normal()).collect(),
+                    l == 0,
+                )
+            })
+            .collect();
+        let mut set = SketchSet::new(3, 4, 256, 100, 5);
+        let mut feed_rng = Rng::new(12);
+        for (l, c) in base.iter().enumerate() {
+            let shift = if l == 1 { 1.5 } else { 0.0 };
+            for chunk in c.acts.chunks(50) {
+                let t = feed_rng.range(0.0, 100.0);
+                let vals: Vec<f32> = chunk.iter().map(|v| v + shift).collect();
+                set.observe(l, t, &vals);
+            }
+        }
+        (base, set)
+    }
+
+    #[test]
+    fn plans_only_drifted_layers() {
+        let (base, set) = fixture();
+        let plan = RecalPlanner::default().plan(&base, &set);
+        assert_eq!(plan.scores.len(), 3);
+        assert_eq!(plan.layers.len(), 1, "scores: {:?}", plan.scores);
+        let rl = &plan.layers[0];
+        assert_eq!(rl.layer, 1);
+        assert!(rl.score > 0.08);
+        assert_eq!(rl.calib.name, "l1");
+        assert!(!rl.calib.acts.is_empty());
+        assert!(rl.calib.min <= rl.calib.max);
+        // the replacement calib reflects the shifted stream
+        let mean: f32 = rl.calib.acts.iter().sum::<f32>() / rl.calib.acts.len() as f32;
+        assert!(mean > 1.0, "mean={mean}");
+    }
+
+    #[test]
+    fn hint_and_name_carry_over() {
+        let (base, mut set) = fixture();
+        // shift layer 0 (the AAL-hinted one) too
+        let mut rng = Rng::new(13);
+        for _ in 0..1500 {
+            set.observe(0, rng.range(0.0, 100.0), &[rng.normal() * 3.0]);
+        }
+        let plan = RecalPlanner::default().plan(&base, &set);
+        let l0 = plan.layers.iter().find(|r| r.layer == 0).expect("layer 0 drifted");
+        assert!(l0.calib.aal_hint);
+    }
+
+    #[test]
+    fn min_samples_gates_thin_sketches() {
+        let (base, _) = fixture();
+        let mut set = SketchSet::new(3, 4, 256, 100, 5);
+        // heavy drift but only a handful of samples
+        set.observe(1, 50.0, &[10.0; 8]);
+        let planner = RecalPlanner { min_samples: 64, ..Default::default() };
+        assert!(planner.plan(&base, &set).is_empty());
+        let eager = RecalPlanner { min_samples: 1, ..Default::default() };
+        assert_eq!(eager.plan(&base, &set).layers.len(), 1);
+    }
+
+    #[test]
+    fn empty_sketches_plan_nothing() {
+        let (base, _) = fixture();
+        let set = SketchSet::new(3, 4, 256, 100, 5);
+        let plan = RecalPlanner::default().plan(&base, &set);
+        assert!(plan.is_empty());
+        assert!(plan.scores.iter().all(|d| d.score == 0.0));
+    }
+}

@@ -1,0 +1,391 @@
+//! Streaming per-layer activation sketches — the *producer* stage of the
+//! online recalibration pipeline (sketch → drift → plan → swap).
+//!
+//! A [`SketchSet`] maintains one [`LayerSketch`] per (layer, timestep
+//! bucket): a fixed-capacity reservoir sample plus running min/max and
+//! first/second moments. Feeding is O(samples) with no allocation past the
+//! reservoir capacity, so producers (the TALoRA fine-tune loop's probe
+//! batches, a serving-side monitor) can push from every
+//! `Denoiser::calib_forward` without budget concerns.
+//!
+//! Timestep buckets keep the retained sample balanced across the denoising
+//! process: a reservoir over the raw stream would be dominated by whatever
+//! timesteps the producer visited most recently, while per-bucket
+//! reservoirs give every phase of the process a fixed share of the
+//! retained samples (the timestep-aware angle of the paper carried into
+//! calibration maintenance). Drift scoring and plan construction merge the
+//! buckets back into one per-layer view ([`SketchSet::layer_merged`]).
+//!
+//! Sketches are mergeable ([`LayerSketch::merge`]): min/max/moments
+//! combine exactly; the merged reservoir is re-drawn from the two inputs
+//! with probability proportional to their observed counts (sampling with
+//! replacement — an approximation of a true distributed reservoir that is
+//! ample for drift detection). Everything is deterministic from the
+//! construction seed.
+
+use crate::util::rng::Rng;
+
+/// Streaming summary of one (layer, timestep-bucket) activation stream.
+#[derive(Debug, Clone)]
+pub struct LayerSketch {
+    /// reservoir sample of the stream (≤ capacity values)
+    res: Vec<f32>,
+    cap: usize,
+    /// values observed (not retained) so far
+    count: usize,
+    pub min: f32,
+    pub max: f32,
+    sum: f64,
+    sumsq: f64,
+    rng: Rng,
+}
+
+impl LayerSketch {
+    pub fn new(cap: usize, seed: u64) -> LayerSketch {
+        LayerSketch {
+            res: Vec::with_capacity(cap.min(1024)),
+            cap: cap.max(1),
+            count: 0,
+            min: f32::INFINITY,
+            max: f32::NEG_INFINITY,
+            sum: 0.0,
+            sumsq: 0.0,
+            rng: Rng::new(seed ^ 0x736b6574),
+        }
+    }
+
+    /// Observed stream length (reservoir holds `min(count, cap)` of them).
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// The retained reservoir sample.
+    pub fn samples(&self) -> &[f32] {
+        &self.res
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum / self.count as f64
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sumsq / self.count as f64 - m * m).max(0.0)
+    }
+
+    /// Feed one value (Algorithm R reservoir update + running stats).
+    pub fn push(&mut self, x: f32) {
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.sum += x as f64;
+        self.sumsq += (x as f64) * (x as f64);
+        if self.res.len() < self.cap {
+            self.res.push(x);
+        } else {
+            let j = self.rng.below(self.count);
+            if j < self.cap {
+                self.res[j] = x;
+            }
+        }
+    }
+
+    /// Widen min/max without adding samples (exact per-batch extrema from
+    /// `calib_forward`'s `[L, 2]` output cover values the subsampled
+    /// activation capture missed).
+    pub fn widen(&mut self, min: f32, max: f32) {
+        if min <= max {
+            self.min = self.min.min(min);
+            self.max = self.max.max(max);
+        }
+    }
+
+    /// Merge `other` into `self`. Counts, extrema and moments combine
+    /// exactly; the merged reservoir re-draws from both inputs with
+    /// probability proportional to their counts (see module docs).
+    pub fn merge(&mut self, other: &LayerSketch) {
+        // extrema merge first and unconditionally: a widen-only sketch
+        // (count 0 but min/max set) still carries exact bounds that must
+        // survive the cross-bucket merge
+        self.widen(other.min, other.max);
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            // adopt other's data but keep this sketch's capacity and rng
+            // stream (layer_merged builds wide empty sketches and folds
+            // narrower per-bucket ones in)
+            self.res = other.res.clone();
+            self.res.truncate(self.cap);
+            self.count = other.count;
+            self.sum = other.sum;
+            self.sumsq = other.sumsq;
+            return;
+        }
+        let total = self.count + other.count;
+        let k = self.cap.min(self.res.len() + other.res.len());
+        let mut merged = Vec::with_capacity(k);
+        for _ in 0..k {
+            let from_self = self.rng.below(total) < self.count;
+            let v = if from_self {
+                self.res[self.rng.below(self.res.len())]
+            } else {
+                other.res[self.rng.below(other.res.len())]
+            };
+            merged.push(v);
+        }
+        self.res = merged;
+        self.count = total;
+        self.sum += other.sum;
+        self.sumsq += other.sumsq;
+    }
+}
+
+/// Whole-model sketch store: `n_layers × n_buckets` layer sketches, keyed
+/// by layer index and the timestep bucket `floor(t / t_total · n_buckets)`.
+#[derive(Debug, Clone)]
+pub struct SketchSet {
+    sketches: Vec<LayerSketch>,
+    n_layers: usize,
+    n_buckets: usize,
+    t_total: usize,
+}
+
+impl SketchSet {
+    /// `cap` is the per-(layer, bucket) reservoir capacity; the retained
+    /// per-layer sample used for drift/recalibration is up to
+    /// `cap · n_buckets` values.
+    pub fn new(
+        n_layers: usize,
+        n_buckets: usize,
+        cap: usize,
+        t_total: usize,
+        seed: u64,
+    ) -> SketchSet {
+        let n_buckets = n_buckets.max(1);
+        let sketches = (0..n_layers * n_buckets)
+            .map(|i| LayerSketch::new(cap, seed.wrapping_add(0x9E37 * i as u64 + 1)))
+            .collect();
+        SketchSet { sketches, n_layers, n_buckets, t_total: t_total.max(1) }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.n_buckets
+    }
+
+    fn bucket_of(&self, t: f32) -> usize {
+        let frac = (t / self.t_total as f32).clamp(0.0, 1.0);
+        ((frac * self.n_buckets as f32) as usize).min(self.n_buckets - 1)
+    }
+
+    pub fn sketch(&self, layer: usize, bucket: usize) -> &LayerSketch {
+        &self.sketches[layer * self.n_buckets + bucket]
+    }
+
+    /// Feed one layer's activation samples observed at timestep `t`.
+    pub fn observe(&mut self, layer: usize, t: f32, samples: &[f32]) {
+        let b = self.bucket_of(t);
+        let sk = &mut self.sketches[layer * self.n_buckets + b];
+        for &x in samples {
+            sk.push(x);
+        }
+    }
+
+    /// Feed a whole `Denoiser::calib_forward` output captured at (uniform)
+    /// timestep `t`: `acts` is the `[L, S]` per-layer activation capture,
+    /// `mm` the `[L, 2]` exact per-layer min/max.
+    pub fn observe_calib(&mut self, t: f32, acts: &[f32], mm: &[f32], act_samples: usize) {
+        debug_assert_eq!(acts.len(), self.n_layers * act_samples);
+        debug_assert_eq!(mm.len(), self.n_layers * 2);
+        let b = self.bucket_of(t);
+        for l in 0..self.n_layers {
+            let sk = &mut self.sketches[l * self.n_buckets + b];
+            for &x in &acts[l * act_samples..(l + 1) * act_samples] {
+                sk.push(x);
+            }
+            sk.widen(mm[l * 2], mm[l * 2 + 1]);
+        }
+    }
+
+    /// Widen layer `l`'s extrema at timestep `t` without adding samples
+    /// (exact per-batch min/max from a producer whose sample capture is
+    /// subsampled — see [`LayerSketch::widen`]).
+    pub fn widen_layer(&mut self, l: usize, t: f32, min: f32, max: f32) {
+        let b = self.bucket_of(t);
+        self.sketches[l * self.n_buckets + b].widen(min, max);
+    }
+
+    /// Total observed samples for layer `l` across buckets.
+    pub fn layer_count(&self, l: usize) -> usize {
+        (0..self.n_buckets).map(|b| self.sketch(l, b).count()).sum()
+    }
+
+    /// One cross-bucket view of layer `l` (for drift scoring and plan
+    /// construction). The merged reservoir holds up to `cap · n_buckets`
+    /// values, each bucket contributing in proportion to its share of the
+    /// observed stream.
+    pub fn layer_merged(&self, l: usize) -> LayerSketch {
+        let total_cap: usize = (0..self.n_buckets).map(|b| self.sketch(l, b).cap).sum();
+        let mut out = LayerSketch::new(total_cap, 0xACC + l as u64);
+        for b in 0..self.n_buckets {
+            out.merge(self.sketch(l, b));
+        }
+        out
+    }
+
+    /// Drop all observed data (fresh drift window), keeping the layout.
+    pub fn reset(&mut self) {
+        for sk in &mut self.sketches {
+            let fresh = LayerSketch::new(sk.cap, 0);
+            let rng = sk.rng.clone();
+            *sk = fresh;
+            sk.rng = rng;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_caps_and_counts() {
+        let mut sk = LayerSketch::new(32, 7);
+        for i in 0..1000 {
+            sk.push(i as f32);
+        }
+        assert_eq!(sk.count(), 1000);
+        assert_eq!(sk.samples().len(), 32);
+        assert_eq!(sk.min, 0.0);
+        assert_eq!(sk.max, 999.0);
+        assert!((sk.mean() - 499.5).abs() < 1e-6);
+        // retained values are a plausible spread, not just the head
+        assert!(sk.samples().iter().any(|&v| v > 500.0));
+    }
+
+    #[test]
+    fn widen_extends_extrema_only() {
+        let mut sk = LayerSketch::new(8, 1);
+        sk.push(0.5);
+        sk.widen(-2.0, 3.0);
+        assert_eq!(sk.min, -2.0);
+        assert_eq!(sk.max, 3.0);
+        assert_eq!(sk.count(), 1);
+        sk.widen(5.0, 4.0); // inverted pair ignored
+        assert_eq!(sk.max, 3.0);
+    }
+
+    #[test]
+    fn merge_combines_counts_extrema_moments() {
+        let mut a = LayerSketch::new(16, 2);
+        let mut b = LayerSketch::new(16, 3);
+        for i in 0..100 {
+            a.push(i as f32 * 0.01);
+            b.push(1.0 + i as f32 * 0.01);
+        }
+        let (sa, sb) = (a.sum, b.sum);
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.min, 0.0);
+        assert!((a.max - 1.99).abs() < 1e-6);
+        assert!((a.sum - (sa + sb)).abs() < 1e-9);
+        assert_eq!(a.samples().len(), 16);
+        // merged reservoir draws from both sides
+        assert!(a.samples().iter().any(|&v| v >= 1.0));
+        assert!(a.samples().iter().any(|&v| v < 1.0));
+    }
+
+    #[test]
+    fn merge_into_empty_adopts_other() {
+        let mut a = LayerSketch::new(8, 4);
+        let mut b = LayerSketch::new(8, 5);
+        for i in 0..20 {
+            b.push(i as f32);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 20);
+        assert_eq!(a.samples().len(), 8);
+        let empty = LayerSketch::new(8, 6);
+        let before = a.count();
+        a.merge(&empty); // no-op
+        assert_eq!(a.count(), before);
+    }
+
+    #[test]
+    fn buckets_split_by_timestep() {
+        let mut set = SketchSet::new(2, 4, 64, 100, 9);
+        set.observe(0, 10.0, &[1.0, 2.0]); // bucket 0
+        set.observe(0, 90.0, &[5.0]); // bucket 3
+        set.observe(1, 55.0, &[7.0]); // bucket 2
+        assert_eq!(set.sketch(0, 0).count(), 2);
+        assert_eq!(set.sketch(0, 3).count(), 1);
+        assert_eq!(set.sketch(1, 2).count(), 1);
+        assert_eq!(set.layer_count(0), 3);
+        let merged = set.layer_merged(0);
+        assert_eq!(merged.count(), 3);
+        assert_eq!(merged.min, 1.0);
+        assert_eq!(merged.max, 5.0);
+    }
+
+    #[test]
+    fn observe_calib_layout_and_widen() {
+        let mut set = SketchSet::new(3, 2, 16, 100, 1);
+        let acts = vec![0.1, 0.2, 1.1, 1.2, 2.1, 2.2]; // [3, 2]
+        let mm = vec![-1.0, 1.0, -2.0, 2.0, -3.0, 3.0]; // [3, 2]
+        set.observe_calib(20.0, &acts, &mm, 2);
+        for l in 0..3 {
+            let sk = set.sketch(l, 0);
+            assert_eq!(sk.count(), 2);
+            assert_eq!(sk.min, -(l as f32 + 1.0));
+            assert_eq!(sk.max, l as f32 + 1.0);
+        }
+    }
+
+    #[test]
+    fn widen_only_bucket_survives_layer_merge() {
+        // a bucket that only ever saw exact extrema (no samples) must still
+        // contribute them to the merged per-layer view
+        let mut set = SketchSet::new(1, 4, 8, 100, 2);
+        set.observe(0, 80.0, &[0.1, 0.2]); // bucket 3
+        set.widen_layer(0, 5.0, -7.0, 9.0); // bucket 0, extrema only
+        let merged = set.layer_merged(0);
+        assert_eq!(merged.count(), 2);
+        assert_eq!(merged.min, -7.0);
+        assert_eq!(merged.max, 9.0);
+    }
+
+    #[test]
+    fn reset_clears_data_keeps_layout() {
+        let mut set = SketchSet::new(2, 2, 8, 100, 3);
+        set.observe(0, 5.0, &[1.0; 20]);
+        set.reset();
+        assert_eq!(set.layer_count(0), 0);
+        assert_eq!(set.n_layers(), 2);
+        set.observe(0, 5.0, &[2.0; 4]);
+        assert_eq!(set.layer_count(0), 4);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let feed = |seed| {
+            let mut set = SketchSet::new(1, 2, 8, 100, seed);
+            let mut rng = Rng::new(42);
+            for _ in 0..500 {
+                let t = rng.range(0.0, 100.0);
+                set.observe(0, t, &[rng.normal()]);
+            }
+            set.layer_merged(0).samples().to_vec()
+        };
+        assert_eq!(feed(11), feed(11));
+    }
+}

@@ -198,8 +198,11 @@ impl Denoiser {
         self.run_fp(params, n, b, &exe, s, out)
     }
 
-    /// [`Denoiser::eps_fp_into`] for a same-t batch (the serving round
-    /// executor's shape): t is marshalled straight into the pad scratch.
+    /// [`Denoiser::eps_fp_into`] for a same-t batch: t is marshalled
+    /// straight into the pad scratch. Convenience API only — the serving
+    /// executor routes every FP batch (same-t or mixed-t) through
+    /// [`Denoiser::eps_fp_into`]; the `into_variants` test pins both
+    /// marshalling paths bit-identical on uniform-t inputs.
     pub fn eps_fp_uniform_into(
         &self,
         params: &[f32],

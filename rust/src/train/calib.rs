@@ -2,7 +2,7 @@
 //! forward passes + per-layer activation samples along the FP denoising
 //! process, Q-Diffusion-style (samples drawn across timesteps).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::model::manifest::ModelInfo;
 use crate::quant::msfp::LayerCalib;
@@ -29,7 +29,16 @@ pub fn collect_calibration(
     let b = info.calib_b;
     let xs = info.x_size(1);
     let n_avail = x0s.len() / xs;
-    assert!(n_avail >= 1, "need at least one x0");
+    if n_avail == 0 {
+        // an empty (or too-short) x0 pool used to assert!-panic here, taking
+        // the whole pipeline down; surface it as a recoverable error instead
+        bail!(
+            "calibration x0 pool is empty: got {} values, need at least one sample of {} \
+             (pipeline::calibrate derives the pool from the corpus batch)",
+            x0s.len(),
+            xs
+        );
+    }
     let l = info.n_layers;
     let s = info.act_samples;
 
@@ -105,5 +114,28 @@ mod tests {
         }
         // at least some layers should be flagged AAL by architecture
         assert!(calib.iter().any(|c| c.aal_hint));
+    }
+
+    #[test]
+    fn empty_x0_pool_errors_instead_of_panicking() {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&d).unwrap();
+        let info = m.model("ddim16").unwrap();
+        let engine = Arc::new(Engine::new(&d).unwrap());
+        let den = Denoiser::new(engine, info).unwrap();
+        let params = ParamStore::load_init(info, &d).unwrap();
+        let sched = Schedule::linear(100);
+        let mut rng = Rng::new(6);
+        // empty pool and a too-short pool (less than one sample) both error
+        for x0 in [Vec::new(), vec![0.1f32; info.x_size(1) - 1]] {
+            let err =
+                collect_calibration(&den, info, &sched, &params.flat, &x0, 1, 0, &mut rng)
+                    .unwrap_err();
+            assert!(format!("{err:#}").contains("x0 pool is empty"), "{err:#}");
+        }
     }
 }

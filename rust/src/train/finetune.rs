@@ -1,4 +1,5 @@
-//! TALoRA + DFA fine-tuning (paper §4.2, §4.3, Appendix C).
+//! TALoRA + DFA fine-tuning (paper §4.2, §4.3, Appendix C), with optional
+//! online recalibration (`crate::recal`).
 //!
 //! Walks the denoising process step by step (trajectory buffer), at each
 //! step draws a minibatch of (x_t, eps_fp) pairs, and executes the
@@ -6,6 +7,19 @@
 //! the router (STE through the hard selection). Rust runs two Adam
 //! instances (lr 1e-4, Appendix C) and records the per-timestep loss curve
 //! and router allocations (Figures 3/7/9).
+//!
+//! With a [`FinetuneRecal`] context and `FinetuneCfg::recal_every > 0`,
+//! the loop additionally runs the EfficientDM-style
+//! recalibrate-while-tuning cadence: every `recal_every` epochs it probes
+//! the calibration graph on trajectory-sourced batches (one uniform
+//! timestep per probe, so the activation sketches stay timestep-
+//! attributed), scores per-layer drift against the quant session's
+//! current calibration, applies `QuantSession::update_layer_calib` to the
+//! drifted layers only, and swaps the freshly searched qparams into the
+//! remaining fine-tune steps. Because the first probe pass sees the
+//! *actual* fine-tuning input distribution (FP-rollout x_t) rather than
+//! the noised-x0 proxies of the initial calibration, the first check also
+//! absorbs that distribution gap.
 
 use std::sync::Arc;
 
@@ -13,7 +27,10 @@ use anyhow::Result;
 
 use crate::log_info;
 use crate::model::manifest::ModelInfo;
-use crate::runtime::Engine;
+use crate::quant::msfp::QuantOpts;
+use crate::quant::session::QuantSession;
+use crate::recal::{RecalPlanner, SketchSet};
+use crate::runtime::{Denoiser, Engine};
 use crate::schedule::Schedule;
 use crate::train::TrajectoryBuffer;
 use crate::util::rng::Rng;
@@ -32,12 +49,36 @@ pub struct FinetuneCfg {
     pub h: usize,
     pub seed: u64,
     pub log_every: usize,
+    /// run a drift check (and recalibrate drifted layers) every N epochs;
+    /// 0 = off. Only effective through [`finetune_recal`] with a
+    /// [`FinetuneRecal`] context — the plain [`finetune`] entry point has
+    /// no quant session to update and ignores it.
+    pub recal_every: usize,
 }
 
 impl Default for FinetuneCfg {
     fn default() -> Self {
-        FinetuneCfg { epochs: 4, lr: 1e-4, dfa: true, h: 2, seed: 0, log_every: 1 }
+        FinetuneCfg {
+            epochs: 4,
+            lr: 1e-4,
+            dfa: true,
+            h: 2,
+            seed: 0,
+            log_every: 1,
+            recal_every: 0,
+        }
     }
+}
+
+/// One applied recalibration during fine-tuning.
+#[derive(Debug, Clone)]
+pub struct RecalEvent {
+    /// epoch after which the check ran (0-based)
+    pub epoch: usize,
+    /// layers whose calibration was replaced
+    pub layers: Vec<usize>,
+    /// the largest drift score observed in the check
+    pub max_score: f32,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -48,10 +89,46 @@ pub struct FinetuneStats {
     pub sel_by_step: Vec<Vec<f32>>,
     /// loss trajectory over all updates
     pub losses: Vec<f32>,
+    /// recalibrations applied by the recal_every cadence
+    pub recal_events: Vec<RecalEvent>,
+}
+
+/// Everything the recalibrate-while-tuning cadence needs beyond the
+/// fine-tune loop itself. The session must be the one the initial qparams
+/// were searched on (its calibration is the drift baseline, and it keeps
+/// itself current as updates are applied).
+pub struct FinetuneRecal<'a> {
+    pub den: &'a Denoiser,
+    pub session: &'a mut QuantSession<'static>,
+    /// knobs the scheme is (re-)searched with — must match the initial
+    /// search so untouched layers replay their memoized winners
+    pub opts: QuantOpts,
+    pub planner: RecalPlanner,
+    /// calibration-graph probe batches sketched per check
+    pub probe_rounds: usize,
+    /// timestep buckets of the activation sketches
+    pub n_buckets: usize,
+    /// per-(layer, bucket) reservoir capacity
+    pub reservoir: usize,
+}
+
+impl<'a> FinetuneRecal<'a> {
+    pub fn new(den: &'a Denoiser, session: &'a mut QuantSession<'static>, opts: QuantOpts) -> Self {
+        FinetuneRecal {
+            den,
+            session,
+            opts,
+            planner: RecalPlanner::default(),
+            probe_rounds: 2,
+            n_buckets: 4,
+            reservoir: 256,
+        }
+    }
 }
 
 /// Fine-tune the LoRA hub + router. `qparams` comes from the MSFP (or
-/// baseline) search; `lora`/`router` are updated in place.
+/// baseline) search; `lora`/`router` are updated in place. Thin wrapper
+/// over [`finetune_recal`] without the recalibration cadence.
 #[allow(clippy::too_many_arguments)]
 pub fn finetune(
     engine: &Arc<Engine>,
@@ -63,6 +140,30 @@ pub fn finetune(
     lora: &mut Vec<f32>,
     router: &mut Vec<f32>,
     cfg: &FinetuneCfg,
+) -> Result<FinetuneStats> {
+    let mut qp = qparams.to_vec();
+    finetune_recal(engine, info, sched, traj, params, &mut qp, lora, router, cfg, None)
+}
+
+/// [`finetune`] with the online-recalibration cadence: when `recal` is
+/// provided and `cfg.recal_every > 0`, drifted layers are recalibrated
+/// mid-run and `qparams` is updated in place with the re-searched scheme
+/// (callers keep serving from the final value). Without a context (or with
+/// `recal_every == 0`) this is bit-identical to [`finetune`]: the probe
+/// rng is a separate stream, so enabling the cadence never perturbs the
+/// minibatch draws.
+#[allow(clippy::too_many_arguments)]
+pub fn finetune_recal(
+    engine: &Arc<Engine>,
+    info: &ModelInfo,
+    sched: &Schedule,
+    traj: &TrajectoryBuffer,
+    params: &[f32],
+    qparams: &mut Vec<f32>,
+    lora: &mut Vec<f32>,
+    router: &mut Vec<f32>,
+    cfg: &FinetuneCfg,
+    mut recal: Option<FinetuneRecal<'_>>,
 ) -> Result<FinetuneStats> {
     let exe = engine.load(info.artifact(&format!("finetune_b{}", info.train_b))?)?;
     let b = info.train_b;
@@ -79,7 +180,16 @@ pub fn finetune(
         loss_by_step: vec![0.0; traj.steps()],
         sel_by_step: vec![vec![0.0; h_total]; traj.steps()],
         losses: Vec::new(),
+        recal_events: Vec::new(),
     };
+    // recal state: sketches + an rng stream independent of the minibatch
+    // draws (the cadence must not perturb the training trajectory)
+    let mut recal_state = recal.as_ref().map(|r| {
+        (
+            SketchSet::new(l, r.n_buckets, r.reservoir, sched.t_total, cfg.seed ^ 0x726563),
+            Rng::new(cfg.seed ^ 0x7265636c),
+        )
+    });
 
     for epoch in 0..cfg.epochs {
         let last_epoch = epoch + 1 == cfg.epochs;
@@ -90,7 +200,7 @@ pub fn finetune(
             let (x_t, eps_t, cond) = traj.minibatch(i, b, &mut rng);
             let out = exe.run(&[
                 (params, &[params.len() as i64]),
-                (qparams, &[l as i64, 8]),
+                (&qparams[..], &[l as i64, 8]),
                 (&lora[..], &[lora.len() as i64]),
                 (&router[..], &[router.len() as i64]),
                 (&hub_mask, &[h_total as i64]),
@@ -119,8 +229,64 @@ pub fn finetune(
             let mean: f32 = recent.iter().sum::<f32>() / recent.len().max(1) as f32;
             log_info!("finetune epoch {epoch}/{} mean weighted loss {mean:.5}", cfg.epochs);
         }
+
+        // recalibrate-while-tuning cadence: probe, score drift, rebuild the
+        // drifted layers' searches, swap the new qparams into the remaining
+        // epochs (the last epoch has no remaining steps to benefit)
+        if let (Some(r), Some((sketches, probe_rng))) = (recal.as_mut(), recal_state.as_mut()) {
+            if cfg.recal_every > 0 && (epoch + 1) % cfg.recal_every == 0 && !last_epoch {
+                if let Some(event) =
+                    recal_check(r, info, traj, params, qparams, sketches, probe_rng)?
+                {
+                    log_info!(
+                        "recalibrated {} layer(s) after epoch {epoch} (max drift {:.3})",
+                        event.layers.len(),
+                        event.max_score
+                    );
+                    stats.recal_events.push(RecalEvent { epoch, ..event });
+                }
+            }
+        }
     }
     Ok(stats)
+}
+
+/// One drift check: sketch `probe_rounds` calibration-graph probes built
+/// from the trajectory buffer (uniform t per probe batch, so samples land
+/// in the right timestep bucket), plan against the session's current
+/// calibration, and apply + re-search if anything drifted. Returns the
+/// applied event (epoch filled in by the caller), or None when no layer
+/// crossed the threshold.
+fn recal_check(
+    r: &mut FinetuneRecal<'_>,
+    info: &ModelInfo,
+    traj: &TrajectoryBuffer,
+    params: &[f32],
+    qparams: &mut Vec<f32>,
+    sketches: &mut SketchSet,
+    probe_rng: &mut Rng,
+) -> Result<Option<RecalEvent>> {
+    let b = info.calib_b;
+    for _ in 0..r.probe_rounds.max(1) {
+        let i = probe_rng.below(traj.steps());
+        let t = traj.tau[i] as f32;
+        let (x, _eps, cond) = traj.minibatch(i, b, probe_rng);
+        let tb = vec![t; b];
+        let (_e, a_out, mm) = r.den.calib_forward(params, &x, &tb, &cond)?;
+        sketches.observe_calib(t, &a_out, &mm, info.act_samples);
+    }
+    let plan = r.planner.plan(r.session.calib(), sketches);
+    if plan.is_empty() {
+        return Ok(None);
+    }
+    let layers: Vec<usize> = plan.layers.iter().map(|rl| rl.layer).collect();
+    let max_score = plan.layers.iter().map(|rl| rl.score).fold(0.0f32, f32::max);
+    for rl in plan.layers {
+        r.session.update_layer_calib(rl.layer, rl.calib);
+    }
+    let scheme = r.session.quantize(&r.opts);
+    *qparams = scheme.qparams_rows();
+    Ok(Some(RecalEvent { epoch: 0, layers, max_score }))
 }
 
 #[cfg(test)]
@@ -161,7 +327,15 @@ mod tests {
         }
         let mut lora = LoraHub::init(info, &mut rng).flat;
         let mut router = rng.normal_vec(info.router_size, 0.05);
-        let cfg = FinetuneCfg { epochs: 6, lr: 3e-3, dfa: true, h: 2, seed: 2, log_every: 100 };
+        let cfg = FinetuneCfg {
+            epochs: 6,
+            lr: 3e-3,
+            dfa: true,
+            h: 2,
+            seed: 2,
+            log_every: 100,
+            recal_every: 0,
+        };
         let stats = finetune(
             &engine, info, &sched, &traj, &params, &qp, &mut lora, &mut router, &cfg,
         )
@@ -180,5 +354,87 @@ mod tests {
             assert_eq!(row[2], 0.0);
             assert_eq!(row[3], 0.0);
         }
+        assert!(stats.recal_events.is_empty());
+    }
+
+    #[test]
+    fn finetune_recal_cadence_recalibrates_and_stays_finite() {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&d).unwrap();
+        let info = m.model("ddim16").unwrap();
+        let engine = Arc::new(Engine::new(&d).unwrap());
+        let den = Denoiser::new(Arc::clone(&engine), info).unwrap();
+        let params = ParamStore::load_init(info, &d).unwrap().flat;
+        let sched = Schedule::linear(100);
+        let tau = timestep_subsequence(100, 4);
+        let mut rng = Rng::new(19);
+        let traj =
+            TrajectoryBuffer::collect(&den, info, &sched, &tau, &params, 4, 0, &mut rng).unwrap();
+
+        // initial calibration from noised-x0 proxies (the distribution the
+        // recal probes will measure drift against)
+        let x0: Vec<f32> = (0..4 * info.x_size(1)).map(|_| rng.normal() * 0.5).collect();
+        let calib = crate::train::collect_calibration(
+            &den, info, &sched, &params, &x0, 2, 0, &mut rng,
+        )
+        .unwrap();
+        let weights =
+            ParamStore::from_vec(info, params.clone()).unwrap().layer_weights(info).unwrap();
+        let mut session = QuantSession::from_owned(weights, calib);
+        let opts = QuantOpts::new(crate::quant::msfp::Method::Msfp, info.n_layers, 4, 4);
+        let scheme = session.quantize(&opts);
+        let mut qparams = scheme.qparams_rows();
+        let init_qparams = qparams.clone();
+
+        let mut lora = LoraHub::init(info, &mut rng).flat;
+        let mut router = rng.normal_vec(info.router_size, 0.05);
+        let cfg = FinetuneCfg {
+            epochs: 3,
+            lr: 1e-3,
+            recal_every: 1,
+            seed: 4,
+            log_every: 100,
+            ..Default::default()
+        };
+        // an eager planner so the trajectory-vs-proxy distribution gap is
+        // guaranteed to trip at least one layer on the tiny test budget
+        let mut recal = FinetuneRecal::new(&den, &mut session, opts.clone());
+        recal.planner.threshold = 0.02;
+        recal.planner.min_samples = 8;
+        let stats = finetune_recal(
+            &engine,
+            info,
+            &sched,
+            &traj,
+            &params,
+            &mut qparams,
+            &mut lora,
+            &mut router,
+            &cfg,
+            Some(recal),
+        )
+        .unwrap();
+        assert!(stats.losses.iter().all(|l| l.is_finite()));
+        assert!(!stats.recal_events.is_empty(), "eager cadence never fired");
+        let ev = &stats.recal_events[0];
+        assert!(!ev.layers.is_empty());
+        assert!(ev.max_score > 0.02);
+        assert_ne!(qparams, init_qparams, "recalibration did not change the scheme");
+        assert_eq!(qparams.len(), info.n_layers * 8);
+        // the updated scheme matches a cold re-search on the session's
+        // current calibration (the incremental-rebuild parity contract)
+        let cold = QuantSession::from_owned(
+            ParamStore::from_vec(info, params.clone())
+                .unwrap()
+                .layer_weights(info)
+                .unwrap(),
+            session.calib().to_vec(),
+        )
+        .quantize(&opts);
+        assert_eq!(qparams, cold.qparams_rows());
     }
 }

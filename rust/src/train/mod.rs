@@ -10,6 +10,8 @@ pub mod finetune;
 
 pub use adam::Adam;
 pub use calib::collect_calibration;
-pub use finetune::{finetune, FinetuneCfg, FinetuneStats};
+pub use finetune::{
+    finetune, finetune_recal, FinetuneCfg, FinetuneRecal, FinetuneStats, RecalEvent,
+};
 pub use pretrain::{pretrain, PretrainCfg};
 pub use trajectory::TrajectoryBuffer;

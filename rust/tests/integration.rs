@@ -58,7 +58,7 @@ fn quantize_then_serve_quantized() {
         p.info.clone(),
         pl.sched.clone(),
         Arc::new(p.params.clone()),
-        ServerCfg { mode: ServeMode::Quant(q.state), decode_latents: false, seed: 7, workers: 0 },
+        ServerCfg { seed: 7, ..ServerCfg::new(ServeMode::Quant(q.state)) },
     );
     let mut rxs = Vec::new();
     for i in 0..4 {
@@ -91,7 +91,7 @@ fn serving_mixed_samplers_and_conditional() {
         info,
         pl.sched.clone(),
         params,
-        ServerCfg { mode: ServeMode::Fp, decode_latents: true, seed: 1, workers: 0 },
+        ServerCfg { decode_latents: true, seed: 1, ..ServerCfg::new(ServeMode::Fp) },
     );
     let mut ddim = Request::new(0, 2, 4);
     ddim.class = Some(3);
@@ -162,10 +162,9 @@ fn parallel_round_executor_is_bit_identical_to_sequential() {
             pl.sched.clone(),
             Arc::clone(&params),
             ServerCfg {
-                mode: ServeMode::Quant(qs.clone()),
-                decode_latents: false,
                 seed: 11,
                 workers,
+                ..ServerCfg::new(ServeMode::Quant(qs.clone()))
             },
         );
         let rxs = handle.submit_many(workload()).unwrap();
@@ -182,6 +181,166 @@ fn parallel_round_executor_is_bit_identical_to_sequential() {
     for workers in [2usize, 4] {
         assert_eq!(seq, run(workers), "workers={workers} changed output bits");
     }
+}
+
+/// The FP mixed-t batching satellite's end-to-end pin: a mixed-steps FP
+/// workload (requests at different denoising phases every round) served
+/// with mixed-t planning produces bit-identical images to same-t planning
+/// — the FP graph computes each sample from its own (x, t, cond) — while
+/// packing the same work into fewer, fuller batches.
+#[test]
+fn fp_mixed_t_batching_is_bit_identical_and_cuts_evals() {
+    let Some(dir) = artifacts() else { return };
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let info = pl.manifest.model("ddim16").unwrap().clone();
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(msfp::model::ParamStore::load_init(&info, &dir).unwrap().flat);
+
+    // every request runs a different step count => its tau sequence hits
+    // distinct t's, so same-t planning degenerates to one singleton batch
+    // per request per round while mixed-t packs them together
+    let workload = || -> Vec<Request> {
+        (0..8u64)
+            .map(|i| {
+                let mut r = Request::new(0, 1, 3 + i as usize);
+                r.seed = 40 + i;
+                r
+            })
+            .collect()
+    };
+    let run = |mixed: bool| {
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            ServerCfg { seed: 5, fp_mixed_t: mixed, ..ServerCfg::new(ServeMode::Fp) },
+        );
+        let rxs = handle.submit_many(workload()).unwrap();
+        let images: Vec<Vec<u32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().images.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        (images, handle.shutdown())
+    };
+
+    let (same_imgs, same_m) = run(false);
+    let (mixed_imgs, mixed_m) = run(true);
+    assert_eq!(same_imgs, mixed_imgs, "mixed-t planning changed FP output bits");
+    assert!(
+        mixed_m.evals < same_m.evals,
+        "mixed-t did not cut batch evals: {} vs {}",
+        mixed_m.evals,
+        same_m.evals
+    );
+    assert!(mixed_m.mean_batch() > same_m.mean_batch());
+}
+
+/// Serving-side online recalibration: a drifted activation stream fed into
+/// the sketch handle triggers a background drift check and a between-
+/// rounds qparams hot-swap; an undrifted stream must swap nothing and
+/// leave output bits untouched.
+#[test]
+fn serving_recalibration_hot_swaps_on_drift_only() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::ServeRecal;
+    use msfp::quant::msfp::{Method, QuantOpts};
+    use msfp::recal::SketchSet;
+    use std::sync::Mutex;
+
+    std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_integ_recal"));
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let p = pl.prepare(Corpus::CifarSyn).unwrap();
+    let info = p.info.clone();
+    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4)
+        .with_io_8bit(&info.io_layer_indices());
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(p.params.clone());
+
+    let mut spec = MethodSpec::ours(4, 2, 0);
+    spec.finetune = None;
+
+    let workload = || -> Vec<Request> {
+        (0..6u64)
+            .map(|i| {
+                let mut r = Request::new(0, 2, 6);
+                r.seed = 60 + i;
+                r
+            })
+            .collect()
+    };
+
+    // run: serve the workload with (optionally) a recal config whose
+    // sketches replay each layer's calibration stream, `shift`ed
+    let run = |with_recal: bool, shift: f32| {
+        let session = pl.build_session(&p).unwrap();
+        let q = pl.quantize_with_session(&p, &session, &spec).unwrap();
+        let recal = with_recal.then(|| {
+            let sketches = Arc::new(Mutex::new(SketchSet::new(
+                info.n_layers,
+                4,
+                256,
+                pl.sched.t_total,
+                17,
+            )));
+            {
+                let mut set = sketches.lock().unwrap();
+                let mut rng = Rng::new(18);
+                for (l, c) in session.calib().iter().enumerate() {
+                    for chunk in c.acts.chunks(128) {
+                        let t = rng.range(0.0, pl.sched.t_total as f32);
+                        let vals: Vec<f32> = chunk.iter().map(|v| v + shift).collect();
+                        set.observe(l, t, &vals);
+                    }
+                    // replay the exact extrema too: the baseline min/max
+                    // come from the calib graph's full-tensor capture,
+                    // which the subsampled acts don't always reach
+                    set.widen_layer(l, 0.0, c.min + shift, c.max + shift);
+                }
+            }
+            let mut r = ServeRecal::new(session, opts.clone(), sketches);
+            r.every_rounds = 1;
+            r
+        });
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            // workers=1 runs the background check in-line on the scheduler
+            // thread, so "a swap lands before the workload drains" is
+            // deterministic rather than a pool-timing race
+            ServerCfg {
+                seed: 21,
+                workers: 1,
+                recal,
+                ..ServerCfg::new(ServeMode::Quant(q.state))
+            },
+        );
+        let rxs = handle.submit_many(workload()).unwrap();
+        let images: Vec<Vec<u32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().images.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        (images, handle.shutdown())
+    };
+
+    // no recal vs undrifted recal: checks run, nothing swaps, bits agree
+    let (base_imgs, base_m) = run(false, 0.0);
+    assert_eq!(base_m.recal_checks, 0);
+    let (clean_imgs, clean_m) = run(true, 0.0);
+    assert!(clean_m.recal_checks > 0, "cadence never checked");
+    assert_eq!(clean_m.recal_swaps, 0, "undrifted stream must not swap");
+    assert_eq!(base_imgs, clean_imgs, "an idle recal config changed output bits");
+
+    // drifted stream: at least one swap lands and serving stays healthy
+    let (drift_imgs, drift_m) = run(true, 1.0);
+    assert!(drift_m.recal_swaps >= 1, "drift never swapped: {}", drift_m.report());
+    assert!(drift_m.recal_layers >= 1);
+    for img in &drift_imgs {
+        assert!(img.iter().all(|b| f32::from_bits(*b).is_finite()));
+    }
+    std::env::remove_var("MSFP_RUNS");
 }
 
 #[test]

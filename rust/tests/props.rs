@@ -514,6 +514,87 @@ fn session_default_weight_space_matches_scalar_oracle() {
 }
 
 #[test]
+fn session_incremental_recalibration_matches_cold_rebuild() {
+    // the online-recalibration contract: a session that absorbs per-layer
+    // calib updates via update_layer_calib stays bit-identical to a cold
+    // session built from the updated calibration, across methods and a
+    // sequence of updates (each update invalidates only its own layer)
+    let n_layers = 6;
+    let (weights, calib) = session_model(7001, n_layers);
+    let methods = [Method::Msfp, Method::SignedFp, Method::IntMinMax, Method::IntMse];
+    let mut rng = Rng::new(7002);
+    for (round, &method) in methods.iter().enumerate() {
+        let opts = QuantOpts::new(method, n_layers, 4, 4);
+        let mut session = QuantSession::new(&weights, &calib);
+        let mut current = calib.clone();
+        let _ = session.quantize(&opts); // warm every memo before updating
+        for step in 0..3 {
+            // shift a layer hard enough to move argmins (and classes: a
+            // positive offset fills the silu trough on AAL layers)
+            let l = rng.below(n_layers);
+            let shift = 0.5 + rng.range(0.0, 1.0);
+            let scale = 1.0 + rng.range(0.0, 2.0);
+            let acts: Vec<f32> =
+                current[l].acts.iter().map(|v| v * scale + shift).collect();
+            let updated =
+                LayerCalib::from_samples(current[l].name.clone(), acts, current[l].aal_hint);
+            current[l] = updated.clone();
+            session.update_layer_calib(l, updated);
+            let warm = session.quantize(&opts);
+            let cold = QuantSession::new(&weights, &current).quantize(&opts);
+            assert_schemes_bit_identical(
+                &warm,
+                &cold,
+                &format!("method round {round} update {step} (layer {l})"),
+            );
+        }
+    }
+}
+
+#[test]
+fn recal_planner_plus_session_roundtrip_is_stable() {
+    // feeding a session's own calibration back through the sketch->drift->
+    // plan pipeline must plan nothing (no false-positive recalibration),
+    // while a genuinely shifted stream must plan that layer and the applied
+    // update must match a cold rebuild
+    use msfp::recal::{RecalPlanner, SketchSet};
+    let n_layers = 4;
+    let (weights, calib) = session_model(7101, n_layers);
+    let mut sketches = SketchSet::new(n_layers, 4, 512, 100, 3);
+    let mut rng = Rng::new(7102);
+    // replay the baseline itself into the sketches
+    for (l, c) in calib.iter().enumerate() {
+        for chunk in c.acts.chunks(64) {
+            sketches.observe(l, rng.range(0.0, 100.0), chunk);
+        }
+        let merged = sketches.layer_merged(l);
+        assert!(merged.count() >= c.acts.len());
+    }
+    let planner = RecalPlanner::default();
+    let plan = planner.plan(&calib, &sketches);
+    assert!(plan.is_empty(), "baseline replay must not drift: {:?}", plan.scores);
+
+    // now shift layer 1's live stream and re-plan
+    for _ in 0..40 {
+        let vals: Vec<f32> = (0..64).map(|_| rng.normal() * 2.0 + 1.5).collect();
+        sketches.observe(1, rng.range(0.0, 100.0), &vals);
+    }
+    let plan = planner.plan(&calib, &sketches);
+    assert_eq!(plan.layers.len(), 1, "scores: {:?}", plan.scores);
+    assert_eq!(plan.layers[0].layer, 1);
+
+    let opts = QuantOpts::new(Method::Msfp, n_layers, 4, 4);
+    let mut session = QuantSession::new(&weights, &calib);
+    let _ = session.quantize(&opts);
+    session.update_layer_calib(1, plan.layers[0].calib.clone());
+    let warm = session.quantize(&opts);
+    let mut c2 = calib.clone();
+    c2[1] = plan.layers[0].calib.clone();
+    let cold = QuantSession::new(&weights, &c2).quantize(&opts);
+    assert_schemes_bit_identical(&warm, &cold, "planned update vs cold");
+}
+
+#[test]
 fn prop_frechet_is_metric_like() {
     // symmetry + identity + sensitivity on random gaussian clouds
     check(

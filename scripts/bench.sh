@@ -5,11 +5,15 @@
 # and leaves machine-readable BENCH_quant.json / BENCH_serving.json at
 # the repo root so the perf trajectory is comparable across PRs:
 #   * BENCH_quant.json — grid-segment engine vs the retained *_scalar
-#     oracle, and the msfp_table5_sweep_cold vs msfp_table5_sweep_session
-#     QuantSession amortization pair;
+#     oracle, the msfp_table5_sweep_cold vs msfp_table5_sweep_session
+#     QuantSession amortization pair, and the recal_one_layer vs
+#     rebuild_full_session online-recalibration pair (incremental
+#     update_layer_calib rebuild vs cold session rebuild, 12 layers);
 #   * BENCH_serving.json — per-eval latency by batch class, the
 #     coordinator_sequential_exec vs coordinator_parallel round-executor
-#     throughput pair, and the selection-cache hit rate.
+#     throughput pair, the selection-cache hit rate, and the
+#     hot_swap_stall row (mean round latency with a background
+#     recalibration swap landing vs without).
 #
 #   scripts/bench.sh
 #

@@ -4,10 +4,11 @@
 #   scripts/ci.sh
 #
 # Runs, in order:
-#   cargo fmt --check            formatting drift fails the gate
-#   cargo clippy -- -D warnings  lint findings fail the gate
-#   cargo build --release        tier-1 verify, part 1
-#   cargo test -q                tier-1 verify, part 2
+#   cargo fmt --check                          formatting drift fails the gate
+#   cargo clippy --all-targets -- -D warnings  lints over lib, tests, benches
+#                                              and examples fail the gate
+#   cargo build --release                      tier-1 verify, part 1
+#   cargo test -q                              tier-1 verify, part 2
 #
 # Perf companion: scripts/bench.sh (perf_quant → BENCH_quant.json).
 set -euo pipefail
@@ -25,8 +26,8 @@ fi
 echo "== cargo fmt --check =="
 cargo fmt --check
 
-echo "== cargo clippy -D warnings =="
-cargo clippy -- -D warnings
+echo "== cargo clippy --all-targets -D warnings =="
+cargo clippy --all-targets -- -D warnings
 
 echo "== tier-1 verify =="
 cargo build --release
