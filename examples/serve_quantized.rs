@@ -1,10 +1,17 @@
 //! Serving scenario: a mixed workload of generation requests (different
 //! sizes, step counts and samplers) against the 4-bit quantized model,
-//! demonstrating step-level continuous batching, plus the online
-//! recalibration loop: a (simulated) drifted activation stream fed into
-//! the coordinator's sketch handle triggers a background drift check and
-//! a between-rounds qparams hot-swap — the edge-deployment story of the
-//! paper's intro carried into long-running serving.
+//! demonstrating step-level continuous batching, plus the *self-
+//! calibrating* recalibration loop:
+//!
+//!  * an externally simulated drifted stream on layer 0 (the monitoring-
+//!    sidecar producer) rides the shared sketch handle;
+//!  * the in-process shadow prober (`ServerCfg::probe_budget`) recycles a
+//!    budgeted slice of each round's request latents through the
+//!    calibration graph, so the server also observes its own traffic;
+//!  * drift checks hot-swap re-searched qparams between rounds, and the
+//!    drift window persists to a state dir (`ServeRecal::state_dir`) —
+//!    re-run this example and the server resumes the saved window instead
+//!    of starting blind.
 //!
 //!   make artifacts && cargo run --release --example serve_quantized
 
@@ -62,6 +69,11 @@ fn main() -> Result<()> {
     }
     let mut recal = ServeRecal::new(session, opts, Arc::clone(&sketches));
     recal.every_rounds = 4;
+    // persistence: the drift window (and each hot-swap's quant state) is
+    // checkpointed here and restored on the next run of this example
+    let state_dir = pl.serving_state_dir("example");
+    println!("serving state dir: {}", state_dir.root().display());
+    let recal = recal.with_state_dir(state_dir);
 
     let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &p.info)?);
     let handle = coordinator::spawn(
@@ -69,7 +81,14 @@ fn main() -> Result<()> {
         p.info.clone(),
         pl.sched.clone(),
         Arc::new(p.params.clone()),
-        ServerCfg { seed: 4, recal: Some(recal), ..ServerCfg::new(ServeMode::Quant(q.state)) },
+        ServerCfg {
+            seed: 4,
+            recal: Some(recal),
+            // self-calibration: up to 2 recycled-latent calib probes per
+            // round feed the same sketches the simulated stream does
+            probe_budget: 2,
+            ..ServerCfg::new(ServeMode::Quant(q.state))
+        },
     );
 
     // mixed workload: bursts of small interactive requests + large batch
@@ -106,6 +125,10 @@ fn main() -> Result<()> {
     println!(
         "online recalibration: {} drift check(s), {} hot-swap(s) covering {} layer(s)",
         m.recal_checks, m.recal_swaps, m.recal_layers
+    );
+    println!(
+        "shadow prober: {} probe(s) fed, {} skipped by the budget gate, {} failed",
+        m.probes, m.probes_skipped, m.probes_failed
     );
     Ok(())
 }

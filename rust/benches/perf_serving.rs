@@ -15,7 +15,13 @@
 //!     background recalibration lands qparams hot-swaps vs the same run
 //!     without recalibration (the cost of swap application + check
 //!     scheduling as seen by the scheduler loop, NOT of the search itself,
-//!     which runs on the pool).
+//!     which runs on the pool);
+//!   * `probe_overhead`: mean-round-latency delta with the shadow prober
+//!     at budget 2 vs budget 0 (detector parked — the pure cost of
+//!     self-calibration probing);
+//!   * `restart_warm_vs_cold`: rounds until the first hot-swap for a
+//!     cold server (empty sketch window, prober must refill it) vs a warm
+//!     restart (window restored from the persisted state dir).
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -56,13 +62,20 @@ fn serve_workload(
     qs: &QuantState,
     workers: usize,
     recal: Option<ServeRecal>,
+    probe_budget: usize,
 ) -> (f64, Metrics) {
     let handle = coordinator::spawn(
         Arc::clone(den),
         info.clone(),
         sched.clone(),
         Arc::clone(params),
-        ServerCfg { seed: 1, workers, recal, ..ServerCfg::new(ServeMode::Quant(qs.clone())) },
+        ServerCfg {
+            seed: 1,
+            workers,
+            recal,
+            probe_budget,
+            ..ServerCfg::new(ServeMode::Quant(qs.clone()))
+        },
     );
     let t0 = Instant::now();
     let rxs = handle.submit_many(workload()).unwrap();
@@ -140,11 +153,11 @@ fn main() {
     println!("\n-- coordinator throughput (16 requests x 2 images, 6/9 steps mixed, quantized) --");
     // warmup run so the executor comparison is not confounded by lazy
     // artifact compilation
-    serve_workload(&den, &info, &sched, &params, &qs, 1, None);
+    serve_workload(&den, &info, &sched, &params, &qs, 1, None, 0);
 
-    let (seq_thpt, seq_m) = serve_workload(&den, &info, &sched, &params, &qs, 1, None);
+    let (seq_thpt, seq_m) = serve_workload(&den, &info, &sched, &params, &qs, 1, None, 0);
     println!("  sequential-exec (workers=1): {}", seq_m.report());
-    let (par_thpt, par_m) = serve_workload(&den, &info, &sched, &params, &qs, 0, None);
+    let (par_thpt, par_m) = serve_workload(&den, &info, &sched, &params, &qs, 0, None, 0);
     println!("  parallel-exec   (workers=auto): {}", par_m.report());
     println!(
         "  parallel/sequential throughput: {:.2}x  (sel-cache hit rate {:.0}%)",
@@ -211,7 +224,7 @@ fn main() {
     }
     let mut recal = ServeRecal::new(session, opts, sketches);
     recal.every_rounds = 2;
-    let (_swap_thpt, swap_m) = serve_workload(&den, &info, &sched, &params, &qs, 0, Some(recal));
+    let (_swap_thpt, swap_m) = serve_workload(&den, &info, &sched, &params, &qs, 0, Some(recal), 0);
     println!("  with-recal (workers=auto): {}", swap_m.report());
     let stall = mean_round_ms(&swap_m) - mean_round_ms(&par_m);
     println!(
@@ -229,6 +242,86 @@ fn main() {
     rows.push(metric_row("coordinator_round_ms_recal_swap", mean_round_ms(&swap_m), "ms"));
     rows.push(metric_row("hot_swap_stall", stall, "ms"));
     rows.push(metric_row("hot_swap_count", swap_m.recal_swaps as f64, "swaps"));
+
+    // --- probe overhead: shadow prober on vs off, detector parked ---------
+    // Same workload and recal config with an astronomical drift threshold,
+    // so the only difference between the two runs is the budgeted
+    // calib_forward probes riding the worker pool. The delta is the
+    // scheduler-observed cost of self-calibration (probe snapshot + pool
+    // contention), not of recalibration itself.
+    println!("\n-- probe overhead (shadow prober, budget 0 vs 2, no swaps) --");
+    let probe_recal = |threshold: f32, min_samples: usize, every: usize| -> ServeRecal {
+        let weights = ParamStore::from_vec(&info, (*params).clone())
+            .unwrap()
+            .layer_weights(&info)
+            .unwrap();
+        let session = QuantSession::from_owned(weights, calib.clone());
+        let _ = session.quantize(&QuantOpts::new(Method::Msfp, info.n_layers, 4, 4));
+        let sketches =
+            Arc::new(Mutex::new(SketchSet::new(info.n_layers, 4, 256, sched.t_total, 3)));
+        let mut r = ServeRecal::new(
+            session,
+            QuantOpts::new(Method::Msfp, info.n_layers, 4, 4),
+            sketches,
+        );
+        r.planner = msfp::recal::RecalPlanner {
+            threshold,
+            min_samples,
+            ..Default::default()
+        };
+        r.every_rounds = every;
+        r
+    };
+    let (_, p0_m) = serve_workload(
+        &den, &info, &sched, &params, &qs, 0, Some(probe_recal(f32::MAX, 64, 10_000)), 0,
+    );
+    let (_, p2_m) = serve_workload(
+        &den, &info, &sched, &params, &qs, 0, Some(probe_recal(f32::MAX, 64, 10_000)), 2,
+    );
+    let probe_overhead = mean_round_ms(&p2_m) - mean_round_ms(&p0_m);
+    println!(
+        "  mean round {:.3} ms (budget 2, {} probes) vs {:.3} ms (budget 0) -> overhead {:+.3} ms",
+        mean_round_ms(&p2_m),
+        p2_m.probes,
+        mean_round_ms(&p0_m),
+        probe_overhead
+    );
+    rows.push(metric_row("coordinator_round_ms_probe0", mean_round_ms(&p0_m), "ms"));
+    rows.push(metric_row("coordinator_round_ms_probe2", mean_round_ms(&p2_m), "ms"));
+    rows.push(metric_row("probe_overhead", probe_overhead, "ms"));
+    rows.push(metric_row("probe_count", p2_m.probes as f64, "probes"));
+
+    // --- restart warm vs cold: rounds until the first hot-swap ------------
+    // Cold: an empty window — the prober must accumulate min_samples from
+    // live traffic (which drifts hard against the synthetic calibration
+    // baseline) before the detector can swap. Warm: a restarted server
+    // restores the persisted window from the cold run's state dir and
+    // swaps at the first check. The row pair is the restart-blindness the
+    // persistence satellite removes.
+    println!("\n-- restart drift detection: cold (empty window) vs warm (restored) --");
+    let state_root = std::env::temp_dir().join("msfp_bench_serving_state");
+    let _ = std::fs::remove_dir_all(&state_root);
+    let sd = msfp::quant::msfp::StateDir::new(&state_root);
+    let min_samples = 4 * info.act_samples; // ≈ 2 budget-2 probe rounds/layer
+    let cold_recal = probe_recal(0.08, min_samples, 1).with_state_dir(sd.clone());
+    let (_, cold_m) = serve_workload(&den, &info, &sched, &params, &qs, 0, Some(cold_recal), 2);
+    let warm_recal = probe_recal(0.08, min_samples, 1).with_state_dir(sd.clone());
+    let (_, warm_m) = serve_workload(&den, &info, &sched, &params, &qs, 0, Some(warm_recal), 2);
+    let to_f = |m: &Metrics| m.first_swap_round.map(|r| r as f64).unwrap_or(-1.0);
+    println!(
+        "  cold: first swap at round {:?} ({} probes)   warm: first swap at round {:?}",
+        cold_m.first_swap_round, cold_m.probes, warm_m.first_swap_round
+    );
+    rows.push(metric_row("restart_cold_rounds_to_swap", to_f(&cold_m), "rounds"));
+    rows.push(metric_row("restart_warm_rounds_to_swap", to_f(&warm_m), "rounds"));
+    // the delta row only makes sense when both runs actually swapped; the
+    // absolute rows above carry the -1 "never swapped" sentinel on their own
+    match (cold_m.first_swap_round, warm_m.first_swap_round) {
+        (Some(c), Some(w)) => {
+            rows.push(metric_row("restart_warm_vs_cold", c as f64 - w as f64, "rounds"));
+        }
+        _ => println!("  WARNING: a run never swapped; restart_warm_vs_cold row omitted"),
+    }
 
     let path =
         std::env::var("BENCH_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".to_string());

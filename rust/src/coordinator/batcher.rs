@@ -388,6 +388,54 @@ mod tests {
     }
 
     #[test]
+    fn empty_round_plans_nothing_in_both_modes() {
+        for mode in [PlanMode::SameT, PlanMode::MixedT] {
+            let plan = plan_mode(&[], CLASSES, mode);
+            assert!(plan.is_empty(), "{mode:?}");
+            assert!(ticket_offsets(&plan, 0).is_empty());
+        }
+    }
+
+    #[test]
+    fn single_ticket_mixed_t_matches_same_t() {
+        // one ticket (the single-request server): both modes must produce
+        // the identical plan, including the oversized-split path
+        for n in [1usize, 3, 8, 19] {
+            let tickets = vec![Ticket { req: 0, t: 4.5, n }];
+            let same = plan(&tickets, CLASSES);
+            let mixed = plan_mode(&tickets, CLASSES, PlanMode::MixedT);
+            assert_eq!(same, mixed, "n={n}");
+            assert_eq!(ticket_offsets(&same, 1), ticket_offsets(&mixed, 1));
+            let total: usize = mixed.iter().map(|b| b.used()).sum();
+            assert_eq!(total, n);
+        }
+    }
+
+    #[test]
+    fn prop_mixed_t_degenerates_to_same_t_on_uniform_input() {
+        // all-same-t input: MixedT must degenerate to SameT batching
+        // EXACTLY — same batches, same classes, same ticket order
+        prop::check(
+            "mixed-t-uniform-degenerate",
+            200,
+            |rng: &mut Rng| {
+                let t = rng.below(7) as f32 * 1.5;
+                let n = 1 + rng.below(14);
+                (0..n)
+                    .map(|i| Ticket { req: i, t, n: 1 + rng.below(11) })
+                    .collect::<Vec<_>>()
+            },
+            |tickets| {
+                let same = plan(tickets, CLASSES);
+                let mixed = plan_mode(tickets, CLASSES, PlanMode::MixedT);
+                same == mixed
+                    && ticket_offsets(&same, tickets.len())
+                        == ticket_offsets(&mixed, tickets.len())
+            },
+        );
+    }
+
+    #[test]
     fn prop_fill_ratio_reasonable() {
         // with many same-t single-sample tickets the packer should reach
         // high fill on all but the last batch

@@ -88,19 +88,25 @@ pub fn eval_closure(ctx: EvalCtx) -> Arc<EvalFn> {
 }
 
 /// Recycled marshalling storage shared between the scheduler thread
-/// (gather buffers) and the workers (pad scratch, output buffers).
+/// (gather buffers) and the workers (output buffers).
 #[derive(Default)]
 struct BufStore {
     gathers: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
-    pads: Vec<EpsScratch>,
     outs: Vec<Vec<f32>>,
 }
+
+/// Shared pool of pad-to-batch-class staging scratch ([`EpsScratch`]).
+/// Batch evals and the shadow prober's `calib_forward` jobs draw from the
+/// same pool, so probing reuses the allocations the eval path already
+/// warmed instead of growing its own set.
+pub type PadPool = Arc<Mutex<Vec<EpsScratch>>>;
 
 pub struct RoundExecutor {
     /// None ⇒ single-worker mode: batches run in-line on the caller's
     /// thread, in plan order (the sequential reference path).
     pool: Option<Pool>,
     bufs: Arc<Mutex<BufStore>>,
+    pads: PadPool,
     res_tx: mpsc::Sender<BatchResult>,
     res_rx: mpsc::Receiver<BatchResult>,
 }
@@ -112,7 +118,19 @@ impl RoundExecutor {
         let workers = resolve_threads(workers);
         let pool = (workers > 1).then(|| Pool::new(workers));
         let (res_tx, res_rx) = mpsc::channel();
-        RoundExecutor { pool, bufs: Arc::new(Mutex::new(BufStore::default())), res_tx, res_rx }
+        RoundExecutor {
+            pool,
+            bufs: Arc::new(Mutex::new(BufStore::default())),
+            pads: Arc::new(Mutex::new(Vec::new())),
+            res_tx,
+            res_rx,
+        }
+    }
+
+    /// The shared pad-scratch pool (cloned into offloaded jobs that need
+    /// marshalling scratch — the shadow prober's calib forwards).
+    pub fn pad_pool(&self) -> PadPool {
+        Arc::clone(&self.pads)
     }
 
     /// A cleared (x, ts, cond) gather-buffer triple, recycled when
@@ -148,15 +166,16 @@ impl RoundExecutor {
         match &self.pool {
             None => jobs
                 .into_iter()
-                .map(|job| eval_one(&self.bufs, eval.as_ref(), job))
+                .map(|job| eval_one(&self.bufs, &self.pads, eval.as_ref(), job))
                 .collect(),
             Some(pool) => {
                 for job in jobs {
                     let eval = Arc::clone(eval);
                     let bufs = Arc::clone(&self.bufs);
+                    let pads = Arc::clone(&self.pads);
                     let tx = self.res_tx.clone();
                     pool.submit(move || {
-                        let _ = tx.send(eval_one(&bufs, eval.as_ref(), job));
+                        let _ = tx.send(eval_one(&bufs, &pads, eval.as_ref(), job));
                     });
                 }
                 let mut slots: Vec<Option<BatchResult>> = (0..n).map(|_| None).collect();
@@ -197,11 +216,14 @@ impl RoundExecutor {
 /// Evaluate one batch with recycled scratch. Panics inside `eval` are
 /// contained to an `Err` result so one poisoned batch can neither deadlock
 /// the round collection nor kill a pool worker.
-fn eval_one(bufs: &Mutex<BufStore>, eval: &EvalFn, job: BatchJob) -> BatchResult {
-    let (mut pad, mut out) = {
-        let mut b = bufs.lock().unwrap();
-        (b.pads.pop().unwrap_or_default(), b.outs.pop().unwrap_or_default())
-    };
+fn eval_one(
+    bufs: &Mutex<BufStore>,
+    pads: &Mutex<Vec<EpsScratch>>,
+    eval: &EvalFn,
+    job: BatchJob,
+) -> BatchResult {
+    let mut pad = pads.lock().unwrap().pop().unwrap_or_default();
+    let mut out = bufs.lock().unwrap().outs.pop().unwrap_or_default();
     let res = std::panic::catch_unwind(AssertUnwindSafe(|| eval(&job, &mut pad, &mut out)));
     let eps = match res {
         Ok(Ok(())) => Ok(std::mem::take(&mut out)),
@@ -212,13 +234,10 @@ fn eval_one(bufs: &Mutex<BufStore>, eval: &EvalFn, job: BatchJob) -> BatchResult
             job.cond.len()
         )),
     };
-    {
-        let mut b = bufs.lock().unwrap();
-        b.pads.push(pad);
-        if eps.is_err() {
-            out.clear();
-            b.outs.push(out);
-        }
+    pads.lock().unwrap().push(pad);
+    if eps.is_err() {
+        out.clear();
+        bufs.lock().unwrap().outs.push(out);
     }
     BatchResult { idx: job.idx, eps, job }
 }
@@ -437,6 +456,22 @@ mod tests {
         assert!(x.capacity() > 0 && x.is_empty());
         assert!(ts.capacity() > 0 && ts.is_empty());
         assert!(cond.capacity() > 0 && cond.is_empty());
+    }
+
+    #[test]
+    fn pad_pool_is_shared_and_recycled() {
+        let exec = RoundExecutor::new(1);
+        let results = exec.run_with(&fake_eval(None, None), mixed_jobs());
+        for r in results {
+            let eps = r.eps.ok();
+            exec.recycle(r.job, eps);
+        }
+        // the eval path returned its scratch to the shared pool, where an
+        // offloaded probe-style job can draw it
+        let pads = exec.pad_pool();
+        let drawn = pads.lock().unwrap().pop();
+        assert!(drawn.is_some(), "eval path must seed the shared pad pool");
+        pads.lock().unwrap().push(drawn.unwrap());
     }
 
     #[test]

@@ -27,6 +27,15 @@ pub struct Metrics {
     pub recal_swaps: usize,
     /// drifted layers recalibrated across all swaps
     pub recal_layers: usize,
+    /// scheduling round at which the first hot-swap landed (None = never)
+    pub first_swap_round: Option<usize>,
+    /// shadow-prober calib forwards submitted (self-calibrating serving)
+    pub probes: usize,
+    /// probe candidates dropped by the per-round budget gate
+    pub probes_skipped: usize,
+    /// probe forwards that failed or panicked (their slot is skipped, the
+    /// feed order is preserved)
+    pub probes_failed: usize,
 }
 
 impl Metrics {
@@ -85,7 +94,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests {:4}  images {:5}  evals {:6}  rounds {:5}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%  exec {:6.1} ms / sched {:6.1} ms ({:3.0}% exec)  sel-hit {:3.0}%  recal {}/{} swaps ({} layers)",
+            "requests {:4}  images {:5}  evals {:6}  rounds {:5}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%  exec {:6.1} ms / sched {:6.1} ms ({:3.0}% exec)  sel-hit {:3.0}%  recal {}/{} swaps ({} layers)  probes {} ({} skipped, {} failed)",
             self.latencies.len(),
             self.images_done,
             self.evals,
@@ -101,7 +110,10 @@ impl Metrics {
             self.sel_hit_rate() * 100.0,
             self.recal_swaps,
             self.recal_checks,
-            self.recal_layers
+            self.recal_layers,
+            self.probes,
+            self.probes_skipped,
+            self.probes_failed
         )
     }
 }
@@ -196,5 +208,21 @@ mod tests {
         };
         let r = m.report();
         assert!(r.contains("recal 2/5 swaps (7 layers)"), "{r}");
+    }
+
+    #[test]
+    fn probe_counters_render_and_default_clean() {
+        let m = Metrics::default();
+        assert_eq!((m.probes, m.probes_skipped, m.probes_failed), (0, 0, 0));
+        assert_eq!(m.first_swap_round, None);
+        let m = Metrics {
+            probes: 12,
+            probes_skipped: 3,
+            probes_failed: 1,
+            first_swap_round: Some(4),
+            ..Default::default()
+        };
+        let r = m.report();
+        assert!(r.contains("probes 12 (3 skipped, 1 failed)"), "{r}");
     }
 }

@@ -6,9 +6,11 @@ pub mod request;
 pub mod batcher;
 pub mod exec;
 pub mod metrics;
+pub mod prober;
 pub mod server;
 
 pub use exec::RoundExecutor;
 pub use metrics::Metrics;
+pub use prober::ShadowProber;
 pub use request::{Request, Response};
 pub use server::{spawn, ServeMode, ServeRecal, ServerCfg, ServerHandle};

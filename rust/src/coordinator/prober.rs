@@ -1,0 +1,264 @@
+//! The shadow calibration prober: the serving-side sketch *producer*.
+//!
+//! PR 4's recalibration loop consumed externally fed activation sketches —
+//! nothing in-process observed live traffic. The [`ShadowProber`] closes
+//! that gap by recycling a budgeted fraction of each scheduling round's
+//! request latents (snapshotted post-scatter, before the sampler advances
+//! them) into `Denoiser::calib_forward_probe` jobs on the round executor's
+//! worker pool, each at its ticket's own timestep, and feeding the
+//! resulting per-(layer, timestep-bucket) samples into the round-pinned
+//! recalibration sketches. Quantized serving thereby detects its own
+//! drift: the activations the denoiser actually sees, per timestep bucket,
+//! are exactly what the MSFP search ranges must track.
+//!
+//! Determinism contract (pinned by `tests/integration.rs`):
+//!  * **selection** is a pure function of `(request id, round index)` — a
+//!    deterministic per-candidate score, ranked with the id as tie-break —
+//!    so neither arrival order nor worker timing changes which latents are
+//!    probed;
+//!  * **feeding** happens in probe *sequence* order: every probe job posts
+//!    its result (or failure) back tagged with its submission sequence
+//!    number, and the scheduler drains completions into the sketches
+//!    strictly in-order, buffering early arrivals. The reservoir rng thus
+//!    sees the same update stream for any worker count, and the final
+//!    sketch state is bit-identical between a 1-worker and an N-worker
+//!    server.
+//!
+//! Budgeting: at most `ServerCfg::probe_budget` probe forwards are
+//! submitted per round (0 disables probing); candidates beyond the budget
+//! are counted as skipped in `Metrics`, so probing never grows faster than
+//! one bounded tranche per round and cannot starve round execution.
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::recal::SketchSet;
+use crate::runtime::Denoiser;
+
+use super::exec::{PadPool, RoundExecutor};
+
+/// One probe candidate: a request whose latents fully scattered this
+/// round. `idx` is its position in the scheduler's active list (used only
+/// to fetch the data after selection — never for ranking).
+#[derive(Debug, Clone, Copy)]
+pub struct ProbeCandidate {
+    pub id: u64,
+    pub idx: usize,
+}
+
+/// Deterministic per-candidate priority: the splitmix64 finalizer
+/// ([`crate::util::rng::mix64`]) over the request id xor the rotated round
+/// index. Pure, so the ranking is identical for any arrival order or
+/// worker count.
+pub fn probe_score(id: u64, round: u64) -> u64 {
+    crate::util::rng::mix64(id ^ round.rotate_left(32) ^ 0x9E3779B97F4A7C15)
+}
+
+/// Rank candidates by [`probe_score`] (id as tie-break) and keep the first
+/// `budget`. Returns the selected candidates in rank order. Request ids
+/// are server-assigned and unique (`ServerHandle::submit_many` overwrites
+/// `Request::id` from a monotonic counter), so the (score, id) key is
+/// total and the sort order cannot fall back to input position.
+pub fn select_probes(
+    cands: &[ProbeCandidate],
+    round: u64,
+    budget: usize,
+) -> Vec<ProbeCandidate> {
+    let mut ranked: Vec<(u64, ProbeCandidate)> =
+        cands.iter().map(|&c| (probe_score(c.id, round), c)).collect();
+    ranked.sort_unstable_by_key(|&(score, c)| (score, c.id));
+    ranked.truncate(budget);
+    ranked.into_iter().map(|(_, c)| c).collect()
+}
+
+/// A completed probe forward, tagged with its submission sequence number.
+struct ProbeDone {
+    seq: u64,
+    t: f32,
+    /// None ⇒ the forward failed (still posted so in-order feeding never
+    /// stalls behind a lost sequence number)
+    capture: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+/// Serving-side sketch producer state (owned by the scheduler thread; the
+/// probe forwards themselves run on the worker pool).
+pub struct ShadowProber {
+    budget: usize,
+    act_samples: usize,
+    sketches: Arc<Mutex<SketchSet>>,
+    den: Arc<Denoiser>,
+    params: Arc<Vec<f32>>,
+    pads: PadPool,
+    /// recycled (x, cond) snapshot buffers for probe jobs
+    snaps: Arc<Mutex<Vec<(Vec<f32>, Vec<f32>)>>>,
+    done_tx: mpsc::Sender<ProbeDone>,
+    done_rx: mpsc::Receiver<ProbeDone>,
+    /// completions that arrived ahead of their feed turn
+    pending: BTreeMap<u64, ProbeDone>,
+    next_seq: u64,
+    next_feed: u64,
+    pub sent: usize,
+    pub skipped: usize,
+    pub failed: usize,
+}
+
+impl ShadowProber {
+    pub fn new(
+        budget: usize,
+        sketches: Arc<Mutex<SketchSet>>,
+        den: Arc<Denoiser>,
+        params: Arc<Vec<f32>>,
+        pads: PadPool,
+    ) -> ShadowProber {
+        let act_samples = den.info.act_samples;
+        let (done_tx, done_rx) = mpsc::channel();
+        ShadowProber {
+            budget,
+            act_samples,
+            sketches,
+            den,
+            params,
+            pads,
+            snaps: Arc::new(Mutex::new(Vec::new())),
+            done_tx,
+            done_rx,
+            pending: BTreeMap::new(),
+            next_seq: 0,
+            next_feed: 0,
+            sent: 0,
+            skipped: 0,
+            failed: 0,
+        }
+    }
+
+    /// Select this round's probes and submit them to the pool. The caller
+    /// passes an accessor from candidate index to `(x, t, cond)` — the
+    /// request's latents *before* the sampler observes this round's eps,
+    /// its current ticket timestep, and its condition vector.
+    pub fn round_probes<'d>(
+        &mut self,
+        exec: &RoundExecutor,
+        round: u64,
+        cands: &[ProbeCandidate],
+        data: impl Fn(usize) -> (&'d [f32], f32, &'d [f32]),
+    ) {
+        if self.budget == 0 || cands.is_empty() {
+            return;
+        }
+        let picks = select_probes(cands, round, self.budget);
+        self.skipped += cands.len() - picks.len();
+        for c in picks {
+            let (x, t, cond) = data(c.idx);
+            let (mut xs, mut cs) = self.snaps.lock().unwrap().pop().unwrap_or_default();
+            xs.clear();
+            xs.extend_from_slice(x);
+            cs.clear();
+            cs.extend_from_slice(cond);
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.sent += 1;
+            let den = Arc::clone(&self.den);
+            let params = Arc::clone(&self.params);
+            let pads = Arc::clone(&self.pads);
+            let snaps = Arc::clone(&self.snaps);
+            let tx = self.done_tx.clone();
+            exec.offload(move || {
+                let mut pad = pads.lock().unwrap().pop().unwrap_or_default();
+                let n = cs.len();
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    den.calib_forward_probe(&params, &xs, n, t, &cs, &mut pad)
+                }));
+                pads.lock().unwrap().push(pad);
+                snaps.lock().unwrap().push((xs, cs));
+                let capture = match res {
+                    Ok(Ok(c)) => Some(c),
+                    Ok(Err(err)) => {
+                        crate::log_warn!("shadow probe failed (t={t}): {err:#}");
+                        None
+                    }
+                    Err(_) => {
+                        crate::log_warn!("shadow probe panicked (t={t})");
+                        None
+                    }
+                };
+                // always post the seq — a lost number would stall feeding
+                let _ = tx.send(ProbeDone { seq, t, capture });
+            });
+        }
+    }
+
+    /// Drain completed probes into the sketches, strictly in submission
+    /// order (early arrivals are buffered until their turn). Called at
+    /// round boundaries and after the final `exec.join()`, which
+    /// guarantees every outstanding probe has posted — so the post-drain
+    /// sketch state is a pure function of the probe sequence.
+    pub fn drain(&mut self) {
+        while let Ok(done) = self.done_rx.try_recv() {
+            self.pending.insert(done.seq, done);
+        }
+        while let Some(done) = self.pending.remove(&self.next_feed) {
+            self.next_feed += 1;
+            match done.capture {
+                Some((acts, mm)) => {
+                    let mut set = self.sketches.lock().unwrap();
+                    set.observe_calib(done.t, &acts, &mm, self.act_samples);
+                }
+                None => self.failed += 1,
+            }
+        }
+    }
+
+    /// Probes submitted but not yet fed (for tests/metrics sanity).
+    pub fn outstanding(&self) -> u64 {
+        self.next_seq - self.next_feed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cands(ids: &[u64]) -> Vec<ProbeCandidate> {
+        ids.iter().enumerate().map(|(idx, &id)| ProbeCandidate { id, idx }).collect()
+    }
+
+    #[test]
+    fn selection_is_arrival_order_invariant() {
+        let a = cands(&[3, 9, 4, 11, 7]);
+        let mut shuffled = a.clone();
+        shuffled.reverse();
+        for round in 0..32u64 {
+            for budget in 1..=5 {
+                let pa: Vec<u64> =
+                    select_probes(&a, round, budget).iter().map(|c| c.id).collect();
+                let pb: Vec<u64> =
+                    select_probes(&shuffled, round, budget).iter().map(|c| c.id).collect();
+                assert_eq!(pa, pb, "round {round} budget {budget}");
+                assert_eq!(pa.len(), budget.min(a.len()));
+            }
+        }
+    }
+
+    #[test]
+    fn selection_rotates_across_rounds() {
+        // the score mixes the round in, so a budget-1 prober does not pin
+        // the same request forever
+        let c = cands(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let picked: std::collections::BTreeSet<u64> =
+            (0..64u64).map(|r| select_probes(&c, r, 1)[0].id).collect();
+        assert!(picked.len() >= 4, "probe selection stuck on {picked:?}");
+    }
+
+    #[test]
+    fn selection_budget_zero_and_empty() {
+        assert!(select_probes(&cands(&[1, 2]), 0, 0).is_empty());
+        assert!(select_probes(&[], 5, 3).is_empty());
+    }
+
+    #[test]
+    fn probe_score_is_pure_and_spread() {
+        assert_eq!(probe_score(42, 7), probe_score(42, 7));
+        assert_ne!(probe_score(42, 7), probe_score(42, 8));
+        assert_ne!(probe_score(42, 7), probe_score(43, 7));
+    }
+}

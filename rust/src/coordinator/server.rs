@@ -21,10 +21,15 @@
 //!     constrained), so scattered denoising phases still pack full
 //!     batches;
 //!   * a quantized server may carry a [`ServeRecal`] config: drift checks
-//!     against externally fed activation sketches run as background jobs
-//!     on the worker pool, and re-searched qparams hot-swap atomically at
-//!     round boundaries (never mid-round — each round's batches pin the
-//!     `QuantState` they were planned with);
+//!     against the live activation sketches run as background jobs on the
+//!     worker pool, and re-searched qparams hot-swap atomically at round
+//!     boundaries (never mid-round — each round's batches pin the
+//!     `QuantState` they were planned with). Sketches are fed externally
+//!     through the shared handle and/or by the in-process shadow prober
+//!     (`ServerCfg::probe_budget` recycled-latent calib forwards per
+//!     round, deterministic for any worker count); with a
+//!     `ServeRecal::state_dir` the drift window is persisted and restored
+//!     across restarts bit-exactly;
 //!   * new requests join at the next round (continuous batching): a long
 //!     request never blocks a short one, same-t requests share compute.
 //!
@@ -43,7 +48,7 @@ use anyhow::{anyhow, Result};
 use crate::data::PatchAutoencoder;
 use crate::lora::SelectionCache;
 use crate::model::manifest::ModelInfo;
-use crate::quant::msfp::QuantOpts;
+use crate::quant::msfp::{QuantOpts, StateDir};
 use crate::quant::session::QuantSession;
 use crate::recal::{RecalPlanner, SketchSet};
 use crate::runtime::{Denoiser, QuantState};
@@ -53,6 +58,7 @@ use crate::util::rng::Rng;
 use super::batcher::{plan_mode, ticket_offsets, PlanMode, Ticket};
 use super::exec::{eval_closure, BatchJob, EvalCtx, RoundExecutor};
 use super::metrics::Metrics;
+use super::prober::{ProbeCandidate, ShadowProber};
 use super::request::{Request, Response};
 
 use crate::eval::generate::SamplerKind;
@@ -171,6 +177,12 @@ pub struct ServeRecal {
     pub sketches: Arc<Mutex<SketchSet>>,
     /// drift-check cadence in scheduling rounds
     pub every_rounds: usize,
+    /// serving state directory: when set, the sketch window is restored
+    /// from `sketches.msk` on server start (if present) and persisted
+    /// there on shutdown and after every hot-swap — along with the
+    /// swapped `QuantState` in `quant.mts` — so a restarted server
+    /// resumes its drift window instead of starting blind
+    pub state_dir: Option<StateDir>,
 }
 
 impl ServeRecal {
@@ -179,7 +191,21 @@ impl ServeRecal {
         opts: QuantOpts,
         sketches: Arc<Mutex<SketchSet>>,
     ) -> ServeRecal {
-        ServeRecal { session, opts, planner: RecalPlanner::default(), sketches, every_rounds: 8 }
+        ServeRecal {
+            session,
+            opts,
+            planner: RecalPlanner::default(),
+            sketches,
+            every_rounds: 8,
+            state_dir: None,
+        }
+    }
+
+    /// Enable sketch/state persistence under `dir` (see
+    /// [`ServeRecal::state_dir`]).
+    pub fn with_state_dir(mut self, dir: StateDir) -> ServeRecal {
+        self.state_dir = Some(dir);
+        self
     }
 }
 
@@ -241,11 +267,17 @@ pub struct ServerCfg {
     pub fp_mixed_t: bool,
     /// background drift-tracked recalibration (quantized serving only)
     pub recal: Option<ServeRecal>,
+    /// shadow-prober budget: max recycled-latent `calib_forward` probes
+    /// per scheduling round (0 = probing off). Requires `recal` — the
+    /// probes feed its sketches. Selection and feeding are deterministic
+    /// for any worker count; candidates beyond the budget count as
+    /// skipped in `Metrics`
+    pub probe_budget: usize,
 }
 
 impl ServerCfg {
     /// Defaults: no latent decode, seed 0, auto workers, FP mixed-t
-    /// batching on, no recalibration.
+    /// batching on, no recalibration, probing off.
     pub fn new(mode: ServeMode) -> ServerCfg {
         ServerCfg {
             mode,
@@ -254,6 +286,7 @@ impl ServerCfg {
             workers: 0,
             fp_mixed_t: true,
             recal: None,
+            probe_budget: 0,
         }
     }
 }
@@ -282,6 +315,27 @@ fn make_sampler(req: &Request, sched: &Schedule) -> Box<dyn Sampler> {
     }
 }
 
+/// Clears the checkpoint-inflight flag when its job finishes (or panics),
+/// so a poisoned write can't wedge checkpointing for the server lifetime.
+struct ClearFlag(Arc<AtomicBool>);
+
+impl Drop for ClearFlag {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Persist the live drift window into the state dir (best-effort: serving
+/// never fails because a checkpoint write did).
+fn persist_window(recal: &Option<Arc<RecalShared>>, state_dir: &Option<StateDir>) {
+    if let (Some(rs), Some(sd)) = (recal, state_dir) {
+        let snap = rs.sketches.lock().unwrap().clone();
+        if let Err(err) = snap.save(&sd.sketch_path()) {
+            crate::log_warn!("could not persist sketch window: {err:#}");
+        }
+    }
+}
+
 fn scheduler_loop(
     rx: mpsc::Receiver<Msg>,
     den: Arc<Denoiser>,
@@ -290,7 +344,7 @@ fn scheduler_loop(
     params: Arc<Vec<f32>>,
     cfg: ServerCfg,
 ) {
-    let ServerCfg { mode, decode_latents, seed, workers, fp_mixed_t, recal } = cfg;
+    let ServerCfg { mode, decode_latents, seed, workers, fp_mixed_t, recal, probe_budget } = cfg;
     let mut active: Vec<Active> = Vec::new();
     // samples received per active request in the current round
     let mut got: Vec<usize> = Vec::new();
@@ -311,23 +365,61 @@ fn scheduler_loop(
         ServeMode::Fp => None,
         ServeMode::Quant(qs) => Some(Arc::new(qs)),
     };
+    let mut state_dir: Option<StateDir> = None;
     let recal: Option<Arc<RecalShared>> = match (recal, qs_cur.is_some()) {
-        (Some(r), true) => Some(Arc::new(RecalShared {
-            session: Mutex::new(r.session),
-            sketches: r.sketches,
-            planner: r.planner,
-            opts: r.opts,
-            every_rounds: r.every_rounds.max(1),
-            outcome: Mutex::new(None),
-            inflight: AtomicBool::new(false),
-        })),
+        (Some(r), true) => {
+            state_dir = r.state_dir;
+            Some(Arc::new(RecalShared {
+                session: Mutex::new(r.session),
+                sketches: r.sketches,
+                planner: r.planner,
+                opts: r.opts,
+                every_rounds: r.every_rounds.max(1),
+                outcome: Mutex::new(None),
+                inflight: AtomicBool::new(false),
+            }))
+        }
         (Some(_), false) => {
             crate::log_warn!("recalibration configured on an FP server: ignored");
             None
         }
         (None, _) => None,
     };
+    // resume the drift window persisted by a previous run of this state
+    // dir: the restored sketches are bit-identical to the saved ones
+    // (reservoir contents + rng cursor), so drift accumulates as if the
+    // restart never happened
+    if let (Some(rs), Some(sd)) = (&recal, &state_dir) {
+        let path = sd.sketch_path();
+        if path.exists() {
+            match SketchSet::load(&path) {
+                Ok(loaded) => {
+                    crate::log_info!("restored sketch window from {}", path.display());
+                    *rs.sketches.lock().unwrap() = loaded;
+                }
+                Err(err) => {
+                    crate::log_warn!("could not restore sketch window: {err:#}");
+                }
+            }
+        }
+    }
+    let mut prober: Option<ShadowProber> = match (probe_budget, &recal) {
+        (0, _) => None,
+        (k, Some(rs)) => Some(ShadowProber::new(
+            k,
+            Arc::clone(&rs.sketches),
+            Arc::clone(&den),
+            Arc::clone(&params),
+            exec.pad_pool(),
+        )),
+        (_, None) => {
+            crate::log_warn!("probe budget set without a recalibration config: ignored");
+            None
+        }
+    };
     let mut last_check_round = 0usize;
+    // at most one state-dir checkpoint job in flight (see the swap path)
+    let ckpt_inflight = Arc::new(AtomicBool::new(false));
     // FP graphs take per-sample t, so FP rounds may batch mixed-t tickets;
     // the quantized TALoRA path stays same-t constrained
     let pmode =
@@ -345,6 +437,10 @@ fn scheduler_loop(
                     Ok(m) => m,
                     Err(_) => {
                         exec.join(); // flush offloaded completions
+                        if let Some(p) = &mut prober {
+                            p.drain();
+                        }
+                        persist_window(&recal, &state_dir);
                         return;
                     }
                 }
@@ -355,6 +451,10 @@ fn scheduler_loop(
                     Err(mpsc::TryRecvError::Disconnected) => {
                         if active.is_empty() {
                             exec.join();
+                            if let Some(p) = &mut prober {
+                                p.drain();
+                            }
+                            persist_window(&recal, &state_dir);
                             return;
                         }
                         break;
@@ -400,10 +500,20 @@ fn scheduler_loop(
 
         if active.is_empty() {
             if let Some(tx) = shutdown.take() {
-                exec.join(); // flush in-flight decode/send jobs
+                exec.join(); // flush in-flight decode/send jobs + probes
                 while let Ok(latency) = done_rx.try_recv() {
                     metrics.latencies.push(latency);
                 }
+                if let Some(p) = &mut prober {
+                    // every probe has posted (join() above), so this final
+                    // in-order drain leaves the sketch window in the same
+                    // state for any worker count
+                    p.drain();
+                    metrics.probes = p.sent;
+                    metrics.probes_skipped = p.skipped;
+                    metrics.probes_failed = p.failed;
+                }
+                persist_window(&recal, &state_dir);
                 metrics.sel_hits = sel_cache.hits;
                 metrics.sel_misses = sel_cache.misses;
                 metrics.wall = t0.elapsed();
@@ -413,9 +523,13 @@ fn scheduler_loop(
             continue;
         }
 
-        // between rounds: land a finished recalibration (atomic hot-swap —
-        // the new state only affects batches planned from here on) and
-        // kick off the next drift check on the worker pool when due
+        // between rounds: feed completed shadow probes into the sketches
+        // (in submission order), land a finished recalibration (atomic
+        // hot-swap — the new state only affects batches planned from here
+        // on) and kick off the next drift check on the pool when due
+        if let Some(p) = &mut prober {
+            p.drain();
+        }
         if let Some(rs) = &recal {
             if let Some((qparams, drifted)) = rs.outcome.lock().unwrap().take() {
                 if let Some(qs) = &mut qs_cur {
@@ -424,10 +538,38 @@ fn scheduler_loop(
                     *qs = Arc::new(swapped);
                     metrics.recal_swaps += 1;
                     metrics.recal_layers += drifted;
+                    if metrics.first_swap_round.is_none() {
+                        metrics.first_swap_round = Some(metrics.rounds);
+                    }
                     crate::log_info!(
                         "recalibration hot-swap: {drifted} drifted layer(s) at round {}",
                         metrics.rounds
                     );
+                    // checkpoint the swapped model + the window it came
+                    // from, off the scheduler thread: a crash after this
+                    // point restarts on the recalibrated params. At most
+                    // one checkpoint job runs at a time (a swap landing
+                    // while one is in flight skips its checkpoint — the
+                    // next swap or the shutdown persist catches up), so
+                    // two jobs never race on the same files and the files
+                    // on disk always reflect the newest completed write.
+                    if let Some(sd) = &state_dir {
+                        if !ckpt_inflight.swap(true, Ordering::SeqCst) {
+                            let qs_snap = Arc::clone(qs);
+                            let sk_snap = rs.sketches.lock().unwrap().clone();
+                            let sd = sd.clone();
+                            let clear = ClearFlag(Arc::clone(&ckpt_inflight));
+                            exec.offload(move || {
+                                let _clear = clear;
+                                if let Err(err) = qs_snap.save(&sd.quant_path()) {
+                                    crate::log_warn!("could not persist quant state: {err:#}");
+                                }
+                                if let Err(err) = sk_snap.save(&sd.sketch_path()) {
+                                    crate::log_warn!("could not persist sketch window: {err:#}");
+                                }
+                            });
+                        }
+                    }
                 }
             }
             if metrics.rounds >= last_check_round + rs.every_rounds
@@ -508,6 +650,23 @@ fn scheduler_loop(
                     exec.recycle(r.job, None);
                 }
             }
+        }
+
+        // shadow probing: recycle a budgeted, deterministically selected
+        // subset of this round's fully served latents into calib forwards
+        // on the pool — post-scatter (the exact (x, t) the round's eval
+        // consumed), before the sampler advances x below
+        if let Some(p) = &mut prober {
+            let cands: Vec<ProbeCandidate> = active
+                .iter()
+                .enumerate()
+                .filter(|&(i, a)| got[i] == a.req.n)
+                .map(|(i, a)| ProbeCandidate { id: a.req.id, idx: i })
+                .collect();
+            p.round_probes(&exec, metrics.rounds as u64, &cands, |idx| {
+                let a = &active[idx];
+                (&a.x[..], tickets[idx].t, &a.cond[..])
+            });
         }
 
         // observe + complete (completions run on the pool)

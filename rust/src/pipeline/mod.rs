@@ -19,7 +19,7 @@ use crate::log_info;
 use crate::lora::{LoraHub, Router};
 use crate::model::manifest::{Manifest, ModelInfo};
 use crate::model::ParamStore;
-use crate::quant::msfp::{LayerCalib, QuantOpts, QuantScheme};
+use crate::quant::msfp::{LayerCalib, QuantOpts, QuantScheme, StateDir};
 use crate::quant::session::QuantSession;
 use crate::runtime::{Denoiser, Engine, QuantState};
 use crate::schedule::{timestep_subsequence, Schedule};
@@ -125,6 +125,15 @@ impl Pipeline {
             p.info.cfg.n_classes,
             &mut rng,
         )
+    }
+
+    /// State directory for a named serving deployment under the runs dir
+    /// (`StateDir` layout: `quant.mts` + `sketches.msk`). Save the served
+    /// `QuantState` to `dir.quant_path()` and hand the dir to
+    /// `ServeRecal::with_state_dir`, and a restarted coordinator resumes
+    /// both the last hot-swapped qparams and its drift window.
+    pub fn serving_state_dir(&self, tag: &str) -> StateDir {
+        StateDir::new(self.runs_dir.join(format!("serve_{tag}")))
     }
 
     /// Build a reusable quantization search session for a prepared model:

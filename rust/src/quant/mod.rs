@@ -15,5 +15,5 @@ pub mod session;
 
 pub use format::FpFormat;
 pub use grid::GridEngine;
-pub use msfp::{LayerQuant, QuantScheme};
+pub use msfp::{LayerQuant, QuantScheme, StateDir};
 pub use session::QuantSession;

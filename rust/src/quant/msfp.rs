@@ -6,9 +6,45 @@
 //! calibration samples (mixup stage-2 for AALs), and encode everything as
 //! the qparams[L, 8] runtime input of the serving/fine-tune graphs.
 
+use std::path::{Path, PathBuf};
+
 use super::classify::LayerClass;
 use super::search::Quantizer;
 use super::session::QuantSession;
+
+/// On-disk layout of a serving state directory: the quantized model
+/// (`runtime::QuantState::save`) next to its recalibration drift window
+/// (`recal::SketchSet::save`), so a restarted server resumes *both* — it
+/// serves the last hot-swapped qparams and keeps scoring drift against the
+/// partially filled sketch window instead of starting blind.
+///
+/// Layout under `root`:
+///   * `quant.mts`     — the `QuantState` tensor store;
+///   * `sketches.msk`  — the versioned `SketchSet` snapshot.
+#[derive(Debug, Clone)]
+pub struct StateDir {
+    root: PathBuf,
+}
+
+impl StateDir {
+    pub fn new(root: impl Into<PathBuf>) -> StateDir {
+        StateDir { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Path of the quantized-model store (`QuantState::save`/`load`).
+    pub fn quant_path(&self) -> PathBuf {
+        self.root.join("quant.mts")
+    }
+
+    /// Path of the sketch snapshot (`SketchSet::save`/`load`).
+    pub fn sketch_path(&self) -> PathBuf {
+        self.root.join("sketches.msk")
+    }
+}
 
 /// Calibration data for one quantized layer.
 #[derive(Debug, Clone)]
@@ -219,6 +255,14 @@ mod tests {
             assert!(rows[l * 8] > 0.0); // w_maxval
             assert!(rows[l * 8 + 4] > 0.0); // a_maxval
         }
+    }
+
+    #[test]
+    fn state_dir_layout() {
+        let sd = StateDir::new("/tmp/serve_a");
+        assert_eq!(sd.quant_path(), std::path::Path::new("/tmp/serve_a/quant.mts"));
+        assert_eq!(sd.sketch_path(), std::path::Path::new("/tmp/serve_a/sketches.msk"));
+        assert_eq!(sd.root(), std::path::Path::new("/tmp/serve_a"));
     }
 
     #[test]

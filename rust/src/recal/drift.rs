@@ -25,7 +25,7 @@ use crate::quant::msfp::LayerCalib;
 use super::sketch::LayerSketch;
 
 /// Drift verdict for one layer.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DriftScore {
     pub layer: usize,
     /// scale-normalized drift (see module docs); 0 = no drift

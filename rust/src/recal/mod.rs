@@ -25,7 +25,11 @@
 //! `recal_every` epoch cadence, and the serving coordinator
 //! (`coordinator::server`) runs the same loop as a background job on its
 //! worker pool, atomically hot-swapping the updated qparams between
-//! scheduling rounds (never mid-round).
+//! scheduling rounds (never mid-round). Serving also *produces* its own
+//! sketches — `coordinator::prober::ShadowProber` recycles a budgeted
+//! fraction of each round's request latents through the calibration graph
+//! — and persists the window (`SketchSet::save`/`load`, exact reservoir +
+//! rng cursor) so a restarted server resumes drift tracking bit-exactly.
 
 pub mod drift;
 pub mod planner;

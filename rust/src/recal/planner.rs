@@ -175,6 +175,29 @@ mod tests {
     }
 
     #[test]
+    fn plan_from_loaded_snapshot_matches_original() {
+        // the restart guarantee at the planner level: a persisted-and-
+        // restored sketch window produces bit-identical drift scores and
+        // replacement calibrations, so a restarted server makes the same
+        // hot-swap decisions as one that never went down
+        let (base, set) = fixture();
+        let loaded = SketchSet::from_bytes(&set.to_bytes()).unwrap();
+        let planner = RecalPlanner::default();
+        let a = planner.plan(&base, &set);
+        let b = planner.plan(&base, &loaded);
+        assert!(!a.is_empty(), "fixture must drift");
+        assert_eq!(a.scores, b.scores);
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.layer, y.layer);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+            assert!(x.calib.acts.iter().zip(&y.calib.acts).all(|(p, q)| p.to_bits() == q.to_bits()));
+            assert_eq!(x.calib.min.to_bits(), y.calib.min.to_bits());
+            assert_eq!(x.calib.max.to_bits(), y.calib.max.to_bits());
+        }
+    }
+
+    #[test]
     fn empty_sketches_plan_nothing() {
         let (base, _) = fixture();
         let set = SketchSet::new(3, 4, 256, 100, 5);

@@ -22,11 +22,27 @@
 //! replacement — an approximation of a true distributed reservoir that is
 //! ample for drift detection). Everything is deterministic from the
 //! construction seed.
+//!
+//! Sketches are also *persistent*: [`SketchSet::save`]/[`SketchSet::load`]
+//! write a versioned binary snapshot (exact min/max, f64 moments, the full
+//! reservoir contents *and the reservoir rng cursor*), so a restarted
+//! server resumes its drift window bit-exactly — the loaded set feeds,
+//! merges and plans exactly like the one that was saved, including
+//! widen-only buckets that carry extrema but no samples.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
 
 use crate::util::rng::Rng;
 
+/// Magic + version of the sketch snapshot format. Bump the trailing two
+/// digits on any layout change; `load` rejects both foreign files and
+/// newer/older versions with distinct errors.
+const SKETCH_MAGIC: &[u8; 8] = b"MSFPSK01";
+
 /// Streaming summary of one (layer, timestep-bucket) activation stream.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerSketch {
     /// reservoir sample of the stream (≤ capacity values)
     res: Vec<f32>,
@@ -145,11 +161,78 @@ impl LayerSketch {
         self.sum += other.sum;
         self.sumsq += other.sumsq;
     }
+
+    /// Append this sketch's exact binary image (see [`SketchSet::save`]).
+    fn write_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.cap as u64).to_le_bytes());
+        out.extend_from_slice(&(self.count as u64).to_le_bytes());
+        out.extend_from_slice(&self.min.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.max.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.sum.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.sumsq.to_bits().to_le_bytes());
+        for w in self.rng.snapshot() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.res.len() as u64).to_le_bytes());
+        for v in &self.res {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<LayerSketch> {
+        let cap = r.u64()? as usize;
+        let count = r.u64()? as usize;
+        let min = f32::from_bits(r.u32()?);
+        let max = f32::from_bits(r.u32()?);
+        let sum = f64::from_bits(r.u64()?);
+        let sumsq = f64::from_bits(r.u64()?);
+        let rng = Rng::restore([r.u64()?, r.u64()?, r.u64()?, r.u64()?]);
+        let res_len = r.u64()? as usize;
+        if cap == 0 || res_len > cap || res_len > count || res_len > r.remaining() / 4 {
+            bail!("corrupt sketch snapshot: cap {cap}, reservoir {res_len}, count {count}");
+        }
+        let mut res = Vec::with_capacity(res_len);
+        for _ in 0..res_len {
+            res.push(f32::from_bits(r.u32()?));
+        }
+        Ok(LayerSketch { res, cap, count, min, max, sum, sumsq, rng })
+    }
+}
+
+/// Minimal bounds-checked little-endian cursor over a snapshot buffer.
+struct ByteReader<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.bytes.len() {
+            bail!("truncated sketch snapshot at byte {}", self.off);
+        }
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.off
+    }
 }
 
 /// Whole-model sketch store: `n_layers × n_buckets` layer sketches, keyed
 /// by layer index and the timestep bucket `floor(t / t_total · n_buckets)`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SketchSet {
     sketches: Vec<LayerSketch>,
     n_layers: usize,
@@ -243,6 +326,19 @@ impl SketchSet {
         out
     }
 
+    /// Merge another producer's observations into this set, sketch by
+    /// sketch (layouts must match). Extrema, counts and moments combine
+    /// exactly; reservoirs re-draw per [`LayerSketch::merge`], driven by
+    /// *this* set's rng cursors — so merging into a loaded snapshot draws
+    /// identically to merging into the original.
+    pub fn merge(&mut self, other: &SketchSet) {
+        assert_eq!(self.n_layers, other.n_layers, "sketch-set layer mismatch");
+        assert_eq!(self.n_buckets, other.n_buckets, "sketch-set bucket mismatch");
+        for (a, b) in self.sketches.iter_mut().zip(&other.sketches) {
+            a.merge(b);
+        }
+    }
+
     /// Drop all observed data (fresh drift window), keeping the layout.
     pub fn reset(&mut self) {
         for sk in &mut self.sketches {
@@ -251,6 +347,72 @@ impl SketchSet {
             *sk = fresh;
             sk.rng = rng;
         }
+    }
+
+    /// Exact binary snapshot of the whole set: layout, per-sketch min/max
+    /// bits, f64 moment bits, reservoir contents and the reservoir rng
+    /// cursor. `from_bytes(to_bytes(s)) == s` bit-for-bit, so a restored
+    /// set continues feeding/merging exactly where the saved one stopped.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.sketches.len() * 64);
+        out.extend_from_slice(SKETCH_MAGIC);
+        out.extend_from_slice(&(self.n_layers as u32).to_le_bytes());
+        out.extend_from_slice(&(self.n_buckets as u32).to_le_bytes());
+        out.extend_from_slice(&(self.t_total as u64).to_le_bytes());
+        for sk in &self.sketches {
+            sk.write_to(&mut out);
+        }
+        out
+    }
+
+    /// Parse a [`SketchSet::to_bytes`] snapshot. Foreign files and other
+    /// format versions are rejected with distinct errors.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SketchSet> {
+        let mut r = ByteReader { bytes, off: 0 };
+        let magic = r.take(8)?;
+        if magic != SKETCH_MAGIC {
+            if magic[..6] == SKETCH_MAGIC[..6] {
+                bail!(
+                    "unsupported sketch snapshot version {:?} (this build reads {:?})",
+                    String::from_utf8_lossy(&magic[6..]),
+                    String::from_utf8_lossy(&SKETCH_MAGIC[6..]),
+                );
+            }
+            bail!("not a sketch snapshot (bad magic)");
+        }
+        let n_layers = r.u32()? as usize;
+        let n_buckets = r.u32()? as usize;
+        let t_total = r.u64()? as usize;
+        let n = n_layers
+            .checked_mul(n_buckets)
+            .filter(|&n| n <= 1 << 20)
+            .ok_or_else(|| anyhow::anyhow!("corrupt sketch snapshot: {n_layers}x{n_buckets}"))?;
+        if n_buckets == 0 || t_total == 0 {
+            bail!("corrupt sketch snapshot: zero buckets or t_total");
+        }
+        let mut sketches = Vec::with_capacity(n);
+        for _ in 0..n {
+            sketches.push(LayerSketch::read_from(&mut r)?);
+        }
+        if r.off != bytes.len() {
+            bail!("trailing bytes in sketch snapshot ({} past end)", bytes.len() - r.off);
+        }
+        Ok(SketchSet { sketches, n_layers, n_buckets, t_total })
+    }
+
+    /// Persist the drift window next to the serving `QuantState` (see
+    /// `quant::msfp::StateDir`); [`SketchSet::load`] restores it on server
+    /// start. Atomic (temp + rename), so a kill mid-checkpoint can never
+    /// leave a torn snapshot — the restart-resume guarantee depends on it.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::util::io::atomic_write(path, &self.to_bytes())
+            .with_context(|| format!("writing sketch snapshot {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<SketchSet> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading sketch snapshot {}", path.display()))?;
+        SketchSet::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
     }
 }
 
@@ -373,6 +535,63 @@ mod tests {
         assert_eq!(set.n_layers(), 2);
         set.observe(0, 5.0, &[2.0; 4]);
         assert_eq!(set.layer_count(0), 4);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bit_exact_and_resumes() {
+        let mut set = SketchSet::new(3, 4, 16, 100, 21);
+        let mut rng = Rng::new(9);
+        for _ in 0..400 {
+            let l = rng.below(3);
+            let t = rng.range(0.0, 100.0);
+            set.observe(l, t, &[rng.normal(), rng.normal()]);
+        }
+        set.widen_layer(2, 3.0, -50.0, 50.0); // widen-only bucket
+        let bytes = set.to_bytes();
+        let loaded = SketchSet::from_bytes(&bytes).unwrap();
+        assert_eq!(loaded, set);
+        assert_eq!(loaded.to_bytes(), bytes, "re-serialization must be stable");
+        // the rng cursor survived: both continue with identical reservoir
+        // replacement decisions from here on
+        let mut a = set;
+        let mut b = loaded;
+        for i in 0..200 {
+            let v = [i as f32 * 0.3 - 20.0];
+            a.observe(0, 42.0, &v);
+            b.observe(0, 42.0, &v);
+        }
+        assert_eq!(a.to_bytes(), b.to_bytes());
+    }
+
+    #[test]
+    fn snapshot_file_roundtrip() {
+        let mut set = SketchSet::new(2, 2, 8, 50, 5);
+        set.observe(1, 30.0, &[1.0, -2.0, 0.5]);
+        let path = std::env::temp_dir().join("msfp_sketch_roundtrip.msk");
+        set.save(&path).unwrap();
+        assert_eq!(SketchSet::load(&path).unwrap(), set);
+    }
+
+    #[test]
+    fn snapshot_rejects_foreign_and_versioned_files() {
+        let set = SketchSet::new(1, 1, 4, 10, 1);
+        let bytes = set.to_bytes();
+        // foreign magic
+        let mut junk = bytes.clone();
+        junk[..8].copy_from_slice(b"NOTMAGIC");
+        let err = SketchSet::from_bytes(&junk).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+        // same family, different version digits
+        let mut v99 = bytes.clone();
+        v99[6..8].copy_from_slice(b"99");
+        let err = SketchSet::from_bytes(&v99).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        // truncation
+        assert!(SketchSet::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // trailing garbage
+        let mut long = bytes;
+        long.push(0);
+        assert!(SketchSet::from_bytes(&long).is_err());
     }
 
     #[test]

@@ -327,6 +327,50 @@ impl Denoiser {
         Ok(())
     }
 
+    /// Calibration forward for the serving shadow prober: `n` stacked
+    /// samples at uniform timestep `t`, padded up to the compiled calib
+    /// batch class by repeating the last sample (oversized probes are
+    /// truncated to the class). Padding duplicates add no new extrema to
+    /// the exact `[L, 2]` capture; the `[L, S]` activation capture
+    /// subsamples the padded batch, which slightly over-weights the
+    /// repeated sample — acceptable for drift sketching, where the batch
+    /// is recycled serving traffic to begin with. Uses caller-owned
+    /// [`EpsScratch`] so steady-state probing allocates nothing beyond the
+    /// graph outputs. Returns (acts `[L, S]`, mm `[L, 2]`); the probe
+    /// discards eps (the real round already computed it).
+    pub fn calib_forward_probe(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        n: usize,
+        t: f32,
+        cond: &[f32],
+        s: &mut EpsScratch,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if n == 0 {
+            bail!("calib_forward_probe called with an empty batch");
+        }
+        if x.len() != self.info.x_size(n) || cond.len() != n {
+            bail!("probe shapes: x {} cond {} for n {}", x.len(), cond.len(), n);
+        }
+        let b = self.info.calib_b;
+        let n_used = n.min(b);
+        pad_into(&mut s.xp, &x[..self.info.x_size(n_used)], n_used, b);
+        s.tp.clear();
+        s.tp.resize(b, t);
+        pad_into(&mut s.cp, &cond[..n_used], n_used, b);
+        let dims = self.x_dims(b);
+        let out = self.engine.load(&self.calib_file)?.run(&[
+            (params, &[params.len() as i64]),
+            (&s.xp, &dims),
+            (&s.tp, &[b as i64]),
+            (&s.cp, &[b as i64]),
+        ])?;
+        let mut it = out.into_iter();
+        let _eps = it.next();
+        Ok((it.next().unwrap(), it.next().unwrap()))
+    }
+
     /// Calibration forward: (eps, per-layer activation samples [L, S],
     /// per-layer min/max [L, 2]). Batch must equal the compiled calib_b.
     pub fn calib_forward(
@@ -506,6 +550,44 @@ mod tests {
         qs.save(&path).unwrap();
         let err = QuantState::load(info, &path).unwrap_err();
         assert!(err.to_string().contains("hub_mask"), "{err}");
+    }
+
+    #[test]
+    fn calib_forward_probe_pads_and_matches_full_batch() {
+        let Some((engine, m)) = setup() else { return };
+        let info = m.model("ddim16").unwrap();
+        let den = Denoiser::new(engine, info).unwrap();
+        let params = ParamStore::load_init(info, &m.dir).unwrap();
+        let b = info.calib_b;
+        let mut s = EpsScratch::default();
+
+        // a full uniform-t probe batch is bit-identical to calib_forward
+        let x = vec![0.15f32; info.x_size(b)];
+        let t = vec![7.0f32; b];
+        let cond = vec![0.0f32; b];
+        let (_, acts, mm) = den.calib_forward(&params.flat, &x, &t, &cond).unwrap();
+        let (pacts, pmm) =
+            den.calib_forward_probe(&params.flat, &x, b, 7.0, &cond, &mut s).unwrap();
+        assert!(acts.iter().zip(&pacts).all(|(a, p)| a.to_bits() == p.to_bits()));
+        assert!(mm.iter().zip(&pmm).all(|(a, p)| a.to_bits() == p.to_bits()));
+
+        // a short probe pads up: shapes hold, extrema finite & ordered
+        let n = 1.max(b / 2);
+        let x = vec![0.3f32; info.x_size(n)];
+        let cond = vec![0.0f32; n];
+        let (acts, mm) =
+            den.calib_forward_probe(&params.flat, &x, n, 3.0, &cond, &mut s).unwrap();
+        assert_eq!(acts.len(), info.n_layers * info.act_samples);
+        assert_eq!(mm.len(), info.n_layers * 2);
+        for l in 0..info.n_layers {
+            assert!(mm[l * 2] <= mm[l * 2 + 1]);
+        }
+        // scratch is reused, not regrown, on a repeat probe
+        let cap = s.xp.capacity();
+        den.calib_forward_probe(&params.flat, &x, n, 3.0, &cond, &mut s).unwrap();
+        assert_eq!(s.xp.capacity(), cap);
+        // empty probe errors
+        assert!(den.calib_forward_probe(&params.flat, &[], 0, 3.0, &[], &mut s).is_err());
     }
 
     #[test]

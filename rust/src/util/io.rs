@@ -8,12 +8,38 @@
 
 use std::collections::BTreeMap;
 use std::fs;
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
 const MAGIC: &[u8; 8] = b"MSFPTS01";
+
+/// Write `bytes` to `path` atomically: stage a uniquely named temp file in
+/// the same directory, then rename it over the target. A crash mid-write
+/// can never leave a truncated file at `path` (the rename either happened
+/// or it didn't), and concurrent writers each stage their own temp file —
+/// the last completed rename wins whole. Used by every checkpoint path
+/// (`Store::save`, `recal::SketchSet::save`): serving restart-resume
+/// depends on these files never being torn.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension(format!(
+        "tmp.{}.{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    if let Err(e) = fs::rename(&tmp, path) {
+        let _ = fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("renaming {} into place", path.display()));
+    }
+    Ok(())
+}
 
 /// Read a bare little-endian f32 vector.
 pub fn read_f32_raw(path: &Path) -> Result<Vec<f32>> {
@@ -59,25 +85,24 @@ impl Store {
         self.sections.get(name).map(|v| v.as_slice())
     }
 
+    /// Serialize and write atomically (temp file + rename): a checkpoint
+    /// reader never observes a torn store, even across a crash or a
+    /// concurrent re-save of the same path.
     pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            fs::create_dir_all(dir)?;
-        }
-        let mut f = fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&(self.sections.len() as u32).to_le_bytes())?;
+        let total: usize = self.sections.iter().map(|(n, d)| 16 + n.len() + d.len() * 4).sum();
+        let mut out = Vec::with_capacity(12 + total);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
         for (name, data) in &self.sections {
             let nb = name.as_bytes();
-            f.write_all(&(nb.len() as u32).to_le_bytes())?;
-            f.write_all(nb)?;
-            f.write_all(&(data.len() as u64).to_le_bytes())?;
-            let mut bytes = Vec::with_capacity(data.len() * 4);
+            out.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            out.extend_from_slice(nb);
+            out.extend_from_slice(&(data.len() as u64).to_le_bytes());
             for v in data {
-                bytes.extend_from_slice(&v.to_le_bytes());
+                out.extend_from_slice(&v.to_le_bytes());
             }
-            f.write_all(&bytes)?;
         }
-        Ok(())
+        atomic_write(path, &out)
     }
 
     pub fn load(path: &Path) -> Result<Store> {
@@ -150,6 +175,24 @@ mod tests {
         assert_eq!(s2.get("adam.m").unwrap().len(), 10);
         assert_eq!(s2.get("empty").unwrap().len(), 0);
         assert!(s2.get("nope").is_err());
+    }
+
+    #[test]
+    fn atomic_write_overwrites_and_leaves_no_temp_files() {
+        let dir = std::env::temp_dir().join("msfp_io_atomic");
+        let _ = fs::remove_dir_all(&dir);
+        let p = dir.join("ckpt.bin");
+        atomic_write(&p, b"first").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"first");
+        atomic_write(&p, b"second-longer").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"second-longer");
+        // no staged temp files left behind
+        let stray: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n != "ckpt.bin")
+            .collect();
+        assert!(stray.is_empty(), "stray files: {stray:?}");
     }
 
     #[test]

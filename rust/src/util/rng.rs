@@ -7,7 +7,7 @@
 /// PCG-XSH-RR 64/32 with 128-bit-ish state emulated by two 64-bit LCGs
 /// (splitmix-seeded). Not cryptographic; statistical quality is ample for
 /// simulation workloads.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Rng {
     state: u64,
     inc: u64,
@@ -15,12 +15,18 @@ pub struct Rng {
     spare: Option<f32>,
 }
 
-fn splitmix(seed: &mut u64) -> u64 {
-    *seed = seed.wrapping_add(0x9E3779B97F4A7C15);
-    let mut z = *seed;
+/// SplitMix64 finalizer: a well-mixed bijection on u64. Shared by the
+/// seeded stream setup below and by pure-hash users (e.g. the serving
+/// shadow prober's probe ranking) so the mixer lives in exactly one place.
+pub fn mix64(mut z: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)
+}
+
+fn splitmix(seed: &mut u64) -> u64 {
+    *seed = seed.wrapping_add(0x9E3779B97F4A7C15);
+    mix64(*seed)
 }
 
 impl Rng {
@@ -36,6 +42,28 @@ impl Rng {
     /// Derive an independent stream (for per-thread / per-layer use).
     pub fn fork(&mut self, tag: u64) -> Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Snapshot the exact generator state — LCG words plus the cached
+    /// Box-Muller spare — so a checkpointed stream (e.g. a persisted
+    /// reservoir sketch) resumes bit-identically via [`Rng::restore`].
+    pub fn snapshot(&self) -> [u64; 4] {
+        [
+            self.state,
+            self.inc,
+            self.spare.is_some() as u64,
+            self.spare.map_or(0, |v| v.to_bits() as u64),
+        ]
+    }
+
+    /// Rebuild a generator from a [`Rng::snapshot`]; the restored stream
+    /// continues exactly where the snapshotted one stopped.
+    pub fn restore(words: [u64; 4]) -> Rng {
+        Rng {
+            state: words[0],
+            inc: words[1],
+            spare: (words[2] != 0).then_some(f32::from_bits(words[3] as u32)),
+        }
     }
 
     pub fn next_u32(&mut self) -> u32 {
@@ -171,6 +199,23 @@ mod tests {
         sorted.sort();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
         assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        let mut a = Rng::new(77);
+        // leave a Box-Muller spare cached so the snapshot must carry it
+        let _ = a.normal();
+        let snap = a.snapshot();
+        let mut b = Rng::restore(snap);
+        assert_eq!(a, b);
+        for _ in 0..64 {
+            assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // a second snapshot taken mid-stream roundtrips too
+        let snap2 = a.snapshot();
+        assert_eq!(Rng::restore(snap2).next_u32(), b.next_u32());
     }
 
     #[test]

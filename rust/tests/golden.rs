@@ -7,6 +7,8 @@ use std::path::PathBuf;
 use msfp::lora::Router;
 use msfp::quant::fp::{fp_qdq_signed, fp_qdq_unsigned};
 use msfp::quant::int::{int_qdq_asym, int_qdq_sym};
+use msfp::quant::msfp::LayerCalib;
+use msfp::recal::{drift_score, LayerSketch};
 use msfp::util::json::Json;
 
 fn golden_dir() -> Option<PathBuf> {
@@ -33,6 +35,56 @@ fn weight_rust(x: f32, maxval: f32, e: f32, m: f32) -> f32 {
         fp_qdq_signed(x, maxval, e as i32, m as i32)
     } else {
         int_qdq_sym(x, maxval, m as i32)
+    }
+}
+
+/// Pinned drift-score vector for a fixed sketch/baseline pair (no
+/// artifacts needed — the fixture is rng-free, so the reservoir holds the
+/// exact input sequence). The expected values were computed with a bit-
+/// exact float32 mirror of `recal::drift::drift_score`; any change to the
+/// quantile resolution, index rounding, normalization or range term moves
+/// them far beyond the tolerance, so scoring changes cannot slip through
+/// silently. (Unit-level margin tests only bound scores; this pins them.)
+#[test]
+fn drift_score_golden_vector() {
+    // baseline: 101 evenly spaced values on [-1, 1]; scale = 1.0
+    let base_acts: Vec<f32> = (0..=100).map(|i| i as f32 * 0.02 - 1.0).collect();
+    let base = LayerCalib::from_samples("golden", base_acts.clone(), false);
+
+    // rng-free sketch: count stays <= cap, so samples() is the input
+    let sketch_of = |vals: &[f32]| -> LayerSketch {
+        let mut sk = LayerSketch::new(256, 1);
+        for &v in vals {
+            sk.push(v);
+        }
+        sk
+    };
+
+    // (name, live values, widen, expected score) — mirror-computed
+    let cubic: Vec<f32> = base_acts.iter().map(|&x| x * x * x).collect();
+    let affine: Vec<f32> = base_acts.iter().map(|&x| x * 1.3 + 0.2).collect();
+    let mut outlier = base_acts.clone();
+    outlier.push(3.0);
+    let cases: [(&str, &[f32], Option<(f32, f32)>, f32); 5] = [
+        ("identical", &base_acts, None, 0.0),          // exact replay
+        ("cubic", &cubic, None, 0.266_666_68),         // quantile term only
+        ("affine", &affine, None, 0.5),                // range term dominates
+        ("outlier", &outlier, None, 2.0),              // tail growth
+        ("widen", &base_acts, Some((-2.5, 2.5)), 1.5), // widen-only extrema
+    ];
+    for (layer, (name, vals, widen, expect)) in cases.iter().enumerate() {
+        let mut sk = sketch_of(vals);
+        if let Some((lo, hi)) = widen {
+            sk.widen(*lo, *hi);
+        }
+        let d = drift_score(layer, &base, &sk, 9);
+        assert_eq!(d.layer, layer);
+        assert_eq!(d.samples, vals.len());
+        assert!(
+            (d.score - expect).abs() <= 1e-5 * expect.max(1.0),
+            "{name}: score {} drifted from pinned {expect}",
+            d.score
+        );
     }
 }
 

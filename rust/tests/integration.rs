@@ -343,6 +343,216 @@ fn serving_recalibration_hot_swaps_on_drift_only() {
     std::env::remove_var("MSFP_RUNS");
 }
 
+/// The shadow prober's determinism contract: with a probe budget, serving
+/// output bits are untouched (probing is a pure observer), the fed sketch
+/// window is bit-identical for 1 vs N workers (selection keyed by request
+/// id + round, feeding in submission order), and `probe_budget: 0` serving
+/// is bit-identical to the pre-prober coordinator.
+#[test]
+fn shadow_prober_is_deterministic_and_budget_zero_is_bit_identical() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::{Metrics, ServeRecal};
+    use msfp::quant::msfp::{Method, QuantOpts};
+    use msfp::recal::{RecalPlanner, SketchSet};
+    use std::sync::Mutex;
+
+    std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_integ_prober"));
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let p = pl.prepare(Corpus::CifarSyn).unwrap();
+    let info = p.info.clone();
+    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4)
+        .with_io_8bit(&info.io_layer_indices());
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(p.params.clone());
+    let mut spec = MethodSpec::ours(4, 2, 0);
+    spec.finetune = None;
+
+    let workload = || -> Vec<Request> {
+        (0..6u64)
+            .map(|i| {
+                let mut r = Request::new(0, 2, 6);
+                r.seed = 80 + i;
+                r
+            })
+            .collect()
+    };
+
+    let run = |workers: usize, budget: usize| -> (Vec<Vec<u32>>, Vec<u8>, Metrics) {
+        let session = pl.build_session(&p).unwrap();
+        let q = pl.quantize_with_session(&p, &session, &spec).unwrap();
+        let sketches = Arc::new(Mutex::new(SketchSet::new(
+            info.n_layers,
+            4,
+            128,
+            pl.sched.t_total,
+            33,
+        )));
+        let mut r = ServeRecal::new(session, opts.clone(), Arc::clone(&sketches));
+        // pure producer test: live traffic differs from the synthetic
+        // calibration baseline, so park the detector (astronomical
+        // threshold, cadence beyond the run) to keep swaps out of the
+        // comparison
+        r.planner = RecalPlanner { threshold: f32::MAX, ..Default::default() };
+        r.every_rounds = 10_000;
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            ServerCfg {
+                seed: 9,
+                workers,
+                probe_budget: budget,
+                recal: Some(r),
+                ..ServerCfg::new(ServeMode::Quant(q.state))
+            },
+        );
+        let rxs = handle.submit_many(workload()).unwrap();
+        let images: Vec<Vec<u32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().images.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        let m = handle.shutdown();
+        let bytes = sketches.lock().unwrap().to_bytes();
+        (images, bytes, m)
+    };
+
+    let (img_off, sk_off, m_off) = run(1, 0);
+    assert_eq!(m_off.probes, 0);
+    let (img_on, sk_on, m_on) = run(1, 2);
+    assert_eq!(img_off, img_on, "probing changed served output bits");
+    assert!(m_on.probes > 0, "no probes submitted: {}", m_on.report());
+    assert!(m_on.probes_skipped > 0, "budget gate never tripped (6 cands, budget 2)");
+    assert_eq!(m_on.probes_failed, 0, "{}", m_on.report());
+    assert_ne!(sk_on, sk_off, "probes fed nothing into the sketch window");
+    // worker-count invariance: same probes, same feed order, same window
+    let (img_par, sk_par, m_par) = run(4, 2);
+    assert_eq!(img_on, img_par, "workers changed served bits");
+    assert_eq!(sk_on, sk_par, "sketch feeding depended on worker timing");
+    assert_eq!(m_on.probes, m_par.probes);
+    assert_eq!(m_on.probes_skipped, m_par.probes_skipped);
+    std::env::remove_var("MSFP_RUNS");
+}
+
+/// The restart-resume contract: a server whose drift window was persisted
+/// mid-drift and restored after a "kill" makes the same hot-swap decision
+/// (same round, same layers) and serves the same bits as a server that
+/// never went down.
+#[test]
+fn server_restart_resumes_sketch_window_and_hot_swap_decisions() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::{Metrics, ServeRecal};
+    use msfp::quant::msfp::{Method, QuantOpts, StateDir};
+    use msfp::recal::SketchSet;
+    use std::sync::Mutex;
+
+    std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_integ_restart"));
+    let state_root = std::env::temp_dir().join("msfp_integ_restart_state");
+    let _ = std::fs::remove_dir_all(&state_root);
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let p = pl.prepare(Corpus::CifarSyn).unwrap();
+    let info = p.info.clone();
+    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4)
+        .with_io_8bit(&info.io_layer_indices());
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(p.params.clone());
+    let mut spec = MethodSpec::ours(4, 2, 0);
+    spec.finetune = None;
+
+    let workload = || -> Vec<Request> {
+        (0..6u64)
+            .map(|i| {
+                let mut r = Request::new(0, 2, 6);
+                r.seed = 60 + i;
+                r
+            })
+            .collect()
+    };
+
+    // the mid-drift window: every layer's calibration stream replayed
+    // shifted (same construction as the PR 4 drift test)
+    let drifted_window = |calib: &[msfp::quant::msfp::LayerCalib]| -> SketchSet {
+        let mut set = SketchSet::new(info.n_layers, 4, 256, pl.sched.t_total, 17);
+        let mut rng = Rng::new(18);
+        for (l, c) in calib.iter().enumerate() {
+            for chunk in c.acts.chunks(128) {
+                let t = rng.range(0.0, pl.sched.t_total as f32);
+                let vals: Vec<f32> = chunk.iter().map(|v| v + 1.0).collect();
+                set.observe(l, t, &vals);
+            }
+            set.widen_layer(l, 0.0, c.min + 1.0, c.max + 1.0);
+        }
+        set
+    };
+
+    // serve the workload (workers=1: the inline drift check makes swap
+    // timing deterministic); `submit` = false runs zero requests (the
+    // pre-kill server that only persists its window on shutdown)
+    let serve = |window: SketchSet,
+                 sd: Option<StateDir>,
+                 submit: bool|
+     -> (Vec<Vec<u32>>, Metrics) {
+        let session = pl.build_session(&p).unwrap();
+        let q = pl.quantize_with_session(&p, &session, &spec).unwrap();
+        let sketches = Arc::new(Mutex::new(window));
+        let mut r = ServeRecal::new(session, opts.clone(), sketches);
+        r.every_rounds = 1;
+        r.state_dir = sd;
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            ServerCfg {
+                seed: 21,
+                workers: 1,
+                recal: Some(r),
+                ..ServerCfg::new(ServeMode::Quant(q.state))
+            },
+        );
+        let images: Vec<Vec<u32>> = if submit {
+            let rxs = handle.submit_many(workload()).unwrap();
+            rxs.into_iter()
+                .map(|rx| rx.recv().unwrap().images.iter().map(|v| v.to_bits()).collect())
+                .collect()
+        } else {
+            Vec::new()
+        };
+        (images, handle.shutdown())
+    };
+
+    let session = pl.build_session(&p).unwrap();
+    let window = drifted_window(session.calib());
+    drop(session);
+
+    // run A: uninterrupted — the fed window triggers a hot-swap mid-serve
+    let (imgs_a, m_a) = serve(window.clone(), None, true);
+    assert!(m_a.recal_swaps >= 1, "no swap in the uninterrupted run: {}", m_a.report());
+    assert!(m_a.first_swap_round.is_some());
+
+    // run B: "kill" a server that accumulated the same window but served
+    // nothing — its only trace is the persisted sketch snapshot ...
+    let sd = StateDir::new(&state_root);
+    let (_, m_pre) = serve(window.clone(), Some(sd.clone()), false);
+    assert_eq!(m_pre.recal_swaps, 0);
+    assert!(sd.sketch_path().exists(), "shutdown must persist the window");
+
+    // ... then restart blind (an EMPTY in-memory window) with the same
+    // state dir: the restored snapshot must reproduce run A exactly
+    let empty = SketchSet::new(info.n_layers, 4, 256, pl.sched.t_total, 17);
+    let (imgs_b, m_b) = serve(empty, Some(sd.clone()), true);
+    assert_eq!(m_b.recal_swaps, m_a.recal_swaps, "restart changed swap count");
+    assert_eq!(m_b.recal_layers, m_a.recal_layers, "restart changed swapped layers");
+    assert_eq!(m_b.first_swap_round, m_a.first_swap_round, "restart changed swap round");
+    assert_eq!(imgs_a, imgs_b, "restart changed served bits");
+
+    // after the swap the checkpoint carries the recalibrated quant state
+    assert!(sd.quant_path().exists(), "swap must checkpoint the quant state");
+    let restored = QuantState::load(&info, &sd.quant_path()).unwrap();
+    assert_eq!(restored.qparams.len(), info.n_layers * 8);
+    std::env::remove_var("MSFP_RUNS");
+}
+
 #[test]
 fn missing_artifacts_fail_cleanly() {
     let bad = std::env::temp_dir().join("msfp_no_artifacts");

@@ -11,9 +11,11 @@
 #     update_layer_calib rebuild vs cold session rebuild, 12 layers);
 #   * BENCH_serving.json — per-eval latency by batch class, the
 #     coordinator_sequential_exec vs coordinator_parallel round-executor
-#     throughput pair, the selection-cache hit rate, and the
-#     hot_swap_stall row (mean round latency with a background
-#     recalibration swap landing vs without).
+#     throughput pair, the selection-cache hit rate, the hot_swap_stall
+#     row (mean round latency with a background recalibration swap
+#     landing vs without), the probe_overhead row (shadow prober at
+#     budget 2 vs 0), and the restart_{cold,warm}_rounds_to_swap pair
+#     (drift detection from an empty vs a restored sketch window).
 #
 #   scripts/bench.sh
 #

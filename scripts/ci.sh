@@ -8,7 +8,16 @@
 #   cargo clippy --all-targets -- -D warnings  lints over lib, tests, benches
 #                                              and examples fail the gate
 #   cargo build --release                      tier-1 verify, part 1
-#   cargo test -q                              tier-1 verify, part 2
+#   cargo test -q                              tier-1 verify, part 2 — this
+#                                              default tier includes the
+#                                              recal sketch-persistence and
+#                                              shadow-prober suites (unit,
+#                                              props.rs, integration.rs)
+#   test-count floor                           the summed `N passed` totals
+#                                              must not drop below
+#                                              scripts/test_floor.txt, so a
+#                                              PR cannot silently delete or
+#                                              stop compiling tests
 #
 # Perf companion: scripts/bench.sh (perf_quant → BENCH_quant.json).
 set -euo pipefail
@@ -31,6 +40,21 @@ cargo clippy --all-targets -- -D warnings
 
 echo "== tier-1 verify =="
 cargo build --release
-cargo test -q
+test_log="$(mktemp)"
+cargo test -q 2>&1 | tee "$test_log"
+
+echo "== test-count regression guard =="
+total=$(grep -E 'test result: ok' "$test_log" \
+    | sed -E 's/.*ok\. ([0-9]+) passed.*/\1/' \
+    | awk '{s+=$1} END {print s+0}')
+rm -f "$test_log"
+floor=$(cat "$root/scripts/test_floor.txt")
+echo "tests passed: $total (checked-in floor: $floor)"
+if [ "$total" -lt "$floor" ]; then
+    echo "error: test count regressed below the floor ($total < $floor)." >&2
+    echo "If tests were intentionally removed or consolidated, lower" >&2
+    echo "scripts/test_floor.txt in the same PR and say why." >&2
+    exit 1
+fi
 
 echo "ci.sh: all gates passed"
