@@ -11,7 +11,11 @@
 //!  * drift checks hot-swap re-searched qparams between rounds, and the
 //!    drift window persists to a state dir (`ServeRecal::state_dir`) —
 //!    re-run this example and the server resumes the saved window instead
-//!    of starting blind.
+//!    of starting blind;
+//!  * the workload carries SLO classes against a queue budget: under the
+//!    resulting overload, interactive requests are downgraded (step cuts
+//!    at admission, a pre-built W3A3 variant per round) while an
+//!    impossible-deadline best-effort request is explicitly shed.
 //!
 //!   make artifacts && cargo run --release --example serve_quantized
 
@@ -19,7 +23,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 use msfp::config::{MethodSpec, Scale};
-use msfp::coordinator::{self, Request, ServeMode, ServeRecal, ServerCfg};
+use msfp::coordinator::{
+    self, degraded_state, Request, Response, ServeMode, ServeRecal, ServerCfg, SloCfg, SloClass,
+};
 use msfp::data::Corpus;
 use msfp::eval::generate::SamplerKind;
 use msfp::pipeline::Pipeline;
@@ -67,6 +73,12 @@ fn main() -> Result<()> {
             set.widen_layer(l, 0.0, c.min * scale + shift, c.max * scale + shift);
         }
     }
+    // pre-build the overload degradation variant before the session moves
+    // into the recal config: the same search at W3A3 on non-IO layers —
+    // nearly free, since memoized layers whose bits didn't drop replay
+    let deg_qparams = session.degraded_qparams(&opts, 3, 3);
+    let degraded = degraded_state(&q.state, deg_qparams);
+
     let mut recal = ServeRecal::new(session, opts, Arc::clone(&sketches));
     recal.every_rounds = 4;
     // persistence: the drift window (and each hot-swap's quant state) is
@@ -87,16 +99,26 @@ fn main() -> Result<()> {
             // self-calibration: up to 2 recycled-latent calib probes per
             // round feed the same sketches the simulated stream does
             probe_budget: 2,
+            // overload policy: admission budget of 8 samples per round;
+            // over-budget interactive requests lose 2 steps at admission
+            // and ride the pre-built W3A3 variant during overloaded rounds
+            slo: SloCfg { queue_budget: 8, step_cut: 2, degraded: Some(degraded) },
             ..ServerCfg::new(ServeMode::Quant(q.state))
         },
     );
 
     // mixed workload: bursts of small interactive requests + large batch
-    // jobs + a couple of fast-sampler requests
+    // jobs + a couple of fast-sampler requests, spread over SLO classes
     let mut rng = Rng::new(2024);
     let mut rxs = Vec::new();
     for i in 0..16 {
-        let mut req = Request::new(0, 1 + rng.below(4), pl.scale.steps);
+        let mut req = Request::new(0, 1 + rng.below(4), pl.scale.steps).with_slo(
+            match i % 3 {
+                0 => SloClass::Interactive,
+                1 => SloClass::Batch,
+                _ => SloClass::BestEffort,
+            },
+        );
         req.seed = i;
         if i % 5 == 4 {
             req.sampler = SamplerKind::Plms;
@@ -104,16 +126,26 @@ fn main() -> Result<()> {
         rxs.push(handle.submit(req)?);
     }
     rxs.push(handle.submit(Request::new(0, 12, pl.scale.steps))?); // batch job
+    // an opportunistic request with a deadline it cannot meet under this
+    // load: the scheduler sheds it explicitly instead of letting it hang
+    let mut doomed = Request::new(0, 6, pl.scale.steps).with_slo(SloClass::BestEffort);
+    doomed.deadline_rounds = 2;
+    rxs.push(handle.submit(doomed)?);
 
     for rx in rxs {
-        let r = rx.recv()?;
-        println!(
-            "request {:2}: {:2} images, {:3} evals, {:7.1} ms",
-            r.id,
-            r.n,
-            r.evals,
-            r.latency.as_secs_f64() * 1e3
-        );
+        match rx.recv()? {
+            Response::Done(r) => println!(
+                "request {:2}: {:2} images, {:3} evals, {:7.1} ms{}",
+                r.id,
+                r.n,
+                r.evals,
+                r.latency.as_secs_f64() * 1e3,
+                if r.degraded { "  (degraded)" } else { "" }
+            ),
+            Response::Shed { id, class, reason } => {
+                println!("request {id:2}: shed ({class:?}: {reason})")
+            }
+        }
     }
     let m = handle.shutdown();
     println!("\nserving summary: {}", m.report());
@@ -129,6 +161,14 @@ fn main() -> Result<()> {
     println!(
         "shadow prober: {} probe(s) fed, {} skipped by the budget gate, {} failed",
         m.probes, m.probes_skipped, m.probes_failed
+    );
+    println!(
+        "overload: {} shed, {} downgraded round(s), {} step cut(s); interactive queue wait p50/p99 = {}/{} rounds",
+        m.shed_total(),
+        m.downgraded_rounds,
+        m.downgraded_steps,
+        m.queue_wait_p(SloClass::Interactive, 0.5),
+        m.queue_wait_p(SloClass::Interactive, 0.99)
     );
     Ok(())
 }

@@ -21,12 +21,17 @@
 //!     self-calibration probing);
 //!   * `restart_warm_vs_cold`: rounds until the first hot-swap for a
 //!     cold server (empty sketch window, prober must refill it) vs a warm
-//!     restart (window restored from the persisted state dir).
+//!     restart (window restored from the persisted state dir);
+//!   * `overload_*`: the same workload oversubscribed against a queue
+//!     budget with a degraded variant installed — per-class queue-wait
+//!     p50/p99 (rounds) plus shed / downgraded-round / step-cut counts.
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use msfp::coordinator::{self, Metrics, Request, ServeMode, ServeRecal, ServerCfg};
+use msfp::coordinator::{
+    self, degraded_state, Metrics, Request, ServeMode, ServeRecal, ServerCfg, SloCfg, SloClass,
+};
 use msfp::lora::hub::AllocStrategy;
 use msfp::lora::Router;
 use msfp::model::manifest::Manifest;
@@ -322,6 +327,75 @@ fn main() {
         }
         _ => println!("  WARNING: a run never swapped; restart_warm_vs_cold row omitted"),
     }
+
+    // --- overload: admission control + graceful degradation ---------------
+    // The throughput workload oversubscribed 6x against a queue budget of
+    // 8 samples/round, classes cycling, with a coarser-qparams degraded
+    // variant installed and one best-effort request on an impossible
+    // deadline. The rows are the SLO story under pressure: how long each
+    // class queued, what was shed, and how much interactive work rode the
+    // degraded variant.
+    println!("\n-- overload (queue budget 8, degraded variant, mixed SLO classes) --");
+    let mut deg_qp = qs.qparams.clone();
+    for v in deg_qp.iter_mut().step_by(2) {
+        *v *= 0.5;
+    }
+    let over_workload = || -> Vec<Request> {
+        let mut v: Vec<Request> = (0..24u64)
+            .map(|i| {
+                let mut r = Request::new(i, 2, if i % 2 == 0 { 6 } else { 9 }).with_slo(
+                    match i % 3 {
+                        0 => SloClass::Interactive,
+                        1 => SloClass::Batch,
+                        _ => SloClass::BestEffort,
+                    },
+                );
+                r.seed = i;
+                r
+            })
+            .collect();
+        let mut doomed = Request::new(99, 6, 9).with_slo(SloClass::BestEffort);
+        doomed.deadline_rounds = 2;
+        doomed.seed = 99;
+        v.push(doomed);
+        v
+    };
+    let handle = coordinator::spawn(
+        Arc::clone(&den),
+        info.clone(),
+        sched.clone(),
+        Arc::clone(&params),
+        ServerCfg {
+            seed: 1,
+            workers: 0,
+            slo: SloCfg {
+                queue_budget: 8,
+                step_cut: 2,
+                degraded: Some(degraded_state(&qs, deg_qp)),
+            },
+            ..ServerCfg::new(ServeMode::Quant(qs.clone()))
+        },
+    );
+    let rxs = handle.submit_many(over_workload()).unwrap();
+    for rx in rxs {
+        let _ = rx.recv().unwrap();
+    }
+    let over_m = handle.shutdown();
+    println!("  {}", over_m.report());
+    for class in SloClass::ALL {
+        let name = format!("{class:?}").to_lowercase();
+        let (p50, p99) = (over_m.queue_wait_p(class, 0.5), over_m.queue_wait_p(class, 0.99));
+        println!("  {class:?}: queue wait p50/p99 = {p50}/{p99} rounds");
+        rows.push(metric_row(&format!("overload_wait_p50_{name}"), p50 as f64, "rounds"));
+        rows.push(metric_row(&format!("overload_wait_p99_{name}"), p99 as f64, "rounds"));
+    }
+    rows.push(metric_row("overload_shed", over_m.shed_total() as f64, "requests"));
+    rows.push(metric_row(
+        "overload_downgraded_rounds",
+        over_m.downgraded_rounds as f64,
+        "rounds",
+    ));
+    rows.push(metric_row("overload_step_cuts", over_m.downgraded_steps as f64, "steps"));
 
     let path =
         std::env::var("BENCH_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".to_string());

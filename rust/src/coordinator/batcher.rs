@@ -15,6 +15,8 @@
 //! executor-level parity test (`coordinator::exec`) plus the FP serving
 //! integration test pin the mixed-t scatter bitwise against same-t plans.
 
+use super::request::SloClass;
+
 /// One pending model evaluation: request `req` needs its `n` samples
 /// evaluated at timestep `t`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -22,6 +24,48 @@ pub struct Ticket {
     pub req: usize,
     pub t: f32,
     pub n: usize,
+}
+
+/// A ticket annotated with its request's SLO metadata, the input of
+/// [`admit_edf`]. `deadline` is absolute (admission round + deadline
+/// budget); `id` is the request id, the stable tie-break that keeps the
+/// admission order deterministic when class and deadline agree.
+#[derive(Debug, Clone, Copy)]
+pub struct SloTicket {
+    pub ticket: Ticket,
+    pub class: SloClass,
+    pub deadline: u64,
+    pub id: u64,
+}
+
+/// Earliest-deadline-first admission within class priority: candidates
+/// are ordered by (class rank, deadline, id) and admitted whole-ticket
+/// greedily until `budget` samples are planned (0 = unlimited). The first
+/// candidate always admits — a ticket larger than the whole budget must
+/// not stall the round — and later, smaller tickets may still fit after a
+/// larger one was deferred (work-conserving). Returns the admitted
+/// tickets in EDF order plus the indices (into `cands`) of the deferred
+/// ones.
+///
+/// Pure in (cands, budget): the scheduler's shed/downgrade/queue-wait
+/// decisions built on top of this stay bit-identical for any worker
+/// count.
+pub fn admit_edf(cands: &[SloTicket], budget: usize) -> (Vec<Ticket>, Vec<usize>) {
+    let mut order: Vec<usize> = (0..cands.len()).collect();
+    order.sort_by_key(|&i| (cands[i].class.rank(), cands[i].deadline, cands[i].id));
+    let mut admitted = Vec::with_capacity(cands.len());
+    let mut deferred = Vec::new();
+    let mut used = 0usize;
+    for i in order {
+        let n = cands[i].ticket.n;
+        if budget == 0 || admitted.is_empty() || used + n <= budget {
+            used += n;
+            admitted.push(cands[i].ticket);
+        } else {
+            deferred.push(i);
+        }
+    }
+    (admitted, deferred)
 }
 
 /// Whether a round's batches must share a timestep (quantized serving:
@@ -431,6 +475,124 @@ mod tests {
                 same == mixed
                     && ticket_offsets(&same, tickets.len())
                         == ticket_offsets(&mixed, tickets.len())
+            },
+        );
+    }
+
+    fn slo(req: usize, n: usize, class: SloClass, deadline: u64, id: u64) -> SloTicket {
+        SloTicket { ticket: Ticket { req, t: 1.0, n }, class, deadline, id }
+    }
+
+    #[test]
+    fn edf_orders_by_class_then_deadline_then_id() {
+        let cands = vec![
+            slo(0, 1, SloClass::BestEffort, 2, 10),
+            slo(1, 1, SloClass::Interactive, 9, 11),
+            slo(2, 1, SloClass::Interactive, 4, 12),
+            slo(3, 1, SloClass::Batch, 1, 13),
+            slo(4, 1, SloClass::Interactive, 4, 9),
+        ];
+        let (admitted, deferred) = admit_edf(&cands, 0);
+        assert!(deferred.is_empty());
+        let reqs: Vec<usize> = admitted.iter().map(|tk| tk.req).collect();
+        // interactive by (deadline, id), then batch, then best-effort
+        assert_eq!(reqs, vec![4, 2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn edf_budget_defers_lowest_priority_latest_deadline() {
+        let cands = vec![
+            slo(0, 2, SloClass::BestEffort, 5, 1),
+            slo(1, 2, SloClass::Interactive, 8, 2),
+            slo(2, 2, SloClass::Batch, 3, 3),
+        ];
+        let (admitted, deferred) = admit_edf(&cands, 4);
+        let reqs: Vec<usize> = admitted.iter().map(|tk| tk.req).collect();
+        assert_eq!(reqs, vec![1, 2]);
+        assert_eq!(deferred, vec![0]);
+    }
+
+    #[test]
+    fn edf_oversized_first_ticket_always_admits() {
+        let cands = vec![
+            slo(0, 12, SloClass::Interactive, 1, 1),
+            slo(1, 1, SloClass::Interactive, 2, 2),
+        ];
+        let (admitted, deferred) = admit_edf(&cands, 4);
+        // the head-of-line ticket admits even though it alone exceeds the
+        // budget (otherwise the round would stall forever)
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(admitted[0].req, 0);
+        assert_eq!(deferred, vec![1]);
+    }
+
+    #[test]
+    fn edf_is_work_conserving_after_a_deferral() {
+        let cands = vec![
+            slo(0, 3, SloClass::Interactive, 1, 1),
+            slo(1, 3, SloClass::Interactive, 2, 2), // deferred (3+3 > 4)
+            slo(2, 1, SloClass::Batch, 9, 3),       // still fits (3+1 <= 4)
+        ];
+        let (admitted, deferred) = admit_edf(&cands, 4);
+        let reqs: Vec<usize> = admitted.iter().map(|tk| tk.req).collect();
+        assert_eq!(reqs, vec![0, 2]);
+        assert_eq!(deferred, vec![1]);
+    }
+
+    #[test]
+    fn edf_unlimited_budget_same_class_is_deadline_stable() {
+        // all-batch candidates with equal deadlines keep id order — the
+        // pre-SLO coordinator's arrival order, so a budget-less server
+        // plans exactly as before
+        let cands: Vec<SloTicket> =
+            (0..6).map(|i| slo(i, 1 + i % 3, SloClass::Batch, 10, i as u64)).collect();
+        let (admitted, deferred) = admit_edf(&cands, 0);
+        assert!(deferred.is_empty());
+        assert_eq!(admitted.iter().map(|tk| tk.req).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn prop_edf_conserves_tickets_and_respects_budget() {
+        prop::check(
+            "edf-conservation",
+            200,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(16);
+                let budget = rng.below(20);
+                let cands: Vec<SloTicket> = (0..n)
+                    .map(|i| {
+                        slo(
+                            i,
+                            1 + rng.below(6),
+                            SloClass::ALL[rng.below(3)],
+                            rng.below(30) as u64,
+                            i as u64,
+                        )
+                    })
+                    .collect();
+                (cands, budget)
+            },
+            |(cands, budget)| {
+                let (admitted, deferred) = admit_edf(cands, *budget);
+                if admitted.len() + deferred.len() != cands.len() {
+                    return false;
+                }
+                // beyond the head-of-line exception, admitted samples
+                // never exceed the budget
+                let used: usize = admitted.iter().map(|tk| tk.n).sum();
+                if *budget > 0 && admitted.len() > 1 && used > *budget {
+                    return false;
+                }
+                // admitted tickets come out in (class, deadline, id) order
+                // (req == candidate index in this generator)
+                let keys: Vec<_> = admitted
+                    .iter()
+                    .map(|tk| {
+                        let c = &cands[tk.req];
+                        (c.class.rank(), c.deadline, c.id)
+                    })
+                    .collect();
+                keys.windows(2).all(|w| w[0] <= w[1])
             },
         );
     }

@@ -24,11 +24,78 @@
 
 use std::panic::AssertUnwindSafe;
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::runtime::{Denoiser, EpsScratch, QuantState};
+use crate::util::rng::mix64;
 use crate::util::threadpool::{resolve_threads, Pool};
+
+/// A fault forced onto one batch evaluation by a [`FaultPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Fault {
+    #[default]
+    None,
+    /// the eval returns `Err` (an isolated `Err` slot, neighbors untouched)
+    Fail,
+    /// the eval panics (contained by the executor's catch_unwind — the
+    /// worker-crash drill)
+    Panic,
+    /// the eval stalls for the given milliseconds first (straggler drill;
+    /// results are still bit-identical, only wall time moves)
+    Slow(u64),
+}
+
+/// Deterministic fault-injection schedule for the serving coordinator.
+///
+/// Faults are decided per (scheduling round, batch index) by hashing with
+/// the plan seed — a pure function, so a 1-worker server and an N-worker
+/// server inject the *same* faults into the *same* batches and every
+/// downstream retry/backoff/shed decision stays bit-identical. Rates are
+/// per-mille of batches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// ‰ of batches that fail ([`Fault::Fail`])
+    pub fail_per_mille: u32,
+    /// ‰ of batches whose worker panics ([`Fault::Panic`])
+    pub panic_per_mille: u32,
+    /// ‰ of batches stalled by `slow_ms` ([`Fault::Slow`])
+    pub slow_per_mille: u32,
+    /// stall applied to slow batches, in milliseconds
+    pub slow_ms: u64,
+    /// fail the first N engine compiles after server start
+    /// (`Engine::inject_compile_failures` — exercises the compile retry
+    /// budget)
+    pub compile_fail_first: usize,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..Default::default() }
+    }
+
+    /// The fault (if any) for batch `batch` of round `round` — pure in
+    /// (self, round, batch).
+    pub fn decide(&self, round: u64, batch: u64) -> Fault {
+        let total = self.fail_per_mille + self.panic_per_mille + self.slow_per_mille;
+        if total == 0 {
+            return Fault::None;
+        }
+        let h = mix64(self.seed ^ mix64(round.wrapping_mul(0x9E3779B97F4A7C15) ^ batch));
+        let d = (h % 1000) as u32;
+        if d < self.fail_per_mille {
+            Fault::Fail
+        } else if d < self.fail_per_mille + self.panic_per_mille {
+            Fault::Panic
+        } else if d < total {
+            Fault::Slow(self.slow_ms)
+        } else {
+            Fault::None
+        }
+    }
+}
 
 /// Everything a worker needs to evaluate a batch. The model flavor rides
 /// on each [`BatchJob`] (`qs`), not here: the scheduler pins the
@@ -56,6 +123,9 @@ pub struct BatchJob {
     pub sel: Option<Arc<Vec<f32>>>,
     /// quantized state pinned for this round (None => FP path)
     pub qs: Option<Arc<QuantState>>,
+    /// fault forced onto this batch (assigned at plan time from the
+    /// server's [`FaultPlan`]; `Fault::None` in production)
+    pub fault: Fault,
 }
 
 /// A batch's outcome, returned in plan order. The job rides along so its
@@ -224,7 +294,17 @@ fn eval_one(
 ) -> BatchResult {
     let mut pad = pads.lock().unwrap().pop().unwrap_or_default();
     let mut out = bufs.lock().unwrap().outs.pop().unwrap_or_default();
-    let res = std::panic::catch_unwind(AssertUnwindSafe(|| eval(&job, &mut pad, &mut out)));
+    // injected faults run *inside* the containment boundary, so a forced
+    // panic exercises exactly the path a real worker crash takes
+    let res = std::panic::catch_unwind(AssertUnwindSafe(|| match job.fault {
+        Fault::Fail => Err(anyhow!("injected fault: forced batch failure (t={})", job.t)),
+        Fault::Panic => panic!("injected fault: forced worker panic (t={})", job.t),
+        Fault::Slow(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            eval(&job, &mut pad, &mut out)
+        }
+        Fault::None => eval(&job, &mut pad, &mut out),
+    }));
     let eps = match res {
         Ok(Ok(())) => Ok(std::mem::take(&mut out)),
         Ok(Err(e)) => Err(e),
@@ -284,6 +364,7 @@ mod tests {
                     cond: (0..n).map(|k| k as f32).collect(),
                     sel: None,
                     qs: None,
+                    fault: Fault::None,
                 }
             })
             .collect()
@@ -312,7 +393,7 @@ mod tests {
                         cond.push(tk.req as f32);
                     }
                 }
-                BatchJob { idx: bi, t: b.t, x, ts, cond, sel: None, qs: None }
+                BatchJob { idx: bi, t: b.t, x, ts, cond, sel: None, qs: None, fault: Fault::None }
             })
             .collect()
     }
@@ -494,5 +575,89 @@ mod tests {
     fn empty_round_is_a_noop() {
         let exec = RoundExecutor::new(4);
         assert!(exec.run_with(&fake_eval(None, None), Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn fault_plan_is_pure_and_rate_bounded() {
+        let fp = FaultPlan {
+            fail_per_mille: 150,
+            panic_per_mille: 50,
+            slow_per_mille: 100,
+            slow_ms: 1,
+            ..FaultPlan::new(42)
+        };
+        let mut counts = [0usize; 4];
+        for round in 0..50u64 {
+            for batch in 0..20u64 {
+                let f = fp.decide(round, batch);
+                // pure: the same (round, batch) always decides the same
+                assert_eq!(f, fp.decide(round, batch));
+                counts[match f {
+                    Fault::None => 0,
+                    Fault::Fail => 1,
+                    Fault::Panic => 2,
+                    Fault::Slow(ms) => {
+                        assert_eq!(ms, 1);
+                        3
+                    }
+                }] += 1;
+            }
+        }
+        let total = 50 * 20;
+        // ~30% of batches faulted; allow generous slack on the hash draw
+        let faulted = counts[1] + counts[2] + counts[3];
+        assert!(faulted > total / 5 && faulted < total / 2, "{counts:?}");
+        assert!(counts[1] > counts[2], "fail rate 3x panic rate: {counts:?}");
+        // a different seed reshuffles the schedule
+        let other = FaultPlan { seed: 43, ..fp };
+        assert!(
+            (0..50u64).any(|r| (0..20u64).any(|b| fp.decide(r, b) != other.decide(r, b))),
+            "seed did not move the schedule"
+        );
+    }
+
+    #[test]
+    fn zero_rate_plan_never_faults() {
+        let fp = FaultPlan::new(7);
+        for round in 0..20u64 {
+            for batch in 0..8u64 {
+                assert_eq!(fp.decide(round, batch), Fault::None);
+            }
+        }
+    }
+
+    #[test]
+    fn injected_faults_fail_panic_and_slow_on_schedule() {
+        let eval = fake_eval(None, None);
+        let clean: Vec<_> = run_round(1, &eval);
+        for workers in [1usize, 4] {
+            let exec = RoundExecutor::new(workers);
+            let mut jobs = mixed_jobs();
+            jobs[3].fault = Fault::Fail;
+            jobs[5].fault = Fault::Panic;
+            jobs[7].fault = Fault::Slow(1);
+            let results = exec.run_with(&eval, jobs);
+            for (i, r) in results.iter().enumerate() {
+                match i {
+                    3 => {
+                        let msg = format!("{:#}", r.eps.as_ref().unwrap_err());
+                        assert!(msg.contains("forced batch failure"), "{msg}");
+                    }
+                    5 => {
+                        let msg = format!("{:#}", r.eps.as_ref().unwrap_err());
+                        assert!(msg.contains("panicked"), "{msg}");
+                    }
+                    _ => {
+                        // slow and clean batches are bit-identical to the
+                        // no-fault round — faults never corrupt neighbors
+                        let (a, b) = (clean[i].as_ref().unwrap(), r.eps.as_ref().unwrap());
+                        assert!(
+                            a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                            "job {i} bits moved (workers={workers})"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

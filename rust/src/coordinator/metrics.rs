@@ -4,6 +4,20 @@
 
 use std::time::Duration;
 
+use super::request::SloClass;
+
+/// Floor-index percentile over an unsorted series, q in [0, 1]: the
+/// sorted element at `floor((len-1) * q)`; 0 on an empty series. The one
+/// percentile definition every series in [`Metrics`] uses.
+fn percentile_u64(series: &[u64], q: f64) -> u64 {
+    if series.is_empty() {
+        return 0;
+    }
+    let mut v = series.to_vec();
+    v.sort_unstable();
+    v[((v.len() - 1) as f64 * q) as usize]
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     pub latencies: Vec<Duration>,
@@ -36,6 +50,30 @@ pub struct Metrics {
     /// probe forwards that failed or panicked (their slot is skipped, the
     /// feed order is preserved)
     pub probes_failed: usize,
+    /// per-class queue-wait samples in *rounds* (indexed by
+    /// `SloClass::rank()`): rounds a request spent admitted but
+    /// unscheduled — deferred past the queue budget or parked by retry
+    /// backoff. One sample per retired request (done, shed or cancelled).
+    pub queue_waits: [Vec<u64>; 3],
+    /// requests shed per class (deadline misses under overload, exhausted
+    /// retries), indexed by `SloClass::rank()`
+    pub shed: [usize; 3],
+    /// overloaded rounds whose interactive tickets served the pre-built
+    /// lower-bit variant
+    pub downgraded_rounds: usize,
+    /// interactive requests admitted with a cut step count under overload
+    pub downgraded_steps: usize,
+    /// requests retired because the client dropped its receiver
+    pub cancelled: usize,
+    /// failed-round retry attempts (each backs off exponentially, capped)
+    pub retries: usize,
+    /// batch faults injected by the server's `FaultPlan`
+    pub faults_injected: usize,
+    /// engine compile attempts over the serve lifetime (includes retries
+    /// of Failed slots, excludes cache hits)
+    pub compile_attempts: usize,
+    /// loads refused because a Failed slot's retry budget was exhausted
+    pub compile_exhausted: usize,
 }
 
 impl Metrics {
@@ -49,6 +87,18 @@ impl Metrics {
         let mut v = self.latencies.clone();
         v.sort();
         v[((v.len() - 1) as f64 * q) as usize]
+    }
+
+    /// Queue-wait percentile in rounds for one SLO class (floor-index,
+    /// same definition as [`Metrics::latency_p`]); 0 when the class has
+    /// retired no requests.
+    pub fn queue_wait_p(&self, class: SloClass, q: f64) -> u64 {
+        percentile_u64(&self.queue_waits[class.rank()], q)
+    }
+
+    /// total requests shed across all classes
+    pub fn shed_total(&self) -> usize {
+        self.shed.iter().sum()
     }
 
     /// images per second over the measured wall time
@@ -94,7 +144,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests {:4}  images {:5}  evals {:6}  rounds {:5}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%  exec {:6.1} ms / sched {:6.1} ms ({:3.0}% exec)  sel-hit {:3.0}%  recal {}/{} swaps ({} layers)  probes {} ({} skipped, {} failed)",
+            "requests {:4}  images {:5}  evals {:6}  rounds {:5}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%  exec {:6.1} ms / sched {:6.1} ms ({:3.0}% exec)  sel-hit {:3.0}%  recal {}/{} swaps ({} layers)  probes {} ({} skipped, {} failed){}",
             self.latencies.len(),
             self.images_done,
             self.evals,
@@ -113,8 +163,47 @@ impl Metrics {
             self.recal_layers,
             self.probes,
             self.probes_skipped,
-            self.probes_failed
+            self.probes_failed,
+            self.slo_report()
         )
+    }
+
+    /// SLO / robustness suffix of [`Metrics::report`]: empty when nothing
+    /// SLO-related happened (the common quiet path), one line of per-class
+    /// queue waits and shed/downgrade/retry/fault counters otherwise.
+    pub fn slo_report(&self) -> String {
+        let quiet = self.queue_waits.iter().all(|w| w.iter().all(|&r| r == 0))
+            && self.shed_total() == 0
+            && self.downgraded_rounds == 0
+            && self.downgraded_steps == 0
+            && self.cancelled == 0
+            && self.retries == 0
+            && self.faults_injected == 0
+            && self.compile_exhausted == 0;
+        if quiet {
+            return String::new();
+        }
+        let mut s = String::from("\n  slo:");
+        for c in SloClass::ALL {
+            s.push_str(&format!(
+                " {:?} wait p50/p99 {}/{} rounds shed {};",
+                c,
+                self.queue_wait_p(c, 0.5),
+                self.queue_wait_p(c, 0.99),
+                self.shed[c.rank()],
+            ));
+        }
+        s.push_str(&format!(
+            "  downgraded {} rounds / {} step-cuts  cancelled {}  retries {}  faults {}  compile {} attempts ({} exhausted)",
+            self.downgraded_rounds,
+            self.downgraded_steps,
+            self.cancelled,
+            self.retries,
+            self.faults_injected,
+            self.compile_attempts,
+            self.compile_exhausted
+        ));
+        s
     }
 }
 
@@ -208,6 +297,68 @@ mod tests {
         };
         let r = m.report();
         assert!(r.contains("recal 2/5 swaps (7 layers)"), "{r}");
+    }
+
+    #[test]
+    fn queue_wait_percentile_edges() {
+        // empty series: every percentile is 0, for every class
+        let m = Metrics::default();
+        for c in SloClass::ALL {
+            for q in [0.0, 0.5, 0.99, 1.0] {
+                assert_eq!(m.queue_wait_p(c, q), 0);
+            }
+        }
+        // single sample: every percentile is that sample
+        let mut m = Metrics::default();
+        m.queue_waits[SloClass::Interactive.rank()].push(7);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(m.queue_wait_p(SloClass::Interactive, q), 7);
+        }
+        // all-equal samples: percentiles collapse to the common value
+        let mut m = Metrics::default();
+        m.queue_waits[SloClass::Batch.rank()].extend([4u64; 10]);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(m.queue_wait_p(SloClass::Batch, q), 4);
+        }
+    }
+
+    #[test]
+    fn queue_waits_split_per_class() {
+        let mut m = Metrics::default();
+        // interactive waits little, best-effort waits long; the splits
+        // must not bleed into each other
+        m.queue_waits[SloClass::Interactive.rank()].extend([0, 1, 0, 2]);
+        m.queue_waits[SloClass::BestEffort.rank()].extend([10, 30, 20]);
+        assert_eq!(m.queue_wait_p(SloClass::Interactive, 0.5), 0);
+        assert_eq!(m.queue_wait_p(SloClass::Interactive, 1.0), 2);
+        assert_eq!(m.queue_wait_p(SloClass::BestEffort, 0.5), 20);
+        assert_eq!(m.queue_wait_p(SloClass::BestEffort, 0.99), 30);
+        assert_eq!(m.queue_wait_p(SloClass::Batch, 0.5), 0);
+    }
+
+    #[test]
+    fn slo_report_quiet_by_default_and_renders_counters() {
+        let m = Metrics::default();
+        assert_eq!(m.slo_report(), "");
+        assert!(!m.report().contains("slo:"));
+
+        let mut m = Metrics::default();
+        m.queue_waits[SloClass::BestEffort.rank()].extend([3, 5]);
+        m.shed[SloClass::BestEffort.rank()] = 2;
+        m.downgraded_rounds = 4;
+        m.downgraded_steps = 1;
+        m.cancelled = 1;
+        m.retries = 3;
+        m.faults_injected = 2;
+        m.compile_attempts = 5;
+        m.compile_exhausted = 1;
+        assert_eq!(m.shed_total(), 2);
+        let r = m.report();
+        assert!(r.contains("slo:"), "{r}");
+        assert!(r.contains("BestEffort wait p50/p99 3/5 rounds shed 2;"), "{r}");
+        assert!(r.contains("downgraded 4 rounds / 1 step-cuts"), "{r}");
+        assert!(r.contains("cancelled 1  retries 3  faults 2"), "{r}");
+        assert!(r.contains("compile 5 attempts (1 exhausted)"), "{r}");
     }
 
     #[test]

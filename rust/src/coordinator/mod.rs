@@ -9,8 +9,11 @@ pub mod metrics;
 pub mod prober;
 pub mod server;
 
-pub use exec::RoundExecutor;
+pub use batcher::{admit_edf, SloTicket};
+pub use exec::{Fault, FaultPlan, RoundExecutor};
 pub use metrics::Metrics;
 pub use prober::ShadowProber;
-pub use request::{Request, Response};
-pub use server::{spawn, ServeMode, ServeRecal, ServerCfg, ServerHandle};
+pub use request::{Completion, Request, Response, ResponseRx, ShedReason, SloClass};
+pub use server::{
+    degraded_state, spawn, ServeMode, ServeRecal, ServerCfg, ServerHandle, SloCfg,
+};

@@ -1,6 +1,53 @@
-//! Serving request/response types.
+//! Serving request/response types, SLO classes and round-denominated
+//! deadlines.
+//!
+//! Deadlines are *virtual*: measured in scheduling rounds, not wall
+//! clocks, so every admission/shed/downgrade decision the scheduler makes
+//! from them is a pure function of (queue snapshot, round index) — and
+//! therefore bit-identical for any worker count.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 
 use crate::eval::generate::SamplerKind;
+
+/// Service class of a request, in descending scheduling priority.
+/// Within a class, requests are planned earliest-deadline-first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloClass {
+    /// user-facing: never shed; under overload it is *downgraded* instead
+    /// (fewer sampler steps at admission and/or a lower-bit variant)
+    Interactive,
+    /// bulk work: neither shed nor downgraded, just deprioritized
+    Batch,
+    /// opportunistic: shed (channel closed with [`Response::Shed`]) once
+    /// its deadline passes while the server is over its queue budget
+    BestEffort,
+}
+
+impl SloClass {
+    pub const ALL: [SloClass; 3] = [SloClass::Interactive, SloClass::Batch, SloClass::BestEffort];
+
+    /// Scheduling priority index (0 = highest). Doubles as the index of
+    /// this class's slot in per-class metric arrays.
+    pub fn rank(self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Batch => 1,
+            SloClass::BestEffort => 2,
+        }
+    }
+
+    /// Default deadline slack in rounds beyond the request's step count
+    /// (used when `Request::deadline_rounds` is 0 = auto).
+    pub fn slack_rounds(self) -> usize {
+        match self {
+            SloClass::Interactive => 2,
+            SloClass::Batch => 8,
+            SloClass::BestEffort => 16,
+        }
+    }
+}
 
 /// A generation request: n images from a (possibly quantized) diffusion
 /// model. Submitted to the coordinator, which co-schedules the denoising
@@ -16,17 +63,68 @@ pub struct Request {
     pub seed: u64,
     /// class label for conditional models (None = unconditional / random)
     pub class: Option<usize>,
+    /// SLO class (default [`SloClass::Batch`]: never shed, never
+    /// downgraded — the pre-SLO coordinator's behavior)
+    pub slo: SloClass,
+    /// virtual deadline in scheduling rounds from admission;
+    /// 0 = auto (`steps + slo.slack_rounds()`)
+    pub deadline_rounds: usize,
 }
 
 impl Request {
     pub fn new(id: u64, n: usize, steps: usize) -> Request {
-        Request { id, n, steps, eta: 0.0, sampler: SamplerKind::Ddim, seed: id, class: None }
+        Request {
+            id,
+            n,
+            steps,
+            eta: 0.0,
+            sampler: SamplerKind::Ddim,
+            seed: id,
+            class: None,
+            slo: SloClass::Batch,
+            deadline_rounds: 0,
+        }
+    }
+
+    pub fn with_slo(mut self, slo: SloClass) -> Request {
+        self.slo = slo;
+        self
+    }
+
+    /// Effective relative deadline in rounds: the explicit
+    /// `deadline_rounds` when set, otherwise the minimum rounds the
+    /// request needs (its step count) plus the class slack.
+    pub fn deadline_budget(&self) -> usize {
+        if self.deadline_rounds > 0 {
+            self.deadline_rounds
+        } else {
+            self.steps + self.slo.slack_rounds()
+        }
+    }
+}
+
+/// Why the scheduler retired a request without serving it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// best-effort request past its round deadline while the admitted
+    /// backlog exceeded the queue budget
+    DeadlineMissed,
+    /// failed-round retries exhausted (capped exponential backoff)
+    RetriesExhausted,
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::DeadlineMissed => write!(f, "deadline missed under overload"),
+            ShedReason::RetriesExhausted => write!(f, "failed-round retries exhausted"),
+        }
     }
 }
 
 /// Completed generation.
 #[derive(Debug)]
-pub struct Response {
+pub struct Completion {
     pub id: u64,
     /// pixels (decoded for LDM variants), n * hw*hw*3
     pub images: Vec<f32>,
@@ -35,6 +133,92 @@ pub struct Response {
     pub latency: std::time::Duration,
     /// total model evaluations consumed
     pub evals: usize,
+    /// served degraded at least once (step cut at admission and/or
+    /// lower-bit variant rounds under overload)
+    pub degraded: bool,
+}
+
+/// Outcome of a request: either a [`Completion`] or an explicit shed
+/// notice — after sending either, the scheduler drops its sender, so the
+/// channel closes and a second `recv()` errors instead of hanging.
+#[derive(Debug)]
+pub enum Response {
+    Done(Completion),
+    Shed { id: u64, class: SloClass, reason: ShedReason },
+}
+
+impl Response {
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Done(c) => c.id,
+            Response::Shed { id, .. } => *id,
+        }
+    }
+
+    pub fn done(self) -> Option<Completion> {
+        match self {
+            Response::Done(c) => Some(c),
+            Response::Shed { .. } => None,
+        }
+    }
+
+    pub fn shed_reason(&self) -> Option<ShedReason> {
+        match self {
+            Response::Done(_) => None,
+            Response::Shed { reason, .. } => Some(*reason),
+        }
+    }
+
+    /// The completion, panicking with the shed reason otherwise — the
+    /// ergonomic accessor for callers that never configure a queue budget
+    /// (shedding needs one to be possible).
+    pub fn unwrap_done(self) -> Completion {
+        match self {
+            Response::Done(c) => c,
+            Response::Shed { id, class, reason } => {
+                panic!("request {id} ({class:?}) was shed: {reason}")
+            }
+        }
+    }
+}
+
+/// The client's end of a response channel. Dropping it (with the request
+/// still in flight) is a *cancellation*: the scheduler observes the
+/// raised flag at plan time, stops executing the request's remaining
+/// rounds, and counts it as `cancelled` in `Metrics`.
+pub struct ResponseRx {
+    rx: mpsc::Receiver<Response>,
+    gone: Arc<AtomicBool>,
+}
+
+impl ResponseRx {
+    /// A response channel plus the scheduler-side cancellation flag.
+    pub fn channel() -> (mpsc::Sender<Response>, Arc<AtomicBool>, ResponseRx) {
+        let (tx, rx) = mpsc::channel();
+        let gone = Arc::new(AtomicBool::new(false));
+        (tx, Arc::clone(&gone), ResponseRx { rx, gone })
+    }
+
+    pub fn recv(&self) -> Result<Response, mpsc::RecvError> {
+        self.rx.recv()
+    }
+
+    pub fn try_recv(&self) -> Result<Response, mpsc::TryRecvError> {
+        self.rx.try_recv()
+    }
+
+    pub fn recv_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> Result<Response, mpsc::RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
+    }
+}
+
+impl Drop for ResponseRx {
+    fn drop(&mut self) {
+        self.gone.store(true, Ordering::SeqCst);
+    }
 }
 
 #[cfg(test)]
@@ -48,5 +232,70 @@ mod tests {
         assert_eq!(r.n, 4);
         assert_eq!(r.sampler, SamplerKind::Ddim);
         assert!(r.class.is_none());
+        assert_eq!(r.slo, SloClass::Batch);
+        assert_eq!(r.deadline_rounds, 0);
+    }
+
+    #[test]
+    fn deadline_budget_auto_and_explicit() {
+        let r = Request::new(0, 1, 10);
+        assert_eq!(r.deadline_budget(), 10 + SloClass::Batch.slack_rounds());
+        let r = Request::new(0, 1, 10).with_slo(SloClass::Interactive);
+        assert_eq!(r.deadline_budget(), 12);
+        let mut r = Request::new(0, 1, 10).with_slo(SloClass::BestEffort);
+        r.deadline_rounds = 3;
+        assert_eq!(r.deadline_budget(), 3);
+    }
+
+    #[test]
+    fn class_ranks_are_priority_ordered_and_distinct() {
+        assert_eq!(SloClass::Interactive.rank(), 0);
+        assert_eq!(SloClass::Batch.rank(), 1);
+        assert_eq!(SloClass::BestEffort.rank(), 2);
+        for c in SloClass::ALL {
+            assert!(c.slack_rounds() > 0);
+        }
+        // slack grows with laxity: lower priority tolerates later deadlines
+        assert!(SloClass::Interactive.slack_rounds() < SloClass::BestEffort.slack_rounds());
+    }
+
+    #[test]
+    fn response_accessors() {
+        let done = Response::Done(Completion {
+            id: 7,
+            images: vec![0.0],
+            n: 1,
+            latency: std::time::Duration::ZERO,
+            evals: 4,
+            degraded: false,
+        });
+        assert_eq!(done.id(), 7);
+        assert_eq!(done.shed_reason(), None);
+        assert_eq!(done.unwrap_done().n, 1);
+
+        let shed = Response::Shed {
+            id: 9,
+            class: SloClass::BestEffort,
+            reason: ShedReason::DeadlineMissed,
+        };
+        assert_eq!(shed.id(), 9);
+        assert_eq!(shed.shed_reason(), Some(ShedReason::DeadlineMissed));
+        assert!(shed.done().is_none());
+    }
+
+    #[test]
+    fn dropping_response_rx_raises_the_cancel_flag() {
+        let (tx, gone, rx) = ResponseRx::channel();
+        assert!(!gone.load(Ordering::SeqCst));
+        drop(rx);
+        assert!(gone.load(Ordering::SeqCst));
+        // the channel is closed too: sends fail instead of leaking
+        assert!(tx
+            .send(Response::Shed {
+                id: 0,
+                class: SloClass::BestEffort,
+                reason: ShedReason::DeadlineMissed
+            })
+            .is_err());
     }
 }

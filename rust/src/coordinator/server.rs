@@ -31,12 +31,24 @@
 //!     `ServeRecal::state_dir` the drift window is persisted and restored
 //!     across restarts bit-exactly;
 //!   * new requests join at the next round (continuous batching): a long
-//!     request never blocks a short one, same-t requests share compute.
+//!     request never blocks a short one, same-t requests share compute;
+//!   * requests carry an SLO class and a virtual (round-denominated)
+//!     deadline; with a [`SloCfg`] queue budget the scheduler admits
+//!     earliest-deadline-first within class priority, sheds overdue
+//!     best-effort requests under overload, and degrades interactive ones
+//!     (step cut at admission, pre-built lower-bit variant per round)
+//!     instead of dropping them. Failed rounds retry with capped
+//!     exponential backoff in rounds; a [`FaultPlan`] injects
+//!     deterministic batch failures/panics/stalls and compile failures
+//!     for chaos drills.
 //!
 //! Determinism: batch composition is fixed by the plan before execution
 //! and results scatter by batch index, so a server with N workers produces
 //! bit-identical images to a server with 1 worker given the same rounds
-//! (pinned by `rust/tests/integration.rs`).
+//! (pinned by `rust/tests/integration.rs`). Admission, shedding,
+//! downgrade, backoff and fault decisions are pure functions of (queue
+//! snapshot, round index, seed) — no wall clocks — so they inherit the
+//! same guarantee.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -55,24 +67,30 @@ use crate::runtime::{Denoiser, QuantState};
 use crate::schedule::{timestep_subsequence, DdimSampler, DpmSolver2, PlmsSampler, Sampler, Schedule};
 use crate::util::rng::Rng;
 
-use super::batcher::{plan_mode, ticket_offsets, PlanMode, Ticket};
-use super::exec::{eval_closure, BatchJob, EvalCtx, RoundExecutor};
+use super::batcher::{admit_edf, plan_mode, ticket_offsets, PlanMode, SloTicket, Ticket};
+use super::exec::{eval_closure, BatchJob, EvalCtx, Fault, FaultPlan, RoundExecutor};
 use super::metrics::Metrics;
 use super::prober::{ProbeCandidate, ShadowProber};
-use super::request::{Request, Response};
+use super::request::{Completion, Request, Response, ResponseRx, ShedReason, SloClass};
 
 use crate::eval::generate::SamplerKind;
 
 enum Msg {
-    Submit(Vec<(Request, mpsc::Sender<Response>)>),
+    Submit(Vec<(Request, mpsc::Sender<Response>, Arc<AtomicBool>)>),
     Shutdown(mpsc::Sender<Metrics>),
 }
 
-/// Consecutive failed rounds before a request is dropped (its response
-/// channel closes, so the client's `recv()` errors instead of hanging).
-/// Bounds both the retry spin and `shutdown()` when a batch fails
-/// deterministically (e.g. a missing/corrupt artifact for one class).
-const MAX_FAILED_ROUNDS: usize = 3;
+/// Failed-round attempts before a request is retired with
+/// [`ShedReason::RetriesExhausted`] (its channel gets an explicit
+/// [`Response::Shed`], then closes). Bounds both the retry load and
+/// `shutdown()` when a batch fails deterministically (e.g. a
+/// missing/corrupt artifact for one class).
+const MAX_RETRY_ATTEMPTS: usize = 4;
+
+/// Cap on the exponential retry backoff, in scheduling rounds. After the
+/// k-th consecutive failed round a request sits out `min(2^k, this)`
+/// rounds before it is planned again.
+const MAX_BACKOFF_ROUNDS: u64 = 8;
 
 struct Active {
     req: Request,
@@ -82,8 +100,20 @@ struct Active {
     /// round-scoped eps landing zone (x.len()); persists across rounds so
     /// scatter never allocates
     eps_buf: Vec<f32>,
-    /// consecutive rounds lost to failed batch evals
-    fail_rounds: usize,
+    /// consecutive failed-round retry attempts (reset on any served round)
+    attempts: usize,
+    /// retry backoff: not planned again before this round index
+    backoff_until: u64,
+    /// absolute round deadline (admission round + `deadline_budget()`)
+    deadline: u64,
+    /// rounds spent admitted but unscheduled (deferred past the queue
+    /// budget or parked by backoff) — the per-class queue-wait sample
+    waited: u64,
+    /// served degraded at least once (step cut at admission and/or
+    /// lower-bit variant rounds)
+    degraded: bool,
+    /// raised by the client dropping its [`ResponseRx`]
+    cancelled: Arc<AtomicBool>,
     rng: Rng,
     tx: mpsc::Sender<Response>,
     submitted: Instant,
@@ -99,23 +129,24 @@ pub struct ServerHandle {
 impl ServerHandle {
     /// Submit one request. Errors if the scheduler thread has exited
     /// (e.g. after a panic) instead of panicking in the caller. If the
-    /// request itself later fails repeatedly (MAX_FAILED_ROUNDS), its
-    /// receiver's `recv()` returns `Err(RecvError)` — the channel closes
-    /// rather than blocking forever.
-    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Response>> {
+    /// request is later shed (overload, exhausted retries), the receiver
+    /// gets an explicit [`Response::Shed`] before the channel closes —
+    /// `recv()` never blocks forever. Dropping the receiver cancels the
+    /// request at the next planning round.
+    pub fn submit(&self, req: Request) -> Result<ResponseRx> {
         Ok(self.submit_many(vec![req])?.pop().expect("one receiver per request"))
     }
 
     /// Submit a group of requests atomically: all of them join the same
     /// scheduling round, so round composition (and therefore output bits)
     /// does not depend on the race between arrivals and round execution.
-    pub fn submit_many(&self, reqs: Vec<Request>) -> Result<Vec<mpsc::Receiver<Response>>> {
+    pub fn submit_many(&self, reqs: Vec<Request>) -> Result<Vec<ResponseRx>> {
         let mut rxs = Vec::with_capacity(reqs.len());
         let mut batch = Vec::with_capacity(reqs.len());
         for mut req in reqs {
             req.id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-            let (tx, rx) = mpsc::channel();
-            batch.push((req, tx));
+            let (tx, gone, rx) = ResponseRx::channel();
+            batch.push((req, tx, gone));
             rxs.push(rx);
         }
         self.tx
@@ -252,6 +283,39 @@ impl RecalShared {
     }
 }
 
+/// Overload policy: admission budget + graceful-degradation levers. All
+/// decisions derived from it are pure functions of (queue snapshot, round
+/// index), so they are bit-identical for any worker count.
+///
+/// The default (`queue_budget == 0`) disables admission control entirely
+/// — the pre-SLO coordinator's behavior.
+#[derive(Default)]
+pub struct SloCfg {
+    /// max samples planned per scheduling round; 0 = unlimited. The
+    /// server is *overloaded* whenever the admitted backlog exceeds this,
+    /// which arms best-effort shedding and interactive downgrades.
+    pub queue_budget: usize,
+    /// sampler steps cut from an interactive request admitted while the
+    /// backlog is over budget (0 = no step cut; never cuts below 1 step)
+    pub step_cut: usize,
+    /// pre-built lower-bit `QuantState` variant (see
+    /// [`degraded_state`] / `QuantSession::degraded_qparams`) served to
+    /// interactive tickets during overloaded rounds. Quantized serving
+    /// only; ignored (with a warning) on an FP server.
+    pub degraded: Option<QuantState>,
+}
+
+/// The graceful-degradation variant: the serving `QuantState` with its
+/// qparams swapped for a cheaper (lower-bit) search result. Router, LoRA,
+/// hub mask and strategy are shared with the base state, so per-timestep
+/// TALoRA selections — and the scheduler's selection cache — stay valid
+/// across base/degraded rounds.
+pub fn degraded_state(base: &QuantState, qparams: Vec<f32>) -> QuantState {
+    let mut v = base.clone();
+    v.qparams = qparams;
+    v
+}
+
 pub struct ServerCfg {
     pub mode: ServeMode,
     /// decode latents to pixels before responding (LDM variants)
@@ -273,11 +337,18 @@ pub struct ServerCfg {
     /// for any worker count; candidates beyond the budget count as
     /// skipped in `Metrics`
     pub probe_budget: usize,
+    /// admission control + graceful degradation (default: off)
+    pub slo: SloCfg,
+    /// deterministic fault injection (default: no faults). Production
+    /// servers leave this zeroed; tests and chaos drills schedule batch
+    /// failures/panics/stalls and compile failures from a seed
+    pub faults: FaultPlan,
 }
 
 impl ServerCfg {
     /// Defaults: no latent decode, seed 0, auto workers, FP mixed-t
-    /// batching on, no recalibration, probing off.
+    /// batching on, no recalibration, probing off, no admission control,
+    /// no fault injection.
     pub fn new(mode: ServeMode) -> ServerCfg {
         ServerCfg {
             mode,
@@ -287,6 +358,8 @@ impl ServerCfg {
             fp_mixed_t: true,
             recal: None,
             probe_budget: 0,
+            slo: SloCfg::default(),
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -336,6 +409,17 @@ fn persist_window(recal: &Option<Arc<RecalShared>>, state_dir: &Option<StateDir>
     }
 }
 
+/// Retire a request without serving it: send the explicit shed notice
+/// (then close the channel by dropping `tx`), and account the per-class
+/// shed counter + queue-wait sample.
+fn shed_request(a: Active, reason: ShedReason, metrics: &mut Metrics) {
+    let rank = a.req.slo.rank();
+    metrics.shed[rank] += 1;
+    metrics.queue_waits[rank].push(a.waited);
+    crate::log_warn!("shedding request {} ({:?}): {reason}", a.req.id, a.req.slo);
+    let _ = a.tx.send(Response::Shed { id: a.req.id, class: a.req.slo, reason });
+}
+
 fn scheduler_loop(
     rx: mpsc::Receiver<Msg>,
     den: Arc<Denoiser>,
@@ -344,7 +428,22 @@ fn scheduler_loop(
     params: Arc<Vec<f32>>,
     cfg: ServerCfg,
 ) {
-    let ServerCfg { mode, decode_latents, seed, workers, fp_mixed_t, recal, probe_budget } = cfg;
+    let ServerCfg {
+        mode,
+        decode_latents,
+        seed,
+        workers,
+        fp_mixed_t,
+        recal,
+        probe_budget,
+        slo,
+        faults,
+    } = cfg;
+    // compile-fault injection (chaos drills): arm the engine before any
+    // graph loads so the retry budget is what gets exercised
+    if faults.compile_fail_first > 0 {
+        den.engine().inject_compile_failures(faults.compile_fail_first);
+    }
     let mut active: Vec<Active> = Vec::new();
     // samples received per active request in the current round
     let mut got: Vec<usize> = Vec::new();
@@ -364,6 +463,18 @@ fn scheduler_loop(
     let mut qs_cur: Option<Arc<QuantState>> = match mode {
         ServeMode::Fp => None,
         ServeMode::Quant(qs) => Some(Arc::new(qs)),
+    };
+    let SloCfg { queue_budget, step_cut, degraded } = slo;
+    // the pre-built lower-bit variant served to interactive tickets during
+    // overloaded rounds; fixed for the server lifetime (recalibration
+    // hot-swaps move the *base* qparams only)
+    let degraded_qs: Option<Arc<QuantState>> = match (degraded, qs_cur.is_some()) {
+        (Some(d), true) => Some(Arc::new(d)),
+        (Some(_), false) => {
+            crate::log_warn!("degraded variant configured on an FP server: ignored");
+            None
+        }
+        (None, _) => None,
     };
     let mut state_dir: Option<StateDir> = None;
     let recal: Option<Arc<RecalShared>> = match (recal, qs_cur.is_some()) {
@@ -463,7 +574,33 @@ fn scheduler_loop(
             };
             match msg {
                 Msg::Submit(reqs) => {
-                    for (req, tx) in reqs {
+                    let admit_round = metrics.rounds as u64;
+                    let mut backlog: usize = active.iter().map(|a| a.req.n).sum();
+                    for (mut req, tx, gone) in reqs {
+                        // admission-time degradation: an interactive
+                        // request joining an over-budget backlog gets its
+                        // step count cut (a pure function of the queue
+                        // snapshot at admission)
+                        let mut degraded = false;
+                        if queue_budget > 0
+                            && backlog + req.n > queue_budget
+                            && req.slo == SloClass::Interactive
+                            && step_cut > 0
+                        {
+                            let cut = req.steps.saturating_sub(step_cut).max(1);
+                            if cut < req.steps {
+                                crate::log_info!(
+                                    "request {}: overloaded admission, steps {} -> {cut}",
+                                    req.id,
+                                    req.steps
+                                );
+                                req.steps = cut;
+                                degraded = true;
+                                metrics.downgraded_steps += 1;
+                            }
+                        }
+                        let deadline = admit_round + req.deadline_budget() as u64;
+                        backlog += req.n;
                         let mut rng = Rng::new(req.seed ^ 0x73657276);
                         let x: Vec<f32> = (0..req.n * xs).map(|_| rng.normal()).collect();
                         let cond: Vec<f32> = (0..req.n)
@@ -480,7 +617,12 @@ fn scheduler_loop(
                             eps_buf: vec![0.0; x.len()],
                             x,
                             cond,
-                            fail_rounds: 0,
+                            attempts: 0,
+                            backoff_until: 0,
+                            deadline,
+                            waited: 0,
+                            degraded,
+                            cancelled: gone,
                             rng,
                             tx,
                             submitted: Instant::now(),
@@ -496,6 +638,38 @@ fn scheduler_loop(
         // absorb stats from completions that finished since last round
         while let Ok(latency) = done_rx.try_recv() {
             metrics.latencies.push(latency);
+        }
+
+        let round = metrics.rounds as u64;
+
+        // retire cancellations at plan time: the client dropped its
+        // receiver, so its remaining rounds would be wasted compute
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].cancelled.load(Ordering::SeqCst) {
+                let a = active.swap_remove(i);
+                metrics.cancelled += 1;
+                metrics.queue_waits[a.req.slo.rank()].push(a.waited);
+                crate::log_info!("request {} cancelled by client", a.req.id);
+            } else {
+                i += 1;
+            }
+        }
+
+        // overload check + best-effort shedding: both decided from this
+        // round's queue snapshot alone, so 1-vs-N workers agree bit-wise
+        let backlog: usize = active.iter().map(|a| a.req.n).sum();
+        let overloaded = queue_budget > 0 && backlog > queue_budget;
+        if overloaded {
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].req.slo == SloClass::BestEffort && round >= active[i].deadline {
+                    let a = active.swap_remove(i);
+                    shed_request(a, ShedReason::DeadlineMissed, &mut metrics);
+                } else {
+                    i += 1;
+                }
+            }
         }
 
         if active.is_empty() {
@@ -516,6 +690,8 @@ fn scheduler_loop(
                 persist_window(&recal, &state_dir);
                 metrics.sel_hits = sel_cache.hits;
                 metrics.sel_misses = sel_cache.misses;
+                metrics.compile_attempts = den.engine().compile_attempts();
+                metrics.compile_exhausted = den.engine().compile_exhausted_count();
                 metrics.wall = t0.elapsed();
                 let _ = tx.send(metrics.clone());
                 return;
@@ -582,16 +758,60 @@ fn scheduler_loop(
             }
         }
 
-        // one scheduling round: plan batches over all active requests
-        // (same-t for quant, mixed-t for FP when enabled), gather every
-        // batch's inputs at pre-assigned offsets
+        // one scheduling round: earliest-deadline-first admission within
+        // class priority over every schedulable (not backed-off) request,
+        // then batch planning (same-t for quant, mixed-t for FP when
+        // enabled) and gather at pre-assigned offsets
         let sched_t0 = Instant::now();
-        let tickets: Vec<Ticket> = active
+        let cands: Vec<SloTicket> = active
             .iter()
             .enumerate()
-            .map(|(i, a)| Ticket { req: i, t: a.sampler.current_t(), n: a.req.n })
+            .filter(|&(_, a)| round >= a.backoff_until)
+            .map(|(i, a)| SloTicket {
+                ticket: Ticket { req: i, t: a.sampler.current_t(), n: a.req.n },
+                class: a.req.slo,
+                deadline: a.deadline,
+                id: a.req.id,
+            })
             .collect();
-        let batches = plan_mode(&tickets, &classes, pmode);
+        let (admitted, _deferred) = admit_edf(&cands, queue_budget);
+        let mut scheduled = vec![false; active.len()];
+        for tk in &admitted {
+            scheduled[tk.req] = true;
+        }
+        for (i, a) in active.iter_mut().enumerate() {
+            if !scheduled[i] {
+                // deferred past the budget or parked by retry backoff:
+                // a queue-wait round for this request's class
+                a.waited += 1;
+            }
+        }
+        // graceful degradation: during overloaded rounds, interactive
+        // tickets are split off and served on the pre-built lower-bit
+        // variant; normal batches plan first, degraded batches second, so
+        // batch indices (and the fault schedule over them) stay stable
+        let degrade_round = overloaded && degraded_qs.is_some();
+        let (norm_tk, deg_tk): (Vec<Ticket>, Vec<Ticket>) = if degrade_round {
+            admitted
+                .into_iter()
+                .partition(|tk| active[tk.req].req.slo != SloClass::Interactive)
+        } else {
+            (admitted, Vec::new())
+        };
+        if !deg_tk.is_empty() {
+            metrics.downgraded_rounds += 1;
+            for tk in &deg_tk {
+                active[tk.req].degraded = true;
+            }
+        }
+        let mut batches = plan_mode(&norm_tk, &classes, pmode);
+        let n_norm = batches.len();
+        if !deg_tk.is_empty() {
+            // the degraded path is quantized, hence same-t constrained
+            batches.extend(plan_mode(&deg_tk, &classes, PlanMode::SameT));
+        }
+        // each request's tickets live in exactly one partition, so
+        // offsets over the concatenated plan tile its samples as usual
         let offsets = ticket_offsets(&batches, active.len());
         let mut jobs = Vec::with_capacity(batches.len());
         for (bi, batch) in batches.iter().enumerate() {
@@ -602,17 +822,34 @@ fn scheduler_loop(
                 ts.resize(ts.len() + tk.n, tk.t);
                 cond.extend_from_slice(&a.cond[start..start + tk.n]);
             }
-            let sel = match &qs_cur {
+            let qs_batch = if bi >= n_norm { &degraded_qs } else { &qs_cur };
+            let sel = match qs_batch {
                 None => None,
                 Some(qs) => Some(sel_cache.get_or_compute(batch.t, || {
                     // fixed strategies draw from a per-t seeded rng, so
                     // even DualRandom selections are a pure function of
-                    // (seed, t) and cache exactly
+                    // (seed, t) and cache exactly. The cache is shared
+                    // between base and degraded batches: selections
+                    // depend only on router/hub-mask/strategy, which the
+                    // degraded variant shares (only qparams differ)
                     let mut rng = Rng::new(seed ^ batch.t.to_bits() as u64);
                     qs.selection(batch.t, &mut rng)
                 })),
             };
-            jobs.push(BatchJob { idx: bi, t: batch.t, x, ts, cond, sel, qs: qs_cur.clone() });
+            let fault = faults.decide(round, bi as u64);
+            if fault != Fault::None {
+                metrics.faults_injected += 1;
+            }
+            jobs.push(BatchJob {
+                idx: bi,
+                t: batch.t,
+                x,
+                ts,
+                cond,
+                sel,
+                qs: qs_batch.clone(),
+                fault,
+            });
         }
         metrics.round_sched += sched_t0.elapsed();
 
@@ -665,42 +902,52 @@ fn scheduler_loop(
                 .collect();
             p.round_probes(&exec, metrics.rounds as u64, &cands, |idx| {
                 let a = &active[idx];
-                (&a.x[..], tickets[idx].t, &a.cond[..])
+                // the sampler has not advanced yet, so current_t() is the
+                // exact t this round's eval consumed for the request
+                (&a.x[..], a.sampler.current_t(), &a.cond[..])
             });
         }
 
         // observe + complete (completions run on the pool)
         let mut i = 0;
         while i < active.len() {
-            if got[i] == active[i].req.n {
+            if scheduled[i] && got[i] == active[i].req.n {
                 let a = &mut active[i];
                 let eps = std::mem::take(&mut a.eps_buf);
                 a.sampler.observe(&mut a.x, &eps, &mut a.rng);
                 a.eps_buf = eps;
                 a.evals += 1;
-                a.fail_rounds = 0;
-            } else {
-                // every active request is fully ticketed each round, so a
-                // shortfall means one of its batches failed; cap retries
-                // so a deterministic failure can't spin the scheduler or
-                // hang shutdown forever
-                active[i].fail_rounds += 1;
-                if active[i].fail_rounds >= MAX_FAILED_ROUNDS {
+                a.attempts = 0;
+            } else if scheduled[i] {
+                // a scheduled request came up short: one of its batches
+                // failed. Retry with capped exponential backoff in rounds;
+                // a persistent failure retires the request with an
+                // explicit shed notice instead of spinning the scheduler
+                // or hanging shutdown
+                active[i].attempts += 1;
+                metrics.retries += 1;
+                if active[i].attempts >= MAX_RETRY_ATTEMPTS {
                     let a = active.swap_remove(i);
                     got.swap_remove(i);
-                    crate::log_warn!(
-                        "dropping request {} after {MAX_FAILED_ROUNDS} failed rounds",
-                        a.req.id
-                    );
-                    // dropping a.tx closes the response channel: the
-                    // client's recv() errors instead of blocking forever
+                    scheduled.swap_remove(i);
+                    shed_request(a, ShedReason::RetriesExhausted, &mut metrics);
                     continue;
                 }
+                let a = &mut active[i];
+                a.backoff_until = round + 1 + (1u64 << a.attempts).min(MAX_BACKOFF_ROUNDS);
+                crate::log_warn!(
+                    "request {} failed round {round} (attempt {}/{MAX_RETRY_ATTEMPTS}); backing off {} round(s)",
+                    a.req.id,
+                    a.attempts,
+                    a.backoff_until - round - 1
+                );
             }
             if active[i].sampler.done() {
                 let a = active.swap_remove(i);
                 got.swap_remove(i);
+                scheduled.swap_remove(i);
                 metrics.images_done += a.req.n;
+                metrics.queue_waits[a.req.slo.rank()].push(a.waited);
                 let ae = Arc::clone(&ae);
                 let done_tx = done_tx.clone();
                 exec.offload(move || {
@@ -708,13 +955,14 @@ fn scheduler_loop(
                         if decode_latents { ae.decode_batch(&a.x, a.req.n) } else { a.x };
                     let latency = a.submitted.elapsed();
                     let _ = done_tx.send(latency);
-                    let _ = a.tx.send(Response {
+                    let _ = a.tx.send(Response::Done(Completion {
                         id: a.req.id,
                         images,
                         n: a.req.n,
                         latency,
                         evals: a.evals,
-                    });
+                        degraded: a.degraded,
+                    }));
                 });
             } else {
                 i += 1;
@@ -761,9 +1009,9 @@ mod tests {
         let rx1 = handle.submit(Request::new(0, 3, 4)).unwrap();
         let rx2 = handle.submit(Request::new(0, 2, 4)).unwrap();
         let rx3 = handle.submit(Request::new(0, 1, 6)).unwrap(); // different step count
-        let r1 = rx1.recv().unwrap();
-        let r2 = rx2.recv().unwrap();
-        let r3 = rx3.recv().unwrap();
+        let r1 = rx1.recv().unwrap().unwrap_done();
+        let r2 = rx2.recv().unwrap().unwrap_done();
+        let r3 = rx3.recv().unwrap().unwrap_done();
         assert_eq!(r1.n, 3);
         assert_eq!(r2.images.len(), 2 * 16 * 16 * 3);
         assert_eq!(r3.evals, 6);
@@ -822,7 +1070,8 @@ mod tests {
             .collect();
         let rxs = handle.submit_many(reqs).unwrap();
         for rx in rxs {
-            assert!(rx.recv().unwrap().images.iter().all(|v| v.is_finite()));
+            let c = rx.recv().unwrap().unwrap_done();
+            assert!(c.images.iter().all(|v| v.is_finite()));
         }
         let m = handle.shutdown();
         assert_eq!(m.images_done, 4);

@@ -183,7 +183,7 @@ fn run() -> Result<()> {
             let rxs = handle
                 .submit_many((0..requests).map(|i| Request::new(i as u64, per, steps)).collect())?;
             for rx in rxs {
-                let resp = rx.recv()?;
+                let resp = rx.recv()?.unwrap_done();
                 println!(
                     "request {} done: {} images in {:.1} ms ({} evals)",
                     resp.id,

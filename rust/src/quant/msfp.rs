@@ -137,6 +137,25 @@ impl QuantOpts {
         }
         self
     }
+
+    /// The graceful-degradation knob set: every non-IO layer drops to at
+    /// most (`wbits`, `abits`). Layers already at or below the target keep
+    /// their bits, and 8-bit (IO) layers are left untouched — they anchor
+    /// the quality floor the serving coordinator downgrades onto under
+    /// overload.
+    pub fn with_degraded_bits(mut self, wbits: i32, abits: i32) -> QuantOpts {
+        for w in &mut self.wbits {
+            if *w < 8 {
+                *w = (*w).min(wbits);
+            }
+        }
+        for a in &mut self.abits {
+            if *a < 8 {
+                *a = (*a).min(abits);
+            }
+        }
+        self
+    }
 }
 
 /// Run the initialization over all layers. `weights[l]` is layer l's weight
@@ -270,6 +289,25 @@ mod tests {
         let opts = QuantOpts::new(Method::Msfp, 5, 4, 4).with_io_8bit(&[0, 4]);
         assert_eq!(opts.wbits, vec![8, 4, 4, 4, 8]);
         assert_eq!(opts.abits, vec![8, 4, 4, 4, 8]);
+    }
+
+    #[test]
+    fn degraded_bits_lower_non_io_layers_only() {
+        let opts = QuantOpts::new(Method::Msfp, 5, 4, 6).with_io_8bit(&[0, 4]);
+        let d = opts.clone().with_degraded_bits(3, 3);
+        // IO anchors stay at 8; everything else drops to the target
+        assert_eq!(d.wbits, vec![8, 3, 3, 3, 8]);
+        assert_eq!(d.abits, vec![8, 3, 3, 3, 8]);
+        // a layer already below the target keeps its (lower) bits
+        let mut low = opts;
+        low.wbits[2] = 2;
+        let d = low.with_degraded_bits(3, 3);
+        assert_eq!(d.wbits, vec![8, 3, 2, 3, 8]);
+        // degrading to the current bits is a no-op
+        let opts = QuantOpts::new(Method::Msfp, 3, 4, 4);
+        let d = opts.clone().with_degraded_bits(4, 4);
+        assert_eq!(d.wbits, opts.wbits);
+        assert_eq!(d.abits, opts.abits);
     }
 
     #[test]

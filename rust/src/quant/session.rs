@@ -257,6 +257,16 @@ impl<'a> QuantSession<'a> {
         QuantScheme { layers }
     }
 
+    /// Qparams rows for the serving coordinator's graceful-degradation
+    /// variant: the same search with every non-IO layer lowered to at
+    /// most (`wbits`, `abits`) — see `QuantOpts::with_degraded_bits`.
+    /// After the base `quantize(opts)` this is nearly free: the session
+    /// memoizes per-(layer, knob) winners, so only layers whose bits
+    /// actually dropped run a new grid search.
+    pub fn degraded_qparams(&self, opts: &QuantOpts, wbits: i32, abits: i32) -> Vec<f32> {
+        self.quantize(&opts.clone().with_degraded_bits(wbits, abits)).qparams_rows()
+    }
+
     fn quantize_layer(&self, l: usize, opts: &QuantOpts, inner: usize) -> LayerQuant {
         let c = &self.calib[l];
         let lc = &self.layers[l];
@@ -495,6 +505,25 @@ mod tests {
         c2[0] = updated;
         let cold = QuantSession::new(&w, &c2).quantize(&opts);
         assert_identical(&warm, &cold, "owned incremental vs cold");
+    }
+
+    #[test]
+    fn degraded_qparams_match_a_fresh_lower_bit_search() {
+        let (w, c) = fake_model(4, 31);
+        let session = QuantSession::new(&w, &c);
+        let opts = QuantOpts::new(Method::Msfp, 4, 4, 4);
+        let base = session.quantize(&opts).qparams_rows();
+        let deg = session.degraded_qparams(&opts, 3, 3);
+        assert_eq!(deg.len(), base.len());
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        // bit-identical to quantizing the lowered knobs from scratch —
+        // the memoized session takes no shortcuts that change results
+        let cold = QuantSession::new(&w, &c)
+            .quantize(&opts.clone().with_degraded_bits(3, 3))
+            .qparams_rows();
+        assert_eq!(bits(&deg), bits(&cold));
+        // and the variant is a real change from the base search
+        assert_ne!(bits(&deg), bits(&base));
     }
 
     #[test]

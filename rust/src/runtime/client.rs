@@ -53,13 +53,21 @@ impl Executable {
     }
 }
 
+/// Max compile attempts per artifact. Once a slot has failed this many
+/// times, further loads serve the cached error immediately instead of
+/// hammering the compiler (and count as `compile_exhausted`).
+pub const COMPILE_RETRY_BUDGET: usize = 3;
+
 /// Per-artifact compile slot: the first thread to miss the cache becomes
 /// the builder; concurrent loaders of the same key wait on the condvar
-/// instead of compiling the same ~30 s artifact a second time.
+/// instead of compiling the same ~30 s artifact a second time. Failed
+/// attempts park the slot back at `Pending` with their count — the next
+/// loader becomes the retry builder until the budget is spent.
 enum Slot {
+    /// never attempted, or a failed attempt awaiting an in-budget retry
+    Pending { last_err: Option<String>, attempts: usize },
     Building,
     Ready(Arc<Executable>),
-    Failed(String),
 }
 
 struct SlotCell {
@@ -76,6 +84,12 @@ pub struct Engine {
     /// number of actual compilations (cache-hit / wait paths excluded) —
     /// observable so tests can pin the single-flight guarantee
     compiles: AtomicUsize,
+    /// compile attempts including failures and injected faults
+    attempts: AtomicUsize,
+    /// loads refused because a slot's retry budget was exhausted
+    exhausted: AtomicUsize,
+    /// countdown of forced compile failures (fault injection)
+    fault_compiles: AtomicUsize,
 }
 
 unsafe impl Send for Engine {}
@@ -90,6 +104,9 @@ impl Engine {
             artifacts_dir: artifacts_dir.to_path_buf(),
             cache: Mutex::new(BTreeMap::new()),
             compiles: AtomicUsize::new(0),
+            attempts: AtomicUsize::new(0),
+            exhausted: AtomicUsize::new(0),
+            fault_compiles: AtomicUsize::new(0),
         })
     }
 
@@ -103,80 +120,126 @@ impl Engine {
         self.compiles.load(Ordering::SeqCst)
     }
 
+    /// Compile attempts over the engine lifetime, including failed and
+    /// fault-injected ones (cache hits and waits excluded).
+    pub fn compile_attempts(&self) -> usize {
+        self.attempts.load(Ordering::SeqCst)
+    }
+
+    /// Loads refused because the artifact's retry budget
+    /// ([`COMPILE_RETRY_BUDGET`]) was already spent.
+    pub fn compile_exhausted_count(&self) -> usize {
+        self.exhausted.load(Ordering::SeqCst)
+    }
+
+    /// Fault injection: force the next `n` compile attempts (across all
+    /// artifacts) to fail. Used by the serving coordinator's `FaultPlan`
+    /// and the chaos tests to exercise the retry budget.
+    pub fn inject_compile_failures(&self, n: usize) {
+        self.fault_compiles.fetch_add(n, Ordering::SeqCst);
+    }
+
     /// Load + compile (or fetch from cache) an artifact by file name.
     ///
     /// Concurrent loads of the same file are single-flight: the first
     /// caller compiles, the rest block until it finishes and share the
-    /// result. A failed compile is reported to every waiter and then
-    /// evicted, so a later load retries instead of caching the error.
+    /// result. A failed compile parks the slot with its attempt count;
+    /// the next loader retries (becoming the builder) until
+    /// [`COMPILE_RETRY_BUDGET`] attempts are spent, after which every
+    /// load serves the cached error immediately.
     pub fn load(&self, file: &str) -> Result<Arc<Executable>> {
-        let (cell, builder) = {
+        let cell = {
             let mut map = self.cache.lock().unwrap();
-            match map.get(file) {
-                Some(c) => (Arc::clone(c), false),
-                None => {
-                    let c = Arc::new(SlotCell {
-                        state: Mutex::new(Slot::Building),
-                        cv: Condvar::new(),
-                    });
-                    map.insert(file.to_string(), Arc::clone(&c));
-                    (c, true)
+            Arc::clone(map.entry(file.to_string()).or_insert_with(|| {
+                Arc::new(SlotCell {
+                    state: Mutex::new(Slot::Pending { last_err: None, attempts: 0 }),
+                    cv: Condvar::new(),
+                })
+            }))
+        };
+        // claim the builder role (first load, or in-budget retry of a
+        // failed slot), wait out a concurrent build, or serve the cached
+        // outcome
+        let prev_attempts = {
+            let mut st = cell.state.lock().unwrap();
+            loop {
+                match &*st {
+                    Slot::Ready(e) => return Ok(Arc::clone(e)),
+                    Slot::Building => st = cell.cv.wait(st).unwrap(),
+                    Slot::Pending { last_err, attempts } => {
+                        if *attempts >= COMPILE_RETRY_BUDGET {
+                            self.exhausted.fetch_add(1, Ordering::SeqCst);
+                            return Err(anyhow!(
+                                "compiling {file}: retry budget exhausted after {attempts} failed attempts (last: {})",
+                                last_err.as_deref().unwrap_or("never attempted")
+                            ));
+                        }
+                        let prev = *attempts;
+                        *st = Slot::Building;
+                        break prev;
+                    }
                 }
             }
         };
-        if builder {
-            // unwind guard: if compile() panics (e.g. inside the xla FFI),
-            // mark the slot Failed, evict it and wake every waiter — a slot
-            // stuck at Building would hang all current and future loaders
-            struct BuildGuard<'a> {
-                cell: &'a SlotCell,
-                cache: &'a Mutex<BTreeMap<String, Arc<SlotCell>>>,
-                file: &'a str,
-                armed: bool,
-            }
-            impl Drop for BuildGuard<'_> {
-                fn drop(&mut self) {
-                    if !self.armed {
-                        return;
-                    }
-                    *self.cell.state.lock().unwrap() =
-                        Slot::Failed("compile panicked".to_string());
-                    self.cache.lock().unwrap().remove(self.file);
-                    self.cell.cv.notify_all();
+        // unwind guard: if compile() panics (e.g. inside the xla FFI),
+        // park the slot back at Pending with the attempt counted and wake
+        // every waiter — a slot stuck at Building would hang all current
+        // and future loaders
+        struct BuildGuard<'a> {
+            cell: &'a SlotCell,
+            attempts: usize,
+            armed: bool,
+        }
+        impl Drop for BuildGuard<'_> {
+            fn drop(&mut self) {
+                if !self.armed {
+                    return;
                 }
-            }
-            let mut guard = BuildGuard { cell: &cell, cache: &self.cache, file, armed: true };
-            let res = self.compile(file);
-            guard.armed = false;
-            drop(guard);
-            {
-                let mut st = cell.state.lock().unwrap();
-                match &res {
-                    Ok(e) => *st = Slot::Ready(Arc::clone(e)),
-                    Err(e) => {
-                        *st = Slot::Failed(format!("{e:#}"));
-                        self.cache.lock().unwrap().remove(file);
-                    }
-                }
-            }
-            cell.cv.notify_all();
-            res
-        } else {
-            let mut st = cell.state.lock().unwrap();
-            while matches!(*st, Slot::Building) {
-                st = cell.cv.wait(st).unwrap();
-            }
-            match &*st {
-                Slot::Ready(e) => Ok(Arc::clone(e)),
-                Slot::Failed(msg) => {
-                    Err(anyhow!("compiling {file} failed in another thread: {msg}"))
-                }
-                Slot::Building => unreachable!("condvar wait ended while Building"),
+                *self.cell.state.lock().unwrap() = Slot::Pending {
+                    last_err: Some("compile panicked".to_string()),
+                    attempts: self.attempts + 1,
+                };
+                self.cell.cv.notify_all();
             }
         }
+        let mut guard = BuildGuard { cell: &cell, attempts: prev_attempts, armed: true };
+        let res = self.compile(file);
+        guard.armed = false;
+        drop(guard);
+        {
+            let mut st = cell.state.lock().unwrap();
+            match &res {
+                Ok(e) => *st = Slot::Ready(Arc::clone(e)),
+                Err(e) => {
+                    *st = Slot::Pending {
+                        last_err: Some(format!("{e:#}")),
+                        attempts: prev_attempts + 1,
+                    }
+                }
+            }
+        }
+        cell.cv.notify_all();
+        res
     }
 
     fn compile(&self, file: &str) -> Result<Arc<Executable>> {
+        self.attempts.fetch_add(1, Ordering::SeqCst);
+        // injected compile faults consume the countdown before any real
+        // compiler work — the forced failure takes the exact path a real
+        // one does (Pending slot, attempt counted, budget spent)
+        loop {
+            let left = self.fault_compiles.load(Ordering::SeqCst);
+            if left == 0 {
+                break;
+            }
+            if self
+                .fault_compiles
+                .compare_exchange(left, left - 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                return Err(anyhow!("injected fault: forced compile failure for {file}"));
+            }
+        }
         let path = self.artifacts_dir.join(file);
         let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
@@ -235,10 +298,55 @@ mod tests {
         };
         let engine = Engine::new(&dir).unwrap();
         assert!(engine.load("nope.hlo.txt").is_err());
-        // a failed compile must not be cached: the retry takes the builder
-        // path again (and fails again, rather than seeing a stale slot)
+        // an in-budget failed slot is retried: the second load takes the
+        // builder path again instead of seeing a stale Ready/hung slot
         assert!(engine.load("nope.hlo.txt").is_err());
         assert_eq!(engine.compiled_count(), 0);
+        assert_eq!(engine.compile_attempts(), 2);
+    }
+
+    #[test]
+    fn failed_compile_retry_budget_caps_attempts() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let engine = Engine::new(&dir).unwrap();
+        for i in 0..5 {
+            let err = engine.load("nope.hlo.txt").unwrap_err();
+            let msg = format!("{err:#}");
+            if i >= COMPILE_RETRY_BUDGET {
+                assert!(msg.contains("retry budget exhausted"), "load {i}: {msg}");
+            } else {
+                assert!(!msg.contains("retry budget exhausted"), "load {i}: {msg}");
+            }
+        }
+        // only the first BUDGET loads actually hit the compiler; the rest
+        // were refused from the cached error
+        assert_eq!(engine.compile_attempts(), COMPILE_RETRY_BUDGET);
+        assert_eq!(engine.compile_exhausted_count(), 2);
+        assert_eq!(engine.compiled_count(), 0);
+    }
+
+    #[test]
+    fn injected_compile_faults_consume_retries_then_succeed() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let engine = Engine::new(&dir).unwrap();
+        engine.inject_compile_failures(2);
+        for _ in 0..2 {
+            let err = engine.load("features16.hlo.txt").unwrap_err();
+            assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        }
+        // the third attempt is within budget and the fault countdown is
+        // spent, so it compiles for real and the slot turns Ready
+        let exe = engine.load("features16.hlo.txt").unwrap();
+        assert_eq!(engine.compiled_count(), 1);
+        assert_eq!(engine.compile_attempts(), 3);
+        assert_eq!(engine.compile_exhausted_count(), 0);
+        // cached thereafter
+        let again = engine.load("features16.hlo.txt").unwrap();
+        assert!(Arc::ptr_eq(&exe, &again));
     }
 
     #[test]

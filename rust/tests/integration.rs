@@ -67,7 +67,7 @@ fn quantize_then_serve_quantized() {
         rxs.push(handle.submit(req).unwrap());
     }
     for rx in rxs {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap_done();
         assert_eq!(resp.n, 2);
         assert!(resp.images.iter().all(|v| v.is_finite()));
     }
@@ -102,9 +102,9 @@ fn serving_mixed_samplers_and_conditional() {
     let rx1 = handle.submit(ddim).unwrap();
     let rx2 = handle.submit(plms).unwrap();
     let rx3 = handle.submit(dpm).unwrap();
-    let r1 = rx1.recv().unwrap();
-    let r2 = rx2.recv().unwrap();
-    let r3 = rx3.recv().unwrap();
+    let r1 = rx1.recv().unwrap().unwrap_done();
+    let r2 = rx2.recv().unwrap().unwrap_done();
+    let r3 = rx3.recv().unwrap().unwrap_done();
     // latents decoded to 32x32 pixels
     assert_eq!(r1.images.len(), 2 * 32 * 32 * 3);
     assert_eq!(r2.images.len(), 32 * 32 * 3);
@@ -170,7 +170,7 @@ fn parallel_round_executor_is_bit_identical_to_sequential() {
         let rxs = handle.submit_many(workload()).unwrap();
         let out = rxs
             .into_iter()
-            .map(|rx| rx.recv().unwrap().images.iter().map(|v| v.to_bits()).collect())
+            .map(|rx| rx.recv().unwrap().unwrap_done().images.iter().map(|v| v.to_bits()).collect())
             .collect();
         let m = handle.shutdown();
         assert_eq!(m.images_done, workload().iter().map(|r| r.n).sum::<usize>());
@@ -219,7 +219,7 @@ fn fp_mixed_t_batching_is_bit_identical_and_cuts_evals() {
         let rxs = handle.submit_many(workload()).unwrap();
         let images: Vec<Vec<u32>> = rxs
             .into_iter()
-            .map(|rx| rx.recv().unwrap().images.iter().map(|v| v.to_bits()).collect())
+            .map(|rx| rx.recv().unwrap().unwrap_done().images.iter().map(|v| v.to_bits()).collect())
             .collect();
         (images, handle.shutdown())
     };
@@ -320,7 +320,7 @@ fn serving_recalibration_hot_swaps_on_drift_only() {
         let rxs = handle.submit_many(workload()).unwrap();
         let images: Vec<Vec<u32>> = rxs
             .into_iter()
-            .map(|rx| rx.recv().unwrap().images.iter().map(|v| v.to_bits()).collect())
+            .map(|rx| rx.recv().unwrap().unwrap_done().images.iter().map(|v| v.to_bits()).collect())
             .collect();
         (images, handle.shutdown())
     };
@@ -410,7 +410,7 @@ fn shadow_prober_is_deterministic_and_budget_zero_is_bit_identical() {
         let rxs = handle.submit_many(workload()).unwrap();
         let images: Vec<Vec<u32>> = rxs
             .into_iter()
-            .map(|rx| rx.recv().unwrap().images.iter().map(|v| v.to_bits()).collect())
+            .map(|rx| rx.recv().unwrap().unwrap_done().images.iter().map(|v| v.to_bits()).collect())
             .collect();
         let m = handle.shutdown();
         let bytes = sketches.lock().unwrap().to_bytes();
@@ -513,7 +513,7 @@ fn server_restart_resumes_sketch_window_and_hot_swap_decisions() {
         let images: Vec<Vec<u32>> = if submit {
             let rxs = handle.submit_many(workload()).unwrap();
             rxs.into_iter()
-                .map(|rx| rx.recv().unwrap().images.iter().map(|v| v.to_bits()).collect())
+                .map(|rx| rx.recv().unwrap().unwrap_done().images.iter().map(|v| v.to_bits()).collect())
                 .collect()
         } else {
             Vec::new()
@@ -550,6 +550,311 @@ fn server_restart_resumes_sketch_window_and_hot_swap_decisions() {
     assert!(sd.quant_path().exists(), "swap must checkpoint the quant state");
     let restored = QuantState::load(&info, &sd.quant_path()).unwrap();
     assert_eq!(restored.qparams.len(), info.n_layers * 8);
+    std::env::remove_var("MSFP_RUNS");
+}
+
+/// The overload contract: against a queue budget with a pre-built degraded
+/// variant, best-effort requests past their deadline are explicitly shed,
+/// interactive requests are downgraded (admission step cuts + lower-bit
+/// rounds), and every decision — plus each survivor's output bits — is a
+/// pure function of the queue snapshot, identical for 1 vs N workers.
+#[test]
+fn overload_sheds_and_degrades_deterministically_across_workers() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::{degraded_state, Response, SloCfg, SloClass};
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let info = pl.manifest.model("ddim16").unwrap().clone();
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(msfp::model::ParamStore::load_init(&info, &dir).unwrap().flat);
+    let mut rng = Rng::new(7);
+    let mut qp = Vec::new();
+    for _ in 0..info.n_layers {
+        qp.extend_from_slice(&[1.0, 2.0, 1.0, 1.0, 4.0, 2.0, 1.0, -0.2]);
+    }
+    let qs = QuantState {
+        qparams: qp.clone(),
+        lora: vec![0.0; info.lora_size],
+        router: Router::init(&info, &mut rng),
+        hub_mask: vec![1.0, 1.0, 0.0, 0.0],
+        strategy: AllocStrategy::Learned,
+        t_total: 100,
+    };
+    // degraded stand-in: same state, coarser qparams (what a lower-bit
+    // re-search would hand back via `QuantSession::degraded_qparams`)
+    let mut deg_qp = qp;
+    for v in deg_qp.iter_mut().step_by(2) {
+        *v *= 0.5;
+    }
+    let degraded = degraded_state(&qs, deg_qp);
+
+    // backlog of 18 samples against a budget of 4: overloaded from round
+    // one. Classes cycle; the last request is a best-effort job whose
+    // 1-round deadline cannot be met — it must be shed, not hung.
+    let workload = || -> Vec<Request> {
+        let mut v: Vec<Request> = (0..9u64)
+            .map(|i| {
+                let mut r = Request::new(i, 1 + (i as usize % 2), 4 + (i as usize % 3))
+                    .with_slo(match i % 3 {
+                        0 => SloClass::Interactive,
+                        1 => SloClass::Batch,
+                        _ => SloClass::BestEffort,
+                    });
+                r.seed = 200 + i;
+                r
+            })
+            .collect();
+        let mut doomed = Request::new(99, 4, 6).with_slo(SloClass::BestEffort);
+        doomed.seed = 999;
+        doomed.deadline_rounds = 1;
+        v.push(doomed);
+        v
+    };
+
+    #[derive(Debug, PartialEq)]
+    enum Out {
+        Done { bits: Vec<u32>, degraded: bool },
+        Shed(String),
+    }
+    let run = |workers: usize| {
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            ServerCfg {
+                seed: 13,
+                workers,
+                slo: SloCfg { queue_budget: 4, step_cut: 2, degraded: Some(degraded.clone()) },
+                ..ServerCfg::new(ServeMode::Quant(qs.clone()))
+            },
+        );
+        let rxs = handle.submit_many(workload()).unwrap();
+        let outs: Vec<Out> = rxs
+            .into_iter()
+            .map(|rx| match rx.recv().unwrap() {
+                Response::Done(c) => Out::Done {
+                    bits: c.images.iter().map(|v| v.to_bits()).collect(),
+                    degraded: c.degraded,
+                },
+                Response::Shed { class, reason, .. } => Out::Shed(format!("{class:?}: {reason}")),
+            })
+            .collect();
+        (outs, handle.shutdown())
+    };
+
+    let (outs, m) = run(1);
+    assert!(
+        matches!(&outs[outs.len() - 1], Out::Shed(s) if s.contains("deadline")),
+        "impossible-deadline best-effort request was not shed: {:?}",
+        outs.last()
+    );
+    assert!(m.shed_total() >= 1, "{}", m.report());
+    assert!(m.downgraded_rounds >= 1, "no overloaded round degraded: {}", m.report());
+    assert!(m.downgraded_steps >= 1, "no admission step cut landed: {}", m.report());
+    assert!(
+        outs.iter().any(|o| matches!(o, Out::Done { degraded: true, .. })),
+        "no completion rode the degraded variant"
+    );
+    for o in &outs {
+        if let Out::Done { bits, .. } = o {
+            assert!(bits.iter().all(|b| f32::from_bits(*b).is_finite()));
+        }
+    }
+    for workers in [2usize, 4] {
+        let (outs_n, m_n) = run(workers);
+        assert_eq!(outs, outs_n, "workers={workers} changed shed/downgrade outcomes");
+        assert_eq!(m.shed, m_n.shed, "workers={workers} changed shed counts");
+        assert_eq!(m.downgraded_rounds, m_n.downgraded_rounds);
+        assert_eq!(m.downgraded_steps, m_n.downgraded_steps);
+        assert_eq!(m.images_done, m_n.images_done);
+        assert_eq!(m.rounds, m_n.rounds, "workers={workers} changed round count");
+    }
+}
+
+/// The fault-injection contract: a seeded `FaultPlan` forces the same
+/// batch failures for any worker count, so retry counts, backoff windows
+/// and every request's recovery (or exhaustion shed) replay bit-identically
+/// — a crash/retry storm is a reproducible test fixture, not flake.
+#[test]
+fn fault_plan_retries_are_deterministic_across_workers() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::{FaultPlan, Response};
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let info = pl.manifest.model("ddim16").unwrap().clone();
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(msfp::model::ParamStore::load_init(&info, &dir).unwrap().flat);
+    let mut rng = Rng::new(7);
+    let mut qp = Vec::new();
+    for _ in 0..info.n_layers {
+        qp.extend_from_slice(&[1.0, 2.0, 1.0, 1.0, 4.0, 2.0, 1.0, -0.2]);
+    }
+    let qs = QuantState {
+        qparams: qp,
+        lora: vec![0.0; info.lora_size],
+        router: Router::init(&info, &mut rng),
+        hub_mask: vec![1.0, 1.0, 0.0, 0.0],
+        strategy: AllocStrategy::Learned,
+        t_total: 100,
+    };
+    let workload = || -> Vec<Request> {
+        (0..8u64)
+            .map(|i| {
+                let mut r = Request::new(i, 1 + (i as usize % 2), 4 + (i as usize % 3));
+                r.seed = 300 + i;
+                r
+            })
+            .collect()
+    };
+    let run = |workers: usize| {
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            ServerCfg {
+                seed: 17,
+                workers,
+                // ~30% of batches fail: enough pressure to exercise the
+                // retry/backoff machinery on a short workload
+                faults: FaultPlan { fail_per_mille: 300, ..FaultPlan::new(77) },
+                ..ServerCfg::new(ServeMode::Quant(qs.clone()))
+            },
+        );
+        let rxs = handle.submit_many(workload()).unwrap();
+        let outs: Vec<(u64, Option<Vec<u32>>)> = rxs
+            .into_iter()
+            .map(|rx| match rx.recv().unwrap() {
+                Response::Done(c) => {
+                    (c.id, Some(c.images.iter().map(|v| v.to_bits()).collect()))
+                }
+                Response::Shed { id, .. } => (id, None),
+            })
+            .collect();
+        (outs, handle.shutdown())
+    };
+
+    let (outs, m) = run(1);
+    assert!(m.faults_injected > 0, "fault plan never fired: {}", m.report());
+    assert!(m.retries > 0, "injected failures never retried: {}", m.report());
+    // the engine's compile retry budget surfaces through the metrics
+    assert!(m.compile_attempts >= 1, "{}", m.report());
+    assert_eq!(m.compile_exhausted, 0, "{}", m.report());
+    for workers in [4usize] {
+        let (outs_n, m_n) = run(workers);
+        assert_eq!(outs, outs_n, "workers={workers} changed fault-recovery outcomes");
+        assert_eq!(m.retries, m_n.retries, "workers={workers} changed retry count");
+        assert_eq!(m.faults_injected, m_n.faults_injected);
+        assert_eq!(m.shed, m_n.shed);
+        assert_eq!(m.rounds, m_n.rounds);
+    }
+}
+
+/// A client that drops its receiver walks away from its request: the
+/// scheduler retires it at plan time instead of burning its remaining
+/// rounds, and counts it as cancelled rather than completed.
+#[test]
+fn client_cancellation_retires_dropped_requests() {
+    let Some(dir) = artifacts() else { return };
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let info = pl.manifest.model("ddim16").unwrap().clone();
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(msfp::model::ParamStore::load_init(&info, &dir).unwrap().flat);
+    let handle = coordinator::spawn(
+        den,
+        info,
+        pl.sched.clone(),
+        params,
+        ServerCfg { seed: 3, ..ServerCfg::new(ServeMode::Fp) },
+    );
+    // 64 steps: far more rounds than the short request needs, so the
+    // plan-time sweep must catch the dropped receiver long before the
+    // request could finish on its own
+    let mut long = Request::new(0, 2, 64);
+    long.seed = 1;
+    let rx_long = handle.submit(long).unwrap();
+    let mut short = Request::new(1, 1, 3);
+    short.seed = 2;
+    let rx_short = handle.submit(short).unwrap();
+    drop(rx_long); // the client walks away
+    let r = rx_short.recv().unwrap().unwrap_done();
+    assert_eq!(r.n, 1);
+    let m = handle.shutdown();
+    assert_eq!(m.cancelled, 1, "dropped receiver was not retired: {}", m.report());
+    assert_eq!(m.images_done, 1, "cancelled request still completed: {}", m.report());
+}
+
+/// A corrupt (truncated) persisted sketch window must not take the server
+/// down: it warns, cold-starts the in-memory window, serves normally and
+/// re-persists a valid snapshot on shutdown. The explicit `SketchSet::load`
+/// keeps its distinct error so callers can tell corruption from absence.
+#[test]
+fn truncated_sketch_state_cold_starts_and_recovers() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::ServeRecal;
+    use msfp::quant::msfp::{Method, QuantOpts, StateDir};
+    use msfp::recal::SketchSet;
+    use std::sync::Mutex;
+
+    std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_integ_trunc"));
+    let state_root = std::env::temp_dir().join("msfp_integ_trunc_state");
+    let _ = std::fs::remove_dir_all(&state_root);
+    std::fs::create_dir_all(&state_root).unwrap();
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let p = pl.prepare(Corpus::CifarSyn).unwrap();
+    let info = p.info.clone();
+    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4)
+        .with_io_8bit(&info.io_layer_indices());
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(p.params.clone());
+    let mut spec = MethodSpec::ours(4, 2, 0);
+    spec.finetune = None;
+    let session = pl.build_session(&p).unwrap();
+    let q = pl.quantize_with_session(&p, &session, &spec).unwrap();
+
+    // persist a valid window, then truncate it in place — a crash mid-write
+    let sd = StateDir::new(&state_root);
+    let valid = SketchSet::new(info.n_layers, 4, 128, pl.sched.t_total, 5);
+    valid.save(&sd.sketch_path()).unwrap();
+    let bytes = std::fs::read(sd.sketch_path()).unwrap();
+    std::fs::write(sd.sketch_path(), &bytes[..bytes.len() / 2]).unwrap();
+
+    // the explicit loader stays loud about corruption
+    let err = SketchSet::load(&sd.sketch_path()).unwrap_err();
+    assert!(format!("{err:#}").contains("parsing"), "unexpected error: {err:#}");
+
+    // the server warns, cold-starts, and serves anyway
+    let sketches =
+        Arc::new(Mutex::new(SketchSet::new(info.n_layers, 4, 128, pl.sched.t_total, 5)));
+    let mut r = ServeRecal::new(session, opts, sketches);
+    r.every_rounds = 10_000; // park the detector: this test is about restore
+    r.state_dir = Some(sd.clone());
+    let handle = coordinator::spawn(
+        den,
+        info.clone(),
+        pl.sched.clone(),
+        params,
+        ServerCfg { seed: 23, workers: 1, recal: Some(r), ..ServerCfg::new(ServeMode::Quant(q.state)) },
+    );
+    let rxs = handle
+        .submit_many(
+            (0..3u64)
+                .map(|i| {
+                    let mut r = Request::new(i, 1, 3);
+                    r.seed = 70 + i;
+                    r
+                })
+                .collect(),
+        )
+        .unwrap();
+    for rx in rxs {
+        let c = rx.recv().unwrap().unwrap_done();
+        assert!(c.images.iter().all(|v| v.is_finite()));
+    }
+    let m = handle.shutdown();
+    assert_eq!(m.images_done, 3);
+    // shutdown re-persisted a valid window over the corrupt file
+    SketchSet::load(&sd.sketch_path())
+        .expect("shutdown must overwrite the corrupt window with a valid snapshot");
     std::env::remove_var("MSFP_RUNS");
 }
 

@@ -13,6 +13,9 @@
 #                                              recal sketch-persistence and
 #                                              shadow-prober suites (unit,
 #                                              props.rs, integration.rs)
+#   overload smoke                             named re-run of the SLO
+#                                              shed/downgrade and fault-plan
+#                                              determinism integration tests
 #   test-count floor                           the summed `N passed` totals
 #                                              must not drop below
 #                                              scripts/test_floor.txt, so a
@@ -42,6 +45,14 @@ echo "== tier-1 verify =="
 cargo build --release
 test_log="$(mktemp)"
 cargo test -q 2>&1 | tee "$test_log"
+
+echo "== overload smoke (SLO shed/downgrade + fault-recovery determinism) =="
+# re-invoke the two robustness integration tests by name so an overload or
+# fault-injection regression is called out on its own, not buried in the
+# tier-1 wall of output (binaries are already built by the step above)
+cargo test -q --test integration \
+    overload_sheds_and_degrades_deterministically_across_workers \
+    fault_plan_retries_are_deterministic_across_workers
 
 echo "== test-count regression guard =="
 total=$(grep -E 'test result: ok' "$test_log" \
