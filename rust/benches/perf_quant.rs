@@ -8,12 +8,17 @@ use std::path::Path;
 use std::time::Duration;
 
 use msfp::coordinator::batcher::{plan, plan_mode, PlanMode, Ticket};
+use msfp::linalg::tensor::Mat;
+use msfp::quant::format::FpFormat;
 use msfp::quant::fp::{fp_qdq_signed, fp_qdq_unsigned};
 use msfp::quant::msfp::{quantize_model, LayerCalib, Method, QuantOpts};
-use msfp::quant::search::{scalar, search_act_msfp, search_weight_fp};
+use msfp::quant::packed::PackedMat;
+use msfp::quant::search::{scalar, search_act_msfp, search_weight_fp, Quantizer};
 use msfp::quant::QuantSession;
-use msfp::util::bench::{bench_with_budget, black_box, write_json};
+use msfp::util::bench::{bench_with_budget, black_box, metric_row, write_json_rows};
+use msfp::util::json::Json;
 use msfp::util::rng::Rng;
+use msfp::util::threadpool::resolve_threads;
 
 fn main() {
     let mut results = Vec::new();
@@ -169,10 +174,68 @@ fn main() {
         },
     ));
 
+    // --- packed 4-bit storage + fused dequantize-matmul -------------------
+    // A realistic W4 conv layer (3x3 kernel, 64 -> 64 channels, HWIO-flat
+    // [fan_out=64, fan_in=576] after transpose): nibble-packed bytes vs the
+    // f32 tensor, and the fused code-table-gather matmul vs the dense f32
+    // `Mat::matmul` the graph-free baseline would pay after dequantizing.
+    let mut rows: Vec<Json> = results.iter().map(|r| r.to_json()).collect();
+    let (rows_n, cols_n, b_cols) = (64usize, 3 * 3 * 64, 128usize);
+    let pw: Vec<f32> = (0..rows_n * cols_n).map(|_| rng.normal() * 0.1).collect();
+    let pq = Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 0.35 };
+    let pm = PackedMat::pack(&pw, rows_n, cols_n, &pq).unwrap();
+    let f32_bytes = pw.len() * 4;
+    println!(
+        "\n-- packed storage: {} B packed vs {} B f32 ({:.3}x, budget 1/6 = 0.167) --",
+        pm.bytes(),
+        f32_bytes,
+        pm.bytes() as f64 / f32_bytes as f64
+    );
+    rows.push(metric_row("packed_bytes_per_layer", pm.bytes() as f64, "bytes"));
+    rows.push(metric_row("f32_bytes_per_layer", f32_bytes as f64, "bytes"));
+    rows.push(metric_row(
+        "packed_f32_ratio",
+        pm.bytes() as f64 / f32_bytes as f64,
+        "ratio",
+    ));
+
+    let px: Vec<f32> = (0..cols_n * b_cols).map(|_| rng.normal()).collect();
+    let wq: Vec<f32> = pw.iter().map(|&v| pq.qdq(v)).collect();
+    let wmat = Mat::from_vec(rows_n, cols_n, wq).unwrap();
+    let xmat = Mat::from_vec(cols_n, b_cols, px.clone()).unwrap();
+    let threads = resolve_threads(0);
+    let mut fused_out = Vec::new();
+    let fused = bench_with_budget(
+        &format!("packed_fused_matmul_{rows_n}x{cols_n}_b{b_cols}"),
+        Duration::from_secs(2),
+        || {
+            pm.fused_matmul_into(&px, b_cols, None, None, threads, &mut fused_out);
+            black_box(fused_out.len());
+        },
+    );
+    let dense = bench_with_budget(
+        &format!("f32_dense_matmul_{rows_n}x{cols_n}_b{b_cols}"),
+        Duration::from_secs(2),
+        || {
+            black_box(wmat.matmul(&xmat).unwrap());
+        },
+    );
+    let speedup = dense.median_ns / fused.median_ns;
+    println!(
+        "  fused {:.3} ms vs dense f32 {:.3} ms -> packed_fused_matmul_vs_f32 {:.2}x ({} threads)",
+        fused.median_ns / 1e6,
+        dense.median_ns / 1e6,
+        speedup,
+        threads
+    );
+    rows.push(fused.to_json());
+    rows.push(dense.to_json());
+    rows.push(metric_row("packed_fused_matmul_vs_f32", speedup, "x"));
+
     // non-fatal: the measurements above are already printed; don't discard
     // a completed run over an unwritable path
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_quant.json".to_string());
-    match write_json(Path::new(&path), &results) {
+    match write_json_rows(Path::new(&path), rows) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("warning: could not write {path}: {e}"),
     }

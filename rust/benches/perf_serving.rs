@@ -142,17 +142,38 @@ fn main() {
         let q = bench_with_budget(&format!("serve_eval_q_b{b}"), Duration::from_secs(1), || {
             den.eps_q(&params, &qs, &x, 5.0, &cond, &mut rng).unwrap();
         });
+        // packed backend: same quantization contract through the native
+        // fused dequantize-matmul path (no graph, no batch-class padding)
+        let sel = qs.selection(5.0, &mut rng);
+        let mut scratch = msfp::runtime::EpsScratch::default();
+        let mut pout = Vec::new();
+        den.eps_q_packed_into(&params, &qs, &sel, &x, 5.0, &cond, &mut scratch, &mut pout)
+            .unwrap(); // warmup: packs the model once
+        let qp = bench_with_budget(
+            &format!("serve_eval_q_packed_b{b}"),
+            Duration::from_secs(1),
+            || {
+                den.eps_q_packed_into(
+                    &params, &qs, &sel, &x, 5.0, &cond, &mut scratch, &mut pout,
+                )
+                .unwrap();
+            },
+        );
         println!(
-            "  b={b}: fp {:8.2} ms/eval ({:6.1} img/s)   q {:8.2} ms/eval ({:6.1} img/s)   q/fp {:.2}x",
+            "  b={b}: fp {:8.2} ms/eval ({:6.1} img/s)   q {:8.2} ms/eval ({:6.1} img/s)   q/fp {:.2}x   q-packed {:8.2} ms/eval ({:.2}x of graph)",
             fp.median_ns / 1e6,
             b as f64 / (fp.median_ns / 1e9),
             q.median_ns / 1e6,
             b as f64 / (q.median_ns / 1e9),
-            q.median_ns / fp.median_ns
+            q.median_ns / fp.median_ns,
+            qp.median_ns / 1e6,
+            qp.median_ns / q.median_ns
         );
         rows.push(fp.to_json());
         rows.push(q.to_json());
+        rows.push(qp.to_json());
     }
+    println!("  (packed backend resident weights: {} B)", den.packed_bytes());
 
     // --- coordinator throughput: sequential vs parallel round executor ----
     println!("\n-- coordinator throughput (16 requests x 2 images, 6/9 steps mixed, quantized) --");

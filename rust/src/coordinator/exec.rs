@@ -105,6 +105,30 @@ impl FaultPlan {
 pub struct EvalCtx {
     pub den: Arc<Denoiser>,
     pub params: Arc<Vec<f32>>,
+    /// execution backend for quantized batches (FP batches always run
+    /// the compiled graph)
+    pub backend: Backend,
+}
+
+/// How quantized batches execute: through the compiled fake-qdq XLA
+/// graph (the oracle), or through the native packed-weight path
+/// (`runtime::native`) that streams bit-packed 4-bit code indices into
+/// the fused dequantize-matmul kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    #[default]
+    Graph,
+    Packed,
+}
+
+impl Backend {
+    /// Short tag for metrics/reports.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Backend::Graph => "graph",
+            Backend::Packed => "packed",
+        }
+    }
 }
 
 /// One gathered batch, ready to evaluate: `idx` is its position in the
@@ -145,14 +169,23 @@ pub type EvalFn = dyn Fn(&BatchJob, &mut EpsScratch, &mut Vec<f32>) -> Result<()
 /// the per-sample-t marshalling path (`eps_fp_into`; bit-identical to the
 /// old uniform-t path when all ts agree — pinned by the Denoiser
 /// `into_variants` test — and required for mixed-t batches), quantized
-/// batches through `eps_q_with_sel_into` with the job's pinned state and
-/// precomputed (cached) selection.
+/// batches through the configured [`Backend`] — `eps_q_with_sel_into`
+/// (compiled fake-qdq graph) or `eps_q_packed_into` (native packed
+/// weights) — with the job's pinned state and precomputed (cached)
+/// selection.
 pub fn eval_closure(ctx: EvalCtx) -> Arc<EvalFn> {
     Arc::new(move |job: &BatchJob, pad: &mut EpsScratch, out: &mut Vec<f32>| match &job.qs {
         None => ctx.den.eps_fp_into(&ctx.params, &job.x, &job.ts, &job.cond, pad, out),
         Some(qs) => {
             let sel = job.sel.as_ref().expect("quant batch without selection");
-            ctx.den.eps_q_with_sel_into(&ctx.params, qs, sel, &job.x, job.t, &job.cond, pad, out)
+            match ctx.backend {
+                Backend::Graph => ctx
+                    .den
+                    .eps_q_with_sel_into(&ctx.params, qs, sel, &job.x, job.t, &job.cond, pad, out),
+                Backend::Packed => ctx
+                    .den
+                    .eps_q_packed_into(&ctx.params, qs, sel, &job.x, job.t, &job.cond, pad, out),
+            }
         }
     })
 }

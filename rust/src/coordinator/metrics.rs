@@ -74,6 +74,13 @@ pub struct Metrics {
     pub compile_attempts: usize,
     /// loads refused because a Failed slot's retry budget was exhausted
     pub compile_exhausted: usize,
+    /// quantized-batch execution backend tag (`Backend::tag()`: "graph" |
+    /// "packed"); empty until the scheduler stamps it (reads as "graph")
+    pub backend: &'static str,
+    /// resident packed weight bytes for the packed backend — the real
+    /// memory footprint of the served model's quantized layers (0 on the
+    /// graph backend, which keeps f32 weights)
+    pub packed_bytes: usize,
 }
 
 impl Metrics {
@@ -142,13 +149,29 @@ impl Metrics {
         self.sel_hits as f64 / total as f64
     }
 
+    /// Backend tag for display: "graph" until a scheduler stamps it.
+    pub fn backend_tag(&self) -> &'static str {
+        if self.backend.is_empty() {
+            "graph"
+        } else {
+            self.backend
+        }
+    }
+
     pub fn report(&self) -> String {
+        let packed = if self.packed_bytes > 0 {
+            format!(" ({:.1} KiB packed)", self.packed_bytes as f64 / 1024.0)
+        } else {
+            String::new()
+        };
         format!(
-            "requests {:4}  images {:5}  evals {:6}  rounds {:5}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%  exec {:6.1} ms / sched {:6.1} ms ({:3.0}% exec)  sel-hit {:3.0}%  recal {}/{} swaps ({} layers)  probes {} ({} skipped, {} failed){}",
+            "requests {:4}  images {:5}  evals {:6}  rounds {:5}  backend {}{}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%  exec {:6.1} ms / sched {:6.1} ms ({:3.0}% exec)  sel-hit {:3.0}%  recal {}/{} swaps ({} layers)  probes {} ({} skipped, {} failed){}",
             self.latencies.len(),
             self.images_done,
             self.evals,
             self.rounds,
+            self.backend_tag(),
+            packed,
             self.throughput(),
             self.latency_p(0.5).as_secs_f64() * 1e3,
             self.latency_p(0.95).as_secs_f64() * 1e3,
@@ -297,6 +320,22 @@ mod tests {
         };
         let r = m.report();
         assert!(r.contains("recal 2/5 swaps (7 layers)"), "{r}");
+    }
+
+    #[test]
+    fn backend_and_packed_bytes_render_in_report() {
+        // default: no scheduler has stamped a backend yet → reads "graph",
+        // no packed suffix
+        let m = Metrics::default();
+        assert_eq!(m.backend_tag(), "graph");
+        let r = m.report();
+        assert!(r.contains("backend graph"), "{r}");
+        assert!(!r.contains("packed"), "{r}");
+
+        let m = Metrics { backend: "packed", packed_bytes: 2048, ..Default::default() };
+        assert_eq!(m.backend_tag(), "packed");
+        let r = m.report();
+        assert!(r.contains("backend packed (2.0 KiB packed)"), "{r}");
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod prober;
 pub mod server;
 
 pub use batcher::{admit_edf, SloTicket};
-pub use exec::{Fault, FaultPlan, RoundExecutor};
+pub use exec::{Backend, Fault, FaultPlan, RoundExecutor};
 pub use metrics::Metrics;
 pub use prober::ShadowProber;
 pub use request::{Completion, Request, Response, ResponseRx, ShedReason, SloClass};

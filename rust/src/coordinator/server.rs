@@ -68,7 +68,7 @@ use crate::schedule::{timestep_subsequence, DdimSampler, DpmSolver2, PlmsSampler
 use crate::util::rng::Rng;
 
 use super::batcher::{admit_edf, plan_mode, ticket_offsets, PlanMode, SloTicket, Ticket};
-use super::exec::{eval_closure, BatchJob, EvalCtx, Fault, FaultPlan, RoundExecutor};
+use super::exec::{eval_closure, Backend, BatchJob, EvalCtx, Fault, FaultPlan, RoundExecutor};
 use super::metrics::Metrics;
 use super::prober::{ProbeCandidate, ShadowProber};
 use super::request::{Completion, Request, Response, ResponseRx, ShedReason, SloClass};
@@ -343,6 +343,11 @@ pub struct ServerCfg {
     /// servers leave this zeroed; tests and chaos drills schedule batch
     /// failures/panics/stalls and compile failures from a seed
     pub faults: FaultPlan,
+    /// quantized-batch execution backend: `Graph` (compiled fake-qdq XLA
+    /// graph, the oracle) or `Packed` (native bit-packed weights through
+    /// the fused dequantize-matmul kernel). FP batches always use the
+    /// graph
+    pub backend: Backend,
 }
 
 impl ServerCfg {
@@ -360,6 +365,7 @@ impl ServerCfg {
             probe_budget: 0,
             slo: SloCfg::default(),
             faults: FaultPlan::default(),
+            backend: Backend::Graph,
         }
     }
 }
@@ -438,6 +444,7 @@ fn scheduler_loop(
         probe_budget,
         slo,
         faults,
+        backend,
     } = cfg;
     // compile-fault injection (chaos drills): arm the engine before any
     // graph loads so the retry budget is what gets exercised
@@ -538,7 +545,9 @@ fn scheduler_loop(
     let evalf = eval_closure(EvalCtx {
         den: Arc::clone(&den),
         params: Arc::clone(&params),
+        backend,
     });
+    metrics.backend = backend.tag();
 
     loop {
         // drain arrivals; block only when idle and not shutting down
@@ -692,6 +701,9 @@ fn scheduler_loop(
                 metrics.sel_misses = sel_cache.misses;
                 metrics.compile_attempts = den.engine().compile_attempts();
                 metrics.compile_exhausted = den.engine().compile_exhausted_count();
+                // real memory footprint of the packed backend's weights
+                // (0 on the graph backend or before the first packed eval)
+                metrics.packed_bytes = den.packed_bytes();
                 metrics.wall = t0.elapsed();
                 let _ = tx.send(metrics.clone());
                 return;

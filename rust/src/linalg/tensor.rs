@@ -59,11 +59,16 @@ impl Mat {
             bail!("matmul shape mismatch: {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
         }
         let mut out = Mat::zeros(self.rows, other.cols);
+        // The a == 0.0 fast path skips a whole `other` row, which would
+        // also skip 0 * NaN / 0 * inf and silently launder non-finite
+        // inputs into zeros. Only take it when `other` is entirely finite
+        // (the common case), so IEEE propagation is preserved otherwise.
+        let other_finite = other.data.iter().all(|v| v.is_finite());
         // ikj loop order: stream `other` rows, accumulate into out rows.
         for i in 0..self.rows {
             for k in 0..self.cols {
                 let a = self[(i, k)];
-                if a == 0.0 {
+                if a == 0.0 && other_finite {
                     continue;
                 }
                 let orow = &other.data[k * other.cols..(k + 1) * other.cols];
@@ -154,6 +159,21 @@ mod tests {
         let a = Mat::from_vec(3, 3, (0..9).map(|i| i as f32).collect()).unwrap();
         let c = a.matmul(&Mat::eye(3)).unwrap();
         assert_eq!(c, a);
+    }
+
+    #[test]
+    fn matmul_propagates_nan_and_inf_through_zero_rows() {
+        // 0 * NaN must stay NaN, 0 * inf must stay NaN — the zero-skip
+        // fast path used to drop both and return 0.
+        let a = Mat::from_vec(1, 2, vec![0.0, 0.0]).unwrap();
+        let b = Mat::from_vec(2, 1, vec![f32::NAN, 1.0]).unwrap();
+        assert!(a.matmul(&b).unwrap()[(0, 0)].is_nan());
+        let b = Mat::from_vec(2, 1, vec![f32::INFINITY, 1.0]).unwrap();
+        assert!(a.matmul(&b).unwrap()[(0, 0)].is_nan());
+        // finite inputs keep the old exact behaviour
+        let a = Mat::from_vec(1, 2, vec![0.0, 2.0]).unwrap();
+        let b = Mat::from_vec(2, 1, vec![5.0, 3.0]).unwrap();
+        assert_eq!(a.matmul(&b).unwrap()[(0, 0)], 6.0);
     }
 
     #[test]

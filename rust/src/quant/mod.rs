@@ -11,9 +11,11 @@ pub mod grid;
 pub mod search;
 pub mod classify;
 pub mod msfp;
+pub mod packed;
 pub mod session;
 
 pub use format::FpFormat;
 pub use grid::GridEngine;
 pub use msfp::{LayerQuant, QuantScheme, StateDir};
+pub use packed::{PackedMat, PackedModel, PackedTensor};
 pub use session::QuantSession;

@@ -20,7 +20,10 @@ use super::session::QuantSession;
 ///
 /// Layout under `root`:
 ///   * `quant.mts`     — the `QuantState` tensor store;
-///   * `sketches.msk`  — the versioned `SketchSet` snapshot.
+///   * `sketches.msk`  — the versioned `SketchSet` snapshot;
+///   * `packed.mpk`    — the versioned nibble-packed weight blob
+///     (`quant::packed::PackedModel::save`), the packed backend's
+///     sub-byte code indices + per-layer code tables.
 #[derive(Debug, Clone)]
 pub struct StateDir {
     root: PathBuf,
@@ -43,6 +46,11 @@ impl StateDir {
     /// Path of the sketch snapshot (`SketchSet::save`/`load`).
     pub fn sketch_path(&self) -> PathBuf {
         self.root.join("sketches.msk")
+    }
+
+    /// Path of the packed-weight blob (`PackedModel::save`/`load`).
+    pub fn packed_path(&self) -> PathBuf {
+        self.root.join("packed.mpk")
     }
 }
 
@@ -281,6 +289,7 @@ mod tests {
         let sd = StateDir::new("/tmp/serve_a");
         assert_eq!(sd.quant_path(), std::path::Path::new("/tmp/serve_a/quant.mts"));
         assert_eq!(sd.sketch_path(), std::path::Path::new("/tmp/serve_a/sketches.msk"));
+        assert_eq!(sd.packed_path(), std::path::Path::new("/tmp/serve_a/packed.mpk"));
         assert_eq!(sd.root(), std::path::Path::new("/tmp/serve_a"));
     }
 

@@ -1,0 +1,848 @@
+//! Packed sub-byte MSFP storage and the fused dequantize-matmul kernel.
+//!
+//! Everywhere else in the repo a quantized layer is *simulated*: fake-qdq
+//! (`quant/fp.rs`, `quant/int.rs`) maps each f32 weight onto its quantized
+//! value and the result is stored and multiplied as dense f32. This module
+//! makes the 4-bit promise real at serving time:
+//!
+//! - Each searched layer gets a **code table**: the exact ascending,
+//!   deduplicated qdq output grid of its weight quantizer
+//!   ([`super::grid::quantizer_grid`] — same f32 expressions as the scalar
+//!   qdq, so membership is bit-exact). For an ExMy format the table *is*
+//!   the per-binade `k·2^(e−m)·a` magnitude set (± for signed, `+zp`
+//!   shifted for the unsigned path); for the Int methods it is the
+//!   `q·s` / `(q−z)·s` ladder.
+//! - Weights are stored as **bit-packed table indices** (LSB-first
+//!   little-endian bitstream, `ceil(log2(len))` bits per weight — nibble
+//!   region for W4 Int, 5 bits for the W4 FP grids, and general sub-byte
+//!   so the W3/W2 degraded variants pack too).
+//! - `pack → dequantize` reproduces the fake-qdq values with the **same
+//!   f32 bits** (property-pinned in `tests/props.rs`), so the packed path
+//!   and the compiled fake-qdq graph share one numerical contract.
+//!
+//! The fused kernel streams the packed indices and gathers through the
+//! code table instead of touching f32 weights. Its accumulation order is
+//! fixed and documented (see [`PackedMat::fused_matmul_into`]): results
+//! are bit-identical to the scalar dequantize-then-matmul reference for
+//! any worker count and any cache-block size.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::io::atomic_write;
+use crate::util::threadpool::parallel_map;
+
+use super::format::FpFormat;
+use super::grid::quantizer_grid;
+use super::search::Quantizer;
+
+/// Widest supported index. Every searched format is far below this (a W8
+/// E4M3 grid has 271 codes → 9 bits); the cap only bounds the bitstream
+/// reader's window.
+pub const MAX_INDEX_BITS: u32 = 16;
+
+/// Number of f32 values in a qparams row per layer (mirrors the manifest
+/// docstring: [w_maxval, w_ebits, w_mbits, a_sign, a_maxval, a_ebits,
+/// a_mbits, a_zp]).
+pub const QPARAMS_COLS: usize = 8;
+
+// ---------------------------------------------------------------------------
+// qparams row → Quantizer (inverse of Quantizer::encode_weight/encode_act)
+// ---------------------------------------------------------------------------
+
+/// Decode the weight half of a qparams row `[maxval, ebits, mbits]` into
+/// the quantizer it encodes. Inverse of [`Quantizer::encode_weight`]:
+/// `ebits >= 0` is an ExMy signed-FP format, `ebits < 0` marks symmetric
+/// int with `mbits` carrying the bit width.
+pub fn decode_weight_row(row: &[f32]) -> Quantizer {
+    let (maxval, e, m) = (row[0], row[1], row[2]);
+    if e >= 0.0 {
+        Quantizer::SignedFp { fmt: FpFormat::new(e as i32, m as i32), maxval }
+    } else {
+        Quantizer::IntSym { n_bits: m as i32, maxval }
+    }
+}
+
+/// Decode the activation half of a qparams row
+/// `[sign, maxval, ebits, mbits, zp]`. Inverse of
+/// [`Quantizer::encode_act`].
+pub fn decode_act_row(row: &[f32]) -> Quantizer {
+    let (sign, maxval, e, m, zp) = (row[0], row[1], row[2], row[3], row[4]);
+    if e >= 0.0 {
+        if sign >= 0.5 {
+            Quantizer::SignedFp { fmt: FpFormat::new(e as i32, m as i32), maxval }
+        } else {
+            Quantizer::UnsignedFp { fmt: FpFormat::new(e as i32, m as i32), maxval, zp }
+        }
+    } else if sign >= 0.5 {
+        Quantizer::IntSym { n_bits: m as i32, maxval }
+    } else {
+        Quantizer::IntAsym { n_bits: m as i32, lo: zp, hi: maxval }
+    }
+}
+
+/// Split one full qparams row into (weight quantizer, activation
+/// quantizer).
+pub fn decode_qparams_row(row: &[f32]) -> (Quantizer, Quantizer) {
+    (decode_weight_row(&row[0..3]), decode_act_row(&row[3..8]))
+}
+
+// ---------------------------------------------------------------------------
+// bitstream
+// ---------------------------------------------------------------------------
+
+fn pack_bits(idx: &[u32], bits: u32) -> Vec<u8> {
+    let total = idx.len() * bits as usize;
+    let mut out = vec![0u8; total.div_ceil(8)];
+    let mut pos = 0usize;
+    for &c in idx {
+        let byte = pos >> 3;
+        let off = (pos & 7) as u32;
+        // bits <= 16 and off <= 7, so the shifted value fits in 23 bits
+        let v = c << off;
+        out[byte] |= (v & 0xff) as u8;
+        if off + bits > 8 {
+            out[byte + 1] |= ((v >> 8) & 0xff) as u8;
+        }
+        if off + bits > 16 {
+            out[byte + 2] |= ((v >> 16) & 0xff) as u8;
+        }
+        pos += bits as usize;
+    }
+    out
+}
+
+/// Sequential LSB-first reader over a packed index stream; can start at
+/// any bit offset so row starts need no byte alignment or padding.
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    fn at(data: &'a [u8], bitpos: usize) -> BitReader<'a> {
+        BitReader { data, pos: bitpos }
+    }
+
+    #[inline]
+    fn next(&mut self, bits: u32) -> u32 {
+        let byte = self.pos >> 3;
+        let off = (self.pos & 7) as u32;
+        let mut v = (self.data[byte] as u32) >> off;
+        let mut got = 8 - off;
+        let mut i = 1;
+        while got < bits {
+            v |= (self.data.get(byte + i).copied().unwrap_or(0) as u32) << got;
+            got += 8;
+            i += 1;
+        }
+        self.pos += bits as usize;
+        v & ((1u32 << bits) - 1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PackedTensor
+// ---------------------------------------------------------------------------
+
+/// A flat tensor stored as bit-packed indices into its quantizer's code
+/// table. Layout:
+///
+/// ```text
+/// table:  [v_0 < v_1 < ... < v_{T-1}]        T * 4 bytes (f32, ascending)
+/// codes:  |idx_0|idx_1|...|idx_{n-1}|        ceil(n*bits/8) bytes,
+///          LSB-first within each byte, element i at bits [i*bits, (i+1)*bits)
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedTensor {
+    /// Exact qdq output grid of the source quantizer, ascending.
+    pub table: Vec<f32>,
+    /// Index width in bits: `max(1, ceil(log2(table.len())))`.
+    pub bits: u32,
+    /// Element count.
+    pub n: usize,
+    /// Bit-packed indices.
+    pub codes: Vec<u8>,
+}
+
+fn index_bits(table_len: usize) -> u32 {
+    let len = table_len.max(2);
+    (usize::BITS - (len - 1).leading_zeros()).max(1)
+}
+
+impl PackedTensor {
+    /// Quantize `weights` under `q` and store the result as packed code
+    /// indices. `dequantize` reproduces `q.qdq(w)` for every element with
+    /// the same f32 bits (the table is built from the identical f32
+    /// expressions the scalar qdq evaluates). Fails on non-finite qdq
+    /// output (NaN/inf weights) rather than packing garbage.
+    pub fn pack(weights: &[f32], q: &Quantizer) -> Result<PackedTensor> {
+        let table = quantizer_grid(q);
+        if table.is_empty() {
+            bail!("empty code table for {q:?}");
+        }
+        let bits = index_bits(table.len());
+        if bits > MAX_INDEX_BITS {
+            bail!("code table of {} entries needs {} index bits (cap {MAX_INDEX_BITS})", table.len(), bits);
+        }
+        let mut idx = Vec::with_capacity(weights.len());
+        for &w in weights {
+            let qv = q.qdq(w);
+            if !qv.is_finite() {
+                bail!("non-finite qdq output {qv} for weight {w} under {q:?}");
+            }
+            // partition_point lands on the first table entry >= qv; scan the
+            // (tiny) run of ==-equal entries for the bit-exact one. A
+            // value-equal fallback only triggers in the ±0.0 collapse of a
+            // fully underflowed grid.
+            let i = table.partition_point(|v| *v < qv);
+            let mut found = None;
+            let mut j = i;
+            while j < table.len() && table[j] == qv {
+                if table[j].to_bits() == qv.to_bits() {
+                    found = Some(j);
+                    break;
+                }
+                j += 1;
+            }
+            let code = match found {
+                Some(j) => j,
+                None if i < table.len() && table[i] == qv => i,
+                _ => bail!("qdq output {qv:?} missing from code table of {q:?}"),
+            };
+            idx.push(code as u32);
+        }
+        let codes = pack_bits(&idx, bits);
+        Ok(PackedTensor { table, bits, n: weights.len(), codes })
+    }
+
+    /// Decode element `i` back to its table index.
+    pub fn code(&self, i: usize) -> u32 {
+        BitReader::at(&self.codes, i * self.bits as usize).next(self.bits)
+    }
+
+    /// Append all dequantized values to `out` (same f32 bits as the
+    /// fake-qdq of the packed source).
+    pub fn dequantize_into(&self, out: &mut Vec<f32>) {
+        out.reserve(self.n);
+        let mut rd = BitReader::at(&self.codes, 0);
+        for _ in 0..self.n {
+            out.push(self.table[rd.next(self.bits) as usize]);
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Real storage footprint: index stream + code table + a fixed 24-byte
+    /// per-tensor header (bits, count, table length, shape).
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + self.table.len() * 4 + 24
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PackedMat + fused dequantize-matmul
+// ---------------------------------------------------------------------------
+
+/// LoRA low-rank correction fused into the packed matmul:
+/// `scale · B @ (A @ X)` with `A: [rank, cols]`, `B: [rows, rank]`.
+pub struct LoraTerm<'a> {
+    pub a: &'a [f32],
+    pub b: &'a [f32],
+    pub rank: usize,
+    pub scale: f32,
+}
+
+/// A packed weight matrix in matmul layout: `rows = fan_out`,
+/// `cols = fan_in`, indices row-major so the kernel streams each output
+/// row's codes contiguously.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub t: PackedTensor,
+}
+
+/// Fan-in block width for the cache-blocked kernel: a 64×B f32 slab of
+/// `x` stays L1-resident while every row of a chunk consumes it. Blocking
+/// never reorders any output element's accumulation (k stays ascending).
+const K_BLOCK: usize = 64;
+
+/// Rows per parallel work item.
+const ROW_CHUNK: usize = 32;
+
+impl PackedMat {
+    /// Pack `weights` laid out row-major `[rows, cols]` under `q`.
+    pub fn pack(weights: &[f32], rows: usize, cols: usize, q: &Quantizer) -> Result<PackedMat> {
+        if weights.len() != rows * cols {
+            bail!("weight len {} != {rows}x{cols}", weights.len());
+        }
+        Ok(PackedMat { rows, cols, t: PackedTensor::pack(weights, q)? })
+    }
+
+    /// Fused dequantize-matmul: `out[n,b] = Σ_k wq[n,k]·x[k,b]
+    /// (+ scale·(B@(A@X))[n,b]) (+ bias[n])` with `x: [cols, b_cols]`
+    /// row-major and `out: [rows, b_cols]`.
+    ///
+    /// **Fixed accumulation order** (the bit-identity contract with
+    /// [`Self::fused_matmul_ref`], for any worker count): each output
+    /// element accumulates (1) the packed-weight products over `k`
+    /// ascending, then (2) the LoRA products over `r` ascending against a
+    /// single-threaded precomputed `T = A@X` (itself `k`-ascending), then
+    /// (3) the bias. Cache blocking over `k` and row-parallelism never
+    /// reorder these sums — rows are independent and blocks are consumed
+    /// in ascending order.
+    pub fn fused_matmul_into(
+        &self,
+        x: &[f32],
+        b_cols: usize,
+        lora: Option<&LoraTerm<'_>>,
+        bias: Option<&[f32]>,
+        threads: usize,
+        out: &mut Vec<f32>,
+    ) {
+        assert_eq!(x.len(), self.cols * b_cols, "x must be [cols, b_cols]");
+        if let Some(l) = lora {
+            assert_eq!(l.a.len(), l.rank * self.cols, "lora A must be [rank, cols]");
+            assert_eq!(l.b.len(), self.rows * l.rank, "lora B must be [rows, rank]");
+        }
+        if let Some(b) = bias {
+            assert_eq!(b.len(), self.rows, "bias must be [rows]");
+        }
+        // T = A @ X, single-threaded so every worker count sees one value.
+        let t_lora: Option<Vec<f32>> =
+            lora.map(|l| small_matmul(l.a, l.rank, self.cols, x, b_cols));
+        out.clear();
+        out.resize(self.rows * b_cols, 0.0);
+        let ranges: Vec<(usize, usize)> = (0..self.rows)
+            .step_by(ROW_CHUNK)
+            .map(|r0| (r0, (r0 + ROW_CHUNK).min(self.rows)))
+            .collect();
+        let chunks = parallel_map(&ranges, threads, |_, &(r0, r1)| {
+            let mut acc = vec![0.0f32; (r1 - r0) * b_cols];
+            self.rows_kernel(r0, r1, x, b_cols, lora, t_lora.as_deref(), bias, &mut acc);
+            acc
+        });
+        for (&(r0, _), chunk) in ranges.iter().zip(chunks) {
+            out[r0 * b_cols..r0 * b_cols + chunk.len()].copy_from_slice(&chunk);
+        }
+    }
+
+    /// One row chunk of the fused kernel; `acc` covers rows `r0..r1`.
+    #[allow(clippy::too_many_arguments)]
+    fn rows_kernel(
+        &self,
+        r0: usize,
+        r1: usize,
+        x: &[f32],
+        b_cols: usize,
+        lora: Option<&LoraTerm<'_>>,
+        t_lora: Option<&[f32]>,
+        bias: Option<&[f32]>,
+        acc: &mut [f32],
+    ) {
+        let bits = self.t.bits;
+        let table = &self.t.table;
+        let mut kb = 0;
+        while kb < self.cols {
+            let ke = (kb + K_BLOCK).min(self.cols);
+            for n in r0..r1 {
+                let arow = &mut acc[(n - r0) * b_cols..(n - r0 + 1) * b_cols];
+                let mut rd = BitReader::at(&self.t.codes, (n * self.cols + kb) * bits as usize);
+                for k in kb..ke {
+                    let w = table[rd.next(bits) as usize];
+                    let xr = &x[k * b_cols..(k + 1) * b_cols];
+                    for (a, &xv) in arow.iter_mut().zip(xr) {
+                        *a += w * xv;
+                    }
+                }
+            }
+            kb = ke;
+        }
+        for n in r0..r1 {
+            let arow = &mut acc[(n - r0) * b_cols..(n - r0 + 1) * b_cols];
+            if let (Some(l), Some(t)) = (lora, t_lora) {
+                for rr in 0..l.rank {
+                    let c = l.b[n * l.rank + rr] * l.scale;
+                    let tr = &t[rr * b_cols..(rr + 1) * b_cols];
+                    for (a, &tv) in arow.iter_mut().zip(tr) {
+                        *a += c * tv;
+                    }
+                }
+            }
+            if let Some(b) = bias {
+                for a in arow.iter_mut() {
+                    *a += b[n];
+                }
+            }
+        }
+    }
+
+    /// Scalar reference: dequantize the whole matrix to dense f32, then
+    /// run the same accumulation order single-threaded. The fused kernel
+    /// must match this bit-for-bit (pinned in unit + property tests).
+    pub fn fused_matmul_ref(
+        &self,
+        x: &[f32],
+        b_cols: usize,
+        lora: Option<&LoraTerm<'_>>,
+        bias: Option<&[f32]>,
+        out: &mut Vec<f32>,
+    ) {
+        assert_eq!(x.len(), self.cols * b_cols, "x must be [cols, b_cols]");
+        let w = self.t.dequantize();
+        let t_lora: Option<Vec<f32>> =
+            lora.map(|l| small_matmul(l.a, l.rank, self.cols, x, b_cols));
+        out.clear();
+        out.resize(self.rows * b_cols, 0.0);
+        for n in 0..self.rows {
+            let arow = &mut out[n * b_cols..(n + 1) * b_cols];
+            for k in 0..self.cols {
+                let wv = w[n * self.cols + k];
+                let xr = &x[k * b_cols..(k + 1) * b_cols];
+                for (a, &xv) in arow.iter_mut().zip(xr) {
+                    *a += wv * xv;
+                }
+            }
+            if let (Some(l), Some(t)) = (lora, t_lora.as_deref()) {
+                for rr in 0..l.rank {
+                    let c = l.b[n * l.rank + rr] * l.scale;
+                    let tr = &t[rr * b_cols..(rr + 1) * b_cols];
+                    for (a, &tv) in arow.iter_mut().zip(tr) {
+                        *a += c * tv;
+                    }
+                }
+            }
+            if let Some(b) = bias {
+                for a in arow.iter_mut() {
+                    *a += b[n];
+                }
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.t.bytes()
+    }
+}
+
+/// Dense row-major `a[ar, ac] @ x[ac, b_cols]`, k-ascending, single
+/// thread — the deterministic LoRA `A@X` stage.
+fn small_matmul(a: &[f32], ar: usize, ac: usize, x: &[f32], b_cols: usize) -> Vec<f32> {
+    let mut t = vec![0.0f32; ar * b_cols];
+    for i in 0..ar {
+        let trow = &mut t[i * b_cols..(i + 1) * b_cols];
+        for k in 0..ac {
+            let v = a[i * ac + k];
+            let xr = &x[k * b_cols..(k + 1) * b_cols];
+            for (o, &xv) in trow.iter_mut().zip(xr) {
+                *o += v * xv;
+            }
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// PackedModel + versioned blob
+// ---------------------------------------------------------------------------
+
+/// One packed layer: the weight matrix in matmul layout keyed by the
+/// manifest layer name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedLayer {
+    pub name: String,
+    pub mat: PackedMat,
+}
+
+/// Every quantized layer of a model, packed. Saved next to `quant.mts`
+/// in the `StateDir` (see `StateDir::packed_path`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PackedModel {
+    pub layers: Vec<PackedLayer>,
+}
+
+/// Blob magic: "MSFPPK" + 2-digit version. Bump on any layout change.
+pub const PACKED_MAGIC: &[u8; 8] = b"MSFPPK01";
+
+impl PackedModel {
+    /// Total packed bytes across all layers (index streams + code tables
+    /// + per-tensor headers).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.mat.bytes()).sum()
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&PackedLayer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Serialize to the versioned `MSFPPK01` blob.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(PACKED_MAGIC);
+        out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for l in &self.layers {
+            let name = l.name.as_bytes();
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name);
+            out.extend_from_slice(&(l.mat.rows as u32).to_le_bytes());
+            out.extend_from_slice(&(l.mat.cols as u32).to_le_bytes());
+            out.extend_from_slice(&l.mat.t.bits.to_le_bytes());
+            out.extend_from_slice(&(l.mat.t.table.len() as u32).to_le_bytes());
+            for v in &l.mat.t.table {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out.extend_from_slice(&(l.mat.t.codes.len() as u64).to_le_bytes());
+            out.extend_from_slice(&l.mat.t.codes);
+        }
+        out
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<PackedModel> {
+        let mut c = Cursor { data, pos: 0 };
+        let magic = c.take(8)?;
+        if magic != PACKED_MAGIC {
+            bail!("bad packed-model magic {magic:?} (want {PACKED_MAGIC:?})");
+        }
+        let n_layers = c.u32()? as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let name_len = c.u32()? as usize;
+            let name = String::from_utf8(c.take(name_len)?.to_vec())
+                .context("packed layer name is not utf-8")?;
+            let rows = c.u32()? as usize;
+            let cols = c.u32()? as usize;
+            let bits = c.u32()?;
+            if bits == 0 || bits > MAX_INDEX_BITS {
+                bail!("layer {name}: bad index width {bits}");
+            }
+            let table_len = c.u32()? as usize;
+            if table_len == 0 || table_len > (1usize << bits) {
+                bail!("layer {name}: table of {table_len} entries does not fit {bits} bits");
+            }
+            let mut table = Vec::with_capacity(table_len);
+            for _ in 0..table_len {
+                let b = c.take(4)?;
+                table.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            let codes_len = c.u64()? as usize;
+            let n = rows * cols;
+            if codes_len != (n * bits as usize).div_ceil(8) {
+                bail!("layer {name}: {codes_len} code bytes for {n} x {bits}-bit elements");
+            }
+            let codes = c.take(codes_len)?.to_vec();
+            layers.push(PackedLayer {
+                name,
+                mat: PackedMat { rows, cols, t: PackedTensor { table, bits, n, codes } },
+            });
+        }
+        if c.pos != data.len() {
+            bail!("{} trailing bytes after packed model", data.len() - c.pos);
+        }
+        Ok(PackedModel { layers })
+    }
+
+    /// Atomic write of the versioned blob.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        atomic_write(path, &self.to_bytes())
+    }
+
+    pub fn load(path: &Path) -> Result<PackedModel> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading packed model {}", path.display()))?;
+        PackedModel::from_bytes(&data)
+    }
+
+    /// Index layers by name for O(1) lookup during a forward pass.
+    pub fn by_name(&self) -> HashMap<&str, &PackedLayer> {
+        self.layers.iter().map(|l| (l.name.as_str(), l)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fp::e_min_of;
+    use crate::util::rng::Rng;
+
+    fn edge_values(q: &Quantizer) -> Vec<f32> {
+        // zeros, ±maxval, far-out clamps, and subnormal-binade boundaries
+        let mut xs = vec![0.0, -0.0, 1e30, -1e30, 1e-30, -1e-30];
+        match *q {
+            Quantizer::SignedFp { fmt, maxval } | Quantizer::UnsignedFp { fmt, maxval, .. } => {
+                xs.push(maxval);
+                xs.push(-maxval);
+                let full = 2.0 - crate::quant::fp::exp2_int(-fmt.m_bits);
+                let a = maxval / full;
+                let e_min = e_min_of(fmt.e_bits);
+                let step = crate::quant::fp::exp2_int(e_min - fmt.m_bits);
+                for k in 0..=(1i64 << (fmt.m_bits + 1)) {
+                    xs.push(k as f32 * step * a);
+                    xs.push(-(k as f32) * step * a);
+                    xs.push((k as f32 + 0.49) * step * a);
+                }
+            }
+            Quantizer::IntSym { maxval, .. } => {
+                xs.push(maxval);
+                xs.push(-maxval);
+            }
+            Quantizer::IntAsym { lo, hi, .. } => {
+                xs.push(lo);
+                xs.push(hi);
+            }
+        }
+        xs
+    }
+
+    fn assert_roundtrip(q: &Quantizer, xs: &[f32]) {
+        let p = PackedTensor::pack(xs, q).unwrap();
+        let deq = p.dequantize();
+        for (i, (&x, &d)) in xs.iter().zip(&deq).enumerate() {
+            let want = q.qdq(x);
+            assert_eq!(
+                d.to_bits(),
+                want.to_bits(),
+                "elem {i}: x={x} deq={d} want={want} under {q:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_signed_fp_formats() {
+        let mut r = Rng::new(11);
+        for (e, m) in [(3, 0), (2, 1), (1, 2), (0, 3), (2, 0), (1, 1), (0, 2), (4, 3)] {
+            let q = Quantizer::SignedFp { fmt: FpFormat::new(e, m), maxval: 1.5 };
+            let mut xs = edge_values(&q);
+            xs.extend((0..512).map(|_| r.normal() * 2.0));
+            assert_roundtrip(&q, &xs);
+        }
+    }
+
+    #[test]
+    fn roundtrip_unsigned_fp_with_zp() {
+        let mut r = Rng::new(12);
+        for (e, m) in [(2, 2), (1, 3), (3, 1), (0, 4)] {
+            for zp in [0.0, -0.18, -0.3] {
+                let q = Quantizer::UnsignedFp { fmt: FpFormat::new(e, m), maxval: 6.0, zp };
+                let mut xs = edge_values(&q);
+                xs.extend((0..512).map(|_| r.normal().abs() * 3.0 + zp));
+                assert_roundtrip(&q, &xs);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_int_sym_and_asym() {
+        let mut r = Rng::new(13);
+        for n in [2, 3, 4, 8] {
+            let q = Quantizer::IntSym { n_bits: n, maxval: 2.5 };
+            let mut xs = edge_values(&q);
+            xs.extend((0..512).map(|_| r.normal() * 3.0));
+            assert_roundtrip(&q, &xs);
+
+            let q = Quantizer::IntAsym { n_bits: n, lo: -0.2785, hi: 5.0 };
+            let mut xs = edge_values(&q);
+            xs.extend((0..512).map(|_| r.normal() * 2.0 + 1.0));
+            assert_roundtrip(&q, &xs);
+        }
+    }
+
+    #[test]
+    fn index_widths_are_sub_byte_for_low_bit_formats() {
+        // W4 int grid has exactly 16 codes -> nibble; W4 FP grids carry the
+        // subnormal binade + sign, so they index in 5 bits; degraded W3/W2
+        // pack below that.
+        let cases = [
+            (Quantizer::IntSym { n_bits: 4, maxval: 1.0 }, 4),
+            (Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 1.0 }, 5),
+            (Quantizer::SignedFp { fmt: FpFormat::new(3, 0), maxval: 1.0 }, 5),
+            (Quantizer::SignedFp { fmt: FpFormat::new(1, 1), maxval: 1.0 }, 4),
+            (Quantizer::SignedFp { fmt: FpFormat::new(1, 0), maxval: 1.0 }, 3),
+            (Quantizer::IntSym { n_bits: 2, maxval: 1.0 }, 2),
+        ];
+        for (q, want_bits) in cases {
+            let p = PackedTensor::pack(&[0.0, 0.5, -0.5, 1.0], &q).unwrap();
+            assert_eq!(p.bits, want_bits, "{q:?} table {} entries", p.table.len());
+        }
+    }
+
+    #[test]
+    fn packed_bytes_beat_one_sixth_of_f32_for_4bit_layers() {
+        // A mid-UNet conv: 3*3*64*64 weights.
+        let mut r = Rng::new(14);
+        let n = 3 * 3 * 64 * 64;
+        let w: Vec<f32> = (0..n).map(|_| r.normal() * 0.1).collect();
+        for q in [
+            Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 0.4 },
+            Quantizer::IntSym { n_bits: 4, maxval: 0.4 },
+        ] {
+            let p = PackedTensor::pack(&w, &q).unwrap();
+            let f32_bytes = n * 4;
+            assert!(
+                p.bytes() * 6 <= f32_bytes,
+                "{q:?}: packed {} vs f32 {} bytes",
+                p.bytes(),
+                f32_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn pack_rejects_nan_weights() {
+        let q = Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 1.0 };
+        assert!(PackedTensor::pack(&[0.0, f32::NAN], &q).is_err());
+    }
+
+    #[test]
+    fn decode_rows_invert_encode() {
+        let cases = [
+            Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 0.75 },
+            Quantizer::IntSym { n_bits: 4, maxval: 1.25 },
+        ];
+        for q in cases {
+            assert_eq!(decode_weight_row(&q.encode_weight()), q);
+        }
+        let acts = [
+            Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 6.0 },
+            Quantizer::UnsignedFp { fmt: FpFormat::new(2, 2), maxval: 6.0, zp: -0.2785 },
+            Quantizer::IntSym { n_bits: 4, maxval: 6.0 },
+            Quantizer::IntAsym { n_bits: 4, lo: -0.2785, hi: 6.0 },
+        ];
+        for q in acts {
+            assert_eq!(decode_act_row(&q.encode_act()), q);
+        }
+    }
+
+    fn random_fused_case(
+        r: &mut Rng,
+        rows: usize,
+        cols: usize,
+        b_cols: usize,
+        rank: usize,
+    ) -> (PackedMat, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let q = Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 0.8 };
+        let w: Vec<f32> = (0..rows * cols).map(|_| r.normal() * 0.3).collect();
+        let m = PackedMat::pack(&w, rows, cols, &q).unwrap();
+        let x: Vec<f32> = (0..cols * b_cols).map(|_| r.normal()).collect();
+        let a: Vec<f32> = (0..rank * cols).map(|_| r.normal() * 0.02).collect();
+        let b: Vec<f32> = (0..rows * rank).map(|_| r.normal() * 0.02).collect();
+        let bias: Vec<f32> = (0..rows).map(|_| r.normal()).collect();
+        (m, x, a, b, bias)
+    }
+
+    #[test]
+    fn fused_kernel_is_bit_identical_to_scalar_reference_for_any_worker_count() {
+        let mut r = Rng::new(15);
+        for &(rows, cols, b_cols, rank) in
+            &[(1, 1, 1, 1), (7, 5, 3, 2), (33, 70, 4, 4), (64, 129, 8, 4), (100, 64, 2, 4)]
+        {
+            let (m, x, a, b, bias) = random_fused_case(&mut r, rows, cols, b_cols, rank);
+            let lora = LoraTerm { a: &a, b: &b, rank, scale: 1.0 / rank as f32 };
+            let mut want = Vec::new();
+            m.fused_matmul_ref(&x, b_cols, Some(&lora), Some(&bias), &mut want);
+            for workers in [1, 2, 3, 8] {
+                let mut got = Vec::new();
+                m.fused_matmul_into(&x, b_cols, Some(&lora), Some(&bias), workers, &mut got);
+                assert_eq!(got.len(), want.len());
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "rows={rows} cols={cols} b={b_cols} workers={workers} elem {i}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_kernel_without_lora_or_bias_matches_reference() {
+        let mut r = Rng::new(16);
+        let (m, x, _, _, _) = random_fused_case(&mut r, 48, 96, 5, 4);
+        let mut want = Vec::new();
+        m.fused_matmul_ref(&x, 5, None, None, &mut want);
+        let mut got = Vec::new();
+        m.fused_matmul_into(&x, 5, None, None, 4, &mut got);
+        assert_eq!(
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn model_blob_roundtrips_exactly() {
+        let mut r = Rng::new(17);
+        let q4 = Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 0.5 };
+        let q8 = Quantizer::IntSym { n_bits: 8, maxval: 0.5 };
+        let mut model = PackedModel::default();
+        for (i, (q, rows, cols)) in [(q4, 16, 36), (q8, 8, 16), (q4, 5, 7)].iter().enumerate() {
+            let w: Vec<f32> = (0..rows * cols).map(|_| r.normal() * 0.2).collect();
+            model.layers.push(PackedLayer {
+                name: format!("layer{i}"),
+                mat: PackedMat::pack(&w, *rows, *cols, q).unwrap(),
+            });
+        }
+        let blob = model.to_bytes();
+        let back = PackedModel::from_bytes(&blob).unwrap();
+        assert_eq!(model, back);
+        assert_eq!(model.bytes(), back.bytes());
+
+        let dir = std::env::temp_dir().join(format!("msfp_packed_test_{}", std::process::id()));
+        let path = dir.join("packed.mpk");
+        model.save(&path).unwrap();
+        let loaded = PackedModel::load(&path).unwrap();
+        assert_eq!(model, loaded);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn model_blob_rejects_corruption() {
+        let q = Quantizer::IntSym { n_bits: 4, maxval: 1.0 };
+        let model = PackedModel {
+            layers: vec![PackedLayer {
+                name: "l".into(),
+                mat: PackedMat::pack(&[0.5f32; 12], 3, 4, &q).unwrap(),
+            }],
+        };
+        let mut blob = model.to_bytes();
+        assert!(PackedModel::from_bytes(&blob[..blob.len() - 1]).is_err());
+        blob[0] = b'X';
+        assert!(PackedModel::from_bytes(&blob).is_err());
+        assert!(PackedModel::from_bytes(b"MSFPPK99\0\0\0\0").is_err());
+    }
+}
+
+/// Minimal byte cursor for blob parsing.
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            bail!("packed blob truncated at byte {} (need {n} more)", self.pos);
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+}

@@ -5,7 +5,7 @@
 //! outputs truncated), input marshalling per the manifest ABI, and the
 //! quantized path's router-driven LoRA selection.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -13,8 +13,10 @@ use crate::lora::hub::AllocStrategy;
 use crate::lora::Router;
 use crate::model::manifest::ModelInfo;
 use crate::util::rng::Rng;
+use crate::util::threadpool::resolve_threads;
 
 use super::client::{Engine, Executable};
+use super::native::{qparams_fingerprint, PackedForward};
 
 /// Everything the quantized graphs need beyond the FP params.
 #[derive(Debug, Clone)]
@@ -119,6 +121,10 @@ pub struct Denoiser {
     fp_files: Vec<(usize, String)>,
     q_files: Vec<(usize, String)>,
     calib_file: String,
+    /// Packed-backend cache: the native forward built for the current
+    /// qparams (recal hot-swaps change the fingerprint and force a
+    /// rebuild on the next packed eval).
+    packed: Mutex<Option<Arc<PackedForward>>>,
 }
 
 impl Denoiser {
@@ -132,7 +138,14 @@ impl Denoiser {
             q_files.push((b, info.artifact(&format!("q_b{b}"))?.to_string()));
         }
         let calib_file = info.artifact(&format!("calib_b{}", info.calib_b))?.to_string();
-        Ok(Denoiser { info: info.clone(), engine, fp_files, q_files, calib_file })
+        Ok(Denoiser {
+            info: info.clone(),
+            engine,
+            fp_files,
+            q_files,
+            calib_file,
+            packed: Mutex::new(None),
+        })
     }
 
     pub fn engine(&self) -> &Arc<Engine> {
@@ -325,6 +338,58 @@ impl Denoiser {
         out.clear();
         out.extend_from_slice(&eps[..self.info.x_size(n)]);
         Ok(())
+    }
+
+    /// Quantized eps through the native packed backend: bit-packed code
+    /// indices streamed through the fused dequantize-matmul kernel
+    /// (`runtime::native`) instead of the compiled fake-qdq graph. Same
+    /// signature and quantization contract as [`Self::eps_q_with_sel_into`]
+    /// (the graph stays the oracle; outputs agree within f32
+    /// re-association tolerance, pinned by the packed-parity integration
+    /// test). Needs no batch-class padding — the native path runs the
+    /// exact batch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eps_q_packed_into(
+        &self,
+        params: &[f32],
+        qs: &QuantState,
+        sel: &[f32],
+        x: &[f32],
+        t: f32,
+        cond: &[f32],
+        _s: &mut EpsScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let n = cond.len();
+        if n == 0 {
+            bail!("eps_q_packed called with an empty batch (cond is empty)");
+        }
+        if x.len() != self.info.x_size(n) {
+            bail!("x len {} != expected {}", x.len(), self.info.x_size(n));
+        }
+        let pf = self.packed_forward(params, qs)?;
+        pf.forward(&self.info, params, &qs.lora, sel, x, t, cond, resolve_threads(0), out)
+    }
+
+    /// The cached packed model for `qs.qparams`, building (packing every
+    /// layer) on first use or after a qparams hot-swap.
+    fn packed_forward(&self, params: &[f32], qs: &QuantState) -> Result<Arc<PackedForward>> {
+        let want = qparams_fingerprint(&qs.qparams);
+        let mut cache = self.packed.lock().unwrap();
+        if let Some(pf) = cache.as_ref() {
+            if pf.qparams_hash() == want {
+                return Ok(Arc::clone(pf));
+            }
+        }
+        let pf = Arc::new(PackedForward::build(&self.info, params, &qs.qparams)?);
+        *cache = Some(Arc::clone(&pf));
+        Ok(pf)
+    }
+
+    /// Packed weight bytes of the cached packed model (0 before the first
+    /// packed eval) — the serving `Metrics::packed_bytes` gauge.
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.lock().unwrap().as_ref().map(|pf| pf.bytes()).unwrap_or(0)
     }
 
     /// Calibration forward for the serving shadow prober: `n` stacked

@@ -6,6 +6,8 @@
 
 pub mod client;
 pub mod denoiser;
+pub mod native;
 
 pub use client::{Engine, Executable};
 pub use denoiser::{Denoiser, EpsScratch, QuantState};
+pub use native::PackedForward;

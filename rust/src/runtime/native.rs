@@ -1,0 +1,759 @@
+//! Native packed-weight quantized forward for the manifest UNet denoiser.
+//!
+//! This is the serving backend that makes 4-bit real: every quantized
+//! conv/linear streams bit-packed code indices through the fused
+//! dequantize-matmul kernel (`quant::packed`) instead of materializing f32
+//! weights, with the LoRA hub correction `(1/r)·B@(A@x)` fused into the
+//! same pass. The compiled fake-qdq XLA graph (`Denoiser::eps_q_with_sel_into`)
+//! stays the oracle: both paths quantize weights and activations with the
+//! identical qdq contract (the packed code tables reproduce fake-qdq bits
+//! exactly), so outputs agree within f32 re-association tolerance — pinned
+//! end-to-end by the packed-parity integration test.
+//!
+//! The architecture mirrors `python/compile/model.py` `unet()` exactly:
+//! sinusoidal temb → 2 temb linears (+ class embedding) → conv_in → res1 →
+//! strided down conv → res2 → mid res → attention → concat skip → res3 →
+//! nearest 2× upsample → up conv → concat skip → res4 → out groupnorm →
+//! conv_out, NHWC activations, HWIO conv weights, SAME padding, silu
+//! nonlinearity, group_norm(groups=8, eps=1e-5) kept full precision.
+//! Quantized layers (conv + linear) are resolved by manifest layer name;
+//! each applies its activation quantizer to the layer input first, exactly
+//! like the graph.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::manifest::{LayerSpec, ModelInfo};
+use crate::model::temb::sinusoidal;
+use crate::quant::packed::{
+    decode_qparams_row, LoraTerm, PackedLayer, PackedMat, PackedModel, QPARAMS_COLS,
+};
+use crate::quant::search::Quantizer;
+use crate::util::rng::mix64;
+
+/// group_norm group count — fixed in python/compile/model.py `ModelCfg`.
+pub const GROUPS: usize = 8;
+const GN_EPS: f32 = 1e-5;
+
+/// A manifest model with every quantized layer packed into matmul layout
+/// (`[fan_out, fan_in]` code indices) plus the decoded per-layer
+/// activation quantizers. Built once per (params, qparams) pair and
+/// cached by the denoiser; recalibration hot-swaps change the qparams
+/// hash and force a rebuild.
+pub struct PackedForward {
+    packed: PackedModel,
+    acts: Vec<Quantizer>,
+    qparams_hash: u64,
+}
+
+/// Order-dependent 64-bit hash over the exact f32 bits of a qparams
+/// matrix — the packed cache key (recal hot-swaps produce a new matrix).
+pub fn qparams_fingerprint(qparams: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in qparams {
+        h = mix64(h ^ v.to_bits() as u64);
+    }
+    h
+}
+
+impl PackedForward {
+    /// Pack every quantized layer of `info` from the flat `params` under
+    /// the per-layer weight quantizers encoded in `qparams` (`[L, 8]`
+    /// rows). Both conv (HWIO `(k,k,cin,cout)`) and linear (`(cin,cout)`)
+    /// weights flatten to `[fan_in, fan_out]` row-major, so one transpose
+    /// yields the kernel's `[fan_out, fan_in]` layout.
+    pub fn build(info: &ModelInfo, params: &[f32], qparams: &[f32]) -> Result<PackedForward> {
+        let l = info.layer_specs.len();
+        if qparams.len() != l * QPARAMS_COLS {
+            bail!("qparams len {} != {l} layers x {QPARAMS_COLS}", qparams.len());
+        }
+        let mut layers = Vec::with_capacity(l);
+        let mut acts = Vec::with_capacity(l);
+        for (i, spec) in info.layer_specs.iter().enumerate() {
+            let row = &qparams[i * QPARAMS_COLS..(i + 1) * QPARAMS_COLS];
+            let (wq, aq) = decode_qparams_row(row);
+            let ps = info.param_spec(&spec.param)?;
+            let w = &params[ps.offset..ps.offset + ps.size()];
+            let (kk, n) = (spec.fan_in, spec.fan_out);
+            if w.len() != kk * n {
+                bail!("layer {}: weight len {} != {kk}x{n}", spec.name, w.len());
+            }
+            let mut wt = vec![0.0f32; n * kk];
+            for j in 0..kk {
+                for nn in 0..n {
+                    wt[nn * kk + j] = w[j * n + nn];
+                }
+            }
+            layers.push(PackedLayer {
+                name: spec.name.clone(),
+                mat: PackedMat::pack(&wt, n, kk, &wq)
+                    .with_context(|| format!("packing layer {}", spec.name))?,
+            });
+            acts.push(aq);
+        }
+        Ok(PackedForward {
+            packed: PackedModel { layers },
+            acts,
+            qparams_hash: qparams_fingerprint(qparams),
+        })
+    }
+
+    /// Total packed weight bytes (the `Metrics::packed_bytes` gauge).
+    pub fn bytes(&self) -> usize {
+        self.packed.bytes()
+    }
+
+    pub fn qparams_hash(&self) -> u64 {
+        self.qparams_hash
+    }
+
+    pub fn model(&self) -> &PackedModel {
+        &self.packed
+    }
+
+    /// Quantized UNet forward: predicts eps for a batch defined by
+    /// `cond` (`b = cond.len()`), uniform timestep `t`, NHWC latents `x`
+    /// of `info.x_size(b)`. `sel` is the `[L, H]` router one-hot,
+    /// `lora` the flat hub. `threads` parallelizes the fused kernels
+    /// (bit-identical for any count). Output replaces `out`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward(
+        &self,
+        info: &ModelInfo,
+        params: &[f32],
+        lora: &[f32],
+        sel: &[f32],
+        x: &[f32],
+        t: f32,
+        cond: &[f32],
+        threads: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = cond.len();
+        if x.len() != info.x_size(b) {
+            bail!("x len {} != x_size({b}) = {}", x.len(), info.x_size(b));
+        }
+        let cfg = &info.cfg;
+        let td = cfg.temb_dim;
+        let h = cfg.lora_hub;
+        if sel.len() != info.layer_specs.len() * h {
+            bail!("sel len {} != {} layers x {h} hubs", sel.len(), info.layer_specs.len());
+        }
+        let fw = Fwd {
+            pf: self,
+            info,
+            params,
+            lora,
+            sel,
+            threads,
+            idx: info
+                .layer_specs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| (s.name.as_str(), i))
+                .collect(),
+        };
+
+        // Timestep embedding: identical for every sample at uniform t.
+        let base = sinusoidal(t, td);
+        let mut temb = Vec::with_capacity(b * td);
+        for _ in 0..b {
+            temb.extend_from_slice(&base);
+        }
+        let mut temb = fw.linear_q("temb.lin1", &temb, b)?;
+        silu_slice(&mut temb);
+        let mut temb = fw.linear_q("temb.lin2", &temb, b)?;
+        if cfg.n_classes > 0 {
+            let emb = fw.tensor("cls.emb")?;
+            for (bi, &c) in cond.iter().enumerate() {
+                let ci = (c.max(0.0) as usize).min(cfg.n_classes - 1);
+                for j in 0..td {
+                    temb[bi * td + j] += emb[ci * td + j];
+                }
+            }
+        }
+
+        let x0 = T4 { b, h: cfg.img_hw, w: cfg.img_hw, c: cfg.in_ch, d: x.to_vec() };
+        let h0 = fw.conv_q("conv_in", &x0)?;
+        let h1 = fw.resblock("res1", &h0, &temb)?;
+        let d1 = fw.conv_q("down", &silu_t4(&h1))?;
+        let h2 = fw.resblock("res2", &d1, &temb)?;
+        let m = fw.resblock("mid", &h2, &temb)?;
+        let m = fw.attention("attn", &m)?;
+        let u = concat_c(&m, &h2);
+        let u = fw.resblock("res3", &u, &temb)?;
+        let u = upsample2x(&u);
+        let u = fw.conv_q("up", &silu_t4(&u))?;
+        let u2 = concat_c(&u, &h1);
+        let u2 = fw.resblock("res4", &u2, &temb)?;
+        let o = fw.group_norm(&u2, "out.gn")?;
+        let o = fw.conv_q("conv_out", &silu_t4(&o))?;
+
+        out.clear();
+        out.extend_from_slice(&o.d);
+        Ok(())
+    }
+}
+
+/// NHWC activation tensor.
+#[derive(Clone)]
+struct T4 {
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    d: Vec<f32>,
+}
+
+fn silu(v: f32) -> f32 {
+    v * (1.0 / (1.0 + (-v).exp()))
+}
+
+fn silu_slice(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = silu(*v);
+    }
+}
+
+fn silu_t4(x: &T4) -> T4 {
+    let mut y = x.clone();
+    silu_slice(&mut y.d);
+    y
+}
+
+/// Channel concat `[a | b]` (python `jnp.concatenate([a, b], axis=-1)`).
+fn concat_c(a: &T4, b: &T4) -> T4 {
+    assert_eq!((a.b, a.h, a.w), (b.b, b.h, b.w), "concat on mismatched spatial dims");
+    let c = a.c + b.c;
+    let mut d = Vec::with_capacity(a.b * a.h * a.w * c);
+    for p in 0..a.b * a.h * a.w {
+        d.extend_from_slice(&a.d[p * a.c..(p + 1) * a.c]);
+        d.extend_from_slice(&b.d[p * b.c..(p + 1) * b.c]);
+    }
+    T4 { b: a.b, h: a.h, w: a.w, c, d }
+}
+
+/// Nearest-neighbor 2x upsample (python `jnp.repeat` on both spatial
+/// axes).
+fn upsample2x(x: &T4) -> T4 {
+    let (oh, ow) = (x.h * 2, x.w * 2);
+    let mut d = vec![0.0f32; x.b * oh * ow * x.c];
+    for bi in 0..x.b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let src = ((bi * x.h + oy / 2) * x.w + ox / 2) * x.c;
+                let dst = ((bi * oh + oy) * ow + ox) * x.c;
+                d[dst..dst + x.c].copy_from_slice(&x.d[src..src + x.c]);
+            }
+        }
+    }
+    T4 { b: x.b, h: oh, w: ow, c: x.c, d }
+}
+
+/// One forward pass's borrowed context.
+struct Fwd<'a> {
+    pf: &'a PackedForward,
+    info: &'a ModelInfo,
+    params: &'a [f32],
+    lora: &'a [f32],
+    sel: &'a [f32],
+    threads: usize,
+    idx: HashMap<&'a str, usize>,
+}
+
+impl Fwd<'_> {
+    fn tensor(&self, name: &str) -> Result<&[f32]> {
+        let ps = self.info.param_spec(name)?;
+        Ok(&self.params[ps.offset..ps.offset + ps.size()])
+    }
+
+    fn layer(&self, name: &str) -> Result<(usize, &LayerSpec, &PackedMat)> {
+        let &li = self
+            .idx
+            .get(name)
+            .with_context(|| format!("no quantized layer '{name}' in manifest"))?;
+        Ok((li, &self.info.layer_specs[li], &self.pf.packed.layers[li].mat))
+    }
+
+    /// Router-selected LoRA factors for layer `li`:
+    /// `a_sel: [rank, fan_in]`, `b_sel: [fan_out, rank]` — the einsum
+    /// `('h,hrk->rk')` / `('h,hnr->nr')` contractions from model.py.
+    fn sel_slices(&self, li: usize, spec: &LayerSpec) -> (Vec<f32>, Vec<f32>) {
+        let cfg = &self.info.cfg;
+        let (r, hubs) = (cfg.lora_rank, cfg.lora_hub);
+        let (kk, n) = (spec.fan_in, spec.fan_out);
+        let o = spec.lora_offset;
+        let a_all = &self.lora[o..o + hubs * r * kk];
+        let b_all = &self.lora[o + hubs * r * kk..o + hubs * r * kk + hubs * n * r];
+        let s = &self.sel[li * hubs..(li + 1) * hubs];
+        let mut a_sel = vec![0.0f32; r * kk];
+        let mut b_sel = vec![0.0f32; n * r];
+        for (hi, &sv) in s.iter().enumerate() {
+            if sv == 0.0 {
+                continue;
+            }
+            let ah = &a_all[hi * r * kk..(hi + 1) * r * kk];
+            for (acc, &v) in a_sel.iter_mut().zip(ah) {
+                *acc += sv * v;
+            }
+            let bh = &b_all[hi * n * r..(hi + 1) * n * r];
+            for (acc, &v) in b_sel.iter_mut().zip(bh) {
+                *acc += sv * v;
+            }
+        }
+        (a_sel, b_sel)
+    }
+
+    /// Quantized linear on `[rows, cin]` input: activation qdq, then the
+    /// fused packed matmul with the selected LoRA term and bias.
+    fn linear_q(&self, name: &str, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let (li, spec, mat) = self.layer(name)?;
+        let cin = spec.fan_in;
+        let cout = spec.fan_out;
+        if x.len() != rows * cin {
+            bail!("linear {name}: input len {} != {rows}x{cin}", x.len());
+        }
+        let aq = &self.pf.acts[li];
+        // transpose to [cin, rows] for the kernel while quantizing
+        let mut xt = vec![0.0f32; cin * rows];
+        for p in 0..rows {
+            for kk in 0..cin {
+                xt[kk * rows + p] = aq.qdq(x[p * cin + kk]);
+            }
+        }
+        let (a_sel, b_sel) = self.sel_slices(li, spec);
+        let rank = self.info.cfg.lora_rank;
+        let lt = LoraTerm { a: &a_sel, b: &b_sel, rank, scale: 1.0 / rank as f32 };
+        let bias = self.tensor(&format!("{name}.b"))?;
+        let mut y = Vec::new();
+        mat.fused_matmul_into(&xt, rows, Some(&lt), Some(bias), self.threads, &mut y);
+        // back to [rows, cout]
+        let mut outv = vec![0.0f32; rows * cout];
+        for nn in 0..cout {
+            for p in 0..rows {
+                outv[p * cout + nn] = y[nn * rows + p];
+            }
+        }
+        Ok(outv)
+    }
+
+    /// Quantized SAME conv: activation qdq, im2col (pad zeros added
+    /// *after* quantization, matching the graph), fused packed matmul.
+    fn conv_q(&self, name: &str, x: &T4) -> Result<T4> {
+        let (li, spec, mat) = self.layer(name)?;
+        let (k, s) = (spec.k, spec.stride.max(1));
+        let (cin, cout) = (x.c, spec.fan_out);
+        if spec.fan_in != k * k * cin {
+            bail!("conv {name}: fan_in {} != {k}x{k}x{cin}", spec.fan_in);
+        }
+        let aq = &self.pf.acts[li];
+        let mut xq = x.d.clone();
+        for v in xq.iter_mut() {
+            *v = aq.qdq(*v);
+        }
+        // SAME output dims + padding (jax convention)
+        let oh = x.h.div_ceil(s);
+        let ow = x.w.div_ceil(s);
+        let pad_h = ((oh - 1) * s + k).saturating_sub(x.h);
+        let pad_w = ((ow - 1) * s + k).saturating_sub(x.w);
+        let (ph_lo, pw_lo) = (pad_h / 2, pad_w / 2);
+        // im2col: X [fan_in, P], row index (kh, kw, ci) matching the HWIO
+        // weight flattening, P = b*oh*ow
+        let p_total = x.b * oh * ow;
+        let mut xcol = vec![0.0f32; spec.fan_in * p_total];
+        for kh in 0..k {
+            for kw in 0..k {
+                for bi in 0..x.b {
+                    for oy in 0..oh {
+                        let iy = (oy * s + kh) as isize - ph_lo as isize;
+                        if iy < 0 || iy >= x.h as isize {
+                            continue;
+                        }
+                        for ox in 0..ow {
+                            let ix = (ox * s + kw) as isize - pw_lo as isize;
+                            if ix < 0 || ix >= x.w as isize {
+                                continue;
+                            }
+                            let src = ((bi * x.h + iy as usize) * x.w + ix as usize) * cin;
+                            let p = (bi * oh + oy) * ow + ox;
+                            let row0 = (kh * k + kw) * cin;
+                            for ci in 0..cin {
+                                xcol[(row0 + ci) * p_total + p] = xq[src + ci];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let (a_sel, b_sel) = self.sel_slices(li, spec);
+        let rank = self.info.cfg.lora_rank;
+        let lt = LoraTerm { a: &a_sel, b: &b_sel, rank, scale: 1.0 / rank as f32 };
+        let bias = self.tensor(&format!("{name}.b"))?;
+        let mut y = Vec::new();
+        mat.fused_matmul_into(&xcol, p_total, Some(&lt), Some(bias), self.threads, &mut y);
+        // scatter [cout, P] -> NHWC
+        let mut d = vec![0.0f32; p_total * cout];
+        for nn in 0..cout {
+            for p in 0..p_total {
+                d[p * cout + nn] = y[nn * p_total + p];
+            }
+        }
+        Ok(T4 { b: x.b, h: oh, w: ow, c: cout, d })
+    }
+
+    /// Full-precision group_norm (groups=8, eps=1e-5), scale `{name}.g`,
+    /// bias `{name}.b`.
+    fn group_norm(&self, x: &T4, name: &str) -> Result<T4> {
+        let g = self.tensor(&format!("{name}.g"))?;
+        let bta = self.tensor(&format!("{name}.b"))?;
+        if x.c % GROUPS != 0 {
+            bail!("group_norm {name}: {} channels not divisible by {GROUPS}", x.c);
+        }
+        let cpg = x.c / GROUPS;
+        let hw = x.h * x.w;
+        let count = (hw * cpg) as f32;
+        let mut y = x.clone();
+        for bi in 0..x.b {
+            for gi in 0..GROUPS {
+                let mut mean = 0.0f32;
+                for p in 0..hw {
+                    let base = (bi * hw + p) * x.c + gi * cpg;
+                    for ci in 0..cpg {
+                        mean += x.d[base + ci];
+                    }
+                }
+                mean /= count;
+                let mut var = 0.0f32;
+                for p in 0..hw {
+                    let base = (bi * hw + p) * x.c + gi * cpg;
+                    for ci in 0..cpg {
+                        let dv = x.d[base + ci] - mean;
+                        var += dv * dv;
+                    }
+                }
+                var /= count;
+                let inv = 1.0 / (var + GN_EPS).sqrt();
+                for p in 0..hw {
+                    let base = (bi * hw + p) * x.c + gi * cpg;
+                    for ci in 0..cpg {
+                        let cc = gi * cpg + ci;
+                        y.d[base + ci] = (x.d[base + ci] - mean) * inv * g[cc] + bta[cc];
+                    }
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    /// Residual block: gn1 → silu → conv1 → +temb projection → gn2 → silu
+    /// → conv2, with a 1x1 skip conv when channel counts change.
+    fn resblock(&self, name: &str, x: &T4, temb: &[f32]) -> Result<T4> {
+        let conv1 = format!("{name}.conv1");
+        let (_, spec1, _) = self.layer(&conv1)?;
+        let cout = spec1.fan_out;
+        let h1 = self.group_norm(x, &format!("{name}.gn1"))?;
+        let mut h1 = silu_t4(&h1);
+        let mut h = self.conv_q(&conv1, &h1)?;
+        // temb projection: linear over silu(temb), broadcast over (h, w)
+        let b = x.b;
+        let mut st = temb.to_vec();
+        silu_slice(&mut st);
+        let tp = self.linear_q(&format!("{name}.temb"), &st, b)?;
+        let hw = h.h * h.w;
+        for bi in 0..b {
+            for p in 0..hw {
+                let base = (bi * hw + p) * cout;
+                for cc in 0..cout {
+                    h.d[base + cc] += tp[bi * cout + cc];
+                }
+            }
+        }
+        let h2 = self.group_norm(&h, &format!("{name}.gn2"))?;
+        h1 = silu_t4(&h2);
+        let h = self.conv_q(&format!("{name}.conv2"), &h1)?;
+        let skip = if x.c != cout {
+            self.conv_q(&format!("{name}.skip"), x)?
+        } else {
+            x.clone()
+        };
+        let mut outv = skip;
+        for (o, &hv) in outv.d.iter_mut().zip(&h.d) {
+            *o += hv;
+        }
+        Ok(outv)
+    }
+
+    /// Self-attention over flattened spatial positions (per sample):
+    /// gn → qkv linear → softmax(q·kᵀ/√c) → ·v → proj linear → residual.
+    fn attention(&self, name: &str, x: &T4) -> Result<T4> {
+        let c = x.c;
+        let hw = x.h * x.w;
+        let y = self.group_norm(x, &format!("{name}.gn"))?;
+        let qkv = self.linear_q(&format!("{name}.qkv"), &y.d, x.b * hw)?;
+        let scale = 1.0 / (c as f32).sqrt();
+        let mut att_out = vec![0.0f32; x.b * hw * c];
+        let mut logits = vec![0.0f32; hw];
+        for bi in 0..x.b {
+            let base = bi * hw;
+            for i in 0..hw {
+                let qrow = &qkv[(base + i) * 3 * c..(base + i) * 3 * c + c];
+                for (j, l) in logits.iter_mut().enumerate() {
+                    let krow = &qkv[(base + j) * 3 * c + c..(base + j) * 3 * c + 2 * c];
+                    let mut dot = 0.0f32;
+                    for (qv, kv) in qrow.iter().zip(krow) {
+                        dot += qv * kv;
+                    }
+                    *l = dot * scale;
+                }
+                // stable softmax (jax.nn.softmax subtracts the row max)
+                let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+                let mut denom = 0.0f32;
+                for l in logits.iter_mut() {
+                    *l = (*l - mx).exp();
+                    denom += *l;
+                }
+                let orow = &mut att_out[(base + i) * c..(base + i + 1) * c];
+                for (j, &a) in logits.iter().enumerate() {
+                    let w = a / denom;
+                    let vrow = &qkv[(base + j) * 3 * c + 2 * c..(base + j + 1) * 3 * c];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+        let proj = self.linear_q(&format!("{name}.proj"), &att_out, x.b * hw)?;
+        let mut outv = x.clone();
+        for (o, &pv) in outv.d.iter_mut().zip(&proj) {
+            *o += pv;
+        }
+        Ok(outv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::{ModelCfg, ParamSpec};
+    use crate::quant::search::Quantizer;
+    use crate::quant::FpFormat;
+    use crate::util::rng::Rng;
+
+    /// Manifest builder for the miniature UNet fixture below.
+    struct B {
+        offset: usize,
+        lora_offset: usize,
+        specs: Vec<ParamSpec>,
+        layers: Vec<LayerSpec>,
+        rank: usize,
+        hubs: usize,
+        td: usize,
+    }
+
+    impl B {
+        fn param(&mut self, name: &str, shape: Vec<usize>) {
+            let size: usize = shape.iter().product();
+            self.specs.push(ParamSpec { name: name.into(), shape, offset: self.offset });
+            self.offset += size;
+        }
+
+        fn layer(&mut self, name: &str, kind: &str, fan_in: usize, fan_out: usize, k: usize, stride: usize) {
+            let shape = if kind == "conv" {
+                vec![k, k, fan_in / (k * k), fan_out]
+            } else {
+                vec![fan_in, fan_out]
+            };
+            self.param(&format!("{name}.w"), shape);
+            self.param(&format!("{name}.b"), vec![fan_out]);
+            self.layers.push(LayerSpec {
+                name: name.into(),
+                kind: kind.into(),
+                fan_in,
+                fan_out,
+                k,
+                stride,
+                aal_hint: false,
+                param: format!("{name}.w"),
+                lora_offset: self.lora_offset,
+            });
+            self.lora_offset += self.hubs * self.rank * fan_in + self.hubs * fan_out * self.rank;
+        }
+
+        fn gn(&mut self, name: &str, c: usize) {
+            self.param(&format!("{name}.g"), vec![c]);
+            self.param(&format!("{name}.b"), vec![c]);
+        }
+
+        fn resblock(&mut self, name: &str, cin: usize, cout: usize) {
+            self.gn(&format!("{name}.gn1"), cin);
+            self.layer(&format!("{name}.conv1"), "conv", 9 * cin, cout, 3, 1);
+            let td = self.td;
+            self.layer(&format!("{name}.temb"), "linear", td, cout, 0, 0);
+            self.gn(&format!("{name}.gn2"), cout);
+            self.layer(&format!("{name}.conv2"), "conv", 9 * cout, cout, 3, 1);
+            if cin != cout {
+                self.layer(&format!("{name}.skip"), "conv", cin, cout, 1, 1);
+            }
+        }
+    }
+
+    /// Hand-built miniature UNet manifest exercising every native op:
+    /// c0=8, c1=16, temb 16, 4x4 latents, 2 classes, rank 2, 2 hubs.
+    fn synthetic_info() -> ModelInfo {
+        let (c0, c1, td, hw, in_ch, n_classes, rank, hubs) = (8usize, 16usize, 16, 4, 1, 2, 2, 2);
+        let mut b = B {
+            offset: 0,
+            lora_offset: 0,
+            specs: Vec::new(),
+            layers: Vec::new(),
+            rank,
+            hubs,
+            td,
+        };
+        b.layer("temb.lin1", "linear", td, td * 2, 0, 0);
+        b.layer("temb.lin2", "linear", td * 2, td, 0, 0);
+        b.param("cls.emb", vec![n_classes, td]);
+        b.layer("conv_in", "conv", 9 * in_ch, c0, 3, 1);
+        b.resblock("res1", c0, c0);
+        b.layer("down", "conv", 9 * c0, c1, 3, 2);
+        b.resblock("res2", c1, c1);
+        b.resblock("mid", c1, c1);
+        b.gn("attn.gn", c1);
+        b.layer("attn.qkv", "linear", c1, 3 * c1, 0, 0);
+        b.layer("attn.proj", "linear", c1, c1, 0, 0);
+        b.resblock("res3", 2 * c1, c1);
+        b.layer("up", "conv", 9 * c1, c0, 3, 1);
+        b.resblock("res4", 2 * c0, c0);
+        b.gn("out.gn", c0);
+        b.layer("conv_out", "conv", 9 * c0, in_ch, 3, 1);
+
+        let n_layers = b.layers.len();
+        ModelInfo {
+            name: "native-test".into(),
+            cfg: ModelCfg {
+                img_hw: hw,
+                in_ch,
+                temb_dim: td,
+                n_classes,
+                lora_rank: rank,
+                lora_hub: hubs,
+            },
+            n_params: b.offset,
+            n_layers,
+            lora_size: b.lora_offset,
+            router_size: td * n_layers * hubs + n_layers * hubs,
+            act_samples: 0,
+            param_specs: b.specs,
+            layer_specs: b.layers,
+            init_params: String::new(),
+            artifacts: Default::default(),
+            batches_fp: vec![],
+            batches_q: vec![],
+            train_b: 1,
+            calib_b: 1,
+        }
+    }
+
+    fn fixture() -> (ModelInfo, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let info = synthetic_info();
+        let mut r = Rng::new(42);
+        let params: Vec<f32> = (0..info.n_params).map(|_| r.normal() * 0.1).collect();
+        let lora: Vec<f32> = (0..info.lora_size).map(|_| r.normal() * 0.02).collect();
+        let h = info.cfg.lora_hub;
+        let mut sel = vec![0.0f32; info.n_layers * h];
+        for li in 0..info.n_layers {
+            sel[li * h + li % h] = 1.0;
+        }
+        let wq = Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 0.35 };
+        let aq = Quantizer::SignedFp { fmt: FpFormat::new(2, 1), maxval: 6.0 };
+        let mut qparams = Vec::new();
+        for _ in 0..info.n_layers {
+            qparams.extend_from_slice(&wq.encode_weight());
+            qparams.extend_from_slice(&aq.encode_act());
+        }
+        (info, params, lora, sel, qparams)
+    }
+
+    #[test]
+    fn forward_shape_and_finiteness() {
+        let (info, params, lora, sel, qparams) = fixture();
+        let pf = PackedForward::build(&info, &params, &qparams).unwrap();
+        let b = 2;
+        let mut r = Rng::new(7);
+        let x: Vec<f32> = (0..info.x_size(b)).map(|_| r.normal()).collect();
+        let mut out = Vec::new();
+        pf.forward(&info, &params, &lora, &sel, &x, 3.0, &[0.0, 1.0], 2, &mut out).unwrap();
+        assert_eq!(out.len(), info.x_size(b));
+        assert!(out.iter().all(|v| v.is_finite()), "non-finite output");
+        // not trivially zero: conv_out bias is random here
+        assert!(out.iter().any(|v| v.abs() > 1e-12));
+    }
+
+    #[test]
+    fn forward_is_bit_identical_for_any_thread_count() {
+        let (info, params, lora, sel, qparams) = fixture();
+        let pf = PackedForward::build(&info, &params, &qparams).unwrap();
+        let b = 3;
+        let mut r = Rng::new(8);
+        let x: Vec<f32> = (0..info.x_size(b)).map(|_| r.normal()).collect();
+        let cond = [1.0, 0.0, 1.0];
+        let run = |threads: usize| {
+            let mut out = Vec::new();
+            pf.forward(&info, &params, &lora, &sel, &x, 5.0, &cond, threads, &mut out).unwrap();
+            out.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+        };
+        let one = run(1);
+        for threads in [2, 4, 7] {
+            assert_eq!(one, run(threads), "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn packed_model_is_smaller_than_f32_weights() {
+        let (info, params, _, _, qparams) = fixture();
+        let pf = PackedForward::build(&info, &params, &qparams).unwrap();
+        let f32_bytes: usize =
+            info.layer_specs.iter().map(|s| s.fan_in * s.fan_out * 4).sum();
+        assert!(
+            pf.bytes() < f32_bytes / 4,
+            "packed {} vs f32 {} bytes",
+            pf.bytes(),
+            f32_bytes
+        );
+    }
+
+    #[test]
+    fn qparams_fingerprint_tracks_content() {
+        let (_, _, _, _, qparams) = fixture();
+        let h1 = qparams_fingerprint(&qparams);
+        let mut q2 = qparams.clone();
+        q2[0] += 0.125;
+        assert_ne!(h1, qparams_fingerprint(&q2));
+        assert_eq!(h1, qparams_fingerprint(&qparams));
+    }
+
+    #[test]
+    fn per_sample_independence_padding_rows_do_not_leak() {
+        // Serving never pads the native path, but the property that makes
+        // that safe is per-sample independence: batch [x0] must equal the
+        // first sample of batch [x0, x1].
+        let (info, params, lora, sel, qparams) = fixture();
+        let pf = PackedForward::build(&info, &params, &qparams).unwrap();
+        let mut r = Rng::new(9);
+        let x1: Vec<f32> = (0..info.x_size(1)).map(|_| r.normal()).collect();
+        let x2: Vec<f32> = {
+            let mut v = x1.clone();
+            v.extend((0..info.x_size(1)).map(|_| r.normal()));
+            v
+        };
+        let mut o1 = Vec::new();
+        pf.forward(&info, &params, &lora, &sel, &x1, 2.0, &[1.0], 1, &mut o1).unwrap();
+        let mut o2 = Vec::new();
+        pf.forward(&info, &params, &lora, &sel, &x2, 2.0, &[1.0, 0.0], 1, &mut o2).unwrap();
+        assert_eq!(
+            o1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            o2[..o1.len()].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

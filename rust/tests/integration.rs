@@ -6,7 +6,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use msfp::config::{MethodSpec, Scale};
-use msfp::coordinator::{self, Request, ServeMode, ServerCfg};
+use msfp::coordinator::{self, Backend, Request, ServeMode, ServerCfg};
 use msfp::data::Corpus;
 use msfp::eval::generate::SamplerKind;
 use msfp::lora::hub::AllocStrategy;
@@ -181,6 +181,99 @@ fn parallel_round_executor_is_bit_identical_to_sequential() {
     for workers in [2usize, 4] {
         assert_eq!(seq, run(workers), "workers={workers} changed output bits");
     }
+}
+
+/// The packed-backend parity pin: the native nibble-packed serving path
+/// (`Backend::Packed`, fused dequantize-matmul in Rust) reproduces the
+/// compiled fake-qdq XLA graph (`Backend::Graph`, the oracle) elementwise
+/// within a tight tolerance on the standard mixed-sampler workload. The
+/// two backends share bit-exact quantized weights (the code table IS the
+/// qdq image); the residual difference is pure f32 summation-order drift
+/// through ~4-6 denoising steps.
+#[test]
+fn packed_backend_serving_matches_graph_oracle() {
+    let Some(dir) = artifacts() else { return };
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let info = pl.manifest.model("ddim16").unwrap().clone();
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(msfp::model::ParamStore::load_init(&info, &dir).unwrap().flat);
+    let mut rng = Rng::new(7);
+    let mut qp = Vec::new();
+    for _ in 0..info.n_layers {
+        qp.extend_from_slice(&[1.0, 2.0, 1.0, 1.0, 4.0, 2.0, 1.0, -0.2]);
+    }
+    let qs = QuantState {
+        qparams: qp,
+        lora: vec![0.0; info.lora_size],
+        router: Router::init(&info, &mut rng),
+        hub_mask: vec![1.0, 1.0, 0.0, 0.0],
+        strategy: AllocStrategy::Learned,
+        t_total: 100,
+    };
+
+    let workload = || -> Vec<Request> {
+        (0..10u64)
+            .map(|i| {
+                let mut r = Request::new(0, 1 + (i as usize % 3), if i % 2 == 0 { 4 } else { 6 });
+                r.seed = 100 + i;
+                r.sampler = match i % 3 {
+                    0 => SamplerKind::Ddim,
+                    1 => SamplerKind::Plms,
+                    _ => SamplerKind::DpmSolver2,
+                };
+                r
+            })
+            .collect()
+    };
+
+    let run = |backend: Backend| -> (Vec<Vec<f32>>, coordinator::Metrics) {
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            ServerCfg {
+                seed: 11,
+                backend,
+                ..ServerCfg::new(ServeMode::Quant(qs.clone()))
+            },
+        );
+        let rxs = handle.submit_many(workload()).unwrap();
+        let out = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap_done().images)
+            .collect();
+        (out, handle.shutdown())
+    };
+
+    let (graph, mg) = run(Backend::Graph);
+    let (packed, mp) = run(Backend::Packed);
+    assert_eq!(mg.backend, "graph");
+    assert_eq!(mp.backend, "packed");
+    assert_eq!(mg.packed_bytes, 0, "graph backend must not build packed weights");
+    assert!(mp.packed_bytes > 0, "packed backend reported no resident packed bytes");
+
+    assert_eq!(graph.len(), packed.len());
+    let (mut max_abs, mut sum_abs, mut n, mut energy) = (0.0f32, 0.0f64, 0usize, 0.0f64);
+    for (g, p) in graph.iter().zip(&packed) {
+        assert_eq!(g.len(), p.len());
+        for (a, b) in g.iter().zip(p) {
+            assert!(b.is_finite(), "packed backend produced non-finite pixel");
+            let d = (a - b).abs();
+            max_abs = max_abs.max(d);
+            sum_abs += d as f64;
+            energy += (a.abs() as f64).max(b.abs() as f64);
+            n += 1;
+        }
+    }
+    // pinned parity budget: summation-order drift only, no systematic bias
+    assert!(max_abs <= 2e-2, "packed vs graph max |diff| {max_abs} > 2e-2");
+    assert!(
+        sum_abs / n as f64 <= 2e-3,
+        "packed vs graph mean |diff| {} > 2e-3",
+        sum_abs / n as f64
+    );
+    assert!(energy / n as f64 > 1e-3, "outputs are near-zero; parity check is vacuous");
 }
 
 /// The FP mixed-t batching satellite's end-to-end pin: a mixed-steps FP

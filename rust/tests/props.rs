@@ -9,6 +9,7 @@ use msfp::quant::fp::{e_min_of, exp2_int, fp_qdq_signed, fp_qdq_unsigned};
 use msfp::quant::grid::{quantizer_grid, GridEngine};
 use msfp::quant::int::{int_qdq_asym, int_qdq_sym};
 use msfp::quant::msfp::{quantize_model, LayerCalib, Method, QuantOpts};
+use msfp::quant::packed::{LoraTerm, PackedMat, PackedTensor};
 use msfp::quant::search::{
     linspace, scalar, search_act_int, search_signed, search_unsigned, search_weight_int,
     Quantizer, SearchResult,
@@ -752,6 +753,140 @@ fn prop_sketch_loaded_then_merged_equals_merged_then_loaded() {
                 msfp::recal::SketchSet::from_bytes(&a.to_bytes()).unwrap();
             loaded_then_merged == merged_then_loaded
                 && loaded_then_merged.to_bytes() == merged_then_loaded.to_bytes()
+        },
+    );
+}
+
+// Packed sub-byte storage vs fake-qdq oracle --------------------------
+
+/// Edge inputs for a quantizer with FP format (e, m) and scale-defining
+/// maxval: zeros (both signs), the clamp boundary, outliers past it, and
+/// every binade boundary of the grid down to the subnormal binade at
+/// `e_min_of(e)` — plus half-step offsets that force rounding decisions.
+fn fp_edge_values(e: i32, m: i32, maxval: f32) -> Vec<f32> {
+    let full = 2.0 - exp2_int(-m);
+    let a = maxval / full;
+    let mut xs = vec![0.0, -0.0, maxval, -maxval, maxval * 3.0, -maxval * 3.0];
+    for eb in e_min_of(e)..=0 {
+        let step = exp2_int(eb - m);
+        let binade = exp2_int(eb) * a;
+        xs.extend([binade, -binade, binade + 0.5 * step * a, binade - 0.25 * step * a]);
+    }
+    xs
+}
+
+#[test]
+fn prop_packed_roundtrip_bit_exact_exhaustive_formats_and_edges() {
+    // every ExMy format x signed/unsigned(+zp) on edge values: the packed
+    // code table must reproduce the scalar fake-qdq output bit-for-bit
+    for e in 0..=3 {
+        for m in 0..=3 {
+            for &maxval in &[0.35f32, 1.0, 6.0] {
+                let q = Quantizer::SignedFp { fmt: FpFormat::new(e, m), maxval };
+                let xs = fp_edge_values(e, m, maxval);
+                let got = PackedTensor::pack(&xs, &q).unwrap().dequantize();
+                for (x, g) in xs.iter().zip(&got) {
+                    let want = q.qdq(*x);
+                    assert_eq!(
+                        g.to_bits(),
+                        want.to_bits(),
+                        "signed E{e}M{m} maxval {maxval}: x={x} got {g} want {want}"
+                    );
+                }
+                if m == 0 {
+                    continue; // unsigned formats need m >= 1
+                }
+                for &zp in &[0.0f32, -0.18, -0.3] {
+                    let q = Quantizer::UnsignedFp { fmt: FpFormat::new(e, m), maxval, zp };
+                    let xs: Vec<f32> =
+                        fp_edge_values(e, m, maxval).iter().map(|v| v + zp).collect();
+                    let got = PackedTensor::pack(&xs, &q).unwrap().dequantize();
+                    for (x, g) in xs.iter().zip(&got) {
+                        let want = q.qdq(*x);
+                        assert_eq!(
+                            g.to_bits(),
+                            want.to_bits(),
+                            "unsigned E{e}M{m} maxval {maxval} zp {zp}: x={x}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_roundtrip_bit_exact_random_all_kinds() {
+    // randomized inputs across all four quantizer kinds (the four Methods'
+    // building blocks): pack -> dequantize == qdq, bit-for-bit
+    check(
+        "packed-roundtrip",
+        200,
+        |r| {
+            let maxval = r.range(0.1, 6.0);
+            let q = match r.below(4) {
+                0 => Quantizer::SignedFp {
+                    fmt: FpFormat::new(r.below(4) as i32, r.below(4) as i32),
+                    maxval,
+                },
+                1 => Quantizer::UnsignedFp {
+                    fmt: FpFormat::new(r.below(4) as i32, 1 + r.below(3) as i32),
+                    maxval,
+                    zp: -r.range(0.0, 0.3),
+                },
+                2 => Quantizer::IntSym { n_bits: 2 + r.below(7) as i32, maxval },
+                _ => Quantizer::IntAsym {
+                    n_bits: 2 + r.below(7) as i32,
+                    lo: -r.range(0.0, 1.0),
+                    hi: r.range(0.1, 3.0),
+                },
+            };
+            let mut xs = vec_f32(r, 128, maxval);
+            xs.extend([0.0, -0.0, maxval, -maxval, maxval * 2.5]);
+            (xs, q)
+        },
+        |(xs, q)| {
+            let got = PackedTensor::pack(xs, q).unwrap().dequantize();
+            xs.iter().zip(&got).all(|(x, g)| g.to_bits() == q.qdq(*x).to_bits())
+        },
+    );
+}
+
+#[test]
+fn prop_fused_matmul_bitwise_matches_scalar_reference() {
+    // randomized shapes, worker counts, and optional LoRA/bias: the fused
+    // dequantize-matmul kernel is bit-identical to the dequantize-then-
+    // matmul scalar reference (the fixed-accumulation-order contract)
+    check(
+        "fused-bitwise",
+        30,
+        |r| {
+            let rows = 1 + r.below(48);
+            let cols = 1 + r.below(96);
+            let b_cols = 1 + r.below(6);
+            let rank = 1 + r.below(4);
+            let with_lora = r.below(4) != 0;
+            let with_bias = r.below(4) != 0;
+            let workers = [1, 2, 3, 5, 8][r.below(5)];
+            let fmts = weight_formats(4);
+            let q = Quantizer::SignedFp { fmt: fmts[r.below(fmts.len())], maxval: 0.6 };
+            let w: Vec<f32> = (0..rows * cols).map(|_| r.normal() * 0.2).collect();
+            let x: Vec<f32> = (0..cols * b_cols).map(|_| r.normal()).collect();
+            let a: Vec<f32> = (0..rank * cols).map(|_| r.normal() * 0.05).collect();
+            let b: Vec<f32> = (0..rows * rank).map(|_| r.normal() * 0.05).collect();
+            let bias: Vec<f32> = (0..rows).map(|_| r.normal()).collect();
+            ((rows, cols, b_cols, rank), (with_lora, with_bias, workers), q, (w, x, a, b, bias))
+        },
+        |((rows, cols, b_cols, rank), (with_lora, with_bias, workers), q, (w, x, a, b, bias))| {
+            let m = PackedMat::pack(w, *rows, *cols, q).unwrap();
+            let lora = LoraTerm { a, b, rank: *rank, scale: 1.0 / *rank as f32 };
+            let lora = with_lora.then_some(&lora);
+            let bias = with_bias.then_some(bias.as_slice());
+            let (mut want, mut got) = (Vec::new(), Vec::new());
+            m.fused_matmul_ref(x, *b_cols, lora, bias, &mut want);
+            m.fused_matmul_into(x, *b_cols, lora, bias, *workers, &mut got);
+            want.len() == got.len()
+                && want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits())
         },
     );
 }

@@ -16,6 +16,8 @@
 #   overload smoke                             named re-run of the SLO
 #                                              shed/downgrade and fault-plan
 #                                              determinism integration tests
+#   packed-backend smoke                       named re-run of the packed-
+#                                              vs-graph serving parity test
 #   test-count floor                           the summed `N passed` totals
 #                                              must not drop below
 #                                              scripts/test_floor.txt, so a
@@ -53,6 +55,14 @@ echo "== overload smoke (SLO shed/downgrade + fault-recovery determinism) =="
 cargo test -q --test integration \
     overload_sheds_and_degrades_deterministically_across_workers \
     fault_plan_retries_are_deterministic_across_workers
+
+echo "== packed-backend smoke (native fused path vs graph oracle) =="
+# named re-run of the packed-vs-graph serving parity pin: the nibble-packed
+# native backend drifting from the compiled fake-qdq oracle must fail CI on
+# its own line (skips cleanly when artifacts are absent, like all
+# integration tests)
+cargo test -q --test integration \
+    packed_backend_serving_matches_graph_oracle
 
 echo "== test-count regression guard =="
 total=$(grep -E 'test result: ok' "$test_log" \
