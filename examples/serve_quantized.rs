@@ -14,8 +14,9 @@
 //!    of starting blind;
 //!  * the workload carries SLO classes against a queue budget: under the
 //!    resulting overload, interactive requests are downgraded (step cuts
-//!    at admission, a pre-built W3A3 variant per round) while an
-//!    impossible-deadline best-effort request is explicitly shed.
+//!    at admission, plus a pre-built W3A3→W2A3 degradation ladder whose
+//!    rung tracks backlog depth) while an impossible-deadline best-effort
+//!    request is explicitly shed.
 //!
 //!   make artifacts && cargo run --release --example serve_quantized
 
@@ -24,7 +25,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 use msfp::config::{MethodSpec, Scale};
 use msfp::coordinator::{
-    self, degraded_state, Request, Response, ServeMode, ServeRecal, ServerCfg, SloCfg, SloClass,
+    self, degradation_ladder, Request, Response, ServeMode, ServeRecal, ServerCfg, SloCfg, SloClass,
 };
 use msfp::data::Corpus;
 use msfp::eval::generate::SamplerKind;
@@ -73,11 +74,11 @@ fn main() -> Result<()> {
             set.widen_layer(l, 0.0, c.min * scale + shift, c.max * scale + shift);
         }
     }
-    // pre-build the overload degradation variant before the session moves
-    // into the recal config: the same search at W3A3 on non-IO layers —
-    // nearly free, since memoized layers whose bits didn't drop replay
-    let deg_qparams = session.degraded_qparams(&opts, 3, 3);
-    let degraded = degraded_state(&q.state, deg_qparams);
+    // pre-build the overload degradation ladder before the session moves
+    // into the recal config: the same search at W3A3 and W2A3 on non-IO
+    // layers — nearly free, since memoized layers whose bits didn't drop
+    // replay. Deeper backlogs select deeper (coarser) rungs.
+    let ladder = degradation_ladder(&session, &opts, &q.state, &[(3, 3), (2, 3)]);
 
     let mut recal = ServeRecal::new(session, opts, Arc::clone(&sketches));
     recal.every_rounds = 4;
@@ -101,8 +102,8 @@ fn main() -> Result<()> {
             probe_budget: 2,
             // overload policy: admission budget of 8 samples per round;
             // over-budget interactive requests lose 2 steps at admission
-            // and ride the pre-built W3A3 variant during overloaded rounds
-            slo: SloCfg { queue_budget: 8, step_cut: 2, degraded: Some(degraded) },
+            // and ride the ladder rung matching the round's backlog depth
+            slo: SloCfg { queue_budget: 8, step_cut: 2, ladder },
             ..ServerCfg::new(ServeMode::Quant(q.state))
         },
     );
@@ -163,9 +164,10 @@ fn main() -> Result<()> {
         m.probes, m.probes_skipped, m.probes_failed
     );
     println!(
-        "overload: {} shed, {} downgraded round(s), {} step cut(s); interactive queue wait p50/p99 = {}/{} rounds",
+        "overload: {} shed, {} downgraded round(s) (per-rung {:?}), {} step cut(s); interactive queue wait p50/p99 = {}/{} rounds",
         m.shed_total(),
         m.downgraded_rounds,
+        m.rung_rounds,
         m.downgraded_steps,
         m.queue_wait_p(SloClass::Interactive, 0.5),
         m.queue_wait_p(SloClass::Interactive, 0.99)

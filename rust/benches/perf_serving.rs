@@ -22,15 +22,24 @@
 //!   * `restart_warm_vs_cold`: rounds until the first hot-swap for a
 //!     cold server (empty sketch window, prober must refill it) vs a warm
 //!     restart (window restored from the persisted state dir);
+//!   * `ckpt_overhead`: mean-round-latency delta of the hot-swap run with
+//!     state-dir persistence on (swap checkpoints written off-thread with
+//!     capped retries) vs the same run without a state dir;
+//!   * `reconfigure_stall`: mean-round-latency delta of the throughput
+//!     workload with a burst of live `reconfigure` calls (no-op knobs)
+//!     vs the plain parallel run — the cost of applying an SLO swap at a
+//!     round boundary;
 //!   * `overload_*`: the same workload oversubscribed against a queue
-//!     budget with a degraded variant installed — per-class queue-wait
-//!     p50/p99 (rounds) plus shed / downgraded-round / step-cut counts.
+//!     budget with a two-rung degradation ladder installed — per-class
+//!     queue-wait p50/p99 (rounds) plus shed / downgraded-round /
+//!     step-cut / per-rung round counts.
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use msfp::coordinator::{
-    self, degraded_state, Metrics, Request, ServeMode, ServeRecal, ServerCfg, SloCfg, SloClass,
+    self, degraded_state, LadderRung, Metrics, Request, ServeMode, ServeRecal, ServerCfg, SloCfg,
+    SloClass,
 };
 use msfp::lora::hub::AllocStrategy;
 use msfp::lora::Router;
@@ -211,10 +220,6 @@ fn main() {
     // the workload is in flight. The stall metric compares the scheduler's
     // mean round latency against the no-recal parallel run above.
     println!("\n-- hot-swap stall (same workload, background recal swap mid-serve) --");
-    let weights = ParamStore::from_vec(&info, (*params).clone())
-        .unwrap()
-        .layer_weights(&info)
-        .unwrap();
     let calib: Vec<LayerCalib> = (0..info.n_layers)
         .map(|l| {
             let a: Vec<f32> = (0..1024)
@@ -226,31 +231,34 @@ fn main() {
             LayerCalib::from_samples(format!("serve_l{l}"), a, l % 2 == 0)
         })
         .collect();
-    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4);
-    let session = QuantSession::from_owned(weights, calib.clone());
-    let _ = session.quantize(&opts); // warm: the background job pays only the drifted layers
-    let sketches = Arc::new(Mutex::new(SketchSet::new(
-        info.n_layers,
-        4,
-        256,
-        sched.t_total,
-        3,
-    )));
-    {
-        let mut set = sketches.lock().unwrap();
-        let mut feed = Rng::new(9);
-        for (l, c) in calib.iter().enumerate() {
-            for chunk in c.acts.chunks(128) {
-                let t = feed.range(0.0, sched.t_total as f32);
-                let vals: Vec<f32> = chunk.iter().map(|v| v + 0.8).collect();
-                set.observe(l, t, &vals);
+    let swap_recal = || -> ServeRecal {
+        let weights = ParamStore::from_vec(&info, (*params).clone())
+            .unwrap()
+            .layer_weights(&info)
+            .unwrap();
+        let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4);
+        let session = QuantSession::from_owned(weights, calib.clone());
+        let _ = session.quantize(&opts); // warm: the job pays only the drifted layers
+        let sketches =
+            Arc::new(Mutex::new(SketchSet::new(info.n_layers, 4, 256, sched.t_total, 3)));
+        {
+            let mut set = sketches.lock().unwrap();
+            let mut feed = Rng::new(9);
+            for (l, c) in calib.iter().enumerate() {
+                for chunk in c.acts.chunks(128) {
+                    let t = feed.range(0.0, sched.t_total as f32);
+                    let vals: Vec<f32> = chunk.iter().map(|v| v + 0.8).collect();
+                    set.observe(l, t, &vals);
+                }
+                set.widen_layer(l, 0.0, c.min + 0.8, c.max + 0.8);
             }
-            set.widen_layer(l, 0.0, c.min + 0.8, c.max + 0.8);
         }
-    }
-    let mut recal = ServeRecal::new(session, opts, sketches);
-    recal.every_rounds = 2;
-    let (_swap_thpt, swap_m) = serve_workload(&den, &info, &sched, &params, &qs, 0, Some(recal), 0);
+        let mut r = ServeRecal::new(session, opts, sketches);
+        r.every_rounds = 2;
+        r
+    };
+    let (_swap_thpt, swap_m) =
+        serve_workload(&den, &info, &sched, &params, &qs, 0, Some(swap_recal()), 0);
     println!("  with-recal (workers=auto): {}", swap_m.report());
     let stall = mean_round_ms(&swap_m) - mean_round_ms(&par_m);
     println!(
@@ -268,6 +276,71 @@ fn main() {
     rows.push(metric_row("coordinator_round_ms_recal_swap", mean_round_ms(&swap_m), "ms"));
     rows.push(metric_row("hot_swap_stall", stall, "ms"));
     rows.push(metric_row("hot_swap_count", swap_m.recal_swaps as f64, "swaps"));
+
+    // --- checkpoint overhead: swap checkpoints to a state dir -------------
+    // The same hot-swap workload with state-dir persistence on: every swap
+    // checkpoints the quant state + sketch window off the scheduler thread
+    // (capped-retry atomic writes). The delta vs the no-state-dir swap run
+    // is the scheduler-observed cost of crash consistency.
+    println!("\n-- checkpoint overhead (same swap workload, state-dir persistence on) --");
+    let ckpt_root = std::env::temp_dir().join("msfp_bench_serving_ckpt");
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+    let ckpt_sd = msfp::quant::msfp::StateDir::new(&ckpt_root);
+    let (_, ckpt_m) = serve_workload(
+        &den,
+        &info,
+        &sched,
+        &params,
+        &qs,
+        0,
+        Some(swap_recal().with_state_dir(ckpt_sd)),
+        0,
+    );
+    let ckpt_overhead = mean_round_ms(&ckpt_m) - mean_round_ms(&swap_m);
+    println!(
+        "  mean round {:.3} ms vs {:.3} ms without persistence -> ckpt overhead {:+.3} ms ({} swap(s), {} ckpt fail(s)/{} retry(ies))",
+        mean_round_ms(&ckpt_m),
+        mean_round_ms(&swap_m),
+        ckpt_overhead,
+        ckpt_m.recal_swaps,
+        ckpt_m.ckpt_fails,
+        ckpt_m.ckpt_retries
+    );
+    rows.push(metric_row("coordinator_round_ms_ckpt", mean_round_ms(&ckpt_m), "ms"));
+    rows.push(metric_row("ckpt_overhead", ckpt_overhead, "ms"));
+
+    // --- reconfigure stall: live SLO swaps mid-serve ----------------------
+    // The throughput workload with a burst of `reconfigure` calls carrying
+    // no-op knobs (no budget, no ladder): serving behavior is unchanged,
+    // so the round-latency delta vs the plain parallel run is the pure
+    // cost of draining + applying SLO swaps at round boundaries.
+    println!("\n-- reconfigure stall (live SLO swaps mid-serve, no-op knobs) --");
+    let handle = coordinator::spawn(
+        Arc::clone(&den),
+        info.clone(),
+        sched.clone(),
+        Arc::clone(&params),
+        ServerCfg { seed: 1, workers: 0, ..ServerCfg::new(ServeMode::Quant(qs.clone())) },
+    );
+    let rxs = handle.submit_many(workload()).unwrap();
+    for _ in 0..8 {
+        handle.reconfigure(SloCfg::default()).unwrap();
+    }
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let recfg_m = handle.shutdown();
+    let recfg_stall = mean_round_ms(&recfg_m) - mean_round_ms(&par_m);
+    println!(
+        "  mean round {:.3} ms vs {:.3} ms without reconfigures -> stall {:+.3} ms ({} applied)",
+        mean_round_ms(&recfg_m),
+        mean_round_ms(&par_m),
+        recfg_stall,
+        recfg_m.reconfigures
+    );
+    rows.push(metric_row("coordinator_round_ms_reconfigure", mean_round_ms(&recfg_m), "ms"));
+    rows.push(metric_row("reconfigure_stall", recfg_stall, "ms"));
+    rows.push(metric_row("reconfigure_count", recfg_m.reconfigures as f64, "swaps"));
 
     // --- probe overhead: shadow prober on vs off, detector parked ---------
     // Same workload and recal config with an astronomical drift threshold,
@@ -351,15 +424,19 @@ fn main() {
 
     // --- overload: admission control + graceful degradation ---------------
     // The throughput workload oversubscribed 6x against a queue budget of
-    // 8 samples/round, classes cycling, with a coarser-qparams degraded
-    // variant installed and one best-effort request on an impossible
-    // deadline. The rows are the SLO story under pressure: how long each
-    // class queued, what was shed, and how much interactive work rode the
-    // degraded variant.
-    println!("\n-- overload (queue budget 8, degraded variant, mixed SLO classes) --");
+    // 8 samples/round, classes cycling, with a two-rung coarser-qparams
+    // degradation ladder installed and one best-effort request on an
+    // impossible deadline. The rows are the SLO story under pressure: how
+    // long each class queued, what was shed, and how much interactive
+    // work rode each ladder rung.
+    println!("\n-- overload (queue budget 8, two-rung ladder, mixed SLO classes) --");
     let mut deg_qp = qs.qparams.clone();
     for v in deg_qp.iter_mut().step_by(2) {
         *v *= 0.5;
+    }
+    let mut deg_qp2 = qs.qparams.clone();
+    for v in deg_qp2.iter_mut().step_by(2) {
+        *v *= 0.25;
     }
     let over_workload = || -> Vec<Request> {
         let mut v: Vec<Request> = (0..24u64)
@@ -392,7 +469,10 @@ fn main() {
             slo: SloCfg {
                 queue_budget: 8,
                 step_cut: 2,
-                degraded: Some(degraded_state(&qs, deg_qp)),
+                ladder: vec![
+                    LadderRung { wbits: 3, abits: 4, state: degraded_state(&qs, deg_qp) },
+                    LadderRung { wbits: 2, abits: 4, state: degraded_state(&qs, deg_qp2) },
+                ],
             },
             ..ServerCfg::new(ServeMode::Quant(qs.clone()))
         },
@@ -417,6 +497,9 @@ fn main() {
         "rounds",
     ));
     rows.push(metric_row("overload_step_cuts", over_m.downgraded_steps as f64, "steps"));
+    for (i, &r) in over_m.rung_rounds.iter().enumerate() {
+        rows.push(metric_row(&format!("overload_rung{i}_rounds"), r as f64, "rounds"));
+    }
 
     let path =
         std::env::var("BENCH_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".to_string());

@@ -69,6 +69,13 @@ pub struct FaultPlan {
     /// (`Engine::inject_compile_failures` — exercises the compile retry
     /// budget)
     pub compile_fail_first: usize,
+    /// ‰ of background recal checks that panic mid-application (contained
+    /// by the recal job's catch_unwind — the half-applied plan is
+    /// discarded, nothing is parked, the swap stays round-atomic)
+    pub recal_panic_per_mille: u32,
+    /// ‰ of background recal checks stalled by `slow_ms` first (the slow
+    /// drift-check drill; decisions are unchanged, only wall time moves)
+    pub recal_slow_per_mille: u32,
 }
 
 impl FaultPlan {
@@ -88,6 +95,26 @@ impl FaultPlan {
         if d < self.fail_per_mille {
             Fault::Fail
         } else if d < self.fail_per_mille + self.panic_per_mille {
+            Fault::Panic
+        } else if d < total {
+            Fault::Slow(self.slow_ms)
+        } else {
+            Fault::None
+        }
+    }
+
+    /// The fault (if any) for the `check`-th background recal check —
+    /// pure in (self, check), drawn from a stream independent of the
+    /// per-batch [`FaultPlan::decide`] draws.
+    pub fn decide_recal(&self, check: u64) -> Fault {
+        let total = self.recal_panic_per_mille + self.recal_slow_per_mille;
+        if total == 0 {
+            return Fault::None;
+        }
+        let h =
+            mix64(self.seed ^ mix64(check.wrapping_mul(0x9E3779B97F4A7C15) ^ 0x7265_6361_6c));
+        let d = (h % 1000) as u32;
+        if d < self.recal_panic_per_mille {
             Fault::Panic
         } else if d < total {
             Fault::Slow(self.slow_ms)
@@ -647,6 +674,39 @@ mod tests {
             (0..50u64).any(|r| (0..20u64).any(|b| fp.decide(r, b) != other.decide(r, b))),
             "seed did not move the schedule"
         );
+    }
+
+    #[test]
+    fn recal_fault_draws_are_pure_rate_bounded_and_independent() {
+        let fp = FaultPlan {
+            recal_panic_per_mille: 400,
+            recal_slow_per_mille: 300,
+            slow_ms: 2,
+            ..FaultPlan::new(3)
+        };
+        let mut counts = [0usize; 3];
+        for check in 0..1000u64 {
+            let f = fp.decide_recal(check);
+            assert_eq!(f, fp.decide_recal(check), "decide_recal must be pure");
+            counts[match f {
+                Fault::None => 0,
+                Fault::Panic => 1,
+                Fault::Slow(ms) => {
+                    assert_eq!(ms, 2);
+                    2
+                }
+                Fault::Fail => unreachable!("recal draws never yield Fail"),
+            }] += 1;
+        }
+        for (label, count, rate) in
+            [("none", counts[0], 300), ("panic", counts[1], 400), ("slow", counts[2], 300)]
+        {
+            assert!(count.abs_diff(rate) < 100, "{label}: {count} vs ~{rate}‰");
+        }
+        // recal rates never leak into the per-batch stream and vice versa
+        assert_eq!(fp.decide(0, 0), Fault::None);
+        let batch_only = FaultPlan { fail_per_mille: 1000, ..FaultPlan::new(3) };
+        assert_eq!(batch_only.decide_recal(0), Fault::None);
     }
 
     #[test]

@@ -81,6 +81,17 @@ pub struct Metrics {
     /// memory footprint of the served model's quantized layers (0 on the
     /// graph backend, which keeps f32 weights)
     pub packed_bytes: usize,
+    /// checkpoint writes that failed even after the capped retries (the
+    /// previous complete snapshot stays on disk — durability degrades,
+    /// serving never does)
+    pub ckpt_fails: usize,
+    /// checkpoint write retries that eventually landed
+    pub ckpt_retries: usize,
+    /// `Msg::Reconfigure` messages applied at round boundaries
+    pub reconfigures: usize,
+    /// overloaded rounds served per degradation-ladder rung (index 0 =
+    /// mildest); empty when no ladder is configured or no round degraded
+    pub rung_rounds: Vec<usize>,
 }
 
 impl Metrics {
@@ -202,7 +213,11 @@ impl Metrics {
             && self.cancelled == 0
             && self.retries == 0
             && self.faults_injected == 0
-            && self.compile_exhausted == 0;
+            && self.compile_exhausted == 0
+            && self.ckpt_fails == 0
+            && self.ckpt_retries == 0
+            && self.reconfigures == 0
+            && self.rung_rounds.iter().all(|&r| r == 0);
         if quiet {
             return String::new();
         }
@@ -226,6 +241,15 @@ impl Metrics {
             self.compile_attempts,
             self.compile_exhausted
         ));
+        if !self.rung_rounds.is_empty() {
+            s.push_str(&format!("  ladder rounds {:?}", self.rung_rounds));
+        }
+        if self.ckpt_fails > 0 || self.ckpt_retries > 0 || self.reconfigures > 0 {
+            s.push_str(&format!(
+                "  ckpt {} fails / {} retries  reconfigures {}",
+                self.ckpt_fails, self.ckpt_retries, self.reconfigures
+            ));
+        }
         s
     }
 }
@@ -398,6 +422,25 @@ mod tests {
         assert!(r.contains("downgraded 4 rounds / 1 step-cuts"), "{r}");
         assert!(r.contains("cancelled 1  retries 3  faults 2"), "{r}");
         assert!(r.contains("compile 5 attempts (1 exhausted)"), "{r}");
+    }
+
+    #[test]
+    fn durability_counters_render_and_stay_quiet_by_default() {
+        // a ladder with zero degraded rounds is still the quiet path
+        let m = Metrics { rung_rounds: vec![0, 0], ..Default::default() };
+        assert_eq!(m.slo_report(), "");
+
+        let m = Metrics {
+            ckpt_fails: 1,
+            ckpt_retries: 3,
+            reconfigures: 2,
+            rung_rounds: vec![4, 1],
+            ..Default::default()
+        };
+        let r = m.report();
+        assert!(r.contains("ckpt 1 fails / 3 retries"), "{r}");
+        assert!(r.contains("reconfigures 2"), "{r}");
+        assert!(r.contains("ladder rounds [4, 1]"), "{r}");
     }
 
     #[test]

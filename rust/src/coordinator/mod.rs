@@ -15,5 +15,6 @@ pub use metrics::Metrics;
 pub use prober::ShadowProber;
 pub use request::{Completion, Request, Response, ResponseRx, ShedReason, SloClass};
 pub use server::{
-    degraded_state, spawn, ServeMode, ServeRecal, ServerCfg, ServerHandle, SloCfg,
+    degradation_ladder, degraded_state, spawn, LadderRung, ServeMode, ServeRecal, ServerCfg,
+    ServerHandle, SloCfg,
 };

@@ -36,11 +36,16 @@
 //!     deadline; with a [`SloCfg`] queue budget the scheduler admits
 //!     earliest-deadline-first within class priority, sheds overdue
 //!     best-effort requests under overload, and degrades interactive ones
-//!     (step cut at admission, pre-built lower-bit variant per round)
-//!     instead of dropping them. Failed rounds retry with capped
-//!     exponential backoff in rounds; a [`FaultPlan`] injects
-//!     deterministic batch failures/panics/stalls and compile failures
-//!     for chaos drills.
+//!     (step cut at admission, multi-rung lower-bit ladder per round —
+//!     the deeper the backlog, the coarser the rung) instead of dropping
+//!     them. The SLO config is *live*: `ServerHandle::reconfigure` swaps
+//!     budget/step-cut/ladder between rounds without a restart. Failed
+//!     rounds retry with capped exponential backoff in rounds; a
+//!     [`FaultPlan`] injects deterministic batch failures/panics/stalls,
+//!     compile failures, storage faults (via `util::io::FaultFs`) and
+//!     recal-check panics/slowdowns for chaos drills. State-dir
+//!     checkpoint writes retry transient faults and count
+//!     fails/retries into `Metrics`.
 //!
 //! Determinism: batch composition is fixed by the plan before execution
 //! and results scatter by batch index, so a server with N workers produces
@@ -77,6 +82,9 @@ use crate::eval::generate::SamplerKind;
 
 enum Msg {
     Submit(Vec<(Request, mpsc::Sender<Response>, Arc<AtomicBool>)>),
+    /// swap the live SLO config (queue budget, step cut, degradation
+    /// ladder) at the next round boundary
+    Reconfigure(SloCfg),
     Shutdown(mpsc::Sender<Metrics>),
 }
 
@@ -153,6 +161,17 @@ impl ServerHandle {
             .send(Msg::Submit(batch))
             .map_err(|_| anyhow!("serving coordinator is down (scheduler thread exited)"))?;
         Ok(rxs)
+    }
+
+    /// Swap the live SLO configuration (queue budget, step cut,
+    /// degradation ladder) without restarting the server. Channel-ordered
+    /// with submissions and applied strictly between rounds, so every
+    /// round runs under exactly one config and a 1-worker server makes
+    /// the same admission/degradation decisions as an N-worker one.
+    pub fn reconfigure(&self, slo: SloCfg) -> Result<()> {
+        self.tx
+            .send(Msg::Reconfigure(slo))
+            .map_err(|_| anyhow!("serving coordinator is down (scheduler thread exited)"))
     }
 
     /// Stop the scheduler (after finishing in-flight requests) and collect
@@ -240,6 +259,17 @@ impl ServeRecal {
     }
 }
 
+/// A completed drift check's product, parked for the next round boundary.
+struct RecalOutcome {
+    /// re-searched base qparams
+    qparams: Vec<f32>,
+    /// per-ladder-rung qparams re-searched on the same updated
+    /// calibration, tagged with the (wbits, abits) they were searched at
+    rung_qparams: Vec<(i32, i32, Vec<f32>)>,
+    /// drifted-layer count (for metrics)
+    drifted: usize,
+}
+
 /// Shared state of the background recalibration job (scheduler thread +
 /// pool workers).
 struct RecalShared {
@@ -248,19 +278,32 @@ struct RecalShared {
     planner: RecalPlanner,
     opts: QuantOpts,
     every_rounds: usize,
-    /// re-searched qparams + drifted-layer count, awaiting the next round
-    /// boundary
-    outcome: Mutex<Option<(Vec<f32>, usize)>>,
+    /// (wbits, abits) of each live degradation-ladder rung, in ladder
+    /// order; kept in sync by `Msg::Reconfigure` so checks re-search the
+    /// rungs the scheduler is actually serving
+    rung_bits: Mutex<Vec<(i32, i32)>>,
+    /// the fault plan's recal dials (injected panics/slowdowns)
+    faults: FaultPlan,
+    /// re-searched qparams awaiting the next round boundary
+    outcome: Mutex<Option<RecalOutcome>>,
     inflight: AtomicBool,
 }
 
 impl RecalShared {
     /// The background job: snapshot the sketches, score drift against the
     /// session's current calibration, and on any drifted layer apply the
-    /// incremental updates + re-search and park the new qparams for the
+    /// incremental updates + re-search — base and every ladder rung on
+    /// the same updated calibration — and park the result for the
     /// scheduler. `inflight` is cleared on every exit path (guard) so a
-    /// panic inside the search can't wedge the cadence.
-    fn run_check(&self) {
+    /// panic inside the search can't wedge the cadence. Injected faults
+    /// ([`FaultPlan::decide_recal`], keyed by the check index) and real
+    /// panics alike are contained by the `catch_unwind`: a panic
+    /// mid-application discards the whole product — nothing is parked, so
+    /// a half-applied plan can never reach a round and hot-swaps stay
+    /// round-atomic. The session mutex is locked *outside* the unwind
+    /// boundary (the guard drops on the normal path after the panic is
+    /// caught), so it is never poisoned and the next check proceeds.
+    fn run_check(&self, check: u64) {
         struct Clear<'a>(&'a AtomicBool);
         impl Drop for Clear<'_> {
             fn drop(&mut self) {
@@ -268,18 +311,39 @@ impl RecalShared {
             }
         }
         let _clear = Clear(&self.inflight);
+        let fault = self.faults.decide_recal(check);
+        if let Fault::Slow(ms) = fault {
+            thread::sleep(Duration::from_millis(ms));
+        }
         let snapshot = self.sketches.lock().unwrap().clone();
+        let rung_bits = self.rung_bits.lock().unwrap().clone();
         let mut session = self.session.lock().unwrap();
-        let plan = self.planner.plan(session.calib(), &snapshot);
-        if plan.is_empty() {
-            return;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let plan = self.planner.plan(session.calib(), &snapshot);
+            if plan.is_empty() {
+                return None;
+            }
+            let drifted = plan.layers.len();
+            for rl in plan.layers {
+                session.update_layer_calib(rl.layer, rl.calib);
+            }
+            if fault == Fault::Panic {
+                panic!("injected fault: recal check {check} panics mid-application");
+            }
+            let qparams = session.quantize(&self.opts).qparams_rows();
+            let rung_qparams = rung_bits
+                .iter()
+                .map(|&(w, a)| (w, a, session.degraded_qparams(&self.opts, w, a)))
+                .collect();
+            Some(RecalOutcome { qparams, rung_qparams, drifted })
+        }));
+        match outcome {
+            Ok(Some(out)) => *self.outcome.lock().unwrap() = Some(out),
+            Ok(None) => {}
+            Err(_) => crate::log_warn!(
+                "recal check {check} panicked; half-applied plan discarded (no swap parked)"
+            ),
         }
-        let drifted = plan.layers.len();
-        for rl in plan.layers {
-            session.update_layer_calib(rl.layer, rl.calib);
-        }
-        let scheme = session.quantize(&self.opts);
-        *self.outcome.lock().unwrap() = Some((scheme.qparams_rows(), drifted));
     }
 }
 
@@ -298,11 +362,60 @@ pub struct SloCfg {
     /// sampler steps cut from an interactive request admitted while the
     /// backlog is over budget (0 = no step cut; never cuts below 1 step)
     pub step_cut: usize,
-    /// pre-built lower-bit `QuantState` variant (see
-    /// [`degraded_state`] / `QuantSession::degraded_qparams`) served to
-    /// interactive tickets during overloaded rounds. Quantized serving
-    /// only; ignored (with a warning) on an FP server.
-    pub degraded: Option<QuantState>,
+    /// multi-rung degradation ladder, mildest rung first (e.g. W3 then
+    /// W2): interactive tickets of an overloaded round are served on the
+    /// rung picked by backlog depth (see `ladder_rung`), and recal
+    /// hot-swaps refresh every rung's qparams alongside the base.
+    /// Quantized serving only; ignored (with a warning) on an FP server.
+    /// Empty = no degraded variants (step cuts still apply). Build with
+    /// [`degradation_ladder`] or push [`LadderRung`]s by hand.
+    pub ladder: Vec<LadderRung>,
+}
+
+/// One rung of the degradation ladder: a pre-built lower-bit variant plus
+/// the (wbits, abits) target it was searched at, so recalibration
+/// hot-swaps can re-search the same target against the updated
+/// calibration and refresh the rung's qparams alongside the base.
+#[derive(Clone)]
+pub struct LadderRung {
+    pub wbits: i32,
+    pub abits: i32,
+    pub state: QuantState,
+}
+
+/// Build a degradation ladder from one sweep over the serving session:
+/// each `(wbits, abits)` target re-searches only the layers the bit cut
+/// touches (`QuantSession::degraded_qparams` replays memoized winners
+/// elsewhere), and every rung shares router/LoRA/hub-mask with `base`
+/// ([`degraded_state`]), so TALoRA selections — and the scheduler's
+/// selection cache — stay valid across all rungs. Order targets mildest
+/// first (e.g. `&[(3, 4), (2, 4)]` for a W3 → W2 ladder).
+pub fn degradation_ladder(
+    session: &QuantSession<'_>,
+    opts: &QuantOpts,
+    base: &QuantState,
+    bits: &[(i32, i32)],
+) -> Vec<LadderRung> {
+    bits.iter()
+        .map(|&(wbits, abits)| LadderRung {
+            wbits,
+            abits,
+            state: degraded_state(base, session.degraded_qparams(opts, wbits, abits)),
+        })
+        .collect()
+}
+
+/// Degradation rung for one round: `None` while the backlog is within
+/// budget (or with no budget/ladder), otherwise a rung index scaling with
+/// how many budget multiples the backlog exceeds — backlog in (B, 2B] →
+/// rung 0, (2B, 3B] → rung 1, …, clamped to the deepest rung. Pure in
+/// (backlog, budget, depth), so every worker count picks the same rung
+/// for the same queue snapshot.
+fn ladder_rung(backlog: usize, budget: usize, depth: usize) -> Option<usize> {
+    if budget == 0 || depth == 0 || backlog <= budget {
+        return None;
+    }
+    Some(((backlog - budget - 1) / budget).min(depth - 1))
 }
 
 /// The graceful-degradation variant: the serving `QuantState` with its
@@ -404,14 +517,55 @@ impl Drop for ClearFlag {
     }
 }
 
+/// Retries per checkpoint-blob write before the write is counted failed
+/// (transient storage faults — injected or real — usually clear well
+/// within this).
+const CKPT_WRITE_ATTEMPTS: u64 = 3;
+
+/// Checkpoint durability counters, shared between the scheduler thread
+/// and its offloaded checkpoint jobs and harvested into [`Metrics`] at
+/// shutdown (`ckpt_fails` / `ckpt_retries`).
+#[derive(Default)]
+struct CkptCounters {
+    fails: std::sync::atomic::AtomicUsize,
+    retries: std::sync::atomic::AtomicUsize,
+}
+
+/// One checkpoint blob write with capped retries, feeding the shared
+/// durability counters. Best-effort by design: serving never fails
+/// because a checkpoint write did — atomic_write's tmp+rename discipline
+/// guarantees the previous complete snapshot stays on disk whatever
+/// happens here.
+fn ckpt_write(path: &std::path::Path, bytes: &[u8], ckpt: &CkptCounters, what: &str) -> bool {
+    match crate::util::io::atomic_write_retry(path, bytes, CKPT_WRITE_ATTEMPTS) {
+        Ok(retries) => {
+            if retries > 0 {
+                ckpt.retries.fetch_add(retries as usize, Ordering::SeqCst);
+                crate::log_warn!(
+                    "persisted {what} to {} after {retries} retried write fault(s)",
+                    path.display()
+                );
+            }
+            true
+        }
+        Err(err) => {
+            ckpt.fails.fetch_add(1, Ordering::SeqCst);
+            crate::log_warn!("could not persist {what}: {err:#}");
+            false
+        }
+    }
+}
+
 /// Persist the live drift window into the state dir (best-effort: serving
 /// never fails because a checkpoint write did).
-fn persist_window(recal: &Option<Arc<RecalShared>>, state_dir: &Option<StateDir>) {
+fn persist_window(
+    recal: &Option<Arc<RecalShared>>,
+    state_dir: &Option<StateDir>,
+    ckpt: &CkptCounters,
+) {
     if let (Some(rs), Some(sd)) = (recal, state_dir) {
         let snap = rs.sketches.lock().unwrap().clone();
-        if let Err(err) = snap.save(&sd.sketch_path()) {
-            crate::log_warn!("could not persist sketch window: {err:#}");
-        }
+        ckpt_write(&sd.sketch_path(), &snap.to_bytes(), ckpt, "sketch window");
     }
 }
 
@@ -471,18 +625,22 @@ fn scheduler_loop(
         ServeMode::Fp => None,
         ServeMode::Quant(qs) => Some(Arc::new(qs)),
     };
-    let SloCfg { queue_budget, step_cut, degraded } = slo;
-    // the pre-built lower-bit variant served to interactive tickets during
-    // overloaded rounds; fixed for the server lifetime (recalibration
-    // hot-swaps move the *base* qparams only)
-    let degraded_qs: Option<Arc<QuantState>> = match (degraded, qs_cur.is_some()) {
-        (Some(d), true) => Some(Arc::new(d)),
-        (Some(_), false) => {
-            crate::log_warn!("degraded variant configured on an FP server: ignored");
-            None
+    // SLO knobs are *live* state: `Msg::Reconfigure` swaps them strictly
+    // between rounds, so every derived decision changes for whole rounds
+    // only and stays a pure function of (queue snapshot, round, config)
+    let SloCfg { mut queue_budget, mut step_cut, ladder } = slo;
+    // the degradation-ladder rungs served to interactive tickets during
+    // overloaded rounds, mildest first; recalibration hot-swaps refresh
+    // every rung's qparams alongside the base
+    let arm_ladder = |rungs: Vec<LadderRung>, quant: bool| -> Vec<(i32, i32, Arc<QuantState>)> {
+        if !rungs.is_empty() && !quant {
+            crate::log_warn!("degradation ladder configured on an FP server: ignored");
+            return Vec::new();
         }
-        (None, _) => None,
+        rungs.into_iter().map(|r| (r.wbits, r.abits, Arc::new(r.state))).collect()
     };
+    let mut ladder = arm_ladder(ladder, qs_cur.is_some());
+    metrics.rung_rounds = vec![0; ladder.len()];
     let mut state_dir: Option<StateDir> = None;
     let recal: Option<Arc<RecalShared>> = match (recal, qs_cur.is_some()) {
         (Some(r), true) => {
@@ -493,6 +651,8 @@ fn scheduler_loop(
                 planner: r.planner,
                 opts: r.opts,
                 every_rounds: r.every_rounds.max(1),
+                rung_bits: Mutex::new(ladder.iter().map(|&(w, a, _)| (w, a)).collect()),
+                faults,
                 outcome: Mutex::new(None),
                 inflight: AtomicBool::new(false),
             }))
@@ -503,6 +663,16 @@ fn scheduler_loop(
         }
         (None, _) => None,
     };
+    // crash hygiene: tmp files stranded by a previous kill mid-write are
+    // never read as state (loads only see committed renames), but sweep
+    // them so the state dir holds only complete checkpoints
+    if let Some(sd) = &state_dir {
+        let swept = sd.sweep_stale_tmp();
+        if swept > 0 {
+            crate::log_info!("swept {swept} stale tmp file(s) from the state dir");
+        }
+    }
+    let ckpt_counters = Arc::new(CkptCounters::default());
     // resume the drift window persisted by a previous run of this state
     // dir: the restored sketches are bit-identical to the saved ones
     // (reservoir contents + rng cursor), so drift accumulates as if the
@@ -517,6 +687,39 @@ fn scheduler_loop(
                 }
                 Err(err) => {
                     crate::log_warn!("could not restore sketch window: {err:#}");
+                }
+            }
+        }
+    }
+    // packed-blob lifecycle (packed backend + state dir): restore the
+    // persisted nibble-packed weights so serving starts without
+    // re-packing. A corrupt/truncated/stale blob surfaces as a distinct
+    // parse or validation error and falls back to the normal rebuild from
+    // the f32 store; the rebuilt blob is re-persisted so the *next* start
+    // restores cleanly. Hot-swaps re-persist it again (see the swap path).
+    if backend == Backend::Packed {
+        if let (Some(sd), Some(qs)) = (&state_dir, &qs_cur) {
+            let path = sd.packed_path();
+            let mut restored = false;
+            if path.exists() {
+                match crate::quant::PackedModel::load(&path)
+                    .and_then(|pm| den.seed_packed(qs, pm))
+                {
+                    Ok(()) => {
+                        crate::log_info!("restored packed weights from {}", path.display());
+                        restored = true;
+                    }
+                    Err(err) => crate::log_warn!(
+                        "could not restore packed blob: {err:#}; rebuilding from the f32 store"
+                    ),
+                }
+            }
+            if !restored {
+                match den.packed_blob(&params, qs) {
+                    Ok(bytes) => {
+                        ckpt_write(&path, &bytes, &ckpt_counters, "packed blob");
+                    }
+                    Err(err) => crate::log_warn!("could not build packed blob: {err:#}"),
                 }
             }
         }
@@ -560,7 +763,7 @@ fn scheduler_loop(
                         if let Some(p) = &mut prober {
                             p.drain();
                         }
-                        persist_window(&recal, &state_dir);
+                        persist_window(&recal, &state_dir, &ckpt_counters);
                         return;
                     }
                 }
@@ -574,7 +777,7 @@ fn scheduler_loop(
                             if let Some(p) = &mut prober {
                                 p.drain();
                             }
-                            persist_window(&recal, &state_dir);
+                            persist_window(&recal, &state_dir, &ckpt_counters);
                             return;
                         }
                         break;
@@ -640,6 +843,28 @@ fn scheduler_loop(
                         });
                     }
                 }
+                Msg::Reconfigure(new) => {
+                    // applied here, in the arrival drain — strictly
+                    // between rounds — so admission, step cuts and rung
+                    // choice change for whole rounds only and a 1-worker
+                    // server replays an N-worker server's decisions
+                    queue_budget = new.queue_budget;
+                    step_cut = new.step_cut;
+                    ladder = arm_ladder(new.ladder, qs_cur.is_some());
+                    if metrics.rung_rounds.len() < ladder.len() {
+                        metrics.rung_rounds.resize(ladder.len(), 0);
+                    }
+                    if let Some(rs) = &recal {
+                        *rs.rung_bits.lock().unwrap() =
+                            ladder.iter().map(|&(w, a, _)| (w, a)).collect();
+                    }
+                    metrics.reconfigures += 1;
+                    crate::log_info!(
+                        "reconfigured SLOs at round {}: queue budget {queue_budget}, step cut {step_cut}, ladder depth {}",
+                        metrics.rounds,
+                        ladder.len()
+                    );
+                }
                 Msg::Shutdown(tx) => shutdown = Some(tx),
             }
         }
@@ -696,7 +921,11 @@ fn scheduler_loop(
                     metrics.probes_skipped = p.skipped;
                     metrics.probes_failed = p.failed;
                 }
-                persist_window(&recal, &state_dir);
+                persist_window(&recal, &state_dir, &ckpt_counters);
+                // offloaded checkpoint jobs all finished (join() above),
+                // so the durability counters are final
+                metrics.ckpt_fails = ckpt_counters.fails.load(Ordering::SeqCst);
+                metrics.ckpt_retries = ckpt_counters.retries.load(Ordering::SeqCst);
                 metrics.sel_hits = sel_cache.hits;
                 metrics.sel_misses = sel_cache.misses;
                 metrics.compile_attempts = den.engine().compile_attempts();
@@ -719,18 +948,31 @@ fn scheduler_loop(
             p.drain();
         }
         if let Some(rs) = &recal {
-            if let Some((qparams, drifted)) = rs.outcome.lock().unwrap().take() {
+            if let Some(out) = rs.outcome.lock().unwrap().take() {
                 if let Some(qs) = &mut qs_cur {
                     let mut swapped = (**qs).clone();
-                    swapped.qparams = qparams;
+                    swapped.qparams = out.qparams;
                     *qs = Arc::new(swapped);
+                    // refresh every ladder rung re-searched on the same
+                    // updated calibration. Positions must still agree on
+                    // (wbits, abits) — a reconfigure that landed while the
+                    // check ran leaves mismatched rungs on their old
+                    // qparams until the next check refreshes them.
+                    for (i, (w, a, qp)) in out.rung_qparams.into_iter().enumerate() {
+                        if let Some(entry) = ladder.get_mut(i) {
+                            if entry.0 == w && entry.1 == a {
+                                entry.2 = Arc::new(degraded_state(&entry.2, qp));
+                            }
+                        }
+                    }
                     metrics.recal_swaps += 1;
-                    metrics.recal_layers += drifted;
+                    metrics.recal_layers += out.drifted;
                     if metrics.first_swap_round.is_none() {
                         metrics.first_swap_round = Some(metrics.rounds);
                     }
                     crate::log_info!(
-                        "recalibration hot-swap: {drifted} drifted layer(s) at round {}",
+                        "recalibration hot-swap: {} drifted layer(s) at round {}",
+                        out.drifted,
                         metrics.rounds
                     );
                     // checkpoint the swapped model + the window it came
@@ -741,19 +983,50 @@ fn scheduler_loop(
                     // next swap or the shutdown persist catches up), so
                     // two jobs never race on the same files and the files
                     // on disk always reflect the newest completed write.
+                    // Writes go through ckpt_write: capped retries over
+                    // transient storage faults, fails/retries counted.
                     if let Some(sd) = &state_dir {
                         if !ckpt_inflight.swap(true, Ordering::SeqCst) {
                             let qs_snap = Arc::clone(qs);
                             let sk_snap = rs.sketches.lock().unwrap().clone();
                             let sd = sd.clone();
                             let clear = ClearFlag(Arc::clone(&ckpt_inflight));
+                            let ckpt = Arc::clone(&ckpt_counters);
+                            let den = Arc::clone(&den);
+                            let params = Arc::clone(&params);
+                            let packed = backend == Backend::Packed;
                             exec.offload(move || {
                                 let _clear = clear;
-                                if let Err(err) = qs_snap.save(&sd.quant_path()) {
-                                    crate::log_warn!("could not persist quant state: {err:#}");
-                                }
-                                if let Err(err) = sk_snap.save(&sd.sketch_path()) {
-                                    crate::log_warn!("could not persist sketch window: {err:#}");
+                                ckpt_write(
+                                    &sd.quant_path(),
+                                    &qs_snap.to_bytes(),
+                                    &ckpt,
+                                    "quant state",
+                                );
+                                ckpt_write(
+                                    &sd.sketch_path(),
+                                    &sk_snap.to_bytes(),
+                                    &ckpt,
+                                    "sketch window",
+                                );
+                                if packed {
+                                    // re-pack under the swapped qparams so a
+                                    // restart seeds the packed cache without
+                                    // rebuilding (a stale blob would be
+                                    // rejected at load and rebuilt anyway)
+                                    match den.packed_blob(&params, &qs_snap) {
+                                        Ok(bytes) => {
+                                            ckpt_write(
+                                                &sd.packed_path(),
+                                                &bytes,
+                                                &ckpt,
+                                                "packed blob",
+                                            );
+                                        }
+                                        Err(err) => crate::log_warn!(
+                                            "could not re-pack swapped weights: {err:#}"
+                                        ),
+                                    }
                                 }
                             });
                         }
@@ -764,9 +1037,15 @@ fn scheduler_loop(
                 && !rs.inflight.swap(true, Ordering::SeqCst)
             {
                 last_check_round = metrics.rounds;
+                let check = metrics.recal_checks as u64;
                 metrics.recal_checks += 1;
+                // recal faults draw from the same pure schedule the job
+                // will see, so the injected count is worker-independent
+                if faults.decide_recal(check) != Fault::None {
+                    metrics.faults_injected += 1;
+                }
                 let rs = Arc::clone(rs);
-                exec.offload(move || rs.run_check());
+                exec.offload(move || rs.run_check(check));
             }
         }
 
@@ -799,10 +1078,14 @@ fn scheduler_loop(
             }
         }
         // graceful degradation: during overloaded rounds, interactive
-        // tickets are split off and served on the pre-built lower-bit
-        // variant; normal batches plan first, degraded batches second, so
-        // batch indices (and the fault schedule over them) stay stable
-        let degrade_round = overloaded && degraded_qs.is_some();
+        // tickets are split off and served on a degradation-ladder rung —
+        // the deeper the backlog, the coarser the rung (`ladder_rung` is
+        // pure in the queue snapshot, so every worker count agrees).
+        // Normal batches plan first, degraded batches second, so batch
+        // indices (and the fault schedule over them) stay stable.
+        let rung = ladder_rung(backlog, queue_budget, ladder.len());
+        let rung_qs: Option<Arc<QuantState>> = rung.map(|r| Arc::clone(&ladder[r].2));
+        let degrade_round = rung_qs.is_some();
         let (norm_tk, deg_tk): (Vec<Ticket>, Vec<Ticket>) = if degrade_round {
             admitted
                 .into_iter()
@@ -812,6 +1095,9 @@ fn scheduler_loop(
         };
         if !deg_tk.is_empty() {
             metrics.downgraded_rounds += 1;
+            if let Some(r) = rung {
+                metrics.rung_rounds[r] += 1;
+            }
             for tk in &deg_tk {
                 active[tk.req].degraded = true;
             }
@@ -834,7 +1120,7 @@ fn scheduler_loop(
                 ts.resize(ts.len() + tk.n, tk.t);
                 cond.extend_from_slice(&a.cond[start..start + tk.n]);
             }
-            let qs_batch = if bi >= n_norm { &degraded_qs } else { &qs_cur };
+            let qs_batch = if bi >= n_norm { &rung_qs } else { &qs_cur };
             let sel = match qs_batch {
                 None => None,
                 Some(qs) => Some(sel_cache.get_or_compute(batch.t, || {
@@ -1005,6 +1291,23 @@ mod tests {
         let den = Arc::new(Denoiser::new(engine, &info).unwrap());
         let params = Arc::new(ParamStore::load_init(&info, &d).unwrap().flat);
         Some((den, info, params))
+    }
+
+    #[test]
+    fn ladder_rung_scales_with_backlog_and_clamps() {
+        // within budget (or at it): no degradation
+        assert_eq!(ladder_rung(0, 4, 2), None);
+        assert_eq!(ladder_rung(4, 4, 2), None);
+        // one budget multiple over: mildest rung
+        assert_eq!(ladder_rung(5, 4, 2), Some(0));
+        assert_eq!(ladder_rung(8, 4, 2), Some(0));
+        // next multiple: next rung; deep backlog clamps to the deepest
+        assert_eq!(ladder_rung(9, 4, 2), Some(1));
+        assert_eq!(ladder_rung(100, 4, 2), Some(1));
+        assert_eq!(ladder_rung(13, 4, 3), Some(2));
+        // no budget = no overload signal; no ladder = nothing to pick
+        assert_eq!(ladder_rung(5, 0, 2), None);
+        assert_eq!(ladder_rung(5, 4, 0), None);
     }
 
     #[test]

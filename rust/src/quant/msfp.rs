@@ -52,6 +52,27 @@ impl StateDir {
     pub fn packed_path(&self) -> PathBuf {
         self.root.join("packed.mpk")
     }
+
+    /// Remove staged `*.tmp.<pid>.<seq>` files left by a process killed
+    /// mid-`atomic_write`. The staging names are unique per (pid, seq) so
+    /// a stray is never read as state, but sweeping at server start keeps
+    /// the directory to exactly the committed checkpoints. Returns how
+    /// many strays were removed; a missing or unreadable root sweeps
+    /// nothing.
+    pub fn sweep_stale_tmp(&self) -> usize {
+        let Ok(entries) = std::fs::read_dir(&self.root) else {
+            return 0;
+        };
+        let mut swept = 0;
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.contains(".tmp.") && std::fs::remove_file(entry.path()).is_ok() {
+                swept += 1;
+            }
+        }
+        swept
+    }
 }
 
 /// Calibration data for one quantized layer.
@@ -215,6 +236,23 @@ impl QuantScheme {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn state_dir_sweeps_only_stale_tmp_files() {
+        let root = std::env::temp_dir().join("msfp_state_sweep");
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        let sd = StateDir::new(&root);
+        std::fs::write(sd.quant_path(), b"committed").unwrap();
+        std::fs::write(root.join("quant.tmp.12345.0"), b"stray").unwrap();
+        std::fs::write(root.join("sketches.tmp.12345.7"), b"stray").unwrap();
+        assert_eq!(sd.sweep_stale_tmp(), 2);
+        assert!(sd.quant_path().exists());
+        assert_eq!(std::fs::read_dir(&root).unwrap().count(), 1);
+        // idempotent, and a missing root is a no-op
+        assert_eq!(sd.sweep_stale_tmp(), 0);
+        assert_eq!(StateDir::new(root.join("nope")).sweep_stale_tmp(), 0);
+    }
 
     fn silu(x: f32) -> f32 {
         x / (1.0 + (-x).exp())

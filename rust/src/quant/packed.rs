@@ -553,10 +553,13 @@ impl PackedModel {
         atomic_write(path, &self.to_bytes())
     }
 
+    /// Restore a persisted blob. Fault-aware (`util::io::read_file_retry`)
+    /// like every state restore; parse failures carry the path so a
+    /// corrupt blob at server start is a distinct, loggable error.
     pub fn load(path: &Path) -> Result<PackedModel> {
-        let data = std::fs::read(path)
+        let data = crate::util::io::read_file_retry(path, crate::util::io::RESTORE_ATTEMPTS)
             .with_context(|| format!("reading packed model {}", path.display()))?;
-        PackedModel::from_bytes(&data)
+        PackedModel::from_bytes(&data).with_context(|| format!("parsing {}", path.display()))
     }
 
     /// Index layers by name for O(1) lookup during a forward pass.

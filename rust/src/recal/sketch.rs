@@ -409,8 +409,12 @@ impl SketchSet {
             .with_context(|| format!("writing sketch snapshot {}", path.display()))
     }
 
+    /// Restore a persisted window. Routed through the fault-aware reader
+    /// (`util::io::read_file_retry`) so an installed `FaultFs` can inject
+    /// transient restore failures; real transient errors retry under the
+    /// same cap.
     pub fn load(path: &Path) -> Result<SketchSet> {
-        let bytes = std::fs::read(path)
+        let bytes = crate::util::io::read_file_retry(path, crate::util::io::RESTORE_ATTEMPTS)
             .with_context(|| format!("reading sketch snapshot {}", path.display()))?;
         SketchSet::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
     }

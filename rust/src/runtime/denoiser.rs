@@ -47,16 +47,23 @@ impl QuantState {
         }
     }
 
-    /// Persist a quantized model (qparams + LoRA hub + router + mask) so
-    /// serving can start without re-running the search/fine-tune.
-    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+    /// Serialized checkpoint bytes (exactly what [`QuantState::save`]
+    /// writes) — the serving checkpoint path writes these through the
+    /// fault-aware capped-retry writer instead of a one-shot save.
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut s = crate::util::io::Store::new();
         s.put("qparams", self.qparams.clone());
         s.put("lora", self.lora.clone());
         s.put("router", self.router.flat.clone());
         s.put("hub_mask", self.hub_mask.clone());
         s.put("t_total", vec![self.t_total as f32]);
-        s.save(path)
+        s.to_bytes()
+    }
+
+    /// Persist a quantized model (qparams + LoRA hub + router + mask) so
+    /// serving can start without re-running the search/fine-tune.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        crate::util::io::atomic_write(path, &self.to_bytes())
     }
 
     /// Load a quantized model saved by [`QuantState::save`]. The allocation
@@ -390,6 +397,24 @@ impl Denoiser {
     /// packed eval) — the serving `Metrics::packed_bytes` gauge.
     pub fn packed_bytes(&self) -> usize {
         self.packed.lock().unwrap().as_ref().map(|pf| pf.bytes()).unwrap_or(0)
+    }
+
+    /// Seed the packed cache from a persisted blob so serving starts
+    /// without re-packing the f32 weights. The blob is validated against
+    /// the manifest and `qs.qparams` (`PackedForward::from_model`); a
+    /// corrupt or stale blob is rejected and the caller falls back to the
+    /// normal lazy rebuild.
+    pub fn seed_packed(&self, qs: &QuantState, model: crate::quant::PackedModel) -> Result<()> {
+        let pf = PackedForward::from_model(&self.info, model, &qs.qparams)?;
+        *self.packed.lock().unwrap() = Some(Arc::new(pf));
+        Ok(())
+    }
+
+    /// Serialized packed blob for `qs`, building (or reusing) the cached
+    /// packed model — what the serving checkpoint path persists to
+    /// `StateDir::packed_path` so the next start can [`Self::seed_packed`].
+    pub fn packed_blob(&self, params: &[f32], qs: &QuantState) -> Result<Vec<u8>> {
+        Ok(self.packed_forward(params, qs)?.model().to_bytes())
     }
 
     /// Calibration forward for the serving shadow prober: `n` stacked

@@ -99,6 +99,54 @@ impl PackedForward {
         })
     }
 
+    /// Rebuild a forward from a persisted [`PackedModel`] blob without
+    /// re-packing the f32 weights. The blob must structurally match what
+    /// a fresh pack under `qparams` would produce: layer count, order,
+    /// names and matmul shapes per the manifest, and — the staleness
+    /// check — each layer's code table must equal the grid of the weight
+    /// quantizer decoded from `qparams`. A qparams hot-swap changes the
+    /// table, so a blob persisted under older qparams is rejected here
+    /// and the caller falls back to [`PackedForward::build`].
+    pub fn from_model(
+        info: &ModelInfo,
+        packed: PackedModel,
+        qparams: &[f32],
+    ) -> Result<PackedForward> {
+        let l = info.layer_specs.len();
+        if qparams.len() != l * QPARAMS_COLS {
+            bail!("qparams len {} != {l} layers x {QPARAMS_COLS}", qparams.len());
+        }
+        if packed.layers.len() != l {
+            bail!("packed blob has {} layers, manifest has {l}", packed.layers.len());
+        }
+        let mut acts = Vec::with_capacity(l);
+        for (i, (layer, spec)) in packed.layers.iter().zip(&info.layer_specs).enumerate() {
+            if layer.name != spec.name {
+                bail!("packed layer {i} is '{}', manifest expects '{}'", layer.name, spec.name);
+            }
+            if layer.mat.rows != spec.fan_out || layer.mat.cols != spec.fan_in {
+                bail!(
+                    "packed layer '{}' is {}x{}, manifest expects {}x{}",
+                    layer.name,
+                    layer.mat.rows,
+                    layer.mat.cols,
+                    spec.fan_out,
+                    spec.fan_in
+                );
+            }
+            let row = &qparams[i * QPARAMS_COLS..(i + 1) * QPARAMS_COLS];
+            let (wq, aq) = decode_qparams_row(row);
+            if layer.mat.t.table != crate::quant::grid::quantizer_grid(&wq) {
+                bail!(
+                    "packed layer '{}': code table does not match the current qparams (stale blob)",
+                    layer.name
+                );
+            }
+            acts.push(aq);
+        }
+        Ok(PackedForward { packed, acts, qparams_hash: qparams_fingerprint(qparams) })
+    }
+
     /// Total packed weight bytes (the `Metrics::packed_bytes` gauge).
     pub fn bytes(&self) -> usize {
         self.packed.bytes()

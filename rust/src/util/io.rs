@@ -1,29 +1,196 @@
-//! Tensor store: raw little-endian f32 blobs + a sidecar-free named format.
+//! Tensor store + durable checkpoint I/O + deterministic storage faults.
 //!
-//! Two formats:
+//! Three concerns live here:
 //!  * `.f32` — a bare LE f32 vector (what aot.py emits for initial params);
 //!  * `.mts` — "msfp tensor store": magic + named sections, used for
 //!    checkpoints (params + optimizer state + qparams + lora + router) so a
-//!    pipeline stage can resume from disk.
+//!    pipeline stage can resume from disk;
+//!  * [`FaultFs`] — a seeded storage fault plan (the executor's `FaultPlan`
+//!    discipline extended to checkpoint writes and state restores) injected
+//!    under [`atomic_write`] / [`read_file`] so crash-consistency drills are
+//!    reproducible fixtures instead of flaky kill loops.
 
 use std::collections::BTreeMap;
 use std::fs;
-use std::io::Read;
-use std::path::Path;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::rng::mix64;
+
 const MAGIC: &[u8; 8] = b"MSFPTS01";
 
-/// Write `bytes` to `path` atomically: stage a uniquely named temp file in
-/// the same directory, then rename it over the target. A crash mid-write
-/// can never leave a truncated file at `path` (the rename either happened
-/// or it didn't), and concurrent writers each stage their own temp file —
-/// the last completed rename wins whole. Used by every checkpoint path
-/// (`Store::save`, `recal::SketchSet::save`): serving restart-resume
-/// depends on these files never being torn.
+/// Retry cap shared by every state-restore read ([`Store::load`], sketch
+/// snapshots, packed blobs): transient injected read faults redraw per
+/// attempt, so a moderate-rate plan clears under this cap while a
+/// rate-1000 plan deterministically surfaces the error.
+pub const RESTORE_ATTEMPTS: u64 = 3;
+
+// ---------------------------------------------------------------------------
+// Storage fault injection
+// ---------------------------------------------------------------------------
+
+/// Which storage operation a [`FaultFs`] decision applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsOp {
+    Write,
+    Read,
+}
+
+/// A fault forced onto one storage operation attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FsFault {
+    #[default]
+    None,
+    /// The staged temp file is cut short at a seeded fraction of the
+    /// payload (`cut_mille`/1000 of the bytes), then the write fails.
+    /// The target is never touched — [`atomic_write`] renames whole files
+    /// only — so a reader still sees the previous complete checkpoint.
+    TornWrite { cut_mille: u32 },
+    /// Transient I/O error: the attempt fails before any bytes move. A
+    /// retry is a different `attempt` key and redraws.
+    Eio,
+    /// The full temp file is staged but the "process dies" before the
+    /// rename: the write fails and the target keeps its previous content.
+    CrashBeforeRename,
+}
+
+/// Deterministic storage fault plan — the same mix64-hash purity
+/// discipline as `coordinator::FaultPlan`, applied to the state
+/// lifecycle. A decision is a pure function of (op, target file name,
+/// attempt index): the same plan injects the same faults into the same
+/// writes on every run. Rates are per-mille of attempts; write draws
+/// split `torn < torn+eio < torn+eio+crash`, read draws use
+/// `read_eio_per_mille` alone.
+///
+/// A plan is armed with [`FaultFs::install`], scoped to every path under
+/// one root directory and uninstalled when the returned RAII guard drops,
+/// so concurrent tests with their own state roots never see each other's
+/// faults. Decisions key on the target's *file name* (not the full path):
+/// a fault schedule does not depend on where the state root lives.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultFs {
+    pub seed: u64,
+    pub torn_per_mille: u32,
+    pub eio_per_mille: u32,
+    pub crash_per_mille: u32,
+    /// transient failures on the restore (read) path
+    pub read_eio_per_mille: u32,
+}
+
+static FAULT_ROOTS: Mutex<Vec<(PathBuf, FaultFs)>> = Mutex::new(Vec::new());
+
+/// Uninstalls its [`FaultFs`] plan on drop.
+pub struct FaultFsGuard {
+    root: PathBuf,
+}
+
+impl Drop for FaultFsGuard {
+    fn drop(&mut self) {
+        let mut roots = FAULT_ROOTS.lock().unwrap();
+        if let Some(i) = roots.iter().position(|(r, _)| *r == self.root) {
+            roots.remove(i);
+        }
+    }
+}
+
+impl FaultFs {
+    pub fn new(seed: u64) -> FaultFs {
+        FaultFs { seed, ..FaultFs::default() }
+    }
+
+    /// Arm this plan for every path under `root` until the guard drops.
+    #[must_use = "the plan is uninstalled when the guard drops"]
+    pub fn install(self, root: impl Into<PathBuf>) -> FaultFsGuard {
+        let root = root.into();
+        FAULT_ROOTS.lock().unwrap().push((root.clone(), self));
+        FaultFsGuard { root }
+    }
+
+    /// The fault (if any) for `attempt` of operation `op` on `path` —
+    /// pure in (self, op, file name, attempt).
+    pub fn decide(&self, op: FsOp, path: &Path, attempt: u64) -> FsFault {
+        let (torn, eio, crash) = match op {
+            FsOp::Write => (self.torn_per_mille, self.eio_per_mille, self.crash_per_mille),
+            FsOp::Read => (0, self.read_eio_per_mille, 0),
+        };
+        let total = torn + eio + crash;
+        if total == 0 {
+            return FsFault::None;
+        }
+        let salt: u64 = match op {
+            FsOp::Write => 0x6673_5f77_72,
+            FsOp::Read => 0x6673_5f72_64,
+        };
+        let h = mix64(
+            self.seed
+                ^ mix64(file_key(path) ^ salt)
+                ^ mix64(attempt.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        );
+        let d = (h % 1000) as u32;
+        if d < torn {
+            FsFault::TornWrite { cut_mille: (mix64(h) % 1000) as u32 }
+        } else if d < torn + eio {
+            FsFault::Eio
+        } else if d < total {
+            FsFault::CrashBeforeRename
+        } else {
+            FsFault::None
+        }
+    }
+}
+
+fn file_key(path: &Path) -> u64 {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.display().to_string());
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in name.as_bytes() {
+        h = mix64(h ^ b as u64);
+    }
+    h
+}
+
+/// The installed plan covering `path`, if any (the longest registered
+/// root wins when roots nest).
+fn plan_for(path: &Path) -> Option<FaultFs> {
+    let roots = FAULT_ROOTS.lock().unwrap();
+    roots
+        .iter()
+        .filter(|(r, _)| path.starts_with(r))
+        .max_by_key(|(r, _)| r.as_os_str().len())
+        .map(|(_, p)| *p)
+}
+
+// ---------------------------------------------------------------------------
+// Durable writes and fault-aware reads
+// ---------------------------------------------------------------------------
+
+/// Write `bytes` to `path` atomically and durably: stage a uniquely named
+/// temp file in the same directory, flush it to disk (`sync_all`), rename
+/// it over the target, then fsync the parent directory so the rename
+/// itself survives a crash. A crash mid-write can never leave a truncated
+/// file at `path` (the rename either happened or it didn't), and
+/// concurrent writers each stage their own temp file — the last completed
+/// rename wins whole. Used by every checkpoint path (`Store::save`,
+/// `recal::SketchSet::save`, `quant::PackedModel::save`): serving
+/// restart-resume depends on these files never being torn.
+///
+/// Every failure path removes its staged temp file, so no `.tmp.*` strays
+/// survive an aborted write; strays from a real process kill carry a dead
+/// pid in their name and are swept by `quant::msfp::StateDir::sweep_stale_tmp`.
+/// With an installed [`FaultFs`] covering `path`, seeded faults are
+/// injected here; this is attempt 0 — [`atomic_write_retry`] redraws per
+/// attempt.
 pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    atomic_write_attempt(path, bytes, 0)
+}
+
+fn atomic_write_attempt(path: &Path, bytes: &[u8], attempt: u64) -> Result<()> {
     static SEQ: AtomicU64 = AtomicU64::new(0);
     if let Some(dir) = path.parent() {
         fs::create_dir_all(dir)?;
@@ -33,13 +200,108 @@ pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
         std::process::id(),
         SEQ.fetch_add(1, Ordering::Relaxed)
     ));
-    fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    match plan_for(path).map(|p| p.decide(FsOp::Write, path, attempt)).unwrap_or_default() {
+        FsFault::Eio => {
+            bail!("injected fault: transient EIO writing {} (attempt {attempt})", path.display())
+        }
+        FsFault::TornWrite { cut_mille } => {
+            // stage the torn prefix for real, then fail the write; the
+            // target is untouched either way
+            let cut = bytes.len() * cut_mille as usize / 1000;
+            let _ = fs::write(&tmp, &bytes[..cut]);
+            let _ = fs::remove_file(&tmp);
+            bail!(
+                "injected fault: torn write of {} at byte {cut}/{} (attempt {attempt})",
+                path.display(),
+                bytes.len()
+            )
+        }
+        FsFault::CrashBeforeRename => {
+            let _ = fs::write(&tmp, bytes);
+            let _ = fs::remove_file(&tmp);
+            bail!(
+                "injected fault: crash before renaming {} into place (attempt {attempt})",
+                path.display()
+            )
+        }
+        FsFault::None => {}
+    }
+    let mut f = fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    let staged = f.write_all(bytes).and_then(|()| f.sync_all());
+    drop(f);
+    if let Err(e) = staged {
+        let _ = fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("writing {}", tmp.display()));
+    }
     if let Err(e) = fs::rename(&tmp, path) {
         let _ = fs::remove_file(&tmp);
         return Err(e).with_context(|| format!("renaming {} into place", path.display()));
     }
+    // the rename is durable only once the directory entry is flushed;
+    // best-effort — an unsyncable parent degrades to pre-fsync behavior
+    #[cfg(unix)]
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
     Ok(())
 }
+
+/// [`atomic_write`] with up to `attempts` tries (at least one), redrawing
+/// injected faults per attempt — the capped-retry policy of the
+/// checkpoint path. Returns the number of retries consumed (0 = the
+/// first attempt landed).
+pub fn atomic_write_retry(path: &Path, bytes: &[u8], attempts: u64) -> Result<u64> {
+    let mut last = None;
+    for attempt in 0..attempts.max(1) {
+        match atomic_write_attempt(path, bytes, attempt) {
+            Ok(()) => return Ok(attempt),
+            Err(e) => last = Some(e),
+        }
+    }
+    let attempts = attempts.max(1);
+    Err(last
+        .expect("at least one attempt ran")
+        .context(format!("writing {} ({attempts} attempts)", path.display())))
+}
+
+/// Fault-aware whole-file read: every state restore (`Store`, sketch
+/// snapshots, packed blobs) funnels through here so an installed
+/// [`FaultFs`] can inject transient read failures on the restore path.
+/// This is attempt 0; [`read_file_retry`] redraws per attempt.
+pub fn read_file(path: &Path) -> Result<Vec<u8>> {
+    read_file_attempt(path, 0)
+}
+
+fn read_file_attempt(path: &Path, attempt: u64) -> Result<Vec<u8>> {
+    if let Some(p) = plan_for(path) {
+        if p.decide(FsOp::Read, path, attempt) == FsFault::Eio {
+            bail!("injected fault: transient EIO reading {} (attempt {attempt})", path.display());
+        }
+    }
+    fs::read(path).with_context(|| format!("reading {}", path.display()))
+}
+
+/// [`read_file`] with up to `attempts` tries (at least one): restores
+/// retry transient faults the same way checkpoint writes do.
+pub fn read_file_retry(path: &Path, attempts: u64) -> Result<Vec<u8>> {
+    let mut last = None;
+    for attempt in 0..attempts.max(1) {
+        match read_file_attempt(path, attempt) {
+            Ok(bytes) => return Ok(bytes),
+            Err(e) => last = Some(e),
+        }
+    }
+    let attempts = attempts.max(1);
+    Err(last
+        .expect("at least one attempt ran")
+        .context(format!("reading {} ({attempts} attempts)", path.display())))
+}
+
+// ---------------------------------------------------------------------------
+// Raw f32 blobs
+// ---------------------------------------------------------------------------
 
 /// Read a bare little-endian f32 vector.
 pub fn read_f32_raw(path: &Path) -> Result<Vec<f32>> {
@@ -58,6 +320,10 @@ pub fn write_f32_raw(path: &Path, data: &[f32]) -> Result<()> {
     fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))?;
     Ok(())
 }
+
+// ---------------------------------------------------------------------------
+// Named tensor checkpoint
+// ---------------------------------------------------------------------------
 
 /// Named tensor checkpoint.
 #[derive(Debug, Default, Clone)]
@@ -85,10 +351,8 @@ impl Store {
         self.sections.get(name).map(|v| v.as_slice())
     }
 
-    /// Serialize and write atomically (temp file + rename): a checkpoint
-    /// reader never observes a torn store, even across a crash or a
-    /// concurrent re-save of the same path.
-    pub fn save(&self, path: &Path) -> Result<()> {
+    /// Serialize to the `.mts` wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
         let total: usize = self.sections.iter().map(|(n, d)| 16 + n.len() + d.len() * 4).sum();
         let mut out = Vec::with_capacity(12 + total);
         out.extend_from_slice(MAGIC);
@@ -102,38 +366,74 @@ impl Store {
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
-        atomic_write(path, &out)
+        out
     }
 
-    pub fn load(path: &Path) -> Result<Store> {
-        let mut f = fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{}: not an MSFP tensor store", path.display());
+    /// Serialize and write atomically (temp file + rename + fsync): a
+    /// checkpoint reader never observes a torn store, even across a crash
+    /// or a concurrent re-save of the same path.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        atomic_write(path, &self.to_bytes())
+    }
+
+    /// Parse the `.mts` wire format; bounds-checked so a truncated or
+    /// corrupt blob fails loudly instead of over-reading.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Store> {
+        let mut c = Cursor { bytes, off: 0 };
+        if c.take(8)? != MAGIC {
+            bail!("not an MSFP tensor store");
         }
-        let mut u32b = [0u8; 4];
-        f.read_exact(&mut u32b)?;
-        let n = u32::from_le_bytes(u32b) as usize;
+        let n = c.u32()? as usize;
         let mut sections = BTreeMap::new();
         for _ in 0..n {
-            f.read_exact(&mut u32b)?;
-            let name_len = u32::from_le_bytes(u32b) as usize;
+            let name_len = c.u32()? as usize;
             if name_len > 4096 {
                 bail!("corrupt store: name length {name_len}");
             }
-            let mut name = vec![0u8; name_len];
-            f.read_exact(&mut name)?;
-            let mut u64b = [0u8; 8];
-            f.read_exact(&mut u64b)?;
-            let len = u64::from_le_bytes(u64b) as usize;
-            let mut bytes = vec![0u8; len * 4];
-            f.read_exact(&mut bytes)?;
-            let data =
-                bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
-            sections.insert(String::from_utf8(name)?, data);
+            let name = String::from_utf8(c.take(name_len)?.to_vec())?;
+            let len = c.u64()? as usize;
+            if len > (bytes.len() - c.off) / 4 {
+                bail!("corrupt store: section '{name}' length {len} exceeds payload");
+            }
+            let data = c
+                .take(len * 4)?
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            sections.insert(name, data);
         }
         Ok(Store { sections })
+    }
+
+    pub fn load(path: &Path) -> Result<Store> {
+        let bytes = read_file_retry(path, RESTORE_ATTEMPTS)?;
+        Store::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.bytes.len() - self.off {
+            bail!("truncated store at byte {}", self.off);
+        }
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 }
 
@@ -200,5 +500,140 @@ mod tests {
         let p = tmp("junk.mts");
         fs::write(&p, b"NOTMAGIC????").unwrap();
         assert!(Store::load(&p).is_err());
+    }
+
+    #[test]
+    fn store_from_bytes_rejects_truncation_and_oversized_sections() {
+        let mut s = Store::new();
+        s.put("w", vec![1.0; 64]);
+        let bytes = s.to_bytes();
+        assert!(Store::from_bytes(&bytes).is_ok());
+        // any truncation point fails loudly, never panics or over-reads
+        for cut in [0, 7, 8, 11, 12, 13, bytes.len() / 2, bytes.len() - 1] {
+            let err = Store::from_bytes(&bytes[..cut]);
+            assert!(err.is_err(), "cut at {cut} should fail");
+        }
+        // a section header claiming more data than the payload holds
+        let mut lying = bytes.clone();
+        let len_off = 8 + 4 + 4 + 1; // magic + count + name_len + "w"
+        lying[len_off..len_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = Store::from_bytes(&lying).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds payload"), "{err:#}");
+    }
+
+    #[test]
+    fn fault_fs_decide_is_pure_and_rate_bounded() {
+        let plan = FaultFs {
+            seed: 9,
+            torn_per_mille: 300,
+            eio_per_mille: 300,
+            crash_per_mille: 200,
+            read_eio_per_mille: 0,
+        };
+        let p = Path::new("/anywhere/x.bin");
+        let mut torn = 0usize;
+        let mut eio = 0usize;
+        let mut crash = 0usize;
+        let mut none = 0usize;
+        for attempt in 0..4000u64 {
+            let d = plan.decide(FsOp::Write, p, attempt);
+            assert_eq!(d, plan.decide(FsOp::Write, p, attempt), "decide must be pure");
+            match d {
+                FsFault::TornWrite { cut_mille } => {
+                    assert!(cut_mille < 1000);
+                    torn += 1;
+                }
+                FsFault::Eio => eio += 1,
+                FsFault::CrashBeforeRename => crash += 1,
+                FsFault::None => none += 1,
+            }
+        }
+        for (label, count, rate) in
+            [("torn", torn, 300), ("eio", eio, 300), ("crash", crash, 200), ("none", none, 200)]
+        {
+            let expected = 4000 * rate / 1000;
+            assert!(
+                count.abs_diff(expected) < 4000 / 10,
+                "{label}: {count} vs expected ~{expected}"
+            );
+        }
+        // the read stream draws independently and only from read_eio
+        assert_eq!(plan.decide(FsOp::Read, p, 0), FsFault::None);
+        let rplan = FaultFs { read_eio_per_mille: 1000, ..FaultFs::new(9) };
+        assert_eq!(rplan.decide(FsOp::Read, p, 0), FsFault::Eio);
+        assert_eq!(rplan.decide(FsOp::Write, p, 0), FsFault::None);
+        // the schedule keys on the file name, not the directory
+        assert_eq!(
+            plan.decide(FsOp::Write, Path::new("/a/x.bin"), 7),
+            plan.decide(FsOp::Write, Path::new("/b/c/x.bin"), 7)
+        );
+    }
+
+    #[test]
+    fn injected_write_faults_preserve_target_and_leave_no_temp() {
+        let dir = std::env::temp_dir().join("msfp_io_faults");
+        let _ = fs::remove_dir_all(&dir);
+        let p = dir.join("state.bin");
+        atomic_write(&p, b"old complete checkpoint").unwrap();
+        for plan in [
+            FaultFs { torn_per_mille: 1000, ..FaultFs::new(4) },
+            FaultFs { eio_per_mille: 1000, ..FaultFs::new(4) },
+            FaultFs { crash_per_mille: 1000, ..FaultFs::new(4) },
+        ] {
+            let guard = plan.install(&dir);
+            let err = atomic_write(&p, b"new bytes that must not land").unwrap_err();
+            assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+            // crash consistency: the previous complete checkpoint survives
+            assert_eq!(fs::read(&p).unwrap(), b"old complete checkpoint");
+            // no .tmp strays survive an injected crash-before-rename (or
+            // any other fault kind)
+            let stray: Vec<_> = fs::read_dir(&dir)
+                .unwrap()
+                .map(|e| e.unwrap().file_name().into_string().unwrap())
+                .filter(|n| n != "state.bin")
+                .collect();
+            assert!(stray.is_empty(), "stray files under {plan:?}: {stray:?}");
+            drop(guard);
+        }
+        // with every guard dropped the path writes clean again
+        atomic_write(&p, b"post-chaos").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"post-chaos");
+    }
+
+    #[test]
+    fn atomic_write_retry_clears_transient_faults_on_schedule() {
+        // seed 0 on "retry.bin" draws Eio, Eio, None for attempts 0..3 at
+        // rate 700 (pinned by the mirrored mix64 schedule)
+        let dir = std::env::temp_dir().join("msfp_io_retry");
+        let _ = fs::remove_dir_all(&dir);
+        let p = dir.join("retry.bin");
+        let plan = FaultFs { eio_per_mille: 700, ..FaultFs::new(0) };
+        assert_eq!(plan.decide(FsOp::Write, &p, 0), FsFault::Eio);
+        assert_eq!(plan.decide(FsOp::Write, &p, 1), FsFault::Eio);
+        assert_eq!(plan.decide(FsOp::Write, &p, 2), FsFault::None);
+        let guard = plan.install(&dir);
+        // a single attempt fails; the capped retry clears on attempt 2
+        assert!(atomic_write(&p, b"payload").is_err());
+        assert!(atomic_write_retry(&p, b"payload", 2).is_err());
+        assert_eq!(atomic_write_retry(&p, b"payload", 3).unwrap(), 2);
+        assert_eq!(fs::read(&p).unwrap(), b"payload");
+        drop(guard);
+        assert_eq!(atomic_write_retry(&p, b"clean", 3).unwrap(), 0);
+    }
+
+    #[test]
+    fn read_faults_inject_transiently_and_clear_when_uninstalled() {
+        let dir = std::env::temp_dir().join("msfp_io_read_faults");
+        let _ = fs::remove_dir_all(&dir);
+        let p = dir.join("blob.bin");
+        atomic_write(&p, b"contents").unwrap();
+        let guard = FaultFs { read_eio_per_mille: 1000, ..FaultFs::new(3) }.install(&dir);
+        let err = read_file(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        // rate 1000 faults every attempt, so the capped retry fails too
+        assert!(read_file_retry(&p, RESTORE_ATTEMPTS).is_err());
+        drop(guard);
+        assert_eq!(read_file(&p).unwrap(), b"contents");
+        assert_eq!(read_file_retry(&p, RESTORE_ATTEMPTS).unwrap(), b"contents");
     }
 }

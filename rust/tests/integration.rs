@@ -646,15 +646,16 @@ fn server_restart_resumes_sketch_window_and_hot_swap_decisions() {
     std::env::remove_var("MSFP_RUNS");
 }
 
-/// The overload contract: against a queue budget with a pre-built degraded
-/// variant, best-effort requests past their deadline are explicitly shed,
-/// interactive requests are downgraded (admission step cuts + lower-bit
-/// rounds), and every decision — plus each survivor's output bits — is a
-/// pure function of the queue snapshot, identical for 1 vs N workers.
+/// The overload contract: against a queue budget with a pre-built
+/// degradation ladder, best-effort requests past their deadline are
+/// explicitly shed, interactive requests are downgraded (admission step
+/// cuts + ladder-rung rounds, deeper backlog → coarser rung), and every
+/// decision — plus each survivor's output bits — is a pure function of
+/// the queue snapshot, identical for 1 vs N workers.
 #[test]
 fn overload_sheds_and_degrades_deterministically_across_workers() {
     let Some(dir) = artifacts() else { return };
-    use msfp::coordinator::{degraded_state, Response, SloCfg, SloClass};
+    use msfp::coordinator::{degraded_state, LadderRung, Response, SloCfg, SloClass};
     let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
     let info = pl.manifest.model("ddim16").unwrap().clone();
     let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
@@ -672,13 +673,21 @@ fn overload_sheds_and_degrades_deterministically_across_workers() {
         strategy: AllocStrategy::Learned,
         t_total: 100,
     };
-    // degraded stand-in: same state, coarser qparams (what a lower-bit
-    // re-search would hand back via `QuantSession::degraded_qparams`)
-    let mut deg_qp = qp;
+    // two-rung ladder of stand-ins: same state, progressively coarser
+    // qparams (what W3/W2 re-searches would hand back via
+    // `QuantSession::degraded_qparams`). Backlog depth picks the rung.
+    let mut deg_qp = qp.clone();
     for v in deg_qp.iter_mut().step_by(2) {
         *v *= 0.5;
     }
-    let degraded = degraded_state(&qs, deg_qp);
+    let mut deg_qp2 = qp;
+    for v in deg_qp2.iter_mut().step_by(2) {
+        *v *= 0.25;
+    }
+    let ladder = vec![
+        LadderRung { wbits: 3, abits: 4, state: degraded_state(&qs, deg_qp) },
+        LadderRung { wbits: 2, abits: 4, state: degraded_state(&qs, deg_qp2) },
+    ];
 
     // backlog of 18 samples against a budget of 4: overloaded from round
     // one. Classes cycle; the last request is a best-effort job whose
@@ -717,7 +726,7 @@ fn overload_sheds_and_degrades_deterministically_across_workers() {
             ServerCfg {
                 seed: 13,
                 workers,
-                slo: SloCfg { queue_budget: 4, step_cut: 2, degraded: Some(degraded.clone()) },
+                slo: SloCfg { queue_budget: 4, step_cut: 2, ladder: ladder.clone() },
                 ..ServerCfg::new(ServeMode::Quant(qs.clone()))
             },
         );
@@ -748,6 +757,16 @@ fn overload_sheds_and_degrades_deterministically_across_workers() {
         outs.iter().any(|o| matches!(o, Out::Done { degraded: true, .. })),
         "no completion rode the degraded variant"
     );
+    // the 18-sample backlog against budget 4 opens deep enough to hit the
+    // coarsest rung, and drains through the milder one on the way down
+    assert_eq!(m.rung_rounds.len(), 2, "{}", m.report());
+    assert!(m.rung_rounds[1] >= 1, "deep backlog never hit the coarse rung: {}", m.report());
+    assert_eq!(
+        m.rung_rounds.iter().sum::<usize>(),
+        m.downgraded_rounds,
+        "every degraded round must land on exactly one rung: {}",
+        m.report()
+    );
     for o in &outs {
         if let Out::Done { bits, .. } = o {
             assert!(bits.iter().all(|b| f32::from_bits(*b).is_finite()));
@@ -759,6 +778,7 @@ fn overload_sheds_and_degrades_deterministically_across_workers() {
         assert_eq!(m.shed, m_n.shed, "workers={workers} changed shed counts");
         assert_eq!(m.downgraded_rounds, m_n.downgraded_rounds);
         assert_eq!(m.downgraded_steps, m_n.downgraded_steps);
+        assert_eq!(m.rung_rounds, m_n.rung_rounds, "workers={workers} changed rung choices");
         assert_eq!(m.images_done, m_n.images_done);
         assert_eq!(m.rounds, m_n.rounds, "workers={workers} changed round count");
     }
@@ -948,6 +968,475 @@ fn truncated_sketch_state_cold_starts_and_recovers() {
     // shutdown re-persisted a valid window over the corrupt file
     SketchSet::load(&sd.sketch_path())
         .expect("shutdown must overwrite the corrupt window with a valid snapshot");
+    std::env::remove_var("MSFP_RUNS");
+}
+
+/// The crash-consistency soak: a server killed at *any* seeded storage
+/// fault point — torn checkpoint write, transient/permanent EIO, crash
+/// before rename — restarts from its StateDir and reproduces an
+/// uninterrupted run's hot-swap decisions (round, layer count) and served
+/// image bits exactly. Failed checkpoint writes must leave the previous
+/// complete snapshot byte-identical on disk, never strand a tmp file, and
+/// surface in the `ckpt_fails`/`ckpt_retries` counters.
+#[test]
+fn chaos_checkpoint_kill_points_preserve_restart_decisions() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::{Metrics, ServeRecal};
+    use msfp::quant::msfp::{Method, QuantOpts, StateDir};
+    use msfp::recal::SketchSet;
+    use msfp::util::io::FaultFs;
+    use std::sync::Mutex;
+
+    std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_integ_chaos"));
+    let state_root = std::env::temp_dir().join("msfp_integ_chaos_state");
+    let _ = std::fs::remove_dir_all(&state_root);
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let p = pl.prepare(Corpus::CifarSyn).unwrap();
+    let info = p.info.clone();
+    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4)
+        .with_io_8bit(&info.io_layer_indices());
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(p.params.clone());
+    let mut spec = MethodSpec::ours(4, 2, 0);
+    spec.finetune = None;
+
+    let workload = || -> Vec<Request> {
+        (0..6u64)
+            .map(|i| {
+                let mut r = Request::new(0, 2, 6);
+                r.seed = 140 + i;
+                r
+            })
+            .collect()
+    };
+    // the mid-drift window (same construction as the restart test)
+    let drifted_window = |calib: &[msfp::quant::msfp::LayerCalib]| -> SketchSet {
+        let mut set = SketchSet::new(info.n_layers, 4, 256, pl.sched.t_total, 17);
+        let mut rng = Rng::new(18);
+        for (l, c) in calib.iter().enumerate() {
+            for chunk in c.acts.chunks(128) {
+                let t = rng.range(0.0, pl.sched.t_total as f32);
+                let vals: Vec<f32> = chunk.iter().map(|v| v + 1.0).collect();
+                set.observe(l, t, &vals);
+            }
+            set.widen_layer(l, 0.0, c.min + 1.0, c.max + 1.0);
+        }
+        set
+    };
+    // workers=1: the inline drift check makes swap timing deterministic
+    let serve = |window: SketchSet,
+                 sd: Option<StateDir>,
+                 submit: bool|
+     -> (Vec<Vec<u32>>, Metrics) {
+        let session = pl.build_session(&p).unwrap();
+        let q = pl.quantize_with_session(&p, &session, &spec).unwrap();
+        let sketches = Arc::new(Mutex::new(window));
+        let mut r = ServeRecal::new(session, opts.clone(), sketches);
+        r.every_rounds = 1;
+        r.state_dir = sd;
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            ServerCfg {
+                seed: 21,
+                workers: 1,
+                recal: Some(r),
+                ..ServerCfg::new(ServeMode::Quant(q.state))
+            },
+        );
+        let images: Vec<Vec<u32>> = if submit {
+            let rxs = handle.submit_many(workload()).unwrap();
+            rxs.into_iter()
+                .map(|rx| rx.recv().unwrap().unwrap_done().images.iter().map(|v| v.to_bits()).collect())
+                .collect()
+        } else {
+            Vec::new()
+        };
+        (images, handle.shutdown())
+    };
+    let no_strays = || {
+        for e in std::fs::read_dir(&state_root).unwrap() {
+            let name = e.unwrap().file_name().to_string_lossy().into_owned();
+            assert!(!name.contains(".tmp."), "stray tmp file survived a fault: {name}");
+        }
+    };
+
+    let session = pl.build_session(&p).unwrap();
+    let window = drifted_window(session.calib());
+    drop(session);
+
+    // run A: uninterrupted, no state dir — the ground-truth decisions
+    let (imgs_a, m_a) = serve(window.clone(), None, true);
+    assert!(m_a.recal_swaps >= 1, "no swap in the baseline run: {}", m_a.report());
+
+    // seed the state dir: a server that accumulated the same window but
+    // was killed before serving — its only trace is the persisted window
+    let sd = StateDir::new(&state_root);
+    serve(window.clone(), Some(sd.clone()), false);
+    let snap0 = std::fs::read(sd.sketch_path()).unwrap();
+
+    // kill-point matrix: every checkpoint write hits the fault (rate
+    // 1000). The restarted server must still reproduce run A bit-exactly
+    // — checkpointing is best-effort, never load-bearing for decisions —
+    // and the failed writes must leave the seeded snapshot untouched.
+    let kill_points = [
+        ("torn write", FaultFs { torn_per_mille: 1000, ..FaultFs::new(4) }),
+        ("permanent EIO", FaultFs { eio_per_mille: 1000, ..FaultFs::new(4) }),
+        ("crash before rename", FaultFs { crash_per_mille: 1000, ..FaultFs::new(4) }),
+    ];
+    for (kind, plan) in kill_points {
+        let guard = plan.install(&state_root);
+        let blind = SketchSet::new(info.n_layers, 4, 256, pl.sched.t_total, 17);
+        let (imgs_f, m_f) = serve(blind, Some(sd.clone()), true);
+        drop(guard);
+        assert_eq!(imgs_f, imgs_a, "{kind}: restart changed served bits");
+        assert_eq!(m_f.recal_swaps, m_a.recal_swaps, "{kind}: swap count changed");
+        assert_eq!(m_f.recal_layers, m_a.recal_layers, "{kind}: swapped layers changed");
+        assert_eq!(m_f.first_swap_round, m_a.first_swap_round, "{kind}: swap round changed");
+        assert!(m_f.ckpt_fails >= 2, "{kind}: fault never surfaced: {}", m_f.report());
+        assert_eq!(
+            std::fs::read(sd.sketch_path()).unwrap(),
+            snap0,
+            "{kind}: a failed checkpoint corrupted the snapshot on disk"
+        );
+        assert!(!sd.quant_path().exists(), "{kind}: a failed write landed anyway");
+        no_strays();
+    }
+
+    // transient EIO (seed 0, 600‰): writes clear within the retry cap —
+    // the run reproduces A, counts retries, and the checkpoint lands
+    let guard = FaultFs { eio_per_mille: 600, ..FaultFs::new(0) }.install(&state_root);
+    let (imgs_t, m_t) =
+        serve(SketchSet::new(info.n_layers, 4, 256, pl.sched.t_total, 17), Some(sd.clone()), true);
+    drop(guard);
+    assert_eq!(imgs_t, imgs_a, "transient faults changed served bits");
+    assert_eq!(m_t.recal_swaps, m_a.recal_swaps);
+    assert_eq!(m_t.ckpt_fails, 0, "transient faults must clear in retries: {}", m_t.report());
+    assert!(m_t.ckpt_retries >= 1, "no retry was counted: {}", m_t.report());
+    assert!(sd.quant_path().exists(), "retried checkpoint never landed");
+    no_strays();
+
+    // final clean restart on the surviving state dir: still run A
+    let (imgs_c, m_c) =
+        serve(SketchSet::new(info.n_layers, 4, 256, pl.sched.t_total, 17), Some(sd.clone()), true);
+    assert_eq!(imgs_c, imgs_a, "clean restart after the storm changed served bits");
+    assert_eq!(m_c.recal_swaps, m_a.recal_swaps);
+    let restored = QuantState::load(&info, &sd.quant_path()).unwrap();
+    assert_eq!(restored.qparams.len(), info.n_layers * 8);
+    std::env::remove_var("MSFP_RUNS");
+}
+
+/// The live-reconfiguration contract: `ServerHandle::reconfigure` swaps
+/// queue budget, step cut and the degradation ladder between rounds of a
+/// running server — before it, an overload workload sails through
+/// unthrottled; after it, the same workload sheds and degrades — and the
+/// whole two-phase sequence replays bit-identically for 1 vs N workers.
+#[test]
+fn reconfigure_and_ladder_rungs_are_deterministic_across_workers() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::{degraded_state, LadderRung, Response, SloCfg, SloClass};
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let info = pl.manifest.model("ddim16").unwrap().clone();
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(msfp::model::ParamStore::load_init(&info, &dir).unwrap().flat);
+    let mut rng = Rng::new(7);
+    let mut qp = Vec::new();
+    for _ in 0..info.n_layers {
+        qp.extend_from_slice(&[1.0, 2.0, 1.0, 1.0, 4.0, 2.0, 1.0, -0.2]);
+    }
+    let qs = QuantState {
+        qparams: qp.clone(),
+        lora: vec![0.0; info.lora_size],
+        router: Router::init(&info, &mut rng),
+        hub_mask: vec![1.0, 1.0, 0.0, 0.0],
+        strategy: AllocStrategy::Learned,
+        t_total: 100,
+    };
+    let mut deg_qp = qp.clone();
+    for v in deg_qp.iter_mut().step_by(2) {
+        *v *= 0.5;
+    }
+    let mut deg_qp2 = qp;
+    for v in deg_qp2.iter_mut().step_by(2) {
+        *v *= 0.25;
+    }
+    let ladder = vec![
+        LadderRung { wbits: 3, abits: 4, state: degraded_state(&qs, deg_qp) },
+        LadderRung { wbits: 2, abits: 4, state: degraded_state(&qs, deg_qp2) },
+    ];
+    let workload = |base: u64| -> Vec<Request> {
+        let mut v: Vec<Request> = (0..9u64)
+            .map(|i| {
+                let mut r = Request::new(i, 1 + (i as usize % 2), 4 + (i as usize % 3))
+                    .with_slo(match i % 3 {
+                        0 => SloClass::Interactive,
+                        1 => SloClass::Batch,
+                        _ => SloClass::BestEffort,
+                    });
+                r.seed = base + i;
+                r
+            })
+            .collect();
+        let mut doomed = Request::new(99, 4, 6).with_slo(SloClass::BestEffort);
+        doomed.seed = base + 99;
+        doomed.deadline_rounds = 1;
+        v.push(doomed);
+        v
+    };
+    #[derive(Debug, PartialEq)]
+    enum Out {
+        Done { bits: Vec<u32>, degraded: bool },
+        Shed(String),
+    }
+    let collect = |rxs: Vec<msfp::coordinator::ResponseRx>| -> Vec<Out> {
+        rxs.into_iter()
+            .map(|rx| match rx.recv().unwrap() {
+                Response::Done(c) => Out::Done {
+                    bits: c.images.iter().map(|v| v.to_bits()).collect(),
+                    degraded: c.degraded,
+                },
+                Response::Shed { class, reason, .. } => Out::Shed(format!("{class:?}: {reason}")),
+            })
+            .collect()
+    };
+    let run = |workers: usize| {
+        // spawned wide open: no budget, no ladder
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            ServerCfg { seed: 13, workers, ..ServerCfg::new(ServeMode::Quant(qs.clone())) },
+        );
+        // phase 1: the overload workload sails through unthrottled
+        let outs1 = collect(handle.submit_many(workload(400)).unwrap());
+        // live tighten: budget + step cut + two-rung ladder. Channel
+        // order puts this before phase 2's submission, and the scheduler
+        // applies it between rounds — so phase 2 runs entirely under the
+        // new knobs for any worker count.
+        handle
+            .reconfigure(SloCfg { queue_budget: 4, step_cut: 2, ladder: ladder.clone() })
+            .unwrap();
+        // phase 2: the same workload now sheds and degrades
+        let outs2 = collect(handle.submit_many(workload(500)).unwrap());
+        (outs1, outs2, handle.shutdown())
+    };
+
+    let (outs1, outs2, m) = run(1);
+    assert!(
+        outs1.iter().all(|o| matches!(o, Out::Done { degraded: false, .. })),
+        "pre-reconfigure phase must be unthrottled"
+    );
+    assert!(
+        matches!(&outs2[outs2.len() - 1], Out::Shed(s) if s.contains("deadline")),
+        "post-reconfigure doomed request was not shed: {:?}",
+        outs2.last()
+    );
+    assert!(
+        outs2.iter().any(|o| matches!(o, Out::Done { degraded: true, .. })),
+        "no post-reconfigure completion rode a ladder rung"
+    );
+    assert_eq!(m.reconfigures, 1, "{}", m.report());
+    assert!(m.downgraded_rounds >= 1, "{}", m.report());
+    assert_eq!(m.rung_rounds.len(), 2, "{}", m.report());
+    assert_eq!(m.rung_rounds.iter().sum::<usize>(), m.downgraded_rounds, "{}", m.report());
+    for workers in [4usize] {
+        let (o1, o2, m_n) = run(workers);
+        assert_eq!(outs1, o1, "workers={workers} changed pre-reconfigure outcomes");
+        assert_eq!(outs2, o2, "workers={workers} changed post-reconfigure outcomes");
+        assert_eq!(m.shed, m_n.shed);
+        assert_eq!(m.downgraded_rounds, m_n.downgraded_rounds);
+        assert_eq!(m.downgraded_steps, m_n.downgraded_steps);
+        assert_eq!(m.rung_rounds, m_n.rung_rounds, "workers={workers} changed rung choices");
+        assert_eq!(m.rounds, m_n.rounds);
+    }
+}
+
+/// A corrupt (truncated) persisted packed blob must not take a packed-
+/// backend server down: `PackedModel::load` stays loud with a distinct
+/// parse error, the server falls back to rebuilding the packed weights
+/// from the f32 store, serves normally, and re-persists a loadable blob
+/// for the next start.
+#[test]
+fn corrupt_packed_blob_falls_back_and_repersists() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::ServeRecal;
+    use msfp::quant::msfp::{Method, QuantOpts, StateDir};
+    use msfp::quant::PackedModel;
+    use msfp::recal::SketchSet;
+    use std::sync::Mutex;
+
+    std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_integ_packed_corrupt"));
+    let state_root = std::env::temp_dir().join("msfp_integ_packed_corrupt_state");
+    let _ = std::fs::remove_dir_all(&state_root);
+    std::fs::create_dir_all(&state_root).unwrap();
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let p = pl.prepare(Corpus::CifarSyn).unwrap();
+    let info = p.info.clone();
+    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4)
+        .with_io_8bit(&info.io_layer_indices());
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(p.params.clone());
+    let mut spec = MethodSpec::ours(4, 2, 0);
+    spec.finetune = None;
+    let session = pl.build_session(&p).unwrap();
+    let q = pl.quantize_with_session(&p, &session, &spec).unwrap();
+
+    // persist a valid packed blob, then truncate it — a crash mid-update
+    let sd = StateDir::new(&state_root);
+    let valid = den.packed_blob(&params, &q.state).unwrap();
+    std::fs::write(sd.packed_path(), &valid[..valid.len() / 2]).unwrap();
+    let err = PackedModel::load(&sd.packed_path()).unwrap_err();
+    assert!(format!("{err:#}").contains("parsing"), "unexpected error: {err:#}");
+
+    // the packed-backend server warns, rebuilds from the f32 store, and
+    // serves; startup re-persists a loadable blob over the corrupt one
+    let sketches =
+        Arc::new(Mutex::new(SketchSet::new(info.n_layers, 4, 128, pl.sched.t_total, 5)));
+    let mut r = ServeRecal::new(session, opts, sketches);
+    r.every_rounds = 10_000; // park the detector: this test is about restore
+    r.state_dir = Some(sd.clone());
+    let handle = coordinator::spawn(
+        Arc::clone(&den),
+        info.clone(),
+        pl.sched.clone(),
+        Arc::clone(&params),
+        ServerCfg {
+            seed: 23,
+            workers: 1,
+            recal: Some(r),
+            backend: Backend::Packed,
+            ..ServerCfg::new(ServeMode::Quant(q.state.clone()))
+        },
+    );
+    let rxs = handle
+        .submit_many(
+            (0..3u64)
+                .map(|i| {
+                    let mut r = Request::new(i, 1, 3);
+                    r.seed = 170 + i;
+                    r
+                })
+                .collect(),
+        )
+        .unwrap();
+    for rx in rxs {
+        let c = rx.recv().unwrap().unwrap_done();
+        assert!(c.images.iter().all(|v| v.is_finite()));
+    }
+    let m = handle.shutdown();
+    assert_eq!(m.images_done, 3);
+    assert_eq!(m.ckpt_fails, 0, "{}", m.report());
+    // the re-persisted blob is complete and byte-identical to a fresh pack
+    let reloaded = PackedModel::load(&sd.packed_path())
+        .expect("startup must overwrite the corrupt blob with a loadable one");
+    assert_eq!(reloaded.to_bytes(), valid, "re-persisted blob drifted from a fresh pack");
+    std::env::remove_var("MSFP_RUNS");
+}
+
+/// Recal-check fault coverage: an injected panic mid-application discards
+/// the half-applied plan (no swap ever lands), clears `inflight` so the
+/// check cadence keeps running, and never wedges serving or shutdown; an
+/// injected slowdown changes nothing but wall time — swap decisions and
+/// served bits stay bit-identical to the fault-free run.
+#[test]
+fn recal_check_faults_never_wedge_or_half_apply() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::{FaultPlan, Metrics, ServeRecal};
+    use msfp::quant::msfp::{Method, QuantOpts};
+    use msfp::recal::SketchSet;
+    use std::sync::Mutex;
+
+    std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_integ_recal_faults"));
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let p = pl.prepare(Corpus::CifarSyn).unwrap();
+    let info = p.info.clone();
+    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4)
+        .with_io_8bit(&info.io_layer_indices());
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(p.params.clone());
+    let mut spec = MethodSpec::ours(4, 2, 0);
+    spec.finetune = None;
+
+    let drifted_window = |calib: &[msfp::quant::msfp::LayerCalib]| -> SketchSet {
+        let mut set = SketchSet::new(info.n_layers, 4, 256, pl.sched.t_total, 17);
+        let mut rng = Rng::new(18);
+        for (l, c) in calib.iter().enumerate() {
+            for chunk in c.acts.chunks(128) {
+                let t = rng.range(0.0, pl.sched.t_total as f32);
+                let vals: Vec<f32> = chunk.iter().map(|v| v + 1.0).collect();
+                set.observe(l, t, &vals);
+            }
+            set.widen_layer(l, 0.0, c.min + 1.0, c.max + 1.0);
+        }
+        set
+    };
+    let serve = |faults: FaultPlan| -> (Vec<Vec<u32>>, Metrics) {
+        let session = pl.build_session(&p).unwrap();
+        let q = pl.quantize_with_session(&p, &session, &spec).unwrap();
+        let window = drifted_window(session.calib());
+        let sketches = Arc::new(Mutex::new(window));
+        let mut r = ServeRecal::new(session, opts.clone(), sketches);
+        r.every_rounds = 1;
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            ServerCfg {
+                seed: 21,
+                workers: 1,
+                recal: Some(r),
+                faults,
+                ..ServerCfg::new(ServeMode::Quant(q.state))
+            },
+        );
+        let rxs = handle
+            .submit_many(
+                (0..6u64)
+                    .map(|i| {
+                        let mut r = Request::new(0, 2, 6);
+                        r.seed = 240 + i;
+                        r
+                    })
+                    .collect(),
+            )
+            .unwrap();
+        let images: Vec<Vec<u32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap_done().images.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        (images, handle.shutdown())
+    };
+
+    // baseline: the drifted window triggers at least one hot-swap
+    let (imgs_ok, m_ok) = serve(FaultPlan::default());
+    assert!(m_ok.recal_swaps >= 1, "no baseline swap: {}", m_ok.report());
+
+    // every check panics mid-application: the first check advances the
+    // drift baseline then dies, so nothing is ever parked — no swap, no
+    // half-applied qparams — while the cadence (and serving) run on
+    let (imgs_p, m_p) =
+        serve(FaultPlan { recal_panic_per_mille: 1000, ..FaultPlan::new(31) });
+    assert_eq!(m_p.recal_swaps, 0, "a half-applied plan reached a round: {}", m_p.report());
+    assert!(m_p.recal_checks >= 2, "a panicked check wedged the cadence: {}", m_p.report());
+    assert!(m_p.faults_injected >= m_p.recal_checks, "{}", m_p.report());
+    assert_eq!(imgs_p.len(), imgs_ok.len(), "panicked checks lost requests");
+    for img in &imgs_p {
+        assert!(img.iter().all(|b| f32::from_bits(*b).is_finite()));
+    }
+
+    // every check stalls first: decisions and bits must not move
+    let (imgs_s, m_s) = serve(FaultPlan {
+        recal_slow_per_mille: 1000,
+        slow_ms: 1,
+        ..FaultPlan::new(31)
+    });
+    assert_eq!(imgs_s, imgs_ok, "a slow check changed served bits");
+    assert_eq!(m_s.recal_swaps, m_ok.recal_swaps, "a slow check changed swap decisions");
+    assert!(m_s.faults_injected >= 1, "{}", m_s.report());
     std::env::remove_var("MSFP_RUNS");
 }
 

@@ -18,6 +18,10 @@
 #                                              determinism integration tests
 #   packed-backend smoke                       named re-run of the packed-
 #                                              vs-graph serving parity test
+#   chaos soak                                 named re-run of the storage-
+#                                              fault kill-point soak and the
+#                                              live-reconfigure determinism
+#                                              test
 #   test-count floor                           the summed `N passed` totals
 #                                              must not drop below
 #                                              scripts/test_floor.txt, so a
@@ -63,6 +67,14 @@ echo "== packed-backend smoke (native fused path vs graph oracle) =="
 # integration tests)
 cargo test -q --test integration \
     packed_backend_serving_matches_graph_oracle
+
+echo "== chaos soak (storage-fault kill points + live reconfiguration) =="
+# the crash-consistency story gets its own CI line: a server killed at any
+# seeded checkpoint fault point must restart bit-identically, and a live
+# SLO reconfigure must replay the same for any worker count
+cargo test -q --test integration \
+    chaos_checkpoint_kill_points_preserve_restart_decisions \
+    reconfigure_and_ladder_rungs_are_deterministic_across_workers
 
 echo "== test-count regression guard =="
 total=$(grep -E 'test result: ok' "$test_log" \
