@@ -11,6 +11,10 @@
 //!   * `serve_eval_{fp,q}_b{B}` timing rows (per-eval latency by class);
 //!   * `coordinator_sequential_exec` / `coordinator_parallel` img/s rows;
 //!   * `selection_cache_hit_rate` + round exec/sched split metric rows;
+//!   * `trace_overhead` / `trace_overhead_ratio`: mean-round-latency delta
+//!     of the parallel run (flight recorder + telemetry on by default) vs
+//!     the same workload with `ObsCfg::off()` — the observability layer's
+//!     scheduler cost, budgeted at < 2% of mean round time;
 //!   * `hot_swap_stall`: mean-round-latency delta of a serve run whose
 //!     background recalibration lands qparams hot-swaps vs the same run
 //!     without recalibration (the cost of swap application + check
@@ -38,8 +42,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use msfp::coordinator::{
-    self, degraded_state, LadderRung, Metrics, Request, ServeMode, ServeRecal, ServerCfg, SloCfg,
-    SloClass,
+    self, degraded_state, LadderRung, Metrics, ObsCfg, Request, ServeMode, ServeRecal, ServerCfg,
+    SloCfg, SloClass,
 };
 use msfp::lora::hub::AllocStrategy;
 use msfp::lora::Router;
@@ -212,6 +216,48 @@ fn main() {
         seq_m.exec_fraction(),
         "ratio",
     ));
+
+    // --- trace overhead: flight recorder + telemetry on vs off ------------
+    // The default config records every scheduling decision into the
+    // bounded event ring and pushes one telemetry sample per round; the
+    // parallel run above is that recorder-on configuration. The same
+    // workload with `ObsCfg::off()` measures what the observability layer
+    // costs the scheduler loop — budgeted at < 2% of mean round time.
+    println!("\n-- trace overhead (flight recorder + telemetry on vs off) --");
+    let handle = coordinator::spawn(
+        Arc::clone(&den),
+        info.clone(),
+        sched.clone(),
+        Arc::clone(&params),
+        ServerCfg {
+            seed: 1,
+            workers: 0,
+            obs: ObsCfg::off(),
+            ..ServerCfg::new(ServeMode::Quant(qs.clone()))
+        },
+    );
+    let rxs = handle.submit_many(workload()).unwrap();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let off_m = handle.shutdown();
+    let trace_overhead = mean_round_ms(&par_m) - mean_round_ms(&off_m);
+    let trace_ratio =
+        if mean_round_ms(&off_m) > 0.0 { trace_overhead / mean_round_ms(&off_m) } else { 0.0 };
+    println!(
+        "  mean round {:.3} ms (recorder on, {} events) vs {:.3} ms (off) -> overhead {:+.3} ms ({:+.2}%)",
+        mean_round_ms(&par_m),
+        par_m.trace_events,
+        mean_round_ms(&off_m),
+        trace_overhead,
+        trace_ratio * 100.0
+    );
+    if trace_ratio > 0.02 {
+        println!("  WARNING: trace overhead above the 2% budget");
+    }
+    rows.push(metric_row("coordinator_round_ms_trace_off", mean_round_ms(&off_m), "ms"));
+    rows.push(metric_row("trace_overhead", trace_overhead, "ms"));
+    rows.push(metric_row("trace_overhead_ratio", trace_ratio, "ratio"));
 
     // --- hot-swap stall: round latency with a recal swap landing ----------
     // The recal session runs over the real layer weights with a synthetic

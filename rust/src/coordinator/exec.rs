@@ -47,6 +47,19 @@ pub enum Fault {
     Slow(u64),
 }
 
+impl Fault {
+    /// Stable wire tag for `obs` event payloads (`EventKind::Fault` /
+    /// `EventKind::RecalCheck`): 0 = none, 1 = fail, 2 = panic, 3 = slow.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Fault::None => 0,
+            Fault::Fail => 1,
+            Fault::Panic => 2,
+            Fault::Slow(_) => 3,
+        }
+    }
+}
+
 /// Deterministic fault-injection schedule for the serving coordinator.
 ///
 /// Faults are decided per (scheduling round, batch index) by hashing with

@@ -1,15 +1,21 @@
 //! Serving metrics: latency percentiles, throughput, batching efficiency,
 //! and the round-execution vs scheduling-overhead split of the parallel
 //! round executor.
+//!
+//! The raw sample series live here; [`Metrics::snapshot`] condenses them
+//! into the structured, serializable `obs::MetricsSnapshot`, and the
+//! human-oriented [`Metrics::report`] string is a renderer over that
+//! snapshot (the exact pre-snapshot format, pinned by the tests below).
 
 use std::time::Duration;
 
 use super::request::SloClass;
+use crate::obs::{MetricsSnapshot, SwapAudit};
 
 /// Floor-index percentile over an unsorted series, q in [0, 1]: the
 /// sorted element at `floor((len-1) * q)`; 0 on an empty series. The one
 /// percentile definition every series in [`Metrics`] uses.
-fn percentile_u64(series: &[u64], q: f64) -> u64 {
+pub(crate) fn percentile_u64(series: &[u64], q: f64) -> u64 {
     if series.is_empty() {
         return 0;
     }
@@ -92,6 +98,17 @@ pub struct Metrics {
     /// overloaded rounds served per degradation-ladder rung (index 0 =
     /// mildest); empty when no ladder is configured or no round degraded
     pub rung_rounds: Vec<usize>,
+    /// flight-recorder events emitted over the serve lifetime (0 when the
+    /// recorder is disabled)
+    pub trace_events: usize,
+    /// recorder events evicted by the bounded ring
+    pub trace_dropped: usize,
+    /// postmortem trace/telemetry dumps written (shed storms, injected
+    /// faults, recal panics, shutdown)
+    pub postmortems: usize,
+    /// full audit record of every recal hot-swap, in landing order (also
+    /// carried in the trace postmortem)
+    pub swap_audits: Vec<SwapAudit>,
 }
 
 impl Metrics {
@@ -169,88 +186,73 @@ impl Metrics {
         }
     }
 
+    /// Condense the raw series into the structured, serializable
+    /// `obs::MetricsSnapshot`: every derived quantity (throughput,
+    /// percentiles, fractions) precomputed, per-class wait percentiles
+    /// and maxima materialized, counters widened to u64. The snapshot —
+    /// not this struct — is the export surface: exact JSON roundtrip and
+    /// a Prometheus-style exposition live on it.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let wp = |i: usize, q: f64| percentile_u64(&self.queue_waits[i], q);
+        let wmax = |i: usize| self.queue_waits[i].iter().copied().max().unwrap_or(0);
+        MetricsSnapshot {
+            requests: self.latencies.len() as u64,
+            images: self.images_done as u64,
+            evals: self.evals as u64,
+            rounds: self.rounds as u64,
+            backend: self.backend_tag().to_string(),
+            packed_bytes: self.packed_bytes as u64,
+            wall_s: self.wall.as_secs_f64(),
+            throughput: self.throughput(),
+            latency_p50_ms: self.latency_p(0.5).as_secs_f64() * 1e3,
+            latency_p95_ms: self.latency_p(0.95).as_secs_f64() * 1e3,
+            mean_batch: self.mean_batch(),
+            mean_fill: self.mean_fill(),
+            round_exec_ms: self.round_exec.as_secs_f64() * 1e3,
+            round_sched_ms: self.round_sched.as_secs_f64() * 1e3,
+            exec_fraction: self.exec_fraction(),
+            sel_hits: self.sel_hits,
+            sel_misses: self.sel_misses,
+            sel_hit_rate: self.sel_hit_rate(),
+            recal_checks: self.recal_checks as u64,
+            recal_swaps: self.recal_swaps as u64,
+            recal_layers: self.recal_layers as u64,
+            first_swap_round: self.first_swap_round.map(|r| r as u64),
+            probes: self.probes as u64,
+            probes_skipped: self.probes_skipped as u64,
+            probes_failed: self.probes_failed as u64,
+            wait_p50: [wp(0, 0.5), wp(1, 0.5), wp(2, 0.5)],
+            wait_p99: [wp(0, 0.99), wp(1, 0.99), wp(2, 0.99)],
+            wait_max: [wmax(0), wmax(1), wmax(2)],
+            shed: [self.shed[0] as u64, self.shed[1] as u64, self.shed[2] as u64],
+            downgraded_rounds: self.downgraded_rounds as u64,
+            downgraded_steps: self.downgraded_steps as u64,
+            cancelled: self.cancelled as u64,
+            retries: self.retries as u64,
+            faults_injected: self.faults_injected as u64,
+            compile_attempts: self.compile_attempts as u64,
+            compile_exhausted: self.compile_exhausted as u64,
+            ckpt_fails: self.ckpt_fails as u64,
+            ckpt_retries: self.ckpt_retries as u64,
+            reconfigures: self.reconfigures as u64,
+            rung_rounds: self.rung_rounds.iter().map(|&r| r as u64).collect(),
+            trace_events: self.trace_events as u64,
+            trace_dropped: self.trace_dropped as u64,
+            postmortems: self.postmortems as u64,
+        }
+    }
+
+    /// The classic one-line serving report — now a renderer over
+    /// [`Metrics::snapshot`] (byte-identical to the pre-snapshot format).
     pub fn report(&self) -> String {
-        let packed = if self.packed_bytes > 0 {
-            format!(" ({:.1} KiB packed)", self.packed_bytes as f64 / 1024.0)
-        } else {
-            String::new()
-        };
-        format!(
-            "requests {:4}  images {:5}  evals {:6}  rounds {:5}  backend {}{}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%  exec {:6.1} ms / sched {:6.1} ms ({:3.0}% exec)  sel-hit {:3.0}%  recal {}/{} swaps ({} layers)  probes {} ({} skipped, {} failed){}",
-            self.latencies.len(),
-            self.images_done,
-            self.evals,
-            self.rounds,
-            self.backend_tag(),
-            packed,
-            self.throughput(),
-            self.latency_p(0.5).as_secs_f64() * 1e3,
-            self.latency_p(0.95).as_secs_f64() * 1e3,
-            self.mean_batch(),
-            self.mean_fill() * 100.0,
-            self.round_exec.as_secs_f64() * 1e3,
-            self.round_sched.as_secs_f64() * 1e3,
-            self.exec_fraction() * 100.0,
-            self.sel_hit_rate() * 100.0,
-            self.recal_swaps,
-            self.recal_checks,
-            self.recal_layers,
-            self.probes,
-            self.probes_skipped,
-            self.probes_failed,
-            self.slo_report()
-        )
+        self.snapshot().render()
     }
 
     /// SLO / robustness suffix of [`Metrics::report`]: empty when nothing
     /// SLO-related happened (the common quiet path), one line of per-class
     /// queue waits and shed/downgrade/retry/fault counters otherwise.
     pub fn slo_report(&self) -> String {
-        let quiet = self.queue_waits.iter().all(|w| w.iter().all(|&r| r == 0))
-            && self.shed_total() == 0
-            && self.downgraded_rounds == 0
-            && self.downgraded_steps == 0
-            && self.cancelled == 0
-            && self.retries == 0
-            && self.faults_injected == 0
-            && self.compile_exhausted == 0
-            && self.ckpt_fails == 0
-            && self.ckpt_retries == 0
-            && self.reconfigures == 0
-            && self.rung_rounds.iter().all(|&r| r == 0);
-        if quiet {
-            return String::new();
-        }
-        let mut s = String::from("\n  slo:");
-        for c in SloClass::ALL {
-            s.push_str(&format!(
-                " {:?} wait p50/p99 {}/{} rounds shed {};",
-                c,
-                self.queue_wait_p(c, 0.5),
-                self.queue_wait_p(c, 0.99),
-                self.shed[c.rank()],
-            ));
-        }
-        s.push_str(&format!(
-            "  downgraded {} rounds / {} step-cuts  cancelled {}  retries {}  faults {}  compile {} attempts ({} exhausted)",
-            self.downgraded_rounds,
-            self.downgraded_steps,
-            self.cancelled,
-            self.retries,
-            self.faults_injected,
-            self.compile_attempts,
-            self.compile_exhausted
-        ));
-        if !self.rung_rounds.is_empty() {
-            s.push_str(&format!("  ladder rounds {:?}", self.rung_rounds));
-        }
-        if self.ckpt_fails > 0 || self.ckpt_retries > 0 || self.reconfigures > 0 {
-            s.push_str(&format!(
-                "  ckpt {} fails / {} retries  reconfigures {}",
-                self.ckpt_fails, self.ckpt_retries, self.reconfigures
-            ));
-        }
-        s
+        self.snapshot().render_slo()
     }
 }
 
@@ -441,6 +443,63 @@ mod tests {
         assert!(r.contains("ckpt 1 fails / 3 retries"), "{r}");
         assert!(r.contains("reconfigures 2"), "{r}");
         assert!(r.contains("ladder rounds [4, 1]"), "{r}");
+    }
+
+    #[test]
+    fn snapshot_class_names_match_slo_class_debug() {
+        // obs::CLASS_NAMES duplicates the SloClass Debug names so obs has
+        // no coordinator dependency; pin them against drift
+        for (c, name) in SloClass::ALL.iter().zip(crate::obs::CLASS_NAMES) {
+            assert_eq!(format!("{c:?}"), name);
+            assert_eq!(c.rank(), crate::obs::CLASS_NAMES.iter().position(|&n| n == name).unwrap());
+        }
+    }
+
+    #[test]
+    fn snapshot_condenses_series_and_roundtrips() {
+        let mut m = Metrics {
+            images_done: 24,
+            evals: 300,
+            rounds: 9,
+            wall: Duration::from_millis(1500),
+            round_exec: Duration::from_millis(300),
+            round_sched: Duration::from_millis(100),
+            sel_hits: 9,
+            sel_misses: 1,
+            backend: "packed",
+            packed_bytes: 4096,
+            first_swap_round: Some(3),
+            rung_rounds: vec![2, 1],
+            trace_events: 88,
+            trace_dropped: 4,
+            postmortems: 1,
+            ..Default::default()
+        };
+        for ms in [10u64, 20, 30, 40] {
+            m.latencies.push(Duration::from_millis(ms));
+        }
+        m.queue_waits[SloClass::Batch.rank()].extend([0, 2, 4]);
+        m.shed[SloClass::BestEffort.rank()] = 1;
+        let snap = m.snapshot();
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.backend, "packed");
+        assert!((snap.throughput - m.throughput()).abs() < 1e-12);
+        assert!((snap.exec_fraction - 0.75).abs() < 1e-9);
+        assert_eq!(snap.wait_p50[SloClass::Batch.rank()], 2);
+        assert_eq!(snap.wait_max[SloClass::Batch.rank()], 4);
+        assert_eq!(snap.shed, [0, 0, 1]);
+        assert_eq!(snap.first_swap_round, Some(3));
+        assert_eq!(snap.rung_rounds, vec![2, 1]);
+        assert_eq!((snap.trace_events, snap.trace_dropped, snap.postmortems), (88, 4, 1));
+        // report stays a renderer over the snapshot
+        assert_eq!(m.report(), snap.render());
+        assert_eq!(m.slo_report(), snap.render_slo());
+        // and the snapshot survives its JSON form exactly
+        let text = snap.to_json().to_string();
+        let back =
+            crate::obs::MetricsSnapshot::from_json(&crate::util::json::Json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(back, snap);
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod metrics;
 pub mod prober;
 pub mod server;
 
+pub use crate::obs::ObsCfg;
 pub use batcher::{admit_edf, SloTicket};
 pub use exec::{Backend, Fault, FaultPlan, RoundExecutor};
 pub use metrics::Metrics;

@@ -32,6 +32,7 @@
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc, Mutex};
 
+use crate::obs::{EventKind, FlightRecorder};
 use crate::recal::SketchSet;
 use crate::runtime::Denoiser;
 
@@ -100,6 +101,10 @@ pub struct ShadowProber {
     pub sent: usize,
     pub skipped: usize,
     pub failed: usize,
+    /// the coordinator's flight recorder: each probing round emits one
+    /// `probe` event (sent/skipped) from the scheduler thread, so the
+    /// event is as deterministic as the selection itself
+    rec: Option<Arc<FlightRecorder>>,
 }
 
 impl ShadowProber {
@@ -109,6 +114,7 @@ impl ShadowProber {
         den: Arc<Denoiser>,
         params: Arc<Vec<f32>>,
         pads: PadPool,
+        rec: Option<Arc<FlightRecorder>>,
     ) -> ShadowProber {
         let act_samples = den.info.act_samples;
         let (done_tx, done_rx) = mpsc::channel();
@@ -119,6 +125,7 @@ impl ShadowProber {
             den,
             params,
             pads,
+            rec,
             snaps: Arc::new(Mutex::new(Vec::new())),
             done_tx,
             done_rx,
@@ -147,6 +154,15 @@ impl ShadowProber {
         }
         let picks = select_probes(cands, round, self.budget);
         self.skipped += cands.len() - picks.len();
+        if let Some(r) = &self.rec {
+            r.emit(
+                round,
+                EventKind::Probe {
+                    sent: picks.len() as u32,
+                    skipped: (cands.len() - picks.len()) as u32,
+                },
+            );
+        }
         for c in picks {
             let (x, t, cond) = data(c.idx);
             let (mut xs, mut cs) = self.snaps.lock().unwrap().pop().unwrap_or_default();

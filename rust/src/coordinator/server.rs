@@ -65,6 +65,8 @@ use anyhow::{anyhow, Result};
 use crate::data::PatchAutoencoder;
 use crate::lora::SelectionCache;
 use crate::model::manifest::ModelInfo;
+use crate::obs::event::{CKPT_QPARAMS, CKPT_SKETCH, CKPT_TRACE};
+use crate::obs::{EventKind, FlightRecorder, ObsCfg, RoundSample, SwapAudit, Telemetry};
 use crate::quant::msfp::{QuantOpts, StateDir};
 use crate::quant::session::QuantSession;
 use crate::recal::{RecalPlanner, SketchSet};
@@ -268,6 +270,11 @@ struct RecalOutcome {
     rung_qparams: Vec<(i32, i32, Vec<f32>)>,
     /// drifted-layer count (for metrics)
     drifted: usize,
+    /// `(layer, drift score)` of every rebuilt layer — the swap audit's
+    /// attribution payload
+    layers: Vec<(u32, f32)>,
+    /// index of the drift check that produced this plan
+    check: u64,
 }
 
 /// Shared state of the background recalibration job (scheduler thread +
@@ -287,6 +294,10 @@ struct RecalShared {
     /// re-searched qparams awaiting the next round boundary
     outcome: Mutex<Option<RecalOutcome>>,
     inflight: AtomicBool,
+    /// check indices whose job panicked (injected or real), drained by
+    /// the scheduler at round boundaries into `recal-panic` trace events
+    /// and a postmortem dump
+    panicked: Mutex<Vec<u64>>,
 }
 
 impl RecalShared {
@@ -324,6 +335,8 @@ impl RecalShared {
                 return None;
             }
             let drifted = plan.layers.len();
+            let layers: Vec<(u32, f32)> =
+                plan.layers.iter().map(|rl| (rl.layer as u32, rl.score)).collect();
             for rl in plan.layers {
                 session.update_layer_calib(rl.layer, rl.calib);
             }
@@ -335,14 +348,17 @@ impl RecalShared {
                 .iter()
                 .map(|&(w, a)| (w, a, session.degraded_qparams(&self.opts, w, a)))
                 .collect();
-            Some(RecalOutcome { qparams, rung_qparams, drifted })
+            Some(RecalOutcome { qparams, rung_qparams, drifted, layers, check })
         }));
         match outcome {
             Ok(Some(out)) => *self.outcome.lock().unwrap() = Some(out),
             Ok(None) => {}
-            Err(_) => crate::log_warn!(
-                "recal check {check} panicked; half-applied plan discarded (no swap parked)"
-            ),
+            Err(_) => {
+                self.panicked.lock().unwrap().push(check);
+                crate::log_warn!(
+                    "recal check {check} panicked; half-applied plan discarded (no swap parked)"
+                );
+            }
         }
     }
 }
@@ -461,6 +477,11 @@ pub struct ServerCfg {
     /// the fused dequantize-matmul kernel). FP batches always use the
     /// graph
     pub backend: Backend,
+    /// observability: flight-recorder ring size, telemetry row retention
+    /// and the postmortem directory. Defaults to **on** (`ObsCfg::off()`
+    /// disables everything); the logical trace is part of the 1-vs-N
+    /// determinism surface
+    pub obs: ObsCfg,
 }
 
 impl ServerCfg {
@@ -479,6 +500,7 @@ impl ServerCfg {
             slo: SloCfg::default(),
             faults: FaultPlan::default(),
             backend: Backend::Graph,
+            obs: ObsCfg::default(),
         }
     }
 }
@@ -562,22 +584,90 @@ fn persist_window(
     recal: &Option<Arc<RecalShared>>,
     state_dir: &Option<StateDir>,
     ckpt: &CkptCounters,
+    rec: &Option<Arc<FlightRecorder>>,
+    round: u64,
 ) {
     if let (Some(rs), Some(sd)) = (recal, state_dir) {
         let snap = rs.sketches.lock().unwrap().clone();
-        ckpt_write(&sd.sketch_path(), &snap.to_bytes(), ckpt, "sketch window");
+        let ok = ckpt_write(&sd.sketch_path(), &snap.to_bytes(), ckpt, "sketch window");
+        if let Some(r) = rec {
+            r.emit(round, EventKind::Ckpt { what: CKPT_SKETCH, ok });
+        }
+    }
+}
+
+/// Stable wire tag of a [`ShedReason`] in `EventKind::Shed` payloads.
+fn shed_reason_tag(reason: ShedReason) -> u8 {
+    match reason {
+        ShedReason::DeadlineMissed => 0,
+        ShedReason::RetriesExhausted => 1,
     }
 }
 
 /// Retire a request without serving it: send the explicit shed notice
 /// (then close the channel by dropping `tx`), and account the per-class
 /// shed counter + queue-wait sample.
-fn shed_request(a: Active, reason: ShedReason, metrics: &mut Metrics) {
+fn shed_request(
+    a: Active,
+    reason: ShedReason,
+    metrics: &mut Metrics,
+    rec: &Option<Arc<FlightRecorder>>,
+    round: u64,
+) {
     let rank = a.req.slo.rank();
     metrics.shed[rank] += 1;
     metrics.queue_waits[rank].push(a.waited);
+    if let Some(r) = rec {
+        r.emit(
+            round,
+            EventKind::Shed {
+                id: a.req.id,
+                class: rank as u8,
+                reason: shed_reason_tag(reason),
+            },
+        );
+    }
     crate::log_warn!("shedding request {} ({:?}): {reason}", a.req.id, a.req.slo);
     let _ = a.tx.send(Response::Shed { id: a.req.id, class: a.req.slo, reason });
+}
+
+/// Sheds in a single round at or above this count are a *shed storm* —
+/// one of the postmortem-dump triggers.
+const SHED_STORM_THRESHOLD: usize = 3;
+
+/// Rounds between non-shutdown postmortem dumps, so a sustained overload
+/// doesn't turn every round into a disk write.
+const PM_COOLDOWN_ROUNDS: u64 = 8;
+
+/// Dump the flight recorder (`trace.mtr`) and the telemetry series
+/// (`metrics.jsonl`) into the postmortem directory (`ObsCfg::dir`,
+/// falling back to the recal state dir). Best-effort like every
+/// checkpoint write — both go through `ckpt_write`'s retried
+/// `atomic_write`, so `FaultFs` chaos drills cover the dump path and a
+/// crash mid-dump can never tear an existing postmortem. The caller
+/// passes the *observability* counter pair, kept separate from the
+/// serving checkpoint counters: `Metrics::ckpt_fails == 0` remains a
+/// meaningful durability assertion for state checkpoints even when a
+/// storm dump loses its own race with injected faults. Returns whether
+/// a dump was attempted (recorder + directory both present).
+fn dump_postmortem(
+    rec: &Option<Arc<FlightRecorder>>,
+    tel: &Telemetry,
+    dir: &Option<StateDir>,
+    ckpt: &CkptCounters,
+    round: u64,
+    why: &str,
+) -> bool {
+    let (Some(r), Some(sd)) = (rec, dir) else {
+        return false;
+    };
+    crate::log_info!("postmortem ({why}) at round {round}: dumping trace + telemetry");
+    let ok_trace =
+        ckpt_write(&sd.trace_path(), &r.trace().to_bytes(), ckpt, "trace postmortem");
+    let ok_tel =
+        ckpt_write(&sd.telemetry_path(), tel.to_jsonl().as_bytes(), ckpt, "telemetry series");
+    r.emit(round, EventKind::Ckpt { what: CKPT_TRACE, ok: ok_trace && ok_tel });
+    true
 }
 
 fn scheduler_loop(
@@ -599,12 +689,30 @@ fn scheduler_loop(
         slo,
         faults,
         backend,
+        obs,
     } = cfg;
     // compile-fault injection (chaos drills): arm the engine before any
     // graph loads so the retry budget is what gets exercised
     if faults.compile_fail_first > 0 {
         den.engine().inject_compile_failures(faults.compile_fail_first);
     }
+    // flight recorder + telemetry: constructed before the first checkpoint
+    // write so every ckpt attempt is an event. Emission happens on the
+    // scheduler thread — plus the recal checkpoint offload lane, which is
+    // timing-dependent exactly where recal already is (the no-recal
+    // logical trace stays bit-identical for any worker count)
+    let ObsCfg { events: obs_events, rounds: obs_rounds, dir: obs_dir } = obs;
+    let rec: Option<Arc<FlightRecorder>> =
+        (obs_events > 0).then(|| Arc::new(FlightRecorder::new(obs_events)));
+    let mut tel = Telemetry::new(obs_rounds);
+    let obs_on = rec.is_some() || obs_rounds > 0;
+    let mut postmortems = 0usize;
+    let mut pm_cooldown_until = 0u64;
+    let mut fault_dumped = false;
+    // previous round's ladder rung (-1 = full quality), for rung-change
+    // events; max drift score of the latest landed recal plan
+    let mut last_rung: i32 = -1;
+    let mut last_drift_max = 0.0f32;
     let mut active: Vec<Active> = Vec::new();
     // samples received per active request in the current round
     let mut got: Vec<usize> = Vec::new();
@@ -655,6 +763,7 @@ fn scheduler_loop(
                 faults,
                 outcome: Mutex::new(None),
                 inflight: AtomicBool::new(false),
+                panicked: Mutex::new(Vec::new()),
             }))
         }
         (Some(_), false) => {
@@ -663,6 +772,10 @@ fn scheduler_loop(
         }
         (None, _) => None,
     };
+    // postmortems land in the obs dir, falling back to the recal state
+    // dir — with neither, dumps are skipped (the in-memory ring and
+    // telemetry still serve `Metrics`)
+    let obs_dir = obs_dir.or_else(|| state_dir.clone());
     // crash hygiene: tmp files stranded by a previous kill mid-write are
     // never read as state (loads only see committed renames), but sweep
     // them so the state dir holds only complete checkpoints
@@ -673,6 +786,11 @@ fn scheduler_loop(
         }
     }
     let ckpt_counters = Arc::new(CkptCounters::default());
+    // postmortem-dump durability is accounted separately: a storm dump
+    // losing its retry race with injected storage faults must not perturb
+    // the serving checkpoint counters chaos tests pin (`ckpt_fails == 0`
+    // under transient faults)
+    let obs_ckpt = CkptCounters::default();
     // resume the drift window persisted by a previous run of this state
     // dir: the restored sketches are bit-identical to the saved ones
     // (reservoir contents + rng cursor), so drift accumulates as if the
@@ -717,7 +835,10 @@ fn scheduler_loop(
             if !restored {
                 match den.packed_blob(&params, qs) {
                     Ok(bytes) => {
-                        ckpt_write(&path, &bytes, &ckpt_counters, "packed blob");
+                        let ok = ckpt_write(&path, &bytes, &ckpt_counters, "packed blob");
+                        if let Some(r) = &rec {
+                            r.emit(0, EventKind::Ckpt { what: CKPT_QPARAMS, ok });
+                        }
                     }
                     Err(err) => crate::log_warn!("could not build packed blob: {err:#}"),
                 }
@@ -732,6 +853,7 @@ fn scheduler_loop(
             Arc::clone(&den),
             Arc::clone(&params),
             exec.pad_pool(),
+            rec.clone(),
         )),
         (_, None) => {
             crate::log_warn!("probe budget set without a recalibration config: ignored");
@@ -763,7 +885,19 @@ fn scheduler_loop(
                         if let Some(p) = &mut prober {
                             p.drain();
                         }
-                        persist_window(&recal, &state_dir, &ckpt_counters);
+                        let round = metrics.rounds as u64;
+                        persist_window(&recal, &state_dir, &ckpt_counters, &rec, round);
+                        if let Some(r) = &rec {
+                            r.emit(round, EventKind::Shutdown { rounds: round });
+                        }
+                        dump_postmortem(
+                            &rec,
+                            &tel,
+                            &obs_dir,
+                            &obs_ckpt,
+                            round,
+                            "clients gone",
+                        );
                         return;
                     }
                 }
@@ -777,7 +911,19 @@ fn scheduler_loop(
                             if let Some(p) = &mut prober {
                                 p.drain();
                             }
-                            persist_window(&recal, &state_dir, &ckpt_counters);
+                            let round = metrics.rounds as u64;
+                            persist_window(&recal, &state_dir, &ckpt_counters, &rec, round);
+                            if let Some(r) = &rec {
+                                r.emit(round, EventKind::Shutdown { rounds: round });
+                            }
+                            dump_postmortem(
+                                &rec,
+                                &tel,
+                                &obs_dir,
+                                &obs_ckpt,
+                                round,
+                                "clients gone",
+                            );
                             return;
                         }
                         break;
@@ -812,6 +958,19 @@ fn scheduler_loop(
                             }
                         }
                         let deadline = admit_round + req.deadline_budget() as u64;
+                        if let Some(r) = &rec {
+                            r.emit(
+                                admit_round,
+                                EventKind::Admit {
+                                    id: req.id,
+                                    class: req.slo.rank() as u8,
+                                    deadline,
+                                    steps: req.steps as u32,
+                                    images: req.n as u32,
+                                    step_cut: degraded,
+                                },
+                            );
+                        }
                         backlog += req.n;
                         let mut rng = Rng::new(req.seed ^ 0x73657276);
                         let x: Vec<f32> = (0..req.n * xs).map(|_| rng.normal()).collect();
@@ -859,6 +1018,16 @@ fn scheduler_loop(
                             ladder.iter().map(|&(w, a, _)| (w, a)).collect();
                     }
                     metrics.reconfigures += 1;
+                    if let Some(r) = &rec {
+                        r.emit(
+                            metrics.rounds as u64,
+                            EventKind::Reconfigure {
+                                queue_budget: queue_budget as u32,
+                                step_cut: step_cut as u32,
+                                ladder_depth: ladder.len() as u32,
+                            },
+                        );
+                    }
                     crate::log_info!(
                         "reconfigured SLOs at round {}: queue budget {queue_budget}, step cut {step_cut}, ladder depth {}",
                         metrics.rounds,
@@ -875,6 +1044,10 @@ fn scheduler_loop(
         }
 
         let round = metrics.rounds as u64;
+        // round-scoped postmortem signals: sheds this round (storm
+        // trigger) and whether a seeded fault fired (first-hit trigger)
+        let mut round_sheds = 0usize;
+        let mut round_fault_hit = false;
 
         // retire cancellations at plan time: the client dropped its
         // receiver, so its remaining rounds would be wasted compute
@@ -884,6 +1057,9 @@ fn scheduler_loop(
                 let a = active.swap_remove(i);
                 metrics.cancelled += 1;
                 metrics.queue_waits[a.req.slo.rank()].push(a.waited);
+                if let Some(r) = &rec {
+                    r.emit(round, EventKind::Cancel { id: a.req.id });
+                }
                 crate::log_info!("request {} cancelled by client", a.req.id);
             } else {
                 i += 1;
@@ -899,11 +1075,21 @@ fn scheduler_loop(
             while i < active.len() {
                 if active[i].req.slo == SloClass::BestEffort && round >= active[i].deadline {
                     let a = active.swap_remove(i);
-                    shed_request(a, ShedReason::DeadlineMissed, &mut metrics);
+                    shed_request(a, ShedReason::DeadlineMissed, &mut metrics, &rec, round);
+                    round_sheds += 1;
                 } else {
                     i += 1;
                 }
             }
+        }
+        // shed-storm postmortem, checked here as well as at round end so a
+        // sweep that empties the whole queue still leaves a dump behind
+        if round_sheds >= SHED_STORM_THRESHOLD
+            && round >= pm_cooldown_until
+            && dump_postmortem(&rec, &tel, &obs_dir, &obs_ckpt, round, "shed storm")
+        {
+            postmortems += 1;
+            pm_cooldown_until = round + PM_COOLDOWN_ROUNDS;
         }
 
         if active.is_empty() {
@@ -921,7 +1107,20 @@ fn scheduler_loop(
                     metrics.probes_skipped = p.skipped;
                     metrics.probes_failed = p.failed;
                 }
-                persist_window(&recal, &state_dir, &ckpt_counters);
+                persist_window(&recal, &state_dir, &ckpt_counters, &rec, round);
+                // final trace + telemetry dump, then stamp the recorder's
+                // accounting into the metrics the caller collects
+                if let Some(r) = &rec {
+                    r.emit(round, EventKind::Shutdown { rounds: round });
+                }
+                if dump_postmortem(&rec, &tel, &obs_dir, &obs_ckpt, round, "shutdown") {
+                    postmortems += 1;
+                }
+                if let Some(r) = &rec {
+                    metrics.trace_events = r.total() as usize;
+                    metrics.trace_dropped = r.dropped() as usize;
+                }
+                metrics.postmortems = postmortems;
                 // offloaded checkpoint jobs all finished (join() above),
                 // so the durability counters are final
                 metrics.ckpt_fails = ckpt_counters.fails.load(Ordering::SeqCst);
@@ -947,24 +1146,67 @@ fn scheduler_loop(
         if let Some(p) = &mut prober {
             p.drain();
         }
+        let mut recal_panicked: Vec<u64> = Vec::new();
         if let Some(rs) = &recal {
+            let recal_t0 = Instant::now();
+            // surface contained recal-check panics as trace events (and a
+            // postmortem trigger at the end of this round)
+            recal_panicked = std::mem::take(&mut *rs.panicked.lock().unwrap());
+            if let Some(r) = &rec {
+                for &check in &recal_panicked {
+                    r.emit(round, EventKind::RecalPanic { check });
+                }
+            }
             if let Some(out) = rs.outcome.lock().unwrap().take() {
                 if let Some(qs) = &mut qs_cur {
+                    let old_fp = crate::runtime::native::qparams_fingerprint(&qs.qparams);
                     let mut swapped = (**qs).clone();
                     swapped.qparams = out.qparams;
                     *qs = Arc::new(swapped);
+                    let new_fp = crate::runtime::native::qparams_fingerprint(&qs.qparams);
                     // refresh every ladder rung re-searched on the same
                     // updated calibration. Positions must still agree on
                     // (wbits, abits) — a reconfigure that landed while the
                     // check ran leaves mismatched rungs on their old
                     // qparams until the next check refreshes them.
+                    let mut rung_status = Vec::with_capacity(out.rung_qparams.len());
                     for (i, (w, a, qp)) in out.rung_qparams.into_iter().enumerate() {
-                        if let Some(entry) = ladder.get_mut(i) {
-                            if entry.0 == w && entry.1 == a {
+                        let refreshed = match ladder.get_mut(i) {
+                            Some(entry) if entry.0 == w && entry.1 == a => {
                                 entry.2 = Arc::new(degraded_state(&entry.2, qp));
+                                true
                             }
-                        }
+                            _ => false,
+                        };
+                        rung_status.push((w, a, refreshed));
                     }
+                    last_drift_max =
+                        out.layers.iter().fold(0.0f32, |m, &(_, s)| m.max(s));
+                    // the audit trail attributes the swap end to end:
+                    // which check, which layers (with scores), what the
+                    // qparams fingerprints were before/after, and how each
+                    // rung's refresh went
+                    let audit = SwapAudit {
+                        round,
+                        check: out.check,
+                        old_fp,
+                        new_fp,
+                        drifted: out.layers,
+                        rungs: rung_status,
+                    };
+                    if let Some(r) = &rec {
+                        r.emit(
+                            round,
+                            EventKind::HotSwap {
+                                swap: metrics.recal_swaps as u64,
+                                drifted: out.drifted as u32,
+                                old_fp,
+                                new_fp,
+                            },
+                        );
+                        r.audit(audit.clone());
+                    }
+                    metrics.swap_audits.push(audit);
                     metrics.recal_swaps += 1;
                     metrics.recal_layers += out.drifted;
                     if metrics.first_swap_round.is_none() {
@@ -995,20 +1237,27 @@ fn scheduler_loop(
                             let den = Arc::clone(&den);
                             let params = Arc::clone(&params);
                             let packed = backend == Backend::Packed;
+                            let rec = rec.clone();
                             exec.offload(move || {
                                 let _clear = clear;
-                                ckpt_write(
+                                let ok = ckpt_write(
                                     &sd.quant_path(),
                                     &qs_snap.to_bytes(),
                                     &ckpt,
                                     "quant state",
                                 );
-                                ckpt_write(
+                                if let Some(r) = &rec {
+                                    r.emit(round, EventKind::Ckpt { what: CKPT_QPARAMS, ok });
+                                }
+                                let ok = ckpt_write(
                                     &sd.sketch_path(),
                                     &sk_snap.to_bytes(),
                                     &ckpt,
                                     "sketch window",
                                 );
+                                if let Some(r) = &rec {
+                                    r.emit(round, EventKind::Ckpt { what: CKPT_SKETCH, ok });
+                                }
                                 if packed {
                                     // re-pack under the swapped qparams so a
                                     // restart seeds the packed cache without
@@ -1016,12 +1265,21 @@ fn scheduler_loop(
                                     // rejected at load and rebuilt anyway)
                                     match den.packed_blob(&params, &qs_snap) {
                                         Ok(bytes) => {
-                                            ckpt_write(
+                                            let ok = ckpt_write(
                                                 &sd.packed_path(),
                                                 &bytes,
                                                 &ckpt,
                                                 "packed blob",
                                             );
+                                            if let Some(r) = &rec {
+                                                r.emit(
+                                                    round,
+                                                    EventKind::Ckpt {
+                                                        what: CKPT_QPARAMS,
+                                                        ok,
+                                                    },
+                                                );
+                                            }
                                         }
                                         Err(err) => crate::log_warn!(
                                             "could not re-pack swapped weights: {err:#}"
@@ -1041,12 +1299,18 @@ fn scheduler_loop(
                 metrics.recal_checks += 1;
                 // recal faults draw from the same pure schedule the job
                 // will see, so the injected count is worker-independent
-                if faults.decide_recal(check) != Fault::None {
+                let rfault = faults.decide_recal(check);
+                if rfault != Fault::None {
                     metrics.faults_injected += 1;
+                    round_fault_hit = true;
+                }
+                if let Some(r) = &rec {
+                    r.emit(round, EventKind::RecalCheck { check, fault: rfault.tag() });
                 }
                 let rs = Arc::clone(rs);
                 exec.offload(move || rs.run_check(check));
             }
+            tel.timers.recal.record_us(recal_t0.elapsed().as_micros() as u64);
         }
 
         // one scheduling round: earliest-deadline-first admission within
@@ -1065,7 +1329,10 @@ fn scheduler_loop(
                 id: a.req.id,
             })
             .collect();
-        let (admitted, _deferred) = admit_edf(&cands, queue_budget);
+        let n_cands = cands.len();
+        let (admitted, deferred) = admit_edf(&cands, queue_budget);
+        let n_admitted = admitted.len();
+        let n_deferred = deferred.len();
         let mut scheduled = vec![false; active.len()];
         for tk in &admitted {
             scheduled[tk.req] = true;
@@ -1108,6 +1375,33 @@ fn scheduler_loop(
             // the degraded path is quantized, hence same-t constrained
             batches.extend(plan_mode(&deg_tk, &classes, PlanMode::SameT));
         }
+        // the round summary event, emitted once the plan is fixed; a
+        // rung-change event precedes it whenever the backlog moved the
+        // ladder between rounds
+        let rung_i = rung.map(|r| r as i32).unwrap_or(-1);
+        if let Some(r) = &rec {
+            if rung_i != last_rung {
+                r.emit(
+                    round,
+                    EventKind::RungChange {
+                        from: last_rung,
+                        to: rung_i,
+                        backlog: backlog as u32,
+                    },
+                );
+            }
+            r.emit(
+                round,
+                EventKind::Round {
+                    backlog: backlog as u32,
+                    admitted: n_admitted as u32,
+                    deferred: n_deferred as u32,
+                    batches: batches.len() as u32,
+                    rung: rung_i,
+                },
+            );
+        }
+        last_rung = rung_i;
         // each request's tickets live in exactly one partition, so
         // offsets over the concatenated plan tile its samples as usual
         let offsets = ticket_offsets(&batches, active.len());
@@ -1137,6 +1431,10 @@ fn scheduler_loop(
             let fault = faults.decide(round, bi as u64);
             if fault != Fault::None {
                 metrics.faults_injected += 1;
+                round_fault_hit = true;
+                if let Some(r) = &rec {
+                    r.emit(round, EventKind::Fault { batch: bi as u32, kind: fault.tag() });
+                }
             }
             jobs.push(BatchJob {
                 idx: bi,
@@ -1149,12 +1447,16 @@ fn scheduler_loop(
                 fault,
             });
         }
-        metrics.round_sched += sched_t0.elapsed();
+        let plan_dt = sched_t0.elapsed();
+        metrics.round_sched += plan_dt;
+        tel.timers.plan.record_us(plan_dt.as_micros() as u64);
 
         // fan out; results come back in plan order regardless of workers
         let exec_t0 = Instant::now();
         let results = exec.run_with(&evalf, jobs);
-        metrics.round_exec += exec_t0.elapsed();
+        let exec_dt = exec_t0.elapsed();
+        metrics.round_exec += exec_dt;
+        tel.timers.exec.record_us(exec_dt.as_micros() as u64);
 
         // scatter eps into each request's pre-assigned range
         let scatter_t0 = Instant::now();
@@ -1192,6 +1494,7 @@ fn scheduler_loop(
         // on the pool — post-scatter (the exact (x, t) the round's eval
         // consumed), before the sampler advances x below
         if let Some(p) = &mut prober {
+            let probe_t0 = Instant::now();
             let cands: Vec<ProbeCandidate> = active
                 .iter()
                 .enumerate()
@@ -1204,6 +1507,7 @@ fn scheduler_loop(
                 // exact t this round's eval consumed for the request
                 (&a.x[..], a.sampler.current_t(), &a.cond[..])
             });
+            tel.timers.probe.record_us(probe_t0.elapsed().as_micros() as u64);
         }
 
         // observe + complete (completions run on the pool)
@@ -1228,11 +1532,22 @@ fn scheduler_loop(
                     let a = active.swap_remove(i);
                     got.swap_remove(i);
                     scheduled.swap_remove(i);
-                    shed_request(a, ShedReason::RetriesExhausted, &mut metrics);
+                    shed_request(a, ShedReason::RetriesExhausted, &mut metrics, &rec, round);
+                    round_sheds += 1;
                     continue;
                 }
                 let a = &mut active[i];
                 a.backoff_until = round + 1 + (1u64 << a.attempts).min(MAX_BACKOFF_ROUNDS);
+                if let Some(r) = &rec {
+                    r.emit(
+                        round,
+                        EventKind::Retry {
+                            id: a.req.id,
+                            attempt: a.attempts as u32,
+                            backoff_rounds: a.backoff_until - round - 1,
+                        },
+                    );
+                }
                 crate::log_warn!(
                     "request {} failed round {round} (attempt {}/{MAX_RETRY_ATTEMPTS}); backing off {} round(s)",
                     a.req.id,
@@ -1246,6 +1561,16 @@ fn scheduler_loop(
                 scheduled.swap_remove(i);
                 metrics.images_done += a.req.n;
                 metrics.queue_waits[a.req.slo.rank()].push(a.waited);
+                if let Some(r) = &rec {
+                    r.emit(
+                        round,
+                        EventKind::Done {
+                            id: a.req.id,
+                            evals: a.evals as u32,
+                            degraded: a.degraded,
+                        },
+                    );
+                }
                 let ae = Arc::clone(&ae);
                 let done_tx = done_tx.clone();
                 exec.offload(move || {
@@ -1266,7 +1591,60 @@ fn scheduler_loop(
                 i += 1;
             }
         }
-        metrics.round_sched += scatter_t0.elapsed();
+        let offload_dt = scatter_t0.elapsed();
+        metrics.round_sched += offload_dt;
+        tel.timers.offload.record_us(offload_dt.as_micros() as u64);
+
+        // per-round telemetry sample: counters are cumulative (see
+        // `RoundSample`), so a truncated ring still differentiates into
+        // correct rates. Skipped entirely when observability is off — the
+        // `trace_overhead` bench baseline pays nothing here.
+        if obs_on {
+            let wp = |i: usize, q: f64| super::metrics::percentile_u64(&metrics.queue_waits[i], q);
+            tel.push(RoundSample {
+                round,
+                depth: active.len() as u32,
+                backlog: n_cands as u32,
+                admitted: n_admitted as u32,
+                deferred: n_deferred as u32,
+                batches: batches.len() as u32,
+                rung: rung_i,
+                shed: metrics.shed.iter().map(|&s| s as u64).sum(),
+                retries: metrics.retries as u64,
+                faults: metrics.faults_injected as u64,
+                evals: metrics.evals as u64,
+                probes: prober.as_ref().map_or(0, |p| p.sent as u64),
+                recal_checks: metrics.recal_checks as u64,
+                recal_swaps: metrics.recal_swaps as u64,
+                ckpt_retries: ckpt_counters.retries.load(Ordering::SeqCst) as u64,
+                drift_max: last_drift_max,
+                wait_p50: [wp(0, 0.50), wp(1, 0.50), wp(2, 0.50)],
+                wait_p99: [wp(0, 0.99), wp(1, 0.99), wp(2, 0.99)],
+                plan_us: metrics.round_sched.as_micros() as u64,
+                exec_us: metrics.round_exec.as_micros() as u64,
+            });
+        }
+        // remaining postmortem triggers: a shed storm that built up after
+        // the sweep-time check, a contained recal-check panic, or the
+        // first seeded fault of the serve (once — later hits are ordinary)
+        let storm = round_sheds >= SHED_STORM_THRESHOLD;
+        let fresh_fault = round_fault_hit && !fault_dumped;
+        if (storm || !recal_panicked.is_empty() || fresh_fault) && round >= pm_cooldown_until {
+            let why = if storm {
+                "shed storm"
+            } else if !recal_panicked.is_empty() {
+                "recal-check panic"
+            } else {
+                "injected fault"
+            };
+            if dump_postmortem(&rec, &tel, &obs_dir, &obs_ckpt, round, why) {
+                postmortems += 1;
+                pm_cooldown_until = round + PM_COOLDOWN_ROUNDS;
+                if fresh_fault {
+                    fault_dumped = true;
+                }
+            }
+        }
         metrics.rounds += 1;
     }
 }
@@ -1282,7 +1660,7 @@ mod tests {
     fn setup() -> Option<(Arc<Denoiser>, ModelInfo, Arc<Vec<f32>>)> {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !d.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return None;
         }
         let m = Manifest::load(&d).unwrap();

@@ -78,7 +78,7 @@ mod tests {
     fn extracts_nontrivial_features() {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !d.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         }
         let m = Manifest::load(&d).unwrap();

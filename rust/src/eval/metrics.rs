@@ -80,7 +80,7 @@ mod tests {
     fn setup16() -> Option<FeatureExtractor> {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !d.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return None;
         }
         let m = Manifest::load(&d).unwrap();

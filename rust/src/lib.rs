@@ -27,6 +27,7 @@ pub mod train;
 pub mod data;
 pub mod eval;
 pub mod coordinator;
+pub mod obs;
 pub mod exp;
 pub mod config;
 pub mod pipeline;

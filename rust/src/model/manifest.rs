@@ -249,7 +249,7 @@ mod tests {
     #[test]
     fn loads_real_manifest() {
         let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         };
         let m = Manifest::load(&dir).unwrap();

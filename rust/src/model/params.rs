@@ -70,7 +70,7 @@ mod tests {
     #[test]
     fn loads_init_params_and_slices() {
         let Some(m) = manifest() else {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         };
         let info = m.model("ddim16").unwrap();

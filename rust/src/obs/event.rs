@@ -1,0 +1,396 @@
+//! Structured flight-recorder events — one variant per coordinator
+//! decision kind, each with a fixed-width binary image.
+//!
+//! An [`Event`] is `(round, seq, wall_us, kind)`. The `(round, seq)` pair
+//! totally orders the *logical* trace: every event is emitted from the
+//! scheduler thread (or drained back onto it in deterministic order), so
+//! the sequence of `(round, seq, kind)` triples is a pure function of the
+//! workload + seed and bit-identical for any worker count — the same
+//! discipline the 1-vs-N parity suite pins for images and metrics.
+//! `wall_us` is a wall-clock annotation only: it rides along for humans
+//! reading a postmortem and is zeroed out by
+//! [`Trace::logical_bytes`](super::recorder::Trace::logical_bytes) before
+//! any determinism comparison.
+//!
+//! Encoding is little-endian, tag byte first, then the common header,
+//! then a fixed per-variant payload — the same hand-rolled versioned
+//! binary style as `recal::sketch` (no serde in this crate).
+
+use anyhow::{bail, Result};
+
+/// What happened. Payloads carry the decision inputs that make the event
+/// replayable: ids, classes, rungs, fingerprints — never wall-clock.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    /// One scheduling round was planned: queue state at plan time plus
+    /// the ladder rung the backlog selected.
+    Round { backlog: u32, admitted: u32, deferred: u32, batches: u32, rung: i32 },
+    /// A request entered this round's working set (EDF admission).
+    Admit { id: u64, class: u8, deadline: u64, steps: u32, images: u32, step_cut: bool },
+    /// A request was shed (`reason` is the coordinator's `ShedReason`
+    /// wire tag: 0 = deadline missed, 1 = retries exhausted).
+    Shed { id: u64, class: u8, reason: u8 },
+    /// The backlog-selected ladder rung changed between rounds.
+    RungChange { from: i32, to: i32, backlog: u32 },
+    /// A recal hot-swap landed: qparams fingerprints before/after plus
+    /// how many layers drifted (full per-layer detail in the swap audit).
+    HotSwap { swap: u64, drifted: u32, old_fp: u64, new_fp: u64 },
+    /// A seeded `FaultPlan` fault fired on batch `batch` (`kind` =
+    /// `exec::Fault::tag`).
+    Fault { batch: u32, kind: u8 },
+    /// A failed request re-queued with capped backoff.
+    Retry { id: u64, attempt: u32, backoff_rounds: u64 },
+    /// A checkpoint write attempt concluded (`ok` false = gave up after
+    /// the retry budget; skipped writes are not events).
+    Ckpt { what: u8, ok: bool },
+    /// Shadow probes recycled from this round's served latents.
+    Probe { sent: u32, skipped: u32 },
+    /// `ServerHandle::reconfigure` applied a new `SloCfg` at a round
+    /// boundary.
+    Reconfigure { queue_budget: u32, step_cut: u32, ladder_depth: u32 },
+    /// A client cancellation sweep retired a request.
+    Cancel { id: u64 },
+    /// A request completed and its response was handed to the offload
+    /// lane.
+    Done { id: u64, evals: u32, degraded: bool },
+    /// A background recalibration check was kicked off (`fault` =
+    /// injected `exec::Fault::tag`, 0 when clean).
+    RecalCheck { check: u64, fault: u8 },
+    /// A recalibration check panicked and was contained (the in-flight
+    /// flag cleared; serving continued on the old qparams).
+    RecalPanic { check: u64 },
+    /// The scheduler exited its loop after `rounds` rounds.
+    Shutdown { rounds: u64 },
+}
+
+/// Stable wire tag for the checkpoint kinds named in `Ckpt` events.
+pub const CKPT_SKETCH: u8 = 0;
+/// See [`CKPT_SKETCH`].
+pub const CKPT_QPARAMS: u8 = 1;
+/// See [`CKPT_SKETCH`] — postmortem trace/telemetry dumps count too.
+pub const CKPT_TRACE: u8 = 2;
+
+impl EventKind {
+    /// Stable wire tag of this variant (also the postmortem sort key for
+    /// events sharing a `(round, seq)` — which cannot happen, seq is
+    /// globally monotone; the tag is purely the encoding discriminant).
+    pub fn tag(&self) -> u8 {
+        match self {
+            EventKind::Round { .. } => 0,
+            EventKind::Admit { .. } => 1,
+            EventKind::Shed { .. } => 2,
+            EventKind::RungChange { .. } => 3,
+            EventKind::HotSwap { .. } => 4,
+            EventKind::Fault { .. } => 5,
+            EventKind::Retry { .. } => 6,
+            EventKind::Ckpt { .. } => 7,
+            EventKind::Probe { .. } => 8,
+            EventKind::Reconfigure { .. } => 9,
+            EventKind::Cancel { .. } => 10,
+            EventKind::Done { .. } => 11,
+            EventKind::RecalCheck { .. } => 12,
+            EventKind::RecalPanic { .. } => 13,
+            EventKind::Shutdown { .. } => 14,
+        }
+    }
+
+    /// Short lowercase name (Prometheus label / postmortem rendering).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Round { .. } => "round",
+            EventKind::Admit { .. } => "admit",
+            EventKind::Shed { .. } => "shed",
+            EventKind::RungChange { .. } => "rung-change",
+            EventKind::HotSwap { .. } => "hot-swap",
+            EventKind::Fault { .. } => "fault",
+            EventKind::Retry { .. } => "retry",
+            EventKind::Ckpt { .. } => "ckpt",
+            EventKind::Probe { .. } => "probe",
+            EventKind::Reconfigure { .. } => "reconfigure",
+            EventKind::Cancel { .. } => "cancel",
+            EventKind::Done { .. } => "done",
+            EventKind::RecalCheck { .. } => "recal-check",
+            EventKind::RecalPanic { .. } => "recal-panic",
+            EventKind::Shutdown { .. } => "shutdown",
+        }
+    }
+
+    fn write_payload(&self, out: &mut Vec<u8>) {
+        match *self {
+            EventKind::Round { backlog, admitted, deferred, batches, rung } => {
+                w32(out, backlog);
+                w32(out, admitted);
+                w32(out, deferred);
+                w32(out, batches);
+                wi32(out, rung);
+            }
+            EventKind::Admit { id, class, deadline, steps, images, step_cut } => {
+                w64(out, id);
+                out.push(class);
+                w64(out, deadline);
+                w32(out, steps);
+                w32(out, images);
+                out.push(step_cut as u8);
+            }
+            EventKind::Shed { id, class, reason } => {
+                w64(out, id);
+                out.push(class);
+                out.push(reason);
+            }
+            EventKind::RungChange { from, to, backlog } => {
+                wi32(out, from);
+                wi32(out, to);
+                w32(out, backlog);
+            }
+            EventKind::HotSwap { swap, drifted, old_fp, new_fp } => {
+                w64(out, swap);
+                w32(out, drifted);
+                w64(out, old_fp);
+                w64(out, new_fp);
+            }
+            EventKind::Fault { batch, kind } => {
+                w32(out, batch);
+                out.push(kind);
+            }
+            EventKind::Retry { id, attempt, backoff_rounds } => {
+                w64(out, id);
+                w32(out, attempt);
+                w64(out, backoff_rounds);
+            }
+            EventKind::Ckpt { what, ok } => {
+                out.push(what);
+                out.push(ok as u8);
+            }
+            EventKind::Probe { sent, skipped } => {
+                w32(out, sent);
+                w32(out, skipped);
+            }
+            EventKind::Reconfigure { queue_budget, step_cut, ladder_depth } => {
+                w32(out, queue_budget);
+                w32(out, step_cut);
+                w32(out, ladder_depth);
+            }
+            EventKind::Cancel { id } => w64(out, id),
+            EventKind::Done { id, evals, degraded } => {
+                w64(out, id);
+                w32(out, evals);
+                out.push(degraded as u8);
+            }
+            EventKind::RecalCheck { check, fault } => {
+                w64(out, check);
+                out.push(fault);
+            }
+            EventKind::RecalPanic { check } => w64(out, check),
+            EventKind::Shutdown { rounds } => w64(out, rounds),
+        }
+    }
+
+    fn read_payload(tag: u8, r: &mut super::recorder::TraceReader<'_>) -> Result<EventKind> {
+        Ok(match tag {
+            0 => EventKind::Round {
+                backlog: r.u32()?,
+                admitted: r.u32()?,
+                deferred: r.u32()?,
+                batches: r.u32()?,
+                rung: r.u32()? as i32,
+            },
+            1 => EventKind::Admit {
+                id: r.u64()?,
+                class: r.u8()?,
+                deadline: r.u64()?,
+                steps: r.u32()?,
+                images: r.u32()?,
+                step_cut: r.u8()? != 0,
+            },
+            2 => EventKind::Shed { id: r.u64()?, class: r.u8()?, reason: r.u8()? },
+            3 => EventKind::RungChange {
+                from: r.u32()? as i32,
+                to: r.u32()? as i32,
+                backlog: r.u32()?,
+            },
+            4 => EventKind::HotSwap {
+                swap: r.u64()?,
+                drifted: r.u32()?,
+                old_fp: r.u64()?,
+                new_fp: r.u64()?,
+            },
+            5 => EventKind::Fault { batch: r.u32()?, kind: r.u8()? },
+            6 => EventKind::Retry { id: r.u64()?, attempt: r.u32()?, backoff_rounds: r.u64()? },
+            7 => EventKind::Ckpt { what: r.u8()?, ok: r.u8()? != 0 },
+            8 => EventKind::Probe { sent: r.u32()?, skipped: r.u32()? },
+            9 => EventKind::Reconfigure {
+                queue_budget: r.u32()?,
+                step_cut: r.u32()?,
+                ladder_depth: r.u32()?,
+            },
+            10 => EventKind::Cancel { id: r.u64()? },
+            11 => EventKind::Done { id: r.u64()?, evals: r.u32()?, degraded: r.u8()? != 0 },
+            12 => EventKind::RecalCheck { check: r.u64()?, fault: r.u8()? },
+            13 => EventKind::RecalPanic { check: r.u64()? },
+            14 => EventKind::Shutdown { rounds: r.u64()? },
+            t => bail!("corrupt trace: unknown event tag {t}"),
+        })
+    }
+}
+
+/// One recorded coordinator decision. Ordering (and the logical
+/// determinism contract) is `(round, seq)`; `wall_us` is annotation only.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    /// Scheduler round the event belongs to (`Metrics::rounds` at emit).
+    pub round: u64,
+    /// Globally monotone sequence number within the recorder.
+    pub seq: u64,
+    /// Microseconds since recorder construction — excluded from logical
+    /// trace comparisons.
+    pub wall_us: u64,
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// Append this event's binary image. `wall` false writes a zero
+    /// wall-clock field — the *logical* image used for determinism
+    /// comparisons.
+    pub(super) fn write_to(&self, out: &mut Vec<u8>, wall: bool) {
+        out.push(self.kind.tag());
+        w64(out, self.round);
+        w64(out, self.seq);
+        w64(out, if wall { self.wall_us } else { 0 });
+        self.kind.write_payload(out);
+    }
+
+    pub(super) fn read_from(r: &mut super::recorder::TraceReader<'_>) -> Result<Event> {
+        let tag = r.u8()?;
+        let round = r.u64()?;
+        let seq = r.u64()?;
+        let wall_us = r.u64()?;
+        let kind = EventKind::read_payload(tag, r)?;
+        Ok(Event { round, seq, wall_us, kind })
+    }
+}
+
+fn w32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn wi32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&(v as u32).to_le_bytes());
+}
+
+fn w64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::TraceReader;
+
+    fn roundtrip(kind: EventKind) {
+        let ev = Event { round: 7, seq: 42, wall_us: 123_456, kind };
+        let mut buf = Vec::new();
+        ev.write_to(&mut buf, true);
+        let mut r = TraceReader::new(&buf);
+        let back = Event::read_from(&mut r).unwrap();
+        assert_eq!(back, ev);
+        assert_eq!(r.remaining(), 0, "payload width mismatch for {:?}", ev.kind);
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        roundtrip(EventKind::Round { backlog: 9, admitted: 4, deferred: 5, batches: 2, rung: 1 });
+        roundtrip(EventKind::Admit {
+            id: 3,
+            class: 0,
+            deadline: 12,
+            steps: 6,
+            images: 2,
+            step_cut: true,
+        });
+        roundtrip(EventKind::Shed { id: 5, class: 2, reason: 1 });
+        roundtrip(EventKind::RungChange { from: 0, to: 2, backlog: 14 });
+        roundtrip(EventKind::HotSwap { swap: 1, drifted: 3, old_fp: 0xAB, new_fp: 0xCD });
+        roundtrip(EventKind::Fault { batch: 1, kind: 2 });
+        roundtrip(EventKind::Retry { id: 8, attempt: 2, backoff_rounds: 4 });
+        roundtrip(EventKind::Ckpt { what: CKPT_TRACE, ok: false });
+        roundtrip(EventKind::Probe { sent: 2, skipped: 1 });
+        roundtrip(EventKind::Reconfigure { queue_budget: 32, step_cut: 2, ladder_depth: 3 });
+        roundtrip(EventKind::Cancel { id: 11 });
+        roundtrip(EventKind::Done { id: 1, evals: 18, degraded: true });
+        roundtrip(EventKind::RecalCheck { check: 4, fault: 0 });
+        roundtrip(EventKind::RecalPanic { check: 4 });
+        roundtrip(EventKind::Shutdown { rounds: 40 });
+    }
+
+    #[test]
+    fn logical_image_zeroes_wall_clock_only() {
+        let ev = Event {
+            round: 3,
+            seq: 9,
+            wall_us: 999,
+            kind: EventKind::Probe { sent: 1, skipped: 0 },
+        };
+        let (mut with, mut without) = (Vec::new(), Vec::new());
+        ev.write_to(&mut with, true);
+        ev.write_to(&mut without, false);
+        assert_eq!(with.len(), without.len());
+        assert_ne!(with, without);
+        let mut r = TraceReader::new(&without);
+        let logical = Event::read_from(&mut r).unwrap();
+        assert_eq!(logical.wall_us, 0);
+        assert_eq!(logical.kind, ev.kind);
+        assert_eq!((logical.round, logical.seq), (ev.round, ev.seq));
+    }
+
+    #[test]
+    fn negative_rungs_survive_the_wire() {
+        roundtrip(EventKind::RungChange { from: -1, to: -3, backlog: 0 });
+        roundtrip(EventKind::Round { backlog: 0, admitted: 0, deferred: 0, batches: 0, rung: -2 });
+    }
+
+    #[test]
+    fn unknown_tag_is_rejected() {
+        let mut buf = Vec::new();
+        Event {
+            round: 0,
+            seq: 0,
+            wall_us: 0,
+            kind: EventKind::Shutdown { rounds: 1 },
+        }
+        .write_to(&mut buf, true);
+        buf[0] = 200;
+        let mut r = TraceReader::new(&buf);
+        let err = Event::read_from(&mut r).unwrap_err();
+        assert!(err.to_string().contains("unknown event tag"), "{err}");
+    }
+
+    #[test]
+    fn names_and_tags_are_distinct() {
+        let kinds = [
+            EventKind::Round { backlog: 0, admitted: 0, deferred: 0, batches: 0, rung: 0 },
+            EventKind::Admit { id: 0, class: 0, deadline: 0, steps: 0, images: 0, step_cut: false },
+            EventKind::Shed { id: 0, class: 0, reason: 0 },
+            EventKind::RungChange { from: 0, to: 0, backlog: 0 },
+            EventKind::HotSwap { swap: 0, drifted: 0, old_fp: 0, new_fp: 0 },
+            EventKind::Fault { batch: 0, kind: 0 },
+            EventKind::Retry { id: 0, attempt: 0, backoff_rounds: 0 },
+            EventKind::Ckpt { what: 0, ok: true },
+            EventKind::Probe { sent: 0, skipped: 0 },
+            EventKind::Reconfigure { queue_budget: 0, step_cut: 0, ladder_depth: 0 },
+            EventKind::Cancel { id: 0 },
+            EventKind::Done { id: 0, evals: 0, degraded: false },
+            EventKind::RecalCheck { check: 0, fault: 0 },
+            EventKind::RecalPanic { check: 0 },
+            EventKind::Shutdown { rounds: 0 },
+        ];
+        let mut tags: Vec<u8> = kinds.iter().map(|k| k.tag()).collect();
+        let mut names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(tags.len(), kinds.len());
+        assert_eq!(names.len(), kinds.len());
+        assert_eq!(tags, (0..kinds.len() as u8).collect::<Vec<_>>());
+    }
+}

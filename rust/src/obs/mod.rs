@@ -1,0 +1,69 @@
+//! Observability for the serving coordinator: deterministic flight
+//! recorder, per-round telemetry export, structured metrics snapshots,
+//! and the recal hot-swap audit trail.
+//!
+//! Three artifacts come out of a serve:
+//!
+//!  * **`trace.mtr`** — a versioned postmortem of the flight recorder's
+//!    bounded event ring ([`FlightRecorder`], [`Trace`]). Events are
+//!    `(round, seq, kind)` plus a wall-clock annotation; the *logical*
+//!    trace (wall-clock stripped, [`Trace::logical_bytes`]) is
+//!    bit-identical for any worker count on the same workload — the
+//!    1-vs-N parity discipline extended to the decision log. Dumped on
+//!    shed storms, injected faults, recal-check panics and shutdown.
+//!  * **`metrics.jsonl`** — a per-round time series ([`RoundSample`])
+//!    plus per-phase plan/exec/offload/probe/recal latency histograms
+//!    ([`PhaseTimers`]), written at shutdown and on postmortems.
+//!  * **[`MetricsSnapshot`]** — the structured, exactly-JSON-roundtrip
+//!    form of `coordinator::Metrics` (with a Prometheus-style text
+//!    exposition); the classic `report()` string is a renderer over it.
+//!
+//! Both files land in the serve's `StateDir` via `util::io::atomic_write`,
+//! so `FaultFs` chaos drills cover the dump paths and a crash mid-dump
+//! can never tear an existing postmortem.
+
+pub mod event;
+pub mod recorder;
+pub mod snapshot;
+pub mod telemetry;
+
+pub use event::{Event, EventKind};
+pub use recorder::{FlightRecorder, SwapAudit, Trace};
+pub use snapshot::{MetricsSnapshot, CLASS_NAMES};
+pub use telemetry::{Hist, PhaseTimers, RoundSample, Telemetry};
+
+/// Observability configuration for one serving coordinator.
+///
+/// The recorder defaults to **on**: emission is a few mutex-guarded ring
+/// pushes per round (the `perf_serving` `trace_overhead` row pins it
+/// under 2% of mean round time), and every pre-existing 1-vs-N
+/// bit-identity test runs with it enabled — the logical trace is part of
+/// the determinism surface, not an optional extra.
+#[derive(Debug, Clone)]
+pub struct ObsCfg {
+    /// flight-recorder ring capacity in events; 0 disables the recorder
+    pub events: usize,
+    /// telemetry rows retained (per-round samples); 0 disables rows
+    /// (phase timers still accumulate)
+    pub rounds: usize,
+    /// where postmortems land; `None` falls back to the serve's recal
+    /// `StateDir` (if any), else dumps are skipped
+    pub dir: Option<crate::quant::msfp::StateDir>,
+}
+
+impl Default for ObsCfg {
+    fn default() -> ObsCfg {
+        ObsCfg { events: 1024, rounds: 1024, dir: None }
+    }
+}
+
+impl ObsCfg {
+    /// Recorder fully off (the `trace_overhead` baseline).
+    pub fn off() -> ObsCfg {
+        ObsCfg { events: 0, rounds: 0, dir: None }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.events > 0
+    }
+}

@@ -1,0 +1,543 @@
+//! Bounded flight recorder + versioned `trace.mtr` postmortems.
+//!
+//! The [`FlightRecorder`] is a fixed-capacity ring of [`Event`]s plus a
+//! capped list of [`SwapAudit`] records. Emission is cheap (one mutex, no
+//! allocation past the ring) and happens only on the scheduler thread, so
+//! the retained *logical* trace — `(round, seq, kind)` with wall-clock
+//! zeroed — is a pure function of (workload, seed, recorder capacity) and
+//! bit-identical for any worker count. When the ring overflows, the oldest
+//! events drop and `dropped` counts them; the drop schedule is part of the
+//! logical trace (same capacity ⇒ same retained window).
+//!
+//! A [`Trace`] is the serializable snapshot: magic `MSFPTR01`, little-
+//! endian, with the same distinct-error discipline as the sketch snapshot
+//! format — foreign files ("not an MSFP trace"), other format versions
+//! ("unsupported trace version"), truncation ("truncated trace at byte N")
+//! and trailing garbage each fail with their own message. Postmortem dumps
+//! go through `atomic_write`, so an installed `util::io::FaultFs` chaos
+//! plan exercises the dump path for free and a crash-before-rename kill
+//! point can never tear an existing postmortem.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::event::{Event, EventKind};
+
+/// Magic + version of the trace postmortem format. Bump the trailing two
+/// digits on any layout change; [`Trace::from_bytes`] rejects foreign
+/// files and other versions with distinct errors.
+const TRACE_MAGIC: &[u8; 8] = b"MSFPTR01";
+
+/// Retained swap audits (one per recal hot-swap — far below this cap in
+/// any real window; the ring exists so a pathological drift storm cannot
+/// grow the recorder unboundedly).
+const AUDIT_CAP: usize = 256;
+
+/// Decode-time sanity bounds: a corrupt header cannot make us reserve
+/// gigabytes before the bounds-checked reader catches the truncation.
+const MAX_EVENTS: usize = 1 << 22;
+const MAX_AUDITS: usize = 1 << 16;
+const MAX_AUDIT_ROWS: usize = 1 << 16;
+
+/// One recal hot-swap decision, fully attributed: which check fired,
+/// which layers drifted and by how much, the qparams fingerprints before
+/// and after the swap, and how each ladder rung's refresh went. The
+/// audit trail is what the ROADMAP's recalibration-aware LoRA refresh
+/// needs — it names exactly the layers worth re-tuning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwapAudit {
+    /// Scheduler round the swap landed on (not the round the background
+    /// check started — with >1 worker those may differ).
+    pub round: u64,
+    /// Index of the recal check that produced the plan.
+    pub check: u64,
+    /// `qparams_fingerprint` of the serving matrix before the swap…
+    pub old_fp: u64,
+    /// …and after it.
+    pub new_fp: u64,
+    /// `(layer, drift score)` for every layer the plan rebuilt.
+    pub drifted: Vec<(u32, f32)>,
+    /// `(wbits, abits, refreshed)` per ladder rung after the swap.
+    pub rungs: Vec<(i32, i32, bool)>,
+}
+
+impl SwapAudit {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.check.to_le_bytes());
+        out.extend_from_slice(&self.old_fp.to_le_bytes());
+        out.extend_from_slice(&self.new_fp.to_le_bytes());
+        out.extend_from_slice(&(self.drifted.len() as u32).to_le_bytes());
+        for &(layer, score) in &self.drifted {
+            out.extend_from_slice(&layer.to_le_bytes());
+            out.extend_from_slice(&score.to_bits().to_le_bytes());
+        }
+        out.extend_from_slice(&(self.rungs.len() as u32).to_le_bytes());
+        for &(w, a, refreshed) in &self.rungs {
+            out.extend_from_slice(&(w as u32).to_le_bytes());
+            out.extend_from_slice(&(a as u32).to_le_bytes());
+            out.push(refreshed as u8);
+        }
+    }
+
+    fn read_from(r: &mut TraceReader<'_>) -> Result<SwapAudit> {
+        let round = r.u64()?;
+        let check = r.u64()?;
+        let old_fp = r.u64()?;
+        let new_fp = r.u64()?;
+        let n_drifted = r.u32()? as usize;
+        if n_drifted > MAX_AUDIT_ROWS {
+            bail!("corrupt trace: audit names {n_drifted} drifted layers");
+        }
+        let mut drifted = Vec::with_capacity(n_drifted);
+        for _ in 0..n_drifted {
+            let layer = r.u32()?;
+            let score = f32::from_bits(r.u32()?);
+            drifted.push((layer, score));
+        }
+        let n_rungs = r.u32()? as usize;
+        if n_rungs > MAX_AUDIT_ROWS {
+            bail!("corrupt trace: audit names {n_rungs} ladder rungs");
+        }
+        let mut rungs = Vec::with_capacity(n_rungs);
+        for _ in 0..n_rungs {
+            let w = r.u32()? as i32;
+            let a = r.u32()? as i32;
+            rungs.push((w, a, r.u8()? != 0));
+        }
+        Ok(SwapAudit { round, check, old_fp, new_fp, drifted, rungs })
+    }
+}
+
+/// A serializable snapshot of the recorder: the retained event window,
+/// the swap audit trail, and the drop accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Retained events in `(round, seq)` order (the ring's oldest first).
+    pub events: Vec<Event>,
+    /// Hot-swap audit trail, oldest first.
+    pub audits: Vec<SwapAudit>,
+    /// Events evicted by the ring (emitted − retained).
+    pub dropped: u64,
+    /// Events emitted over the recorder's lifetime.
+    pub total: u64,
+}
+
+impl Trace {
+    fn bytes(&self, wall: bool) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32 + self.events.len() * 40 + self.audits.len() * 64);
+        out.extend_from_slice(TRACE_MAGIC);
+        out.extend_from_slice(&self.dropped.to_le_bytes());
+        out.extend_from_slice(&self.total.to_le_bytes());
+        out.extend_from_slice(&(self.events.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.audits.len() as u32).to_le_bytes());
+        for ev in &self.events {
+            ev.write_to(&mut out, wall);
+        }
+        for audit in &self.audits {
+            audit.write_to(&mut out);
+        }
+        out
+    }
+
+    /// Full binary image, wall-clock annotations included — what a
+    /// `trace.mtr` postmortem holds.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.bytes(true)
+    }
+
+    /// The *logical* image: identical layout with every `wall_us` written
+    /// as zero. This is the determinism contract — logical images from
+    /// runs of the same workload at any worker count are byte-identical.
+    pub fn logical_bytes(&self) -> Vec<u8> {
+        self.bytes(false)
+    }
+
+    /// Parse a [`Trace::to_bytes`] image. Foreign files, other format
+    /// versions, truncation and trailing bytes all fail with distinct
+    /// errors (same discipline as `recal::SketchSet::from_bytes`).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Trace> {
+        let mut r = TraceReader::new(bytes);
+        let magic = r.take(8)?;
+        if magic != TRACE_MAGIC {
+            if magic[..6] == TRACE_MAGIC[..6] {
+                bail!(
+                    "unsupported trace version {:?} (this build reads {:?})",
+                    String::from_utf8_lossy(&magic[6..]),
+                    String::from_utf8_lossy(&TRACE_MAGIC[6..]),
+                );
+            }
+            bail!("not an MSFP trace (bad magic)");
+        }
+        let dropped = r.u64()?;
+        let total = r.u64()?;
+        let n_events = r.u32()? as usize;
+        let n_audits = r.u32()? as usize;
+        if n_events > MAX_EVENTS || n_audits > MAX_AUDITS {
+            bail!("corrupt trace: {n_events} events / {n_audits} audits exceed sanity bounds");
+        }
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            events.push(Event::read_from(&mut r)?);
+        }
+        let mut audits = Vec::with_capacity(n_audits);
+        for _ in 0..n_audits {
+            audits.push(SwapAudit::read_from(&mut r)?);
+        }
+        if r.remaining() != 0 {
+            bail!("trailing bytes in trace ({} past end)", r.remaining());
+        }
+        Ok(Trace { events, audits, dropped, total })
+    }
+
+    /// Write a postmortem atomically (temp + rename + fsync): a reader —
+    /// or a `FaultFs` crash-before-rename kill point — never observes a
+    /// torn trace.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::util::io::atomic_write(path, &self.to_bytes())
+            .with_context(|| format!("writing trace postmortem {}", path.display()))
+    }
+
+    /// Load a postmortem through the fault-aware retrying reader.
+    pub fn load(path: &Path) -> Result<Trace> {
+        let bytes = crate::util::io::read_file_retry(path, crate::util::io::RESTORE_ATTEMPTS)
+            .with_context(|| format!("reading trace postmortem {}", path.display()))?;
+        Trace::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Human-oriented rendering for reading a postmortem: one line per
+    /// event (`[round/seq +wall] kind payload`), then the audit trail.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace: {} events retained ({} emitted, {} dropped), {} swap audits",
+            self.events.len(),
+            self.total,
+            self.dropped,
+            self.audits.len()
+        );
+        for ev in &self.events {
+            let _ = writeln!(
+                out,
+                "  [r{:5} #{:6} +{:9}us] {:11} {:?}",
+                ev.round,
+                ev.seq,
+                ev.wall_us,
+                ev.kind.name(),
+                ev.kind
+            );
+        }
+        for a in &self.audits {
+            let _ = writeln!(
+                out,
+                "  audit: check {} landed round {}; qparams {:016x} -> {:016x}; \
+                 drifted {:?}; rungs {:?}",
+                a.check, a.round, a.old_fp, a.new_fp, a.drifted, a.rungs
+            );
+        }
+        out
+    }
+}
+
+/// Minimal bounds-checked little-endian cursor over a trace image.
+pub(crate) struct TraceReader<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> TraceReader<'a> {
+    pub(crate) fn new(bytes: &'a [u8]) -> TraceReader<'a> {
+        TraceReader { bytes, off: 0 }
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.bytes.len() - self.off {
+            bail!("truncated trace at byte {}", self.off);
+        }
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.bytes.len() - self.off
+    }
+}
+
+struct RecorderInner {
+    cap: usize,
+    events: VecDeque<Event>,
+    audits: VecDeque<SwapAudit>,
+    seq: u64,
+    dropped: u64,
+}
+
+/// Bounded in-memory event ring (see module docs). All methods take
+/// `&self`; emission serializes on one internal mutex, which is
+/// uncontended in practice — every emitter runs on the scheduler thread.
+pub struct FlightRecorder {
+    start: Instant,
+    inner: Mutex<RecorderInner>,
+}
+
+impl FlightRecorder {
+    /// `cap` is the retained-event window (≥ 1 enforced).
+    pub fn new(cap: usize) -> FlightRecorder {
+        let cap = cap.max(1);
+        FlightRecorder {
+            start: Instant::now(),
+            inner: Mutex::new(RecorderInner {
+                cap,
+                events: VecDeque::with_capacity(cap.min(4096)),
+                audits: VecDeque::new(),
+                seq: 0,
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// Record one event at `round`. The sequence number is assigned here
+    /// (globally monotone); the wall-clock annotation is microseconds
+    /// since recorder construction.
+    pub fn emit(&self, round: u64, kind: EventKind) {
+        let wall_us = self.start.elapsed().as_micros() as u64;
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.seq;
+        inner.seq += 1;
+        if inner.events.len() == inner.cap {
+            inner.events.pop_front();
+            inner.dropped += 1;
+        }
+        inner.events.push_back(Event { round, seq, wall_us, kind });
+    }
+
+    /// Append one hot-swap audit record (ring-capped at [`AUDIT_CAP`]).
+    pub fn audit(&self, audit: SwapAudit) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.audits.len() == AUDIT_CAP {
+            inner.audits.pop_front();
+        }
+        inner.audits.push_back(audit);
+    }
+
+    /// Events emitted over the recorder's lifetime (retained + dropped).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+
+    /// Events evicted by the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Snapshot the current window as a serializable [`Trace`].
+    pub fn trace(&self) -> Trace {
+        let inner = self.inner.lock().unwrap();
+        Trace {
+            events: inner.events.iter().cloned().collect(),
+            audits: inner.audits.iter().cloned().collect(),
+            dropped: inner.dropped,
+            total: inner.seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::io::{read_file, FaultFs};
+
+    fn probe(sent: u32) -> EventKind {
+        EventKind::Probe { sent, skipped: 0 }
+    }
+
+    fn sample_audit() -> SwapAudit {
+        SwapAudit {
+            round: 12,
+            check: 3,
+            old_fp: 0xDEAD_BEEF,
+            new_fp: 0xFEED_FACE,
+            drifted: vec![(0, 1.5), (4, -0.25)],
+            rungs: vec![(4, 4, true), (3, 4, true), (2, 3, false)],
+        }
+    }
+
+    #[test]
+    fn ring_caps_drops_oldest_and_counts() {
+        let rec = FlightRecorder::new(4);
+        for i in 0..10u32 {
+            rec.emit(i as u64, probe(i));
+        }
+        assert_eq!(rec.total(), 10);
+        assert_eq!(rec.dropped(), 6);
+        let tr = rec.trace();
+        assert_eq!(tr.events.len(), 4);
+        assert_eq!(tr.dropped, 6);
+        assert_eq!(tr.total, 10);
+        // oldest evicted first; seq stays globally monotone
+        let seqs: Vec<u64> = tr.events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        assert_eq!(tr.events[0].kind, probe(6));
+    }
+
+    #[test]
+    fn audits_are_capped() {
+        let rec = FlightRecorder::new(8);
+        for i in 0..(AUDIT_CAP as u64 + 10) {
+            rec.audit(SwapAudit { round: i, ..sample_audit() });
+        }
+        let tr = rec.trace();
+        assert_eq!(tr.audits.len(), AUDIT_CAP);
+        assert_eq!(tr.audits[0].round, 10, "oldest audits evicted first");
+    }
+
+    #[test]
+    fn trace_roundtrip_is_bit_exact() {
+        let rec = FlightRecorder::new(16);
+        rec.emit(0, EventKind::Round { backlog: 3, admitted: 3, deferred: 0, batches: 2, rung: 0 });
+        rec.emit(
+            0,
+            EventKind::Admit { id: 1, class: 0, deadline: 8, steps: 6, images: 2, step_cut: false },
+        );
+        rec.emit(1, EventKind::Shed { id: 2, class: 2, reason: 0 });
+        rec.emit(2, EventKind::Shutdown { rounds: 3 });
+        rec.audit(sample_audit());
+        let tr = rec.trace();
+        let bytes = tr.to_bytes();
+        let back = Trace::from_bytes(&bytes).unwrap();
+        assert_eq!(back, tr);
+        assert_eq!(back.to_bytes(), bytes, "re-serialization must be stable");
+    }
+
+    #[test]
+    fn logical_bytes_strip_wall_clock_only() {
+        // two recorders emit the same logical events at different wall
+        // times; the logical images match while the full images may not
+        let mk = || {
+            let rec = FlightRecorder::new(8);
+            rec.emit(0, probe(1));
+            rec.emit(1, EventKind::Cancel { id: 5 });
+            rec
+        };
+        let a = mk();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = mk();
+        assert_eq!(a.trace().logical_bytes(), b.trace().logical_bytes());
+        let logical = Trace::from_bytes(&a.trace().logical_bytes()).unwrap();
+        assert!(logical.events.iter().all(|e| e.wall_us == 0));
+        assert_eq!(
+            logical.events.iter().map(|e| &e.kind).collect::<Vec<_>>(),
+            a.trace().events.iter().map(|e| &e.kind).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn rejects_foreign_versioned_truncated_and_trailing() {
+        let rec = FlightRecorder::new(4);
+        rec.emit(0, probe(1));
+        rec.audit(sample_audit());
+        let bytes = rec.trace().to_bytes();
+        // foreign magic → its own error
+        let mut junk = bytes.clone();
+        junk[..8].copy_from_slice(b"NOTMAGIC");
+        let err = Trace::from_bytes(&junk).unwrap_err();
+        assert!(err.to_string().contains("not an MSFP trace"), "{err}");
+        // same family, different version digits → distinct error
+        let mut v99 = bytes.clone();
+        v99[6..8].copy_from_slice(b"99");
+        let err = Trace::from_bytes(&v99).unwrap_err();
+        assert!(err.to_string().contains("unsupported trace version"), "{err}");
+        // every truncation point fails loudly with the byte offset
+        for cut in [0, 5, 8, 20, bytes.len() / 2, bytes.len() - 1] {
+            let err = Trace::from_bytes(&bytes[..cut]).unwrap_err();
+            assert!(err.to_string().contains("truncated trace"), "cut {cut}: {err}");
+        }
+        // trailing garbage
+        let mut long = bytes;
+        long.push(7);
+        let err = Trace::from_bytes(&long).unwrap_err();
+        assert!(err.to_string().contains("trailing bytes"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_counts_are_bounded_not_allocated() {
+        let rec = FlightRecorder::new(2);
+        rec.emit(0, probe(1));
+        let mut bytes = rec.trace().to_bytes();
+        // claim 2^31 events: must fail on the sanity bound, not OOM
+        bytes[24..28].copy_from_slice(&(1u32 << 31).to_le_bytes());
+        let err = Trace::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("sanity bounds"), "{err}");
+    }
+
+    #[test]
+    fn postmortem_file_roundtrip_and_render() {
+        let dir = std::env::temp_dir().join("msfp_obs_postmortem");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rec = FlightRecorder::new(8);
+        rec.emit(0, EventKind::Fault { batch: 1, kind: 2 });
+        rec.emit(1, EventKind::RecalPanic { check: 0 });
+        rec.audit(sample_audit());
+        let tr = rec.trace();
+        let path = dir.join("trace.mtr");
+        tr.save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap(), tr);
+        let text = tr.render();
+        assert!(text.contains("fault"), "{text}");
+        assert!(text.contains("recal-panic"), "{text}");
+        assert!(text.contains("audit: check 3"), "{text}");
+        assert!(text.contains("2 events retained"), "{text}");
+    }
+
+    #[test]
+    fn postmortem_survives_crash_before_rename() {
+        // chaos drill: a postmortem landed before the kill point must
+        // survive a crash-before-rename on the overwrite attempt intact —
+        // atomic_write renames whole files only
+        let dir = std::env::temp_dir().join("msfp_obs_crash_drill");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("trace.mtr");
+        let rec = FlightRecorder::new(8);
+        rec.emit(0, probe(1));
+        let first = rec.trace();
+        first.save(&path).unwrap();
+        rec.emit(1, probe(2));
+        let guard = FaultFs { crash_per_mille: 1000, ..FaultFs::new(11) }.install(&dir);
+        let err = rec.trace().save(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("crash before renaming"), "{err:#}");
+        // the surviving postmortem is the complete first dump, not a tear
+        assert_eq!(Trace::load(&path).unwrap(), first);
+        drop(guard);
+        // clean retry lands the newer window
+        rec.trace().save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap().events.len(), 2);
+        // no staged temp strays survive the injected crash
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n != "trace.mtr")
+            .collect();
+        assert!(stray.is_empty(), "stray files: {stray:?}");
+        let _ = read_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,479 @@
+//! Structured, serializable serving metrics — `Metrics::snapshot()`
+//! returns one of these, and the human-oriented `Metrics::report()`
+//! string is now just [`MetricsSnapshot::render`] over it.
+//!
+//! The snapshot is the machine-facing contract: exact JSON roundtrip
+//! (`from_json(to_json(s)) == s`, bit-for-bit — `util::json` prints
+//! integers exactly and other floats shortest-roundtrip) plus a one-shot
+//! Prometheus-style text exposition for scraping. The renderer reproduces
+//! the pre-snapshot `report()`/`slo_report()` strings byte-for-byte; the
+//! string-pinning tests in `coordinator::metrics` hold across the
+//! refactor.
+
+use anyhow::Result;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Per-class label names in `SloClass::ALL` / `rank()` order (the
+/// coordinator's Debug names, duplicated here so `obs` stays free of a
+/// coordinator dependency; pinned against drift by a metrics test).
+pub const CLASS_NAMES: [&str; 3] = ["Interactive", "Batch", "BestEffort"];
+
+/// One structured snapshot of a serve lifetime. All derived quantities
+/// (throughput, percentiles, fractions) are precomputed so a consumer —
+/// or [`MetricsSnapshot::render`] — never needs the raw sample series.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub images: u64,
+    pub evals: u64,
+    pub rounds: u64,
+    /// resolved backend tag ("graph" | "packed")
+    pub backend: String,
+    pub packed_bytes: u64,
+    pub wall_s: f64,
+    pub throughput: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub mean_batch: f64,
+    /// mean batch fill as a fraction in [0, 1]
+    pub mean_fill: f64,
+    pub round_exec_ms: f64,
+    pub round_sched_ms: f64,
+    pub exec_fraction: f64,
+    pub sel_hits: u64,
+    pub sel_misses: u64,
+    pub sel_hit_rate: f64,
+    pub recal_checks: u64,
+    pub recal_swaps: u64,
+    pub recal_layers: u64,
+    pub first_swap_round: Option<u64>,
+    pub probes: u64,
+    pub probes_skipped: u64,
+    pub probes_failed: u64,
+    /// per-class queue-wait percentiles in rounds ([`CLASS_NAMES`] order)
+    pub wait_p50: [u64; 3],
+    pub wait_p99: [u64; 3],
+    /// per-class queue-wait maxima — `wait_max == [0, 0, 0]` is exactly
+    /// the "every wait sample was zero" half of the quiet condition
+    pub wait_max: [u64; 3],
+    pub shed: [u64; 3],
+    pub downgraded_rounds: u64,
+    pub downgraded_steps: u64,
+    pub cancelled: u64,
+    pub retries: u64,
+    pub faults_injected: u64,
+    pub compile_attempts: u64,
+    pub compile_exhausted: u64,
+    pub ckpt_fails: u64,
+    pub ckpt_retries: u64,
+    pub reconfigures: u64,
+    pub rung_rounds: Vec<u64>,
+    /// flight-recorder events emitted over the serve lifetime
+    pub trace_events: u64,
+    /// events the recorder ring evicted
+    pub trace_dropped: u64,
+    /// postmortem trace/telemetry dumps written
+    pub postmortems: u64,
+}
+
+impl MetricsSnapshot {
+    /// The classic one-line serving report (exactly the pre-snapshot
+    /// `Metrics::report()` string — recorder counters intentionally do
+    /// not appear, so recorder-on and recorder-off runs render the same).
+    pub fn render(&self) -> String {
+        let packed = if self.packed_bytes > 0 {
+            format!(" ({:.1} KiB packed)", self.packed_bytes as f64 / 1024.0)
+        } else {
+            String::new()
+        };
+        format!(
+            "requests {:4}  images {:5}  evals {:6}  rounds {:5}  backend {}{}  thpt {:7.2} img/s  p50 {:6.1} ms  p95 {:6.1} ms  mean-batch {:4.1}  fill {:4.0}%  exec {:6.1} ms / sched {:6.1} ms ({:3.0}% exec)  sel-hit {:3.0}%  recal {}/{} swaps ({} layers)  probes {} ({} skipped, {} failed){}",
+            self.requests,
+            self.images,
+            self.evals,
+            self.rounds,
+            self.backend,
+            packed,
+            self.throughput,
+            self.latency_p50_ms,
+            self.latency_p95_ms,
+            self.mean_batch,
+            self.mean_fill * 100.0,
+            self.round_exec_ms,
+            self.round_sched_ms,
+            self.exec_fraction * 100.0,
+            self.sel_hit_rate * 100.0,
+            self.recal_swaps,
+            self.recal_checks,
+            self.recal_layers,
+            self.probes,
+            self.probes_skipped,
+            self.probes_failed,
+            self.render_slo()
+        )
+    }
+
+    /// SLO / robustness suffix of [`MetricsSnapshot::render`]: empty when
+    /// nothing SLO-related happened (the common quiet path), one line of
+    /// per-class queue waits and shed/downgrade/retry/fault counters
+    /// otherwise.
+    pub fn render_slo(&self) -> String {
+        let quiet = self.wait_max.iter().all(|&m| m == 0)
+            && self.shed.iter().all(|&n| n == 0)
+            && self.downgraded_rounds == 0
+            && self.downgraded_steps == 0
+            && self.cancelled == 0
+            && self.retries == 0
+            && self.faults_injected == 0
+            && self.compile_exhausted == 0
+            && self.ckpt_fails == 0
+            && self.ckpt_retries == 0
+            && self.reconfigures == 0
+            && self.rung_rounds.iter().all(|&r| r == 0);
+        if quiet {
+            return String::new();
+        }
+        let mut out = String::from("\n  slo:");
+        for (i, name) in CLASS_NAMES.iter().enumerate() {
+            out.push_str(&format!(
+                " {} wait p50/p99 {}/{} rounds shed {};",
+                name, self.wait_p50[i], self.wait_p99[i], self.shed[i],
+            ));
+        }
+        out.push_str(&format!(
+            "  downgraded {} rounds / {} step-cuts  cancelled {}  retries {}  faults {}  compile {} attempts ({} exhausted)",
+            self.downgraded_rounds,
+            self.downgraded_steps,
+            self.cancelled,
+            self.retries,
+            self.faults_injected,
+            self.compile_attempts,
+            self.compile_exhausted
+        ));
+        if !self.rung_rounds.is_empty() {
+            out.push_str(&format!("  ladder rounds {:?}", self.rung_rounds));
+        }
+        if self.ckpt_fails > 0 || self.ckpt_retries > 0 || self.reconfigures > 0 {
+            out.push_str(&format!(
+                "  ckpt {} fails / {} retries  reconfigures {}",
+                self.ckpt_fails, self.ckpt_retries, self.reconfigures
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let triple = |v: &[u64; 3]| arr(v.iter().map(|&n| num(n as f64)));
+        obj(vec![
+            ("requests", num(self.requests as f64)),
+            ("images", num(self.images as f64)),
+            ("evals", num(self.evals as f64)),
+            ("rounds", num(self.rounds as f64)),
+            ("backend", s(&self.backend)),
+            ("packed_bytes", num(self.packed_bytes as f64)),
+            ("wall_s", num(self.wall_s)),
+            ("throughput", num(self.throughput)),
+            ("latency_p50_ms", num(self.latency_p50_ms)),
+            ("latency_p95_ms", num(self.latency_p95_ms)),
+            ("mean_batch", num(self.mean_batch)),
+            ("mean_fill", num(self.mean_fill)),
+            ("round_exec_ms", num(self.round_exec_ms)),
+            ("round_sched_ms", num(self.round_sched_ms)),
+            ("exec_fraction", num(self.exec_fraction)),
+            ("sel_hits", num(self.sel_hits as f64)),
+            ("sel_misses", num(self.sel_misses as f64)),
+            ("sel_hit_rate", num(self.sel_hit_rate)),
+            ("recal_checks", num(self.recal_checks as f64)),
+            ("recal_swaps", num(self.recal_swaps as f64)),
+            ("recal_layers", num(self.recal_layers as f64)),
+            (
+                "first_swap_round",
+                match self.first_swap_round {
+                    Some(r) => num(r as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("probes", num(self.probes as f64)),
+            ("probes_skipped", num(self.probes_skipped as f64)),
+            ("probes_failed", num(self.probes_failed as f64)),
+            ("wait_p50", triple(&self.wait_p50)),
+            ("wait_p99", triple(&self.wait_p99)),
+            ("wait_max", triple(&self.wait_max)),
+            ("shed", triple(&self.shed)),
+            ("downgraded_rounds", num(self.downgraded_rounds as f64)),
+            ("downgraded_steps", num(self.downgraded_steps as f64)),
+            ("cancelled", num(self.cancelled as f64)),
+            ("retries", num(self.retries as f64)),
+            ("faults_injected", num(self.faults_injected as f64)),
+            ("compile_attempts", num(self.compile_attempts as f64)),
+            ("compile_exhausted", num(self.compile_exhausted as f64)),
+            ("ckpt_fails", num(self.ckpt_fails as f64)),
+            ("ckpt_retries", num(self.ckpt_retries as f64)),
+            ("reconfigures", num(self.reconfigures as f64)),
+            ("rung_rounds", arr(self.rung_rounds.iter().map(|&r| num(r as f64)))),
+            ("trace_events", num(self.trace_events as f64)),
+            ("trace_dropped", num(self.trace_dropped as f64)),
+            ("postmortems", num(self.postmortems as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MetricsSnapshot> {
+        let triple = |key: &str| -> Result<[u64; 3]> {
+            let v = j.get(key)?.arr()?;
+            anyhow::ensure!(v.len() == 3, "{key} needs 3 classes, got {}", v.len());
+            Ok([v[0].usize()? as u64, v[1].usize()? as u64, v[2].usize()? as u64])
+        };
+        let count = |key: &str| -> Result<u64> { Ok(j.get(key)?.usize()? as u64) };
+        Ok(MetricsSnapshot {
+            requests: count("requests")?,
+            images: count("images")?,
+            evals: count("evals")?,
+            rounds: count("rounds")?,
+            backend: j.get("backend")?.str()?.to_string(),
+            packed_bytes: count("packed_bytes")?,
+            wall_s: j.get("wall_s")?.f64()?,
+            throughput: j.get("throughput")?.f64()?,
+            latency_p50_ms: j.get("latency_p50_ms")?.f64()?,
+            latency_p95_ms: j.get("latency_p95_ms")?.f64()?,
+            mean_batch: j.get("mean_batch")?.f64()?,
+            mean_fill: j.get("mean_fill")?.f64()?,
+            round_exec_ms: j.get("round_exec_ms")?.f64()?,
+            round_sched_ms: j.get("round_sched_ms")?.f64()?,
+            exec_fraction: j.get("exec_fraction")?.f64()?,
+            sel_hits: count("sel_hits")?,
+            sel_misses: count("sel_misses")?,
+            sel_hit_rate: j.get("sel_hit_rate")?.f64()?,
+            recal_checks: count("recal_checks")?,
+            recal_swaps: count("recal_swaps")?,
+            recal_layers: count("recal_layers")?,
+            first_swap_round: match j.get("first_swap_round")? {
+                Json::Null => None,
+                v => Some(v.usize()? as u64),
+            },
+            probes: count("probes")?,
+            probes_skipped: count("probes_skipped")?,
+            probes_failed: count("probes_failed")?,
+            wait_p50: triple("wait_p50")?,
+            wait_p99: triple("wait_p99")?,
+            wait_max: triple("wait_max")?,
+            shed: triple("shed")?,
+            downgraded_rounds: count("downgraded_rounds")?,
+            downgraded_steps: count("downgraded_steps")?,
+            cancelled: count("cancelled")?,
+            retries: count("retries")?,
+            faults_injected: count("faults_injected")?,
+            compile_attempts: count("compile_attempts")?,
+            compile_exhausted: count("compile_exhausted")?,
+            ckpt_fails: count("ckpt_fails")?,
+            ckpt_retries: count("ckpt_retries")?,
+            reconfigures: count("reconfigures")?,
+            rung_rounds: j
+                .get("rung_rounds")?
+                .arr()?
+                .iter()
+                .map(|r| Ok(r.usize()? as u64))
+                .collect::<Result<Vec<u64>>>()?,
+            trace_events: count("trace_events")?,
+            trace_dropped: count("trace_dropped")?,
+            postmortems: count("postmortems")?,
+        })
+    }
+
+    /// One-shot Prometheus-style text exposition (the `# TYPE`d subset a
+    /// scraper needs; counters suffixed `_total`, everything else gauges).
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        macro_rules! head {
+            ($name:literal, $kind:literal, $help:literal) => {{
+                let _ = writeln!(out, concat!("# HELP ", $name, " ", $help));
+                let _ = writeln!(out, concat!("# TYPE ", $name, " ", $kind));
+            }};
+        }
+        macro_rules! put {
+            ($($t:tt)*) => {{ let _ = writeln!(out, $($t)*); }};
+        }
+        head!("msfp_requests_total", "counter", "requests retired (done)");
+        put!("msfp_requests_total {}", self.requests);
+        head!("msfp_images_total", "counter", "images generated");
+        put!("msfp_images_total {}", self.images);
+        head!("msfp_evals_total", "counter", "denoiser evaluations");
+        put!("msfp_evals_total {}", self.evals);
+        head!("msfp_rounds_total", "counter", "scheduling rounds executed");
+        put!("msfp_rounds_total {}", self.rounds);
+        head!("msfp_throughput_img_per_s", "gauge", "images per second over the serve wall time");
+        put!("msfp_throughput_img_per_s {}", self.throughput);
+        head!("msfp_latency_ms", "gauge", "request latency percentiles");
+        put!("msfp_latency_ms{{q=\"p50\"}} {}", self.latency_p50_ms);
+        put!("msfp_latency_ms{{q=\"p95\"}} {}", self.latency_p95_ms);
+        head!("msfp_round_phase_ms", "gauge", "cumulative round time by phase");
+        put!("msfp_round_phase_ms{{phase=\"exec\"}} {}", self.round_exec_ms);
+        put!("msfp_round_phase_ms{{phase=\"sched\"}} {}", self.round_sched_ms);
+        head!("msfp_queue_wait_rounds", "gauge", "per-class queue-wait percentiles in rounds");
+        for (i, class) in CLASS_NAMES.iter().enumerate() {
+            let class = class.to_ascii_lowercase();
+            put!("msfp_queue_wait_rounds{{class=\"{class}\",q=\"p50\"}} {}", self.wait_p50[i]);
+            put!("msfp_queue_wait_rounds{{class=\"{class}\",q=\"p99\"}} {}", self.wait_p99[i]);
+            put!("msfp_queue_wait_rounds{{class=\"{class}\",q=\"max\"}} {}", self.wait_max[i]);
+        }
+        head!("msfp_shed_total", "counter", "requests shed per class");
+        for (i, class) in CLASS_NAMES.iter().enumerate() {
+            put!("msfp_shed_total{{class=\"{}\"}} {}", class.to_ascii_lowercase(), self.shed[i]);
+        }
+        head!("msfp_rung_rounds_total", "counter", "degraded rounds per ladder rung");
+        for (rung, n) in self.rung_rounds.iter().enumerate() {
+            put!("msfp_rung_rounds_total{{rung=\"{rung}\"}} {n}");
+        }
+        head!("msfp_recal_checks_total", "counter", "background drift checks launched");
+        put!("msfp_recal_checks_total {}", self.recal_checks);
+        head!("msfp_recal_swaps_total", "counter", "qparams hot-swaps applied");
+        put!("msfp_recal_swaps_total {}", self.recal_swaps);
+        head!("msfp_probes_total", "counter", "shadow calibration probes submitted");
+        put!("msfp_probes_total {}", self.probes);
+        head!("msfp_retries_total", "counter", "failed-round retry attempts");
+        put!("msfp_retries_total {}", self.retries);
+        head!("msfp_faults_injected_total", "counter", "batch faults injected by the FaultPlan");
+        put!("msfp_faults_injected_total {}", self.faults_injected);
+        head!("msfp_ckpt_retries_total", "counter", "checkpoint write retries that landed");
+        put!("msfp_ckpt_retries_total {}", self.ckpt_retries);
+        head!("msfp_ckpt_fails_total", "counter", "checkpoint writes that exhausted retries");
+        put!("msfp_ckpt_fails_total {}", self.ckpt_fails);
+        head!("msfp_trace_events_total", "counter", "flight-recorder events emitted");
+        put!("msfp_trace_events_total {}", self.trace_events);
+        head!("msfp_trace_dropped_total", "counter", "flight-recorder events evicted by the ring");
+        put!("msfp_trace_dropped_total {}", self.trace_dropped);
+        head!("msfp_postmortems_total", "counter", "postmortem trace dumps written");
+        put!("msfp_postmortems_total {}", self.postmortems);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy() -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: 16,
+            images: 32,
+            evals: 236,
+            rounds: 11,
+            backend: "packed".to_string(),
+            packed_bytes: 2048,
+            wall_s: 0.8212345,
+            throughput: 38.973214,
+            latency_p50_ms: 412.25,
+            latency_p95_ms: 701.5,
+            mean_batch: 5.8181818,
+            mean_fill: 0.9090909,
+            round_exec_ms: 630.125,
+            round_sched_ms: 92.0625,
+            exec_fraction: 0.87253,
+            sel_hits: 200,
+            sel_misses: 36,
+            sel_hit_rate: 0.8474576,
+            recal_checks: 5,
+            recal_swaps: 2,
+            recal_layers: 7,
+            first_swap_round: Some(4),
+            probes: 12,
+            probes_skipped: 3,
+            probes_failed: 1,
+            wait_p50: [0, 1, 3],
+            wait_p99: [1, 2, 7],
+            wait_max: [1, 2, 9],
+            shed: [0, 0, 2],
+            downgraded_rounds: 4,
+            downgraded_steps: 1,
+            cancelled: 1,
+            retries: 3,
+            faults_injected: 2,
+            compile_attempts: 5,
+            compile_exhausted: 1,
+            ckpt_fails: 1,
+            ckpt_retries: 3,
+            reconfigures: 2,
+            rung_rounds: vec![4, 1],
+            trace_events: 120,
+            trace_dropped: 8,
+            postmortems: 1,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        for snap in [busy(), MetricsSnapshot::default()] {
+            let back = MetricsSnapshot::from_json(&snap.to_json()).unwrap();
+            assert_eq!(back, snap);
+            // through the actual serialized text, bit-for-bit — including
+            // the non-integer f64 fields
+            let text = snap.to_json().to_string();
+            let back = MetricsSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, snap);
+            assert_eq!(back.to_json().to_string(), text, "re-serialization must be stable");
+        }
+    }
+
+    #[test]
+    fn first_swap_round_roundtrips_none_as_null() {
+        let snap = MetricsSnapshot { first_swap_round: None, ..busy() };
+        let text = snap.to_json().to_string();
+        assert!(text.contains("\"first_swap_round\":null"), "{text}");
+        assert_eq!(MetricsSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap(), snap);
+    }
+
+    #[test]
+    fn render_busy_shows_slo_line_and_packed_suffix() {
+        let r = busy().render();
+        assert!(r.contains("backend packed (2.0 KiB packed)"), "{r}");
+        assert!(r.contains("recal 2/5 swaps (7 layers)"), "{r}");
+        assert!(r.contains("slo:"), "{r}");
+        assert!(r.contains("BestEffort wait p50/p99 3/7 rounds shed 2;"), "{r}");
+        assert!(r.contains("ladder rounds [4, 1]"), "{r}");
+        assert!(r.contains("ckpt 1 fails / 3 retries  reconfigures 2"), "{r}");
+        // recorder counters live in the snapshot, never in the report line
+        assert!(!r.contains("trace"), "{r}");
+        assert!(!r.contains("postmortem"), "{r}");
+    }
+
+    #[test]
+    fn render_slo_quiet_ignores_trace_counters() {
+        let snap = MetricsSnapshot {
+            backend: "graph".to_string(),
+            trace_events: 500,
+            trace_dropped: 100,
+            postmortems: 2,
+            ..MetricsSnapshot::default()
+        };
+        assert_eq!(snap.render_slo(), "");
+        // zero-valued waits with samples present stay quiet (wait_max==0)
+        let snap = MetricsSnapshot { wait_max: [0; 3], ..snap };
+        assert_eq!(snap.render_slo(), "");
+        // but any nonzero wait sample unquiets
+        let snap = MetricsSnapshot { wait_max: [0, 1, 0], ..snap };
+        assert!(snap.render_slo().contains("slo:"));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let text = busy().prometheus();
+        assert!(text.contains("# TYPE msfp_requests_total counter"), "{text}");
+        assert!(text.contains("msfp_requests_total 16"), "{text}");
+        assert!(text.contains("msfp_latency_ms{q=\"p50\"} 412.25"), "{text}");
+        assert!(
+            text.contains("msfp_queue_wait_rounds{class=\"besteffort\",q=\"p99\"} 7"),
+            "{text}"
+        );
+        assert!(text.contains("msfp_shed_total{class=\"besteffort\"} 2"), "{text}");
+        assert!(text.contains("msfp_rung_rounds_total{rung=\"1\"} 1"), "{text}");
+        assert!(text.contains("msfp_trace_events_total 120"), "{text}");
+        // every non-comment line is "name{labels} value"
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+            assert!(parts.next().unwrap().starts_with("msfp_"), "{line:?}");
+        }
+    }
+}

@@ -1,0 +1,357 @@
+//! Per-round telemetry: time-series samples + per-phase latency
+//! histograms, exported as `metrics.jsonl`.
+//!
+//! A [`RoundSample`] is one row of the serving time series — queue state,
+//! the active ladder rung, cumulative decision counters, per-class wait
+//! percentiles, the latest drift-check score and the round's plan/exec
+//! wall times. [`Telemetry`] keeps a bounded ring of rows plus one
+//! [`PhaseTimers`] set of power-of-two-bucket [`Hist`]ograms over the
+//! scheduler's five phases (plan / exec / offload / probe / recal).
+//!
+//! Everything numeric rides through `util::json`, whose integer-exact
+//! float printing makes `RoundSample::from_json(to_json(r)) == r` hold
+//! bit-for-bit — the same roundtrip contract `MetricsSnapshot` pins.
+//! Wall-clock fields live *only* here: the telemetry file is the timing
+//! side-channel, the flight recorder's logical trace stays clock-free.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::util::json::{arr, num, obj, Json};
+
+/// Power-of-two-bucket latency histogram: bucket `i > 0` counts samples
+/// in `[2^(i-1), 2^i)` microseconds, bucket 0 counts zeros. 32 buckets
+/// cover past an hour; mean is exact via `sum_us`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Hist {
+    pub buckets: [u64; 32],
+    pub count: u64,
+    pub sum_us: u64,
+}
+
+impl Hist {
+    pub fn record_us(&mut self, us: u64) {
+        let b = if us == 0 { 0 } else { (64 - us.leading_zeros() as usize).min(31) };
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_us += us;
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", num(self.count as f64)),
+            ("sum_us", num(self.sum_us as f64)),
+            ("buckets", arr(self.buckets.iter().map(|&b| num(b as f64)))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Hist> {
+        let mut h = Hist {
+            count: j.get("count")?.usize()? as u64,
+            sum_us: j.get("sum_us")?.usize()? as u64,
+            ..Hist::default()
+        };
+        let buckets = j.get("buckets")?.arr()?;
+        anyhow::ensure!(buckets.len() == 32, "histogram needs 32 buckets, got {}", buckets.len());
+        for (slot, b) in h.buckets.iter_mut().zip(buckets) {
+            *slot = b.usize()? as u64;
+        }
+        Ok(h)
+    }
+}
+
+/// One histogram per scheduler phase. `offload` covers the scatter +
+/// completion lane (decode/send handoff), `recal` the round-boundary
+/// swap/bookkeeping span — the in-flight background check itself runs
+/// off-thread and is *not* a scheduler phase.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PhaseTimers {
+    pub plan: Hist,
+    pub exec: Hist,
+    pub offload: Hist,
+    pub probe: Hist,
+    pub recal: Hist,
+}
+
+impl PhaseTimers {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("plan", self.plan.to_json()),
+            ("exec", self.exec.to_json()),
+            ("offload", self.offload.to_json()),
+            ("probe", self.probe.to_json()),
+            ("recal", self.recal.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PhaseTimers> {
+        Ok(PhaseTimers {
+            plan: Hist::from_json(j.get("plan")?)?,
+            exec: Hist::from_json(j.get("exec")?)?,
+            offload: Hist::from_json(j.get("offload")?)?,
+            probe: Hist::from_json(j.get("probe")?)?,
+            recal: Hist::from_json(j.get("recal")?)?,
+        })
+    }
+}
+
+/// One row of the per-round time series. Counter fields are *cumulative*
+/// (totals as of this round), so a truncated ring still yields correct
+/// rates by differencing adjacent rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundSample {
+    pub round: u64,
+    /// active requests at plan time (in-flight working set)
+    pub depth: u32,
+    /// admission candidates this round (ready, not backed off)
+    pub backlog: u32,
+    pub admitted: u32,
+    pub deferred: u32,
+    pub batches: u32,
+    /// ladder rung index the backlog selected (-1 = full quality)
+    pub rung: i32,
+    pub shed: u64,
+    pub retries: u64,
+    pub faults: u64,
+    pub evals: u64,
+    pub probes: u64,
+    pub recal_checks: u64,
+    pub recal_swaps: u64,
+    pub ckpt_retries: u64,
+    /// max drift score of the latest completed recal check (0 = none yet)
+    pub drift_max: f32,
+    /// cumulative per-class queue-wait p50 (rounds), `SloClass::ALL` order
+    pub wait_p50: [u64; 3],
+    pub wait_p99: [u64; 3],
+    pub plan_us: u64,
+    pub exec_us: u64,
+}
+
+impl RoundSample {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("round", num(self.round as f64)),
+            ("depth", num(self.depth as f64)),
+            ("backlog", num(self.backlog as f64)),
+            ("admitted", num(self.admitted as f64)),
+            ("deferred", num(self.deferred as f64)),
+            ("batches", num(self.batches as f64)),
+            ("rung", num(self.rung as f64)),
+            ("shed", num(self.shed as f64)),
+            ("retries", num(self.retries as f64)),
+            ("faults", num(self.faults as f64)),
+            ("evals", num(self.evals as f64)),
+            ("probes", num(self.probes as f64)),
+            ("recal_checks", num(self.recal_checks as f64)),
+            ("recal_swaps", num(self.recal_swaps as f64)),
+            ("ckpt_retries", num(self.ckpt_retries as f64)),
+            ("drift_max", num(self.drift_max as f64)),
+            ("wait_p50", arr(self.wait_p50.iter().map(|&w| num(w as f64)))),
+            ("wait_p99", arr(self.wait_p99.iter().map(|&w| num(w as f64)))),
+            ("plan_us", num(self.plan_us as f64)),
+            ("exec_us", num(self.exec_us as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RoundSample> {
+        let triple = |key: &str| -> Result<[u64; 3]> {
+            let v = j.get(key)?.arr()?;
+            anyhow::ensure!(v.len() == 3, "{key} needs 3 classes, got {}", v.len());
+            Ok([v[0].usize()? as u64, v[1].usize()? as u64, v[2].usize()? as u64])
+        };
+        Ok(RoundSample {
+            round: j.get("round")?.usize()? as u64,
+            depth: j.get("depth")?.usize()? as u32,
+            backlog: j.get("backlog")?.usize()? as u32,
+            admitted: j.get("admitted")?.usize()? as u32,
+            deferred: j.get("deferred")?.usize()? as u32,
+            batches: j.get("batches")?.usize()? as u32,
+            rung: j.get("rung")?.i64()? as i32,
+            shed: j.get("shed")?.usize()? as u64,
+            retries: j.get("retries")?.usize()? as u64,
+            faults: j.get("faults")?.usize()? as u64,
+            evals: j.get("evals")?.usize()? as u64,
+            probes: j.get("probes")?.usize()? as u64,
+            recal_checks: j.get("recal_checks")?.usize()? as u64,
+            recal_swaps: j.get("recal_swaps")?.usize()? as u64,
+            ckpt_retries: j.get("ckpt_retries")?.usize()? as u64,
+            drift_max: j.get("drift_max")?.f32()?,
+            wait_p50: triple("wait_p50")?,
+            wait_p99: triple("wait_p99")?,
+            plan_us: j.get("plan_us")?.usize()? as u64,
+            exec_us: j.get("exec_us")?.usize()? as u64,
+        })
+    }
+}
+
+/// Bounded per-round time series + phase histograms. `cap` rows are
+/// retained (oldest evicted, counted in `rows_dropped`); cumulative
+/// counters in each row keep a truncated series differentiable.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    cap: usize,
+    rows: VecDeque<RoundSample>,
+    pub timers: PhaseTimers,
+    rows_dropped: u64,
+    rows_total: u64,
+}
+
+impl Telemetry {
+    /// `cap` = retained rows; 0 disables row retention (timers still
+    /// accumulate — they are O(1) regardless).
+    pub fn new(cap: usize) -> Telemetry {
+        Telemetry { cap, ..Telemetry::default() }
+    }
+
+    pub fn push(&mut self, row: RoundSample) {
+        self.rows_total += 1;
+        if self.cap == 0 {
+            self.rows_dropped += 1;
+            return;
+        }
+        if self.rows.len() == self.cap {
+            self.rows.pop_front();
+            self.rows_dropped += 1;
+        }
+        self.rows.push_back(row);
+    }
+
+    pub fn rows(&self) -> impl Iterator<Item = &RoundSample> {
+        self.rows.iter()
+    }
+
+    /// The `metrics.jsonl` image: one JSON object per retained round,
+    /// oldest first, then one trailer object carrying the phase
+    /// histograms and the ring accounting.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for row in &self.rows {
+            out.push_str(&row.to_json().to_string());
+            out.push('\n');
+        }
+        let trailer = obj(vec![
+            ("phase_timers", self.timers.to_json()),
+            ("rows_total", num(self.rows_total as f64)),
+            ("rows_dropped", num(self.rows_dropped as f64)),
+        ]);
+        out.push_str(&trailer.to_string());
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(round: u64) -> RoundSample {
+        RoundSample {
+            round,
+            depth: 5,
+            backlog: 3,
+            admitted: 3,
+            deferred: 0,
+            batches: 2,
+            rung: -1,
+            shed: 1,
+            retries: 2,
+            faults: 1,
+            evals: 40,
+            probes: 4,
+            recal_checks: 2,
+            recal_swaps: 1,
+            ckpt_retries: 0,
+            drift_max: 0.62,
+            wait_p50: [0, 1, 3],
+            wait_p99: [1, 2, 7],
+            plan_us: 130,
+            exec_us: 5400,
+        }
+    }
+
+    #[test]
+    fn hist_buckets_by_power_of_two() {
+        let mut h = Hist::default();
+        h.record_us(0); // bucket 0
+        h.record_us(1); // [1,2) -> bucket 1
+        h.record_us(2); // [2,4) -> bucket 2
+        h.record_us(3);
+        h.record_us(1000); // [512,1024) -> bucket 10
+        h.record_us(u64::MAX); // clamps to bucket 31
+        assert_eq!(h.count, 6);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[1], 1);
+        assert_eq!(h.buckets[2], 2);
+        assert_eq!(h.buckets[10], 1);
+        assert_eq!(h.buckets[31], 1);
+        assert_eq!(h.buckets.iter().sum::<u64>(), h.count);
+    }
+
+    #[test]
+    fn hist_mean_and_json_roundtrip() {
+        let mut h = Hist::default();
+        for us in [10, 20, 60] {
+            h.record_us(us);
+        }
+        assert!((h.mean_us() - 30.0).abs() < 1e-12);
+        let back = Hist::from_json(&h.to_json()).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(Hist::from_json(&Json::parse(&h.to_json().to_string()).unwrap()).unwrap(), h);
+    }
+
+    #[test]
+    fn round_sample_json_roundtrip_is_exact() {
+        let r = sample(17);
+        let back = RoundSample::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        // through the actual text form (what metrics.jsonl holds)
+        let text = r.to_json().to_string();
+        let back = RoundSample::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn telemetry_ring_caps_and_jsonl_shape() {
+        let mut t = Telemetry::new(3);
+        for round in 0..5 {
+            t.push(sample(round));
+        }
+        t.timers.plan.record_us(100);
+        t.timers.exec.record_us(9000);
+        assert_eq!(t.rows().count(), 3);
+        assert_eq!(t.rows().next().unwrap().round, 2, "oldest rows evicted");
+        let jsonl = t.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 4, "3 rows + trailer");
+        for (i, line) in lines[..3].iter().enumerate() {
+            let row = RoundSample::from_json(&Json::parse(line).unwrap()).unwrap();
+            assert_eq!(row.round, i as u64 + 2);
+        }
+        let trailer = Json::parse(lines[3]).unwrap();
+        assert_eq!(trailer.get("rows_total").unwrap().usize().unwrap(), 5);
+        assert_eq!(trailer.get("rows_dropped").unwrap().usize().unwrap(), 2);
+        let timers = PhaseTimers::from_json(trailer.get("phase_timers").unwrap()).unwrap();
+        assert_eq!(timers, t.timers);
+    }
+
+    #[test]
+    fn zero_capacity_disables_rows_not_timers() {
+        let mut t = Telemetry::new(0);
+        t.push(sample(0));
+        t.timers.recal.record_us(5);
+        assert_eq!(t.rows().count(), 0);
+        let jsonl = t.to_jsonl();
+        assert_eq!(jsonl.lines().count(), 1, "trailer only");
+        let trailer = Json::parse(jsonl.lines().next().unwrap()).unwrap();
+        assert_eq!(trailer.get("rows_dropped").unwrap().usize().unwrap(), 1);
+    }
+}

@@ -404,7 +404,7 @@ mod tests {
     fn full_fast_pipeline_ddim16() {
         let dir = Pipeline::default_artifacts_dir();
         if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         }
         let mut scale = Scale::fast();

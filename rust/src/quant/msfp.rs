@@ -23,7 +23,12 @@ use super::session::QuantSession;
 ///   * `sketches.msk`  — the versioned `SketchSet` snapshot;
 ///   * `packed.mpk`    — the versioned nibble-packed weight blob
 ///     (`quant::packed::PackedModel::save`), the packed backend's
-///     sub-byte code indices + per-layer code tables.
+///     sub-byte code indices + per-layer code tables;
+///   * `trace.mtr`     — the flight-recorder postmortem
+///     (`obs::Trace::save`), dumped on shed storms, injected faults,
+///     recal-check panics and shutdown;
+///   * `metrics.jsonl` — the per-round telemetry time series
+///     (`obs::Telemetry::to_jsonl`), written alongside the trace.
 #[derive(Debug, Clone)]
 pub struct StateDir {
     root: PathBuf,
@@ -51,6 +56,16 @@ impl StateDir {
     /// Path of the packed-weight blob (`PackedModel::save`/`load`).
     pub fn packed_path(&self) -> PathBuf {
         self.root.join("packed.mpk")
+    }
+
+    /// Path of the flight-recorder postmortem (`obs::Trace::save`/`load`).
+    pub fn trace_path(&self) -> PathBuf {
+        self.root.join("trace.mtr")
+    }
+
+    /// Path of the per-round telemetry export (`obs::Telemetry::to_jsonl`).
+    pub fn telemetry_path(&self) -> PathBuf {
+        self.root.join("metrics.jsonl")
     }
 
     /// Remove staged `*.tmp.<pid>.<seq>` files left by a process killed

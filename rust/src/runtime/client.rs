@@ -266,7 +266,7 @@ mod tests {
     #[test]
     fn loads_and_runs_features_artifact() {
         let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         };
         let engine = Engine::new(&dir).unwrap();

@@ -510,7 +510,7 @@ mod tests {
     fn setup() -> Option<(Arc<Engine>, Manifest)> {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !d.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return None;
         }
         Some((Arc::new(Engine::new(&d).unwrap()), Manifest::load(&d).unwrap()))

@@ -93,7 +93,7 @@ mod tests {
     fn collects_layer_calibs() {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !d.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         }
         let m = Manifest::load(&d).unwrap();
@@ -120,7 +120,7 @@ mod tests {
     fn empty_x0_pool_errors_instead_of_panicking() {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !d.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         }
         let m = Manifest::load(&d).unwrap();

@@ -303,7 +303,7 @@ mod tests {
     fn finetune_reduces_loss_on_tiny_run() {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !d.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         }
         let m = Manifest::load(&d).unwrap();
@@ -361,7 +361,7 @@ mod tests {
     fn finetune_recal_cadence_recalibrates_and_stays_finite() {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !d.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         }
         let m = Manifest::load(&d).unwrap();

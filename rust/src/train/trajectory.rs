@@ -124,7 +124,7 @@ mod tests {
     fn collects_consistent_shapes() {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !d.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         }
         let m = Manifest::load(&d).unwrap();

@@ -2,7 +2,9 @@
 //! unavailable offline). Auto-calibrates iteration counts to a time budget
 //! and reports median / p10 / p90 per-iteration latency, plus a JSON
 //! emitter (`write_json`) so BENCH_*.json files keep the perf trajectory
-//! machine-readable across PRs.
+//! machine-readable across PRs. Every emitted file carries a [`run_meta`]
+//! header (git rev, worker count, build profile) so a BENCH row is
+//! attributable to the commit and machine shape that produced it.
 
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -105,8 +107,40 @@ pub fn metric_row(name: &str, value: f64, unit: &str) -> Json {
     obj(vec![("name", s(name)), ("value", num(value)), ("unit", s(unit))])
 }
 
-/// Write bench results as `{"benches": [...]}` so the perf trajectory is
-/// machine-readable (diffable) across PRs.
+/// Run-metadata header stamped into every BENCH_*.json: the short git
+/// revision (plus a `-dirty` suffix when the tree has uncommitted
+/// changes; "unknown" outside a git checkout), the resolved worker count
+/// of this machine, and the build profile — enough to attribute a perf
+/// row across PRs and machines.
+pub fn run_meta() -> Json {
+    obj(vec![
+        ("git_rev", s(&git_rev())),
+        ("workers", num(crate::util::threadpool::resolve_threads(0) as f64)),
+        ("profile", s(if cfg!(debug_assertions) { "debug" } else { "release" })),
+    ])
+}
+
+fn git_rev() -> String {
+    let out = |args: &[&str]| {
+        std::process::Command::new("git")
+            .args(args)
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+    };
+    let Some(rev) = out(&["rev-parse", "--short=12", "HEAD"]).filter(|r| !r.is_empty()) else {
+        return "unknown".to_string();
+    };
+    // `git status --porcelain` prints nothing for a clean tree
+    match out(&["status", "--porcelain"]) {
+        Some(status) if !status.is_empty() => format!("{rev}-dirty"),
+        _ => rev,
+    }
+}
+
+/// Write bench results as `{"meta": {...}, "benches": [...]}` so the perf
+/// trajectory is machine-readable (diffable) across PRs.
 pub fn write_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
     write_json_rows(path, results.iter().map(|r| r.to_json()).collect())
 }
@@ -114,7 +148,7 @@ pub fn write_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
 /// [`write_json`] for a mix of timing rows ([`BenchResult::to_json`]) and
 /// [`metric_row`]s.
 pub fn write_json_rows(path: &Path, rows: Vec<Json>) -> std::io::Result<()> {
-    let j = obj(vec![("benches", arr(rows))]);
+    let j = obj(vec![("meta", run_meta()), ("benches", arr(rows))]);
     std::fs::write(path, j.to_string() + "\n")
 }
 
@@ -171,6 +205,21 @@ mod tests {
         assert_eq!(rows[1].get("name").unwrap().str().unwrap(), "coordinator_parallel");
         assert_eq!(rows[1].get("value").unwrap().f64().unwrap(), 123.5);
         assert_eq!(rows[1].get("unit").unwrap().str().unwrap(), "img/s");
+    }
+
+    #[test]
+    fn meta_header_stamped_on_every_file() {
+        let path =
+            std::env::temp_dir().join(format!("msfp_bench_meta_{}.json", std::process::id()));
+        write_json_rows(&path, vec![metric_row("x", 1.0, "unit")]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let meta = j.get("meta").unwrap();
+        assert!(!meta.get("git_rev").unwrap().str().unwrap().is_empty());
+        assert!(meta.get("workers").unwrap().usize().unwrap() >= 1);
+        let profile = meta.get("profile").unwrap().str().unwrap();
+        assert!(profile == "debug" || profile == "release", "{profile}");
+        // rows remain under "benches", unchanged by the header
+        assert_eq!(j.get("benches").unwrap().arr().unwrap().len(), 1);
     }
 
     #[test]

@@ -1,12 +1,48 @@
 //! Leveled stderr logging with wall-clock-since-start prefixes.
+//!
+//! The level initializes from `MSFP_LOG=off|warn|info|debug` (or `0..3`)
+//! at first use and defaults to `info`; an unrecognized value warns once
+//! on stderr and falls back to the default. [`set_level`] still overrides
+//! at runtime (tests and the experiment harness use it).
+//!
+//! Tests assert on log output through [`capture`]: while the returned
+//! guard lives, every emitted line is appended to its buffer *instead of*
+//! stderr. The capture sink is process-global (tests run multithreaded —
+//! a concurrent test's lines may land in the buffer too, so assert with
+//! `contains`, not equality).
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use once_cell::sync::Lazy;
 
 static START: Lazy<Instant> = Lazy::new(Instant::now);
-static LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=warn 2=info 3=debug
+// 0=off 1=warn 2=info 3=debug
+static LEVEL: Lazy<AtomicU8> = Lazy::new(|| AtomicU8::new(level_from_env()));
+
+/// Parse one `MSFP_LOG` value; `None` for unrecognized input.
+pub fn parse_level(v: &str) -> Option<u8> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "off" | "0" => Some(0),
+        "warn" | "warning" | "1" => Some(1),
+        "info" | "2" => Some(2),
+        "debug" | "3" => Some(3),
+        _ => None,
+    }
+}
+
+fn level_from_env() -> u8 {
+    match std::env::var("MSFP_LOG") {
+        Ok(v) => parse_level(&v).unwrap_or_else(|| {
+            // the sink may not exist yet — this warning goes straight to
+            // stderr, once, before any leveled logging happens
+            eprintln!("MSFP_LOG={v:?} not recognized (off|warn|info|debug); defaulting to info");
+            2
+        }),
+        Err(_) => 2,
+    }
+}
 
 pub fn set_level(level: u8) {
     LEVEL.store(level, Ordering::Relaxed);
@@ -20,11 +56,63 @@ pub fn elapsed() -> f64 {
     START.elapsed().as_secs_f64()
 }
 
+type Sink = Arc<Mutex<Vec<String>>>;
+
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+/// Capture guard: collects emitted log lines while alive (see [`capture`]);
+/// dropping it restores stderr emission.
+pub struct LogCapture {
+    buf: Sink,
+}
+
+impl LogCapture {
+    /// Lines captured so far (formatted exactly as stderr would show them).
+    pub fn lines(&self) -> Vec<String> {
+        self.buf.lock().unwrap().clone()
+    }
+
+    /// Whether any captured line contains `needle`.
+    pub fn contains(&self, needle: &str) -> bool {
+        self.buf.lock().unwrap().iter().any(|l| l.contains(needle))
+    }
+}
+
+impl Drop for LogCapture {
+    fn drop(&mut self) {
+        let mut sink = SINK.lock().unwrap();
+        // only uninstall our own buffer — a later capture() owns the slot
+        if sink.as_ref().is_some_and(|s| Arc::ptr_eq(s, &self.buf)) {
+            *sink = None;
+        }
+    }
+}
+
+/// Install a capturing sink: until the returned guard drops, emitted log
+/// lines go to its buffer instead of stderr. Installing a new capture
+/// replaces the previous sink.
+pub fn capture() -> LogCapture {
+    let buf: Sink = Arc::new(Mutex::new(Vec::new()));
+    *SINK.lock().unwrap() = Some(Arc::clone(&buf));
+    LogCapture { buf }
+}
+
+/// Emission point shared by the `log_*` macros: format the line once,
+/// then route it to the captured sink (if any) or stderr.
+pub fn emit(tag: &str, msg: String) {
+    let line = format!("[{:8.2}s {tag}] {msg}", elapsed());
+    let sink = SINK.lock().unwrap().clone();
+    match sink {
+        Some(buf) => buf.lock().unwrap().push(line),
+        None => eprintln!("{line}"),
+    }
+}
+
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
         if $crate::util::logging::level() >= 2 {
-            eprintln!("[{:8.2}s INFO] {}", $crate::util::logging::elapsed(), format!($($arg)*));
+            $crate::util::logging::emit("INFO", format!($($arg)*));
         }
     };
 }
@@ -33,7 +121,7 @@ macro_rules! log_info {
 macro_rules! log_warn {
     ($($arg:tt)*) => {
         if $crate::util::logging::level() >= 1 {
-            eprintln!("[{:8.2}s WARN] {}", $crate::util::logging::elapsed(), format!($($arg)*));
+            $crate::util::logging::emit("WARN", format!($($arg)*));
         }
     };
 }
@@ -42,7 +130,7 @@ macro_rules! log_warn {
 macro_rules! log_debug {
     ($($arg:tt)*) => {
         if $crate::util::logging::level() >= 3 {
-            eprintln!("[{:8.2}s DBG ] {}", $crate::util::logging::elapsed(), format!($($arg)*));
+            $crate::util::logging::emit("DBG ", format!($($arg)*));
         }
     };
 }
@@ -64,5 +152,49 @@ mod tests {
         let a = elapsed();
         let b = elapsed();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn env_values_parse() {
+        assert_eq!(parse_level("off"), Some(0));
+        assert_eq!(parse_level("0"), Some(0));
+        assert_eq!(parse_level("WARN"), Some(1));
+        assert_eq!(parse_level("warning"), Some(1));
+        assert_eq!(parse_level(" info "), Some(2));
+        assert_eq!(parse_level("Debug"), Some(3));
+        assert_eq!(parse_level("3"), Some(3));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level(""), None);
+    }
+
+    #[test]
+    fn capture_collects_warns_and_restores_on_drop() {
+        let old = level();
+        set_level(2);
+        let cap = capture();
+        log_warn!("captured warning {}", 42);
+        log_info!("captured info");
+        log_debug!("below level — not emitted");
+        assert!(cap.contains("captured warning 42"), "{:?}", cap.lines());
+        assert!(cap.contains("INFO] captured info"), "{:?}", cap.lines());
+        assert!(!cap.contains("not emitted"), "{:?}", cap.lines());
+        // formatted exactly like the stderr line: "[  12.34s WARN] ..."
+        let line = cap
+            .lines()
+            .into_iter()
+            .find(|l| l.contains("captured warning"))
+            .unwrap();
+        assert!(line.starts_with('['), "{line}");
+        assert!(line.contains("s WARN] "), "{line}");
+        drop(cap);
+        // a fresh capture starts empty (the old buffer was uninstalled)
+        let cap = capture();
+        assert!(!cap.contains("captured warning 42"));
+        // level 0 suppresses even captured warns (same test to avoid
+        // racing the global level against the assertions above)
+        set_level(0);
+        log_warn!("silenced");
+        assert!(!cap.contains("silenced"), "{:?}", cap.lines());
+        set_level(old);
     }
 }

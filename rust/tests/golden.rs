@@ -91,7 +91,7 @@ fn drift_score_golden_vector() {
 #[test]
 fn quant_golden_agreement() {
     let Some(dir) = golden_dir() else {
-        eprintln!("skipping: goldens not built (run `make artifacts`)");
+        msfp::log_warn!("skipping: goldens not built (run `make artifacts`)");
         return;
     };
     let j = Json::parse(&std::fs::read_to_string(dir.join("quant_golden.json")).unwrap()).unwrap();
@@ -132,7 +132,7 @@ fn quant_golden_agreement() {
 #[test]
 fn router_golden_agreement() {
     let Some(dir) = golden_dir() else {
-        eprintln!("skipping: goldens not built");
+        msfp::log_warn!("skipping: goldens not built");
         return;
     };
     let j =

@@ -35,7 +35,7 @@ fn tiny_scale() -> Scale {
 #[test]
 fn quantize_then_serve_quantized() {
     let Some(dir) = artifacts() else {
-        eprintln!("skipping: artifacts not built");
+        msfp::log_warn!("skipping: artifacts not built");
         return;
     };
     std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_integ_runs"));
@@ -433,6 +433,30 @@ fn serving_recalibration_hot_swaps_on_drift_only() {
     for img in &drift_imgs {
         assert!(img.iter().all(|b| f32::from_bits(*b).is_finite()));
     }
+    // the hot-swap audit trail: one record per landed swap, carrying a
+    // real qparams fingerprint transition and the drifted layer set the
+    // detector scored — the postmortem answer to "what changed, when, why"
+    assert_eq!(clean_m.swap_audits.len(), 0, "undrifted stream must not record audits");
+    assert_eq!(
+        drift_m.swap_audits.len(),
+        drift_m.recal_swaps,
+        "every swap must leave an audit record: {}",
+        drift_m.report()
+    );
+    let audit = &drift_m.swap_audits[0];
+    assert_ne!(audit.old_fp, audit.new_fp, "audited swap did not change the qparams");
+    assert!(!audit.drifted.is_empty(), "audit lost its drifted layers");
+    assert!(audit.drifted.iter().all(|&(_, score)| score > 0.0), "drift scores must be real");
+    assert_eq!(
+        drift_m.swap_audits.iter().map(|a| a.drifted.len()).sum::<usize>(),
+        drift_m.recal_layers,
+        "audit layer sets disagree with the recal_layers counter"
+    );
+    assert_eq!(
+        Some(audit.round as usize),
+        drift_m.first_swap_round,
+        "first audit round disagrees with first_swap_round"
+    );
     std::env::remove_var("MSFP_RUNS");
 }
 
@@ -782,6 +806,126 @@ fn overload_sheds_and_degrades_deterministically_across_workers() {
         assert_eq!(m.images_done, m_n.images_done);
         assert_eq!(m.rounds, m_n.rounds, "workers={workers} changed round count");
     }
+}
+
+/// The flight recorder's determinism contract: the *logical* event trace
+/// (wall-clock annotations stripped) of an overload workload — admits,
+/// sheds, rung changes, per-round summaries, completions — is
+/// byte-identical between a 1-worker and a 4-worker server. The shutdown
+/// postmortem (`trace.mtr` + `metrics.jsonl`) must land in the obs dir,
+/// reload through the versioned parser, and stay loud when corrupted.
+#[test]
+fn flight_recorder_trace_is_bit_identical_across_workers() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::{degraded_state, LadderRung, ObsCfg, SloCfg, SloClass};
+    use msfp::obs::Trace;
+    use msfp::quant::msfp::StateDir;
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let info = pl.manifest.model("ddim16").unwrap().clone();
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(msfp::model::ParamStore::load_init(&info, &dir).unwrap().flat);
+    let mut rng = Rng::new(7);
+    let mut qp = Vec::new();
+    for _ in 0..info.n_layers {
+        qp.extend_from_slice(&[1.0, 2.0, 1.0, 1.0, 4.0, 2.0, 1.0, -0.2]);
+    }
+    let qs = QuantState {
+        qparams: qp.clone(),
+        lora: vec![0.0; info.lora_size],
+        router: Router::init(&info, &mut rng),
+        hub_mask: vec![1.0, 1.0, 0.0, 0.0],
+        strategy: AllocStrategy::Learned,
+        t_total: 100,
+    };
+    let mut deg_qp = qp;
+    for v in deg_qp.iter_mut().step_by(2) {
+        *v *= 0.5;
+    }
+    let ladder = vec![LadderRung { wbits: 3, abits: 4, state: degraded_state(&qs, deg_qp) }];
+    // overloaded from round one (backlog over a budget of 4, mixed SLO
+    // classes), plus one impossible-deadline request so the trace carries
+    // at least one shed — the event mix exercises most kinds
+    let workload = || -> Vec<Request> {
+        let mut v: Vec<Request> = (0..8u64)
+            .map(|i| {
+                let mut r = Request::new(i, 1 + (i as usize % 2), 4 + (i as usize % 3))
+                    .with_slo(match i % 3 {
+                        0 => SloClass::Interactive,
+                        1 => SloClass::Batch,
+                        _ => SloClass::BestEffort,
+                    });
+                r.seed = 300 + i;
+                r
+            })
+            .collect();
+        let mut doomed = Request::new(99, 3, 6).with_slo(SloClass::BestEffort);
+        doomed.seed = 999;
+        doomed.deadline_rounds = 1;
+        v.push(doomed);
+        v
+    };
+    let run = |workers: usize, root: &std::path::Path| {
+        let _ = std::fs::remove_dir_all(root);
+        std::fs::create_dir_all(root).unwrap();
+        let handle = coordinator::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            ServerCfg {
+                seed: 13,
+                workers,
+                slo: SloCfg { queue_budget: 4, step_cut: 2, ladder: ladder.clone() },
+                obs: ObsCfg { dir: Some(StateDir::new(root)), ..ObsCfg::default() },
+                ..ServerCfg::new(ServeMode::Quant(qs.clone()))
+            },
+        );
+        let rxs = handle.submit_many(workload()).unwrap();
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        let m = handle.shutdown();
+        let trace =
+            Trace::load(&StateDir::new(root).trace_path()).expect("postmortem trace reloads");
+        (trace, m)
+    };
+
+    let root1 = std::env::temp_dir().join("msfp_integ_trace_w1");
+    let root4 = std::env::temp_dir().join("msfp_integ_trace_w4");
+    let (t1, m1) = run(1, &root1);
+    let (t4, m4) = run(4, &root4);
+
+    // the recorder saw real traffic and the shutdown dump landed
+    assert!(m1.trace_events > 0, "recorder never saw an event: {}", m1.report());
+    assert_eq!(m1.trace_dropped, 0, "ring overflowed on a tiny workload");
+    assert!(m1.postmortems >= 1, "shutdown never dumped a postmortem");
+    assert!(StateDir::new(&root1).telemetry_path().exists(), "telemetry series missing");
+
+    // the logical trace is byte-identical for 1 vs 4 workers: wall-clock
+    // annotations differ, every decision event agrees bit-for-bit
+    assert_eq!(m1.trace_events, m4.trace_events, "event counts diverged across workers");
+    assert_eq!(
+        t1.logical_bytes(),
+        t4.logical_bytes(),
+        "logical traces diverged across worker counts:\n-- w1 --\n{}\n-- w4 --\n{}",
+        t1.render(),
+        t4.render()
+    );
+
+    // the human rendering names the decisions the workload forced
+    let txt = t1.render();
+    for needle in ["admit", "shed", "round", "done", "shutdown"] {
+        assert!(txt.contains(needle), "trace rendering lost {needle} events:\n{txt}");
+    }
+
+    // a truncated dump stays loud with its distinct parse error
+    let tp = StateDir::new(&root1).trace_path();
+    let bytes = std::fs::read(&tp).unwrap();
+    std::fs::write(&tp, &bytes[..bytes.len() / 2]).unwrap();
+    let err = Trace::load(&tp).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated trace"), "unexpected error: {err:#}");
+    let _ = std::fs::remove_dir_all(&root1);
+    let _ = std::fs::remove_dir_all(&root4);
 }
 
 /// The fault-injection contract: a seeded `FaultPlan` forces the same

@@ -22,6 +22,9 @@
 #                                              fault kill-point soak and the
 #                                              live-reconfigure determinism
 #                                              test
+#   trace-determinism smoke                    named re-run of the flight-
+#                                              recorder logical-trace parity
+#                                              test (1 vs 4 workers)
 #   test-count floor                           the summed `N passed` totals
 #                                              must not drop below
 #                                              scripts/test_floor.txt, so a
@@ -75,6 +78,13 @@ echo "== chaos soak (storage-fault kill points + live reconfiguration) =="
 cargo test -q --test integration \
     chaos_checkpoint_kill_points_preserve_restart_decisions \
     reconfigure_and_ladder_rungs_are_deterministic_across_workers
+
+echo "== trace-determinism smoke (flight-recorder logical trace, 1 vs 4 workers) =="
+# the observability contract gets its own CI line: the logical event trace
+# (wall-clock stripped) of an overload workload must be byte-identical for
+# any worker count, and the shutdown postmortem must reload cleanly
+cargo test -q --test integration \
+    flight_recorder_trace_is_bit_identical_across_workers
 
 echo "== test-count regression guard =="
 total=$(grep -E 'test result: ok' "$test_log" \
