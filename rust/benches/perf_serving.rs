@@ -36,14 +36,20 @@
 //!   * `overload_*`: the same workload oversubscribed against a queue
 //!     budget with a two-rung degradation ladder installed — per-class
 //!     queue-wait p50/p99 (rounds) plus shed / downgraded-round /
-//!     step-cut / per-rung round counts.
+//!     step-cut / per-rung round counts;
+//!   * `fleet_shards{N}_img_per_s`: the throughput workload through an
+//!     N-shard fleet (consistent-hash router, N ∈ {1, 2, 4}) — the
+//!     scaling story of running N coordinators behind one front door;
+//!   * `fleet_merge_overhead`: wall time of one 4-shard aggregation
+//!     boundary (round-boundary harvest of every shard + canonical
+//!     window merge + one drift check/plan + swap broadcast).
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use msfp::coordinator::{
-    self, degraded_state, LadderRung, Metrics, ObsCfg, Request, ServeMode, ServeRecal, ServerCfg,
-    SloCfg, SloClass,
+    self, degraded_state, Fleet, FleetCfg, LadderRung, Metrics, ObsCfg, Request, ServeMode,
+    ServeRecal, ServerCfg, SloCfg, SloClass,
 };
 use msfp::lora::hub::AllocStrategy;
 use msfp::lora::Router;
@@ -545,6 +551,71 @@ fn main() {
     rows.push(metric_row("overload_step_cuts", over_m.downgraded_steps as f64, "steps"));
     for (i, &r) in over_m.rung_rounds.iter().enumerate() {
         rows.push(metric_row(&format!("overload_rung{i}_rounds"), r as f64, "rounds"));
+    }
+
+    // --- fleet serving: shard-count scaling + aggregation overhead --------
+    // The throughput workload through a 1/2/4-shard fleet: requests route
+    // by consistent hash over fleet-assigned ids, every shard serves the
+    // same quantized state. Each shard's window carries a routed slice of
+    // the same shifted calibration replay the hot-swap bench uses, so the
+    // timed aggregation boundary does real work: harvest every shard,
+    // canonically merge the windows, run one drift check on the merged
+    // window and broadcast the resulting swap.
+    println!("\n-- fleet serving (consistent-hash router, canonical window merge) --");
+    let fleet_opts = || QuantOpts::new(Method::Msfp, info.n_layers, 4, 4);
+    let mut merge_overhead_ms = None;
+    for n in [1usize, 2, 4] {
+        let weights = ParamStore::from_vec(&info, (*params).clone())
+            .unwrap()
+            .layer_weights(&info)
+            .unwrap();
+        let session = QuantSession::from_owned(weights, calib.clone());
+        let _ = session.quantize(&fleet_opts()); // warm: swaps pay only drifted layers
+        let mut cfg = FleetCfg::new(n, qs.clone(), session, fleet_opts());
+        cfg.seed = 1;
+        cfg.sketch_cap = 2048; // lossless shard windows: the canonical-merge regime
+        let mut fleet = Fleet::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            sched.clone(),
+            Arc::clone(&params),
+            cfg,
+        );
+        let mut feed = Rng::new(9);
+        let mut id = 0u64;
+        for (l, c) in calib.iter().enumerate() {
+            for chunk in c.acts.chunks(128) {
+                let t = feed.range(0.0, sched.t_total as f32);
+                let vals: Vec<f32> = chunk.iter().map(|v| v + 0.8).collect();
+                fleet.observe(id, l, t, &vals);
+                id += 1;
+            }
+            fleet.widen_layer(id, l, 0.0, c.min + 0.8, c.max + 0.8);
+            id += 1;
+        }
+        let t0 = Instant::now();
+        let rxs = fleet.submit_many(workload()).unwrap();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let agg = fleet.aggregate().unwrap();
+        let agg_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let rep = fleet.shutdown();
+        let thpt = rep.merged.images_done as f64 / wall;
+        println!(
+            "  shards={n}: {thpt:6.1} img/s   aggregate {agg_ms:7.3} ms ({} swap layer(s), {} lossy position(s))",
+            agg.swap.as_ref().map(|s| s.layers.len()).unwrap_or(0),
+            agg.lossy_positions
+        );
+        rows.push(metric_row(&format!("fleet_shards{n}_img_per_s"), thpt, "img/s"));
+        if n == 4 {
+            merge_overhead_ms = Some(agg_ms);
+        }
+    }
+    if let Some(ms) = merge_overhead_ms {
+        rows.push(metric_row("fleet_merge_overhead", ms, "ms"));
     }
 
     let path =

@@ -1,0 +1,604 @@
+//! Fleet-scale sharded serving: N coordinator shards behind a
+//! deterministic consistent-hash router, with fleet-consistent drift
+//! detection and recalibration.
+//!
+//! The [`Fleet`] owns:
+//!
+//!  * **Routing** — requests (and externally fed calibration
+//!    observations) are assigned to shards by [`route`]: a pure
+//!    `mix64(id ^ salt) % shards` over fleet-assigned global ids. No
+//!    shared state, no rebalancing races — the same id lands on the same
+//!    shard for the fleet's lifetime, and a request's output bits depend
+//!    only on its own seed/steps, never on which shard served it.
+//!  * **Window aggregation** — each shard probes/observes into its own
+//!    [`SketchSet`] window (`ServerCfg::probe_sketches`). At an
+//!    aggregation boundary the fleet harvests every shard at a round
+//!    boundary (`ServerHandle::harvest` joins in-flight work and drains
+//!    the prober first), layout-validates each window (a bad shard is
+//!    skipped, warned about and counted — never fatal, the
+//!    `SketchSet::merge` hardening), and merges them with
+//!    [`SketchSet::merge_canonical`] — the partition-invariant merge, so
+//!    a 2-shard and a 4-shard fleet over the same observation multiset
+//!    produce byte-identical merged windows.
+//!  * **Fleet-consistent recalibration** — drift scoring + planning run
+//!    **once** on the merged window against the fleet-owned
+//!    [`QuantSession`] baseline. A non-empty plan is materialized into
+//!    one [`FleetSwap`] (base qparams + every ladder rung re-searched on
+//!    the same updated calibration) and broadcast to every shard, which
+//!    applies it in its arrival drain strictly between rounds — the
+//!    `Msg::Reconfigure` delivery discipline — so the whole fleet
+//!    hot-swaps to the same qparams at the same logical (epoch) boundary.
+//!  * **Fleet observability** — per-shard [`Metrics`] merge into one
+//!    fleet-wide view (`Metrics::merge`), telemetry series export as one
+//!    shard-tagged `metrics.jsonl` (`obs::fleet_jsonl`), and the
+//!    [`FleetSnapshot`] (per-shard + merged snapshots, aggregation
+//!    counters, the broadcast plan's layers and swap epoch) lands next to
+//!    the merged sketch window in the fleet state dir, with a
+//!    Prometheus-style exposition.
+//!
+//! Why merging beats per-shard detection: a drifted layer's evidence is
+//! split across shards, so any single shard may sit below the planner's
+//! `min_samples` trust gate while the fleet-merged window clears it. The
+//! integration suite pins exactly this — no solo shard window plans a
+//! swap, the merged window does — alongside the headline invariant that
+//! 2-shard and 4-shard fleets produce identical merged windows, drift
+//! scores, broadcast plans and per-request image bits.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::model::manifest::ModelInfo;
+use crate::obs::{fleet_jsonl, FleetSnapshot, ObsCfg, ShardSeries};
+use crate::quant::msfp::{QuantOpts, StateDir};
+use crate::quant::session::QuantSession;
+use crate::recal::{DriftScore, RecalPlanner, SketchSet};
+use crate::runtime::{Denoiser, QuantState};
+use crate::schedule::Schedule;
+use crate::util::rng::mix64;
+
+use super::exec::{Backend, FaultPlan};
+use super::metrics::Metrics;
+use super::request::{Request, ResponseRx};
+use super::server::{spawn, FleetSwap, ServeMode, ServerCfg, ServerHandle, SloCfg};
+
+/// The consistent-hash router: shard index for an id, pure in
+/// `(id, salt, shards)`. The splitmix64 finalizer ([`mix64`]) whitens
+/// sequential ids into a uniform 64-bit space before the modulo, so
+/// contiguous id ranges spread evenly across shards.
+pub fn route(id: u64, salt: u64, shards: usize) -> usize {
+    (mix64(id ^ salt) % shards.max(1) as u64) as usize
+}
+
+/// Fleet configuration: the shared model/quant state every shard serves,
+/// the fleet-owned recalibration session, and the per-shard serving
+/// knobs. Every shard gets the same `seed` — per-timestep selections are
+/// derived from `(seed, t)`, and image bits from per-request seeds, so
+/// identical seeds are what make a request's output independent of its
+/// shard assignment.
+pub struct FleetCfg {
+    /// shard count (min 1)
+    pub shards: usize,
+    /// router salt mixed into every id hash ([`route`])
+    pub salt: u64,
+    /// the quantized state every shard starts serving
+    pub state: QuantState,
+    /// the session the serving qparams were searched on — the fleet owns
+    /// the drift baseline; shards never run local checks
+    pub session: QuantSession<'static>,
+    /// knobs matching the original search
+    pub opts: QuantOpts,
+    /// drift thresholds, applied once per aggregation to the merged window
+    pub planner: RecalPlanner,
+    /// per-shard sketch window shape: timestep buckets per layer
+    pub n_buckets: usize,
+    /// per-shard sketch window shape: reservoir capacity per
+    /// (layer, bucket). Size it to hold a full aggregation window's worth
+    /// of samples per shard — lossless shard windows are what make the
+    /// canonical merge partition-invariant
+    pub sketch_cap: usize,
+    /// per-shard scheduler seed (identical across shards by design)
+    pub seed: u64,
+    /// worker threads per shard (0 = available parallelism)
+    pub workers: usize,
+    /// shadow-prober budget per shard per round (0 = external feeding only)
+    pub probe_budget: usize,
+    /// admission control + degradation, replicated to every shard; the
+    /// ladder's (wbits, abits) targets are also what fleet swaps re-search
+    pub slo: SloCfg,
+    /// decode latents to pixels before responding
+    pub decode_latents: bool,
+    /// quantized-batch execution backend, replicated to every shard
+    pub backend: Backend,
+    /// per-shard observability (replicated); fleet-scope artifacts are
+    /// governed by `state_dir` below
+    pub obs: ObsCfg,
+    /// fleet state dir: on shutdown the merged sketch window, the
+    /// [`FleetSnapshot`] (JSON + Prometheus exposition) and the
+    /// shard-tagged telemetry `metrics.jsonl` land here
+    pub state_dir: Option<StateDir>,
+}
+
+impl FleetCfg {
+    /// Defaults mirroring `ServerCfg::new`: salt 0, seed 0, auto workers,
+    /// probing off, 4 timestep buckets with a 1024-sample reservoir per
+    /// (layer, bucket), default planner, no SLO policy, no persistence.
+    pub fn new(
+        shards: usize,
+        state: QuantState,
+        session: QuantSession<'static>,
+        opts: QuantOpts,
+    ) -> FleetCfg {
+        FleetCfg {
+            shards: shards.max(1),
+            salt: 0,
+            state,
+            session,
+            opts,
+            planner: RecalPlanner::default(),
+            n_buckets: 4,
+            sketch_cap: 1024,
+            seed: 0,
+            workers: 0,
+            probe_budget: 0,
+            slo: SloCfg::default(),
+            decode_latents: false,
+            backend: Backend::Graph,
+            obs: ObsCfg::default(),
+            state_dir: None,
+        }
+    }
+}
+
+/// One aggregation boundary's product: the fleet-merged window, the
+/// drift scores computed on it, and the broadcast plan (if any layer
+/// crossed the threshold).
+#[derive(Debug, Clone)]
+pub struct FleetAggregate {
+    /// aggregation epoch index (0-based)
+    pub epoch: u64,
+    /// the canonical fleet-merged window the scores were computed on
+    pub window: SketchSet,
+    /// (layer, bucket) positions merged through the order-dependent
+    /// fallback because an input sketch had already overflowed its
+    /// reservoir (0 = fully partition-invariant merge)
+    pub lossy_positions: usize,
+    /// shard windows skipped this epoch (harvest failure, decode failure
+    /// or sketch-layout mismatch) — aggregation proceeds without them
+    pub skipped_windows: usize,
+    /// every layer's drift score against the fleet baseline
+    pub scores: Vec<DriftScore>,
+    /// the plan broadcast to every shard, when drift crossed the
+    /// threshold (`None` = nothing drifted, nothing swapped)
+    pub swap: Option<FleetSwap>,
+}
+
+/// What `Fleet::shutdown` returns: per-shard metrics, the fleet-merged
+/// metrics, and the structured fleet snapshot (also persisted to the
+/// fleet state dir when one is configured).
+#[derive(Debug)]
+pub struct FleetReport {
+    /// per-shard serving metrics, indexed by shard id
+    pub per_shard: Vec<Metrics>,
+    /// the fleet-wide merge: summed counters, canonically merged series
+    pub merged: Metrics,
+    pub snapshot: FleetSnapshot,
+}
+
+/// N coordinator shards behind the consistent-hash router (see the
+/// module docs for the full contract).
+pub struct Fleet {
+    shards: Vec<ServerHandle>,
+    /// each shard's live sketch window (shared with its shadow prober)
+    windows: Vec<Arc<Mutex<SketchSet>>>,
+    session: QuantSession<'static>,
+    opts: QuantOpts,
+    planner: RecalPlanner,
+    /// (wbits, abits) of each ladder rung, in ladder order — what fleet
+    /// swaps re-search alongside the base
+    rung_bits: Vec<(i32, i32)>,
+    salt: u64,
+    /// fleet-global request/observation id source. Shard-local ids are
+    /// reassigned at submission; routing happens on *these* ids, before
+    /// any shard sees the request
+    next_id: AtomicU64,
+    /// zero-sample reference carrying the fleet's expected window layout,
+    /// so one bad shard can never poison the layout check for the rest
+    layout: SketchSet,
+    epochs: u64,
+    checks: u64,
+    merges: u64,
+    skipped_windows: u64,
+    lossy_positions: u64,
+    swap_epoch: Option<u64>,
+    plan_layers: Vec<u64>,
+    last_window: Option<SketchSet>,
+    series: Vec<ShardSeries>,
+    state_dir: Option<StateDir>,
+}
+
+impl Fleet {
+    /// Spawn `cfg.shards` coordinator shards. Every shard serves a clone
+    /// of the same quantized state with the same scheduler seed and
+    /// probes into its own sketch window; the fleet keeps the session,
+    /// planner and router state.
+    pub fn spawn(
+        den: Arc<Denoiser>,
+        info: ModelInfo,
+        sched: Schedule,
+        params: Arc<Vec<f32>>,
+        cfg: FleetCfg,
+    ) -> Fleet {
+        let FleetCfg {
+            shards,
+            salt,
+            state,
+            session,
+            opts,
+            planner,
+            n_buckets,
+            sketch_cap,
+            seed,
+            workers,
+            probe_budget,
+            slo,
+            decode_latents,
+            backend,
+            obs,
+            state_dir,
+        } = cfg;
+        let n_layers = session.calib().len();
+        let t_total = sched.t_total;
+        let layout = SketchSet::new(n_layers, n_buckets, 1, t_total, 0);
+        let rung_bits: Vec<(i32, i32)> =
+            slo.ladder.iter().map(|r| (r.wbits, r.abits)).collect();
+        let mut handles = Vec::with_capacity(shards.max(1));
+        let mut windows = Vec::with_capacity(shards.max(1));
+        for shard in 0..shards.max(1) {
+            // per-shard reservoir seeds may differ freely: the canonical
+            // merge rebuilds lossless positions from the sample union with
+            // its own fixed seed, so shard seeds never reach the merged
+            // window's bytes
+            let window = Arc::new(Mutex::new(SketchSet::new(
+                n_layers,
+                n_buckets,
+                sketch_cap,
+                t_total,
+                0x5EED ^ shard as u64,
+            )));
+            windows.push(Arc::clone(&window));
+            handles.push(spawn(
+                Arc::clone(&den),
+                info.clone(),
+                sched.clone(),
+                Arc::clone(&params),
+                ServerCfg {
+                    mode: ServeMode::Quant(state.clone()),
+                    decode_latents,
+                    seed,
+                    workers,
+                    fp_mixed_t: true,
+                    recal: None,
+                    probe_budget,
+                    probe_sketches: Some(window),
+                    slo: slo.clone(),
+                    faults: FaultPlan::default(),
+                    backend,
+                    obs: obs.clone(),
+                },
+            ));
+        }
+        Fleet {
+            shards: handles,
+            windows,
+            session,
+            opts,
+            planner,
+            rung_bits,
+            salt,
+            next_id: AtomicU64::new(0),
+            layout,
+            epochs: 0,
+            checks: 0,
+            merges: 0,
+            skipped_windows: 0,
+            lossy_positions: 0,
+            swap_epoch: None,
+            plan_layers: Vec::new(),
+            last_window: None,
+            series: Vec::new(),
+            state_dir,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard index for a fleet-global id ([`route`] with this fleet's
+    /// salt and shard count).
+    pub fn route_id(&self, id: u64) -> usize {
+        route(id, self.salt, self.shards.len())
+    }
+
+    /// A shard's live sketch window. External producers (a fine-tune
+    /// loop, a monitoring sidecar) feed through this exactly as they
+    /// would feed a single server's `ServeRecal::sketches` handle.
+    pub fn shard_window(&self, shard: usize) -> Arc<Mutex<SketchSet>> {
+        Arc::clone(&self.windows[shard])
+    }
+
+    /// Submit a group of requests atomically per shard: the fleet assigns
+    /// each request a global id, routes it, and forwards each shard's
+    /// group in one `submit_many` (so co-routed requests join the same
+    /// scheduling round). Receivers come back in the input order.
+    pub fn submit_many(&self, reqs: Vec<Request>) -> Result<Vec<ResponseRx>> {
+        let n = self.shards.len();
+        let mut groups: Vec<Vec<Request>> = vec![Vec::new(); n];
+        // (shard, index within the shard's group) per input position
+        let mut slots = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+            let shard = route(id, self.salt, n);
+            slots.push((shard, groups[shard].len()));
+            groups[shard].push(req);
+        }
+        let mut per_shard: Vec<Vec<Option<ResponseRx>>> = Vec::with_capacity(n);
+        for (shard, group) in groups.into_iter().enumerate() {
+            if group.is_empty() {
+                per_shard.push(Vec::new());
+                continue;
+            }
+            let rxs = self.shards[shard].submit_many(group)?;
+            per_shard.push(rxs.into_iter().map(Some).collect());
+        }
+        Ok(slots
+            .into_iter()
+            .map(|(shard, i)| per_shard[shard][i].take().expect("one receiver per slot"))
+            .collect())
+    }
+
+    /// Feed one calibration observation into the window of the shard the
+    /// router assigns `id` — the same consistent hash requests take, so a
+    /// deterministic observation stream partitions deterministically for
+    /// any shard count (and, being a partition of the same multiset,
+    /// merges back canonically at the next aggregation).
+    pub fn observe(&self, id: u64, layer: usize, t: f32, samples: &[f32]) {
+        let shard = route(id, self.salt, self.shards.len());
+        self.windows[shard].lock().unwrap().observe(layer, t, samples);
+    }
+
+    /// Widen a layer's exact extrema on the window `id` routes to (the
+    /// full-tensor min/max companion to subsampled [`Fleet::observe`]
+    /// feeds). Extrema widening is idempotent and merge-exact, so feeding
+    /// it to one routed shard is enough.
+    pub fn widen_layer(&self, id: u64, layer: usize, t: f32, min: f32, max: f32) {
+        let shard = route(id, self.salt, self.shards.len());
+        self.windows[shard].lock().unwrap().widen_layer(layer, t, min, max);
+    }
+
+    /// One aggregation boundary: harvest every shard at a round boundary,
+    /// canonically merge the usable windows, score drift + plan **once**
+    /// on the merged window, and broadcast a non-empty plan to every
+    /// shard for a round-atomic hot-swap. A shard whose window fails to
+    /// decode or whose layout mismatches is skipped (warned + counted) —
+    /// the fleet keeps aggregating the shards that agree. Errors only
+    /// when *no* shard produced a usable window.
+    pub fn aggregate(&mut self) -> Result<FleetAggregate> {
+        let epoch = self.epochs;
+        self.epochs += 1;
+        let mut windows: Vec<SketchSet> = Vec::new();
+        let mut series: Vec<ShardSeries> = Vec::new();
+        let mut skipped = 0usize;
+        for (i, h) in self.shards.iter().enumerate() {
+            match h.harvest() {
+                Ok(hv) => {
+                    series.push(ShardSeries {
+                        shard: i as u64,
+                        rows: hv.rows,
+                        timers: hv.timers,
+                    });
+                    let decoded = SketchSet::from_bytes(&hv.window)
+                        .and_then(|w| self.layout.check_layout(&w).map(|()| w));
+                    match decoded {
+                        Ok(w) => windows.push(w),
+                        Err(err) => {
+                            skipped += 1;
+                            crate::log_warn!(
+                                "fleet epoch {epoch}: skipping shard {i}'s window: {err:#}"
+                            );
+                        }
+                    }
+                }
+                Err(err) => {
+                    skipped += 1;
+                    crate::log_warn!("fleet epoch {epoch}: shard {i} harvest failed: {err:#}");
+                }
+            }
+        }
+        self.skipped_windows += skipped as u64;
+        ensure!(
+            !windows.is_empty(),
+            "fleet epoch {epoch}: no usable shard window to aggregate \
+             ({skipped} skipped of {} shards)",
+            self.shards.len()
+        );
+        let refs: Vec<&SketchSet> = windows.iter().collect();
+        let merged = SketchSet::merge_canonical(&refs)?;
+        self.merges += 1;
+        self.lossy_positions += merged.lossy_positions as u64;
+        if merged.lossy_positions > 0 {
+            crate::log_warn!(
+                "fleet epoch {epoch}: {} sketch position(s) merged lossily — shard \
+                 windows overflowed their reservoirs; merged bytes are still \
+                 deterministic but no longer partition-invariant",
+                merged.lossy_positions
+            );
+        }
+        // drift scoring + planning run exactly once, on the merged window
+        // against the fleet-owned baseline
+        let check = self.checks;
+        self.checks += 1;
+        let plan = self.planner.plan(self.session.calib(), &merged.window);
+        let scores = plan.scores;
+        let swap = if plan.layers.is_empty() {
+            None
+        } else {
+            let layers: Vec<(u32, f32)> =
+                plan.layers.iter().map(|rl| (rl.layer as u32, rl.score)).collect();
+            for rl in plan.layers {
+                self.session.update_layer_calib(rl.layer, rl.calib);
+            }
+            let qparams = self.session.quantize(&self.opts).qparams_rows();
+            let rung_qparams = self
+                .rung_bits
+                .iter()
+                .map(|&(w, a)| (w, a, self.session.degraded_qparams(&self.opts, w, a)))
+                .collect();
+            Some(FleetSwap { check, qparams, rung_qparams, layers })
+        };
+        if let Some(sw) = &swap {
+            // one plan, every shard: delivery is channel-ordered with
+            // submissions, so each shard applies it strictly between
+            // rounds and before anything submitted after this call
+            for (i, h) in self.shards.iter().enumerate() {
+                if let Err(err) = h.apply_qparams(sw.clone()) {
+                    crate::log_warn!("fleet epoch {epoch}: shard {i} missed the swap: {err:#}");
+                }
+            }
+            if self.swap_epoch.is_none() {
+                self.swap_epoch = Some(epoch);
+            }
+            for &(l, _) in &sw.layers {
+                self.plan_layers.push(l as u64);
+            }
+            crate::log_info!(
+                "fleet epoch {epoch}: broadcast recal plan ({} layer(s)) to {} shard(s)",
+                sw.layers.len(),
+                self.shards.len()
+            );
+        }
+        self.series = series;
+        self.last_window = Some(merged.window.clone());
+        Ok(FleetAggregate {
+            epoch,
+            window: merged.window,
+            lossy_positions: merged.lossy_positions,
+            skipped_windows: skipped,
+            scores,
+            swap,
+        })
+    }
+
+    /// Stop every shard (after their in-flight requests finish), merge
+    /// the per-shard metrics into the fleet view, and persist the fleet
+    /// artifacts (merged window, snapshot JSON, Prometheus exposition,
+    /// shard-tagged telemetry) into the fleet state dir when configured.
+    pub fn shutdown(mut self) -> FleetReport {
+        // refresh each shard's telemetry series at a final round boundary
+        // (best-effort: a dead shard keeps its last harvested series)
+        let mut series = std::mem::take(&mut self.series);
+        for (i, h) in self.shards.iter().enumerate() {
+            if let Ok(hv) = h.harvest() {
+                let s = ShardSeries { shard: i as u64, rows: hv.rows, timers: hv.timers };
+                match series.iter_mut().find(|e| e.shard == i as u64) {
+                    Some(slot) => *slot = s,
+                    None => series.push(s),
+                }
+            }
+        }
+        series.sort_by_key(|s| s.shard);
+        let per_shard: Vec<Metrics> =
+            std::mem::take(&mut self.shards).into_iter().map(|h| h.shutdown()).collect();
+        let mut merged = Metrics::default();
+        for m in &per_shard {
+            merged.merge(m);
+        }
+        let snapshot = FleetSnapshot {
+            shards: per_shard
+                .iter()
+                .enumerate()
+                .map(|(i, m)| (i as u64, m.snapshot()))
+                .collect(),
+            merged: merged.snapshot(),
+            merges: self.merges,
+            skipped_windows: self.skipped_windows,
+            lossy_positions: self.lossy_positions,
+            plan_layers: self.plan_layers.clone(),
+            swap_epoch: self.swap_epoch,
+        };
+        if let Some(sd) = &self.state_dir {
+            use crate::util::io::atomic_write;
+            let write = |path: std::path::PathBuf, bytes: &[u8], what: &str| {
+                if let Err(err) = atomic_write(&path, bytes) {
+                    crate::log_warn!("could not persist fleet {what}: {err:#}");
+                }
+            };
+            if let Some(w) = &self.last_window {
+                write(sd.sketch_path(), &w.to_bytes(), "merged window");
+            }
+            write(
+                sd.telemetry_path(),
+                fleet_jsonl(&series).as_bytes(),
+                "telemetry series",
+            );
+            write(
+                sd.root().join("fleet.json"),
+                snapshot.to_json().to_string().as_bytes(),
+                "snapshot",
+            );
+            write(
+                sd.root().join("fleet.prom"),
+                snapshot.prometheus().as_bytes(),
+                "prometheus exposition",
+            );
+        }
+        FleetReport { per_shard, merged, snapshot }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_is_pure_covers_all_shards_and_balances() {
+        // purity + full coverage for every shard count up to 8
+        for n in 1..=8usize {
+            let mut hit = vec![0usize; n];
+            for id in 0..256u64 {
+                let s = route(id, 7, n);
+                assert_eq!(s, route(id, 7, n), "router must be pure");
+                assert!(s < n);
+                hit[s] += 1;
+            }
+            assert!(
+                hit.iter().all(|&c| c > 0),
+                "some shard of {n} never hit: {hit:?}"
+            );
+        }
+        // the salt actually perturbs the assignment
+        let moved = (0..256u64).filter(|&id| route(id, 0, 4) != route(id, 99, 4)).count();
+        assert!(moved > 64, "salt barely moved the routing: {moved}/256");
+        // single-shard fleets route everything to shard 0
+        assert!((0..64).all(|id| route(id, 3, 1) == 0));
+    }
+
+    #[test]
+    fn routed_observation_slices_stay_disjoint_and_complete() {
+        // the property the canonical merge leans on: routing partitions
+        // an id range — every id lands on exactly one shard, and the
+        // union of the slices is the full range
+        let ids: Vec<u64> = (0..300).collect();
+        for n in [2usize, 4] {
+            let mut seen = vec![Vec::new(); n];
+            for &id in &ids {
+                seen[route(id, 0, n)].push(id);
+            }
+            let mut all: Vec<u64> = seen.concat();
+            all.sort_unstable();
+            assert_eq!(all, ids);
+        }
+    }
+}

@@ -12,16 +12,30 @@ use std::time::Duration;
 use super::request::SloClass;
 use crate::obs::{MetricsSnapshot, SwapAudit};
 
-/// Floor-index percentile over an unsorted series, q in [0, 1]: the
-/// sorted element at `floor((len-1) * q)`; 0 on an empty series. The one
-/// percentile definition every series in [`Metrics`] uses.
+/// Clamp a requested percentile into [0, 1]: NaN maps to 0 (the lowest
+/// sample), anything outside the range saturates to the nearest end.
+/// Percentile requests reach here from user-facing report knobs, so an
+/// out-of-range q must degrade to an end sample, never index out of
+/// bounds.
+fn clamp_q(q: f64) -> f64 {
+    if q.is_nan() {
+        0.0
+    } else {
+        q.clamp(0.0, 1.0)
+    }
+}
+
+/// Floor-index percentile over an unsorted series, q clamped to [0, 1]
+/// (NaN → 0): the sorted element at `floor((len-1) * q)`; 0 on an empty
+/// series. The one percentile definition every series in [`Metrics`]
+/// uses.
 pub(crate) fn percentile_u64(series: &[u64], q: f64) -> u64 {
     if series.is_empty() {
         return 0;
     }
     let mut v = series.to_vec();
     v.sort_unstable();
-    v[((v.len() - 1) as f64 * q) as usize]
+    v[((v.len() - 1) as f64 * clamp_q(q)) as usize]
 }
 
 #[derive(Debug, Default, Clone)]
@@ -112,16 +126,17 @@ pub struct Metrics {
 }
 
 impl Metrics {
-    /// Lower (floor-index) latency percentile, q in [0, 1]: the sorted
-    /// element at index `floor((len-1) * q)`. For p95 over 10 samples this
-    /// is the 9th element, one below the nearest-rank definition.
+    /// Lower (floor-index) latency percentile, q clamped to [0, 1]
+    /// (NaN → 0): the sorted element at index `floor((len-1) * q)`. For
+    /// p95 over 10 samples this is the 9th element, one below the
+    /// nearest-rank definition.
     pub fn latency_p(&self, q: f64) -> Duration {
         if self.latencies.is_empty() {
             return Duration::ZERO;
         }
         let mut v = self.latencies.clone();
         v.sort();
-        v[((v.len() - 1) as f64 * q) as usize]
+        v[((v.len() - 1) as f64 * clamp_q(q)) as usize]
     }
 
     /// Queue-wait percentile in rounds for one SLO class (floor-index,
@@ -242,6 +257,74 @@ impl Metrics {
         }
     }
 
+    /// Fold another shard's metrics into this one, producing the fleet
+    /// view. Counters sum; sample series concatenate and re-sort into a
+    /// canonical sorted-multiset form, so the merge is bitwise
+    /// commutative *and* associative over any shard grouping (the
+    /// fleet-merge laws pinned in props.rs). Wall clock and round count
+    /// take the max (shards run concurrently — the fleet is as old as
+    /// its oldest shard), `first_swap_round` the earliest Some, and
+    /// per-rung round counts add element-wise after widening to the
+    /// longer ladder.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latencies.extend_from_slice(&other.latencies);
+        self.latencies.sort_unstable();
+        self.images_done += other.images_done;
+        self.evals += other.evals;
+        self.batch_sizes.extend_from_slice(&other.batch_sizes);
+        self.batch_sizes.sort_unstable();
+        self.batch_fills.extend_from_slice(&other.batch_fills);
+        self.batch_fills.sort_unstable_by(|a, b| a.total_cmp(b));
+        self.wall = self.wall.max(other.wall);
+        self.rounds = self.rounds.max(other.rounds);
+        self.round_exec += other.round_exec;
+        self.round_sched += other.round_sched;
+        self.sel_hits += other.sel_hits;
+        self.sel_misses += other.sel_misses;
+        self.recal_checks += other.recal_checks;
+        self.recal_swaps += other.recal_swaps;
+        self.recal_layers += other.recal_layers;
+        self.first_swap_round = match (self.first_swap_round, other.first_swap_round) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.probes += other.probes;
+        self.probes_skipped += other.probes_skipped;
+        self.probes_failed += other.probes_failed;
+        for (mine, theirs) in self.queue_waits.iter_mut().zip(&other.queue_waits) {
+            mine.extend_from_slice(theirs);
+            mine.sort_unstable();
+        }
+        for (mine, theirs) in self.shed.iter_mut().zip(&other.shed) {
+            *mine += *theirs;
+        }
+        self.downgraded_rounds += other.downgraded_rounds;
+        self.downgraded_steps += other.downgraded_steps;
+        self.cancelled += other.cancelled;
+        self.retries += other.retries;
+        self.faults_injected += other.faults_injected;
+        self.compile_attempts += other.compile_attempts;
+        self.compile_exhausted += other.compile_exhausted;
+        if self.backend.is_empty() {
+            self.backend = other.backend;
+        }
+        self.packed_bytes += other.packed_bytes;
+        self.ckpt_fails += other.ckpt_fails;
+        self.ckpt_retries += other.ckpt_retries;
+        self.reconfigures += other.reconfigures;
+        if self.rung_rounds.len() < other.rung_rounds.len() {
+            self.rung_rounds.resize(other.rung_rounds.len(), 0);
+        }
+        for (mine, theirs) in self.rung_rounds.iter_mut().zip(&other.rung_rounds) {
+            *mine += *theirs;
+        }
+        self.trace_events += other.trace_events;
+        self.trace_dropped += other.trace_dropped;
+        self.postmortems += other.postmortems;
+        self.swap_audits.extend(other.swap_audits.iter().cloned());
+        self.swap_audits.sort_by_key(|a| (a.round, a.check, a.old_fp, a.new_fp));
+    }
+
     /// The classic one-line serving report — now a renderer over
     /// [`Metrics::snapshot`] (byte-identical to the pre-snapshot format).
     pub fn report(&self) -> String {
@@ -294,6 +377,78 @@ mod tests {
         for q in [0.0, 0.5, 0.95, 1.0] {
             assert_eq!(m.latency_p(q), Duration::from_millis(42));
         }
+    }
+
+    #[test]
+    fn percentile_q_out_of_range_clamps_instead_of_panicking() {
+        // q > 1 used to index past the end of the sorted series; NaN and
+        // negative q now degrade to the lowest sample
+        let mut m = Metrics::default();
+        for ms in [10u64, 20, 30, 40] {
+            m.latencies.push(Duration::from_millis(ms));
+        }
+        m.queue_waits[SloClass::Batch.rank()].extend([1u64, 2, 3, 4]);
+        assert_eq!(m.latency_p(1.5), Duration::from_millis(40));
+        assert_eq!(m.latency_p(-0.1), Duration::from_millis(10));
+        assert_eq!(m.latency_p(f64::NAN), Duration::from_millis(10));
+        assert_eq!(m.queue_wait_p(SloClass::Batch, 1.5), 4);
+        assert_eq!(m.queue_wait_p(SloClass::Batch, -0.1), 1);
+        assert_eq!(m.queue_wait_p(SloClass::Batch, f64::NAN), 1);
+        assert_eq!(percentile_u64(&[], 1.5), 0);
+        assert_eq!(percentile_u64(&[7], f64::NAN), 7);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_canonicalizes_series() {
+        let mut a = Metrics {
+            images_done: 4,
+            evals: 10,
+            rounds: 7,
+            wall: Duration::from_millis(500),
+            sel_hits: 3,
+            first_swap_round: Some(5),
+            rung_rounds: vec![2],
+            backend: "packed",
+            packed_bytes: 100,
+            ..Default::default()
+        };
+        a.latencies.push(Duration::from_millis(30));
+        a.queue_waits[0].push(4);
+        let mut b = Metrics {
+            images_done: 6,
+            evals: 20,
+            rounds: 9,
+            wall: Duration::from_millis(400),
+            sel_hits: 2,
+            first_swap_round: Some(3),
+            rung_rounds: vec![1, 5],
+            ..Default::default()
+        };
+        b.latencies.push(Duration::from_millis(10));
+        b.queue_waits[0].push(1);
+
+        // commutative: a⊕b == b⊕a field for field
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.images_done, 10);
+        assert_eq!(ab.evals, 30);
+        assert_eq!(ab.rounds, 9);
+        assert_eq!(ab.wall, Duration::from_millis(500));
+        assert_eq!(ab.first_swap_round, Some(3));
+        assert_eq!(ab.rung_rounds, vec![3, 5]);
+        assert_eq!(ab.latencies, vec![Duration::from_millis(10), Duration::from_millis(30)]);
+        assert_eq!(ab.queue_waits[0], vec![1, 4]);
+        assert_eq!(ab.backend_tag(), "packed");
+        assert_eq!(ba.backend_tag(), "packed");
+        assert_eq!(ab.packed_bytes, 100);
+        assert_eq!(ab.latencies, ba.latencies);
+        assert_eq!(ab.images_done, ba.images_done);
+        assert_eq!(ab.rung_rounds, ba.rung_rounds);
+        assert_eq!(ab.first_swap_round, ba.first_swap_round);
+        // the merged snapshot is identical either way
+        assert_eq!(ab.snapshot(), ba.snapshot());
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! L3 serving coordinator: request router + step-level continuous batcher
 //! over the quantized diffusion model (the deployment story of a 4-bit
-//! diffusion model — paper §1's edge-serving motivation).
+//! diffusion model — paper §1's edge-serving motivation), plus the
+//! fleet layer: N coordinator shards behind a consistent-hash router
+//! with fleet-consistent drift detection and recalibration.
 
 pub mod request;
 pub mod batcher;
 pub mod exec;
+pub mod fleet;
 pub mod metrics;
 pub mod prober;
 pub mod server;
@@ -12,10 +15,11 @@ pub mod server;
 pub use crate::obs::ObsCfg;
 pub use batcher::{admit_edf, SloTicket};
 pub use exec::{Backend, Fault, FaultPlan, RoundExecutor};
+pub use fleet::{route, Fleet, FleetAggregate, FleetCfg, FleetReport};
 pub use metrics::Metrics;
 pub use prober::ShadowProber;
 pub use request::{Completion, Request, Response, ResponseRx, ShedReason, SloClass};
 pub use server::{
-    degradation_ladder, degraded_state, spawn, LadderRung, ServeMode, ServeRecal, ServerCfg,
-    ServerHandle, SloCfg,
+    degradation_ladder, degraded_state, spawn, FleetSwap, LadderRung, ServeMode, ServeRecal,
+    ServerCfg, ServerHandle, ShardHarvest, SloCfg,
 };

@@ -66,7 +66,10 @@ use crate::data::PatchAutoencoder;
 use crate::lora::SelectionCache;
 use crate::model::manifest::ModelInfo;
 use crate::obs::event::{CKPT_QPARAMS, CKPT_SKETCH, CKPT_TRACE};
-use crate::obs::{EventKind, FlightRecorder, ObsCfg, RoundSample, SwapAudit, Telemetry};
+use crate::obs::{
+    EventKind, FlightRecorder, MetricsSnapshot, ObsCfg, PhaseTimers, RoundSample, SwapAudit,
+    Telemetry,
+};
 use crate::quant::msfp::{QuantOpts, StateDir};
 use crate::quant::session::QuantSession;
 use crate::recal::{RecalPlanner, SketchSet};
@@ -87,7 +90,47 @@ enum Msg {
     /// swap the live SLO config (queue budget, step cut, degradation
     /// ladder) at the next round boundary
     Reconfigure(SloCfg),
+    /// harvest the shard's drift window + observability state for fleet
+    /// aggregation (see `coordinator::fleet`): joins in-flight work and
+    /// drains the prober so the reply reflects a round boundary
+    Harvest(mpsc::Sender<ShardHarvest>),
+    /// apply a fleet-broadcast recalibration plan at the next round
+    /// boundary (round-atomic, exactly like a locally landed recal
+    /// outcome — channel-ordered with submissions like `Reconfigure`)
+    ApplyQparams(Box<FleetSwap>),
     Shutdown(mpsc::Sender<Metrics>),
+}
+
+/// One shard's round-boundary harvest, collected by the fleet aggregator:
+/// the serialized live drift window plus a structured metrics snapshot
+/// and the shard's telemetry series. Harvesting does not reset anything —
+/// the window keeps accumulating and the shard keeps serving.
+pub struct ShardHarvest {
+    /// the shard's round counter at the harvest boundary
+    pub round: u64,
+    /// `SketchSet::to_bytes` of the live window; empty when the shard has
+    /// no sketch sink (no recal and no `probe_sketches`)
+    pub window: Vec<u8>,
+    pub snapshot: MetricsSnapshot,
+    /// retained per-round telemetry rows, oldest first
+    pub rows: Vec<RoundSample>,
+    pub timers: PhaseTimers,
+}
+
+/// A fleet-broadcast recalibration plan: qparams re-searched once on the
+/// fleet-merged window, applied by every shard at its next round boundary
+/// so the whole fleet hot-swaps to the same state at the same logical
+/// point. Mirrors the private `RecalOutcome` a local check parks.
+#[derive(Debug, Clone)]
+pub struct FleetSwap {
+    /// index of the fleet drift check that produced this plan
+    pub check: u64,
+    /// re-searched base qparams
+    pub qparams: Vec<f32>,
+    /// per-ladder-rung qparams, tagged with their (wbits, abits) targets
+    pub rung_qparams: Vec<(i32, i32, Vec<f32>)>,
+    /// `(layer, drift score)` of every rebuilt layer (audit attribution)
+    pub layers: Vec<(u32, f32)>,
 }
 
 /// Failed-round attempts before a request is retired with
@@ -173,6 +216,29 @@ impl ServerHandle {
     pub fn reconfigure(&self, slo: SloCfg) -> Result<()> {
         self.tx
             .send(Msg::Reconfigure(slo))
+            .map_err(|_| anyhow!("serving coordinator is down (scheduler thread exited)"))
+    }
+
+    /// Round-boundary harvest for fleet aggregation: the scheduler joins
+    /// in-flight work, drains the shadow prober (in submission order, so
+    /// the window state is worker-count independent), and replies with
+    /// the serialized drift window plus a metrics snapshot and telemetry
+    /// series. The server keeps running; nothing is reset.
+    pub fn harvest(&self) -> Result<ShardHarvest> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Harvest(tx))
+            .map_err(|_| anyhow!("serving coordinator is down (scheduler thread exited)"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("serving coordinator exited before answering the harvest"))
+    }
+
+    /// Apply a fleet-broadcast recalibration plan. Channel-ordered with
+    /// submissions and applied strictly between rounds (the `Reconfigure`
+    /// discipline), so the hot-swap is round-atomic on every shard.
+    pub fn apply_qparams(&self, swap: FleetSwap) -> Result<()> {
+        self.tx
+            .send(Msg::ApplyQparams(Box::new(swap)))
             .map_err(|_| anyhow!("serving coordinator is down (scheduler thread exited)"))
     }
 
@@ -369,7 +435,7 @@ impl RecalShared {
 ///
 /// The default (`queue_budget == 0`) disables admission control entirely
 /// — the pre-SLO coordinator's behavior.
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct SloCfg {
     /// max samples planned per scheduling round; 0 = unlimited. The
     /// server is *overloaded* whenever the admitted backlog exceeds this,
@@ -445,6 +511,76 @@ pub fn degraded_state(base: &QuantState, qparams: Vec<f32>) -> QuantState {
     v
 }
 
+/// The round-boundary qparams hot-swap, shared by the local recal landing
+/// and the fleet `ApplyQparams` broadcast: swap the base state, refresh
+/// every ladder rung whose (wbits, abits) still matches its re-searched
+/// target, and write the full audit trail (HotSwap event + [`SwapAudit`]
+/// + swap counters). Returns the plan's max drift score — the telemetry
+/// `drift_max` signal — or `None` on an FP server (nothing to swap).
+/// Checkpointing is *not* part of the swap: the local recal path persists
+/// to its shard state dir afterwards, while fleet swaps leave durability
+/// to the fleet aggregator.
+#[allow(clippy::too_many_arguments)]
+fn apply_qparams_swap(
+    qs_cur: &mut Option<Arc<QuantState>>,
+    ladder: &mut [(i32, i32, Arc<QuantState>)],
+    metrics: &mut Metrics,
+    rec: &Option<Arc<FlightRecorder>>,
+    round: u64,
+    check: u64,
+    qparams: Vec<f32>,
+    rung_qparams: Vec<(i32, i32, Vec<f32>)>,
+    layers: Vec<(u32, f32)>,
+) -> Option<f32> {
+    let qs = qs_cur.as_mut()?;
+    let old_fp = crate::runtime::native::qparams_fingerprint(&qs.qparams);
+    let mut swapped = (**qs).clone();
+    swapped.qparams = qparams;
+    *qs = Arc::new(swapped);
+    let new_fp = crate::runtime::native::qparams_fingerprint(&qs.qparams);
+    // refresh every ladder rung re-searched on the same updated
+    // calibration. Positions must still agree on (wbits, abits) — a
+    // reconfigure that landed while the check ran leaves mismatched rungs
+    // on their old qparams until the next check refreshes them.
+    let mut rung_status = Vec::with_capacity(rung_qparams.len());
+    for (i, (w, a, qp)) in rung_qparams.into_iter().enumerate() {
+        let refreshed = match ladder.get_mut(i) {
+            Some(entry) if entry.0 == w && entry.1 == a => {
+                entry.2 = Arc::new(degraded_state(&entry.2, qp));
+                true
+            }
+            _ => false,
+        };
+        rung_status.push((w, a, refreshed));
+    }
+    let drifted = layers.len();
+    let drift_max = layers.iter().fold(0.0f32, |m, &(_, s)| m.max(s));
+    // the audit trail attributes the swap end to end: which check, which
+    // layers (with scores), what the qparams fingerprints were
+    // before/after, and how each rung's refresh went
+    let audit = SwapAudit { round, check, old_fp, new_fp, drifted: layers, rungs: rung_status };
+    if let Some(r) = rec {
+        r.emit(
+            round,
+            EventKind::HotSwap {
+                swap: metrics.recal_swaps as u64,
+                drifted: drifted as u32,
+                old_fp,
+                new_fp,
+            },
+        );
+        r.audit(audit.clone());
+    }
+    metrics.swap_audits.push(audit);
+    metrics.recal_swaps += 1;
+    metrics.recal_layers += drifted;
+    if metrics.first_swap_round.is_none() {
+        metrics.first_swap_round = Some(metrics.rounds);
+    }
+    crate::log_info!("recalibration hot-swap: {drifted} drifted layer(s) at round {round}");
+    Some(drift_max)
+}
+
 pub struct ServerCfg {
     pub mode: ServeMode,
     /// decode latents to pixels before responding (LDM variants)
@@ -466,6 +602,12 @@ pub struct ServerCfg {
     /// for any worker count; candidates beyond the budget count as
     /// skipped in `Metrics`
     pub probe_budget: usize,
+    /// external sketch sink for the shadow prober when no `recal` is
+    /// configured: a fleet shard probes into its own window while the
+    /// fleet aggregator owns drift scoring and planning (the shard never
+    /// runs local checks). Ignored when `recal` is set — probes feed the
+    /// recal sketches, which take precedence
+    pub probe_sketches: Option<Arc<Mutex<SketchSet>>>,
     /// admission control + graceful degradation (default: off)
     pub slo: SloCfg,
     /// deterministic fault injection (default: no faults). Production
@@ -497,6 +639,7 @@ impl ServerCfg {
             fp_mixed_t: true,
             recal: None,
             probe_budget: 0,
+            probe_sketches: None,
             slo: SloCfg::default(),
             faults: FaultPlan::default(),
             backend: Backend::Graph,
@@ -686,6 +829,7 @@ fn scheduler_loop(
         fp_mixed_t,
         recal,
         probe_budget,
+        probe_sketches,
         slo,
         faults,
         backend,
@@ -845,18 +989,31 @@ fn scheduler_loop(
             }
         }
     }
-    let mut prober: Option<ShadowProber> = match (probe_budget, &recal) {
+    // the live sketch window the prober feeds and `Msg::Harvest` reads:
+    // the recal sketches when local recalibration owns the window, else
+    // the externally supplied `probe_sketches` (a fleet shard's window —
+    // the fleet aggregator scores drift and plans on the merged set)
+    let live_sketches: Option<Arc<Mutex<SketchSet>>> = match (&recal, probe_sketches) {
+        (Some(rs), external) => {
+            if external.is_some() {
+                crate::log_warn!("probe_sketches set alongside recal: recal sketches win");
+            }
+            Some(Arc::clone(&rs.sketches))
+        }
+        (None, external) => external,
+    };
+    let mut prober: Option<ShadowProber> = match (probe_budget, &live_sketches) {
         (0, _) => None,
-        (k, Some(rs)) => Some(ShadowProber::new(
+        (k, Some(sink)) => Some(ShadowProber::new(
             k,
-            Arc::clone(&rs.sketches),
+            Arc::clone(sink),
             Arc::clone(&den),
             Arc::clone(&params),
             exec.pad_pool(),
             rec.clone(),
         )),
         (_, None) => {
-            crate::log_warn!("probe budget set without a recalibration config: ignored");
+            crate::log_warn!("probe budget set without a sketch sink (recal or probe_sketches): ignored");
             None
         }
     };
@@ -1034,6 +1191,77 @@ fn scheduler_loop(
                         ladder.len()
                     );
                 }
+                Msg::Harvest(tx) => {
+                    // fleet aggregation boundary: flush everything the
+                    // window could still absorb. After join() every
+                    // offloaded probe has posted, so the in-order drain
+                    // leaves the sketch state identical for any worker
+                    // count — the harvested window is deterministic.
+                    exec.join();
+                    while let Ok(latency) = done_rx.try_recv() {
+                        metrics.latencies.push(latency);
+                    }
+                    if let Some(p) = &mut prober {
+                        p.drain();
+                        metrics.probes = p.sent;
+                        metrics.probes_skipped = p.skipped;
+                        metrics.probes_failed = p.failed;
+                    }
+                    let round = metrics.rounds as u64;
+                    let window = live_sketches
+                        .as_ref()
+                        .map(|s| s.lock().unwrap().to_bytes())
+                        .unwrap_or_default();
+                    // stamp the late-bound counters the shutdown path
+                    // stamps, so a harvest snapshot is self-consistent
+                    let mut m = metrics.clone();
+                    if let Some(r) = &rec {
+                        m.trace_events = r.total() as usize;
+                        m.trace_dropped = r.dropped() as usize;
+                    }
+                    m.ckpt_fails = ckpt_counters.fails.load(Ordering::SeqCst);
+                    m.ckpt_retries = ckpt_counters.retries.load(Ordering::SeqCst);
+                    m.sel_hits = sel_cache.hits;
+                    m.sel_misses = sel_cache.misses;
+                    m.compile_attempts = den.engine().compile_attempts();
+                    m.compile_exhausted = den.engine().compile_exhausted_count();
+                    m.packed_bytes = den.packed_bytes();
+                    m.postmortems = postmortems;
+                    m.wall = t0.elapsed();
+                    let _ = tx.send(ShardHarvest {
+                        round,
+                        window,
+                        snapshot: m.snapshot(),
+                        rows: tel.rows().cloned().collect(),
+                        timers: tel.timers.clone(),
+                    });
+                }
+                Msg::ApplyQparams(swap) => {
+                    // fleet-broadcast swap, applied here in the arrival
+                    // drain — strictly between rounds, like Reconfigure —
+                    // so no evaluation ever observes a mid-round change
+                    // and every shard swaps at a round boundary. The
+                    // fleet owns planning and durability; the shard skips
+                    // its local checkpoint.
+                    let round = metrics.rounds as u64;
+                    let FleetSwap { check, qparams, rung_qparams, layers } = *swap;
+                    match apply_qparams_swap(
+                        &mut qs_cur,
+                        &mut ladder,
+                        &mut metrics,
+                        &rec,
+                        round,
+                        check,
+                        qparams,
+                        rung_qparams,
+                        layers,
+                    ) {
+                        Some(dm) => last_drift_max = dm,
+                        None => {
+                            crate::log_warn!("fleet qparams swap on an FP server: ignored")
+                        }
+                    }
+                }
                 Msg::Shutdown(tx) => shutdown = Some(tx),
             }
         }
@@ -1158,65 +1386,19 @@ fn scheduler_loop(
                 }
             }
             if let Some(out) = rs.outcome.lock().unwrap().take() {
-                if let Some(qs) = &mut qs_cur {
-                    let old_fp = crate::runtime::native::qparams_fingerprint(&qs.qparams);
-                    let mut swapped = (**qs).clone();
-                    swapped.qparams = out.qparams;
-                    *qs = Arc::new(swapped);
-                    let new_fp = crate::runtime::native::qparams_fingerprint(&qs.qparams);
-                    // refresh every ladder rung re-searched on the same
-                    // updated calibration. Positions must still agree on
-                    // (wbits, abits) — a reconfigure that landed while the
-                    // check ran leaves mismatched rungs on their old
-                    // qparams until the next check refreshes them.
-                    let mut rung_status = Vec::with_capacity(out.rung_qparams.len());
-                    for (i, (w, a, qp)) in out.rung_qparams.into_iter().enumerate() {
-                        let refreshed = match ladder.get_mut(i) {
-                            Some(entry) if entry.0 == w && entry.1 == a => {
-                                entry.2 = Arc::new(degraded_state(&entry.2, qp));
-                                true
-                            }
-                            _ => false,
-                        };
-                        rung_status.push((w, a, refreshed));
-                    }
-                    last_drift_max =
-                        out.layers.iter().fold(0.0f32, |m, &(_, s)| m.max(s));
-                    // the audit trail attributes the swap end to end:
-                    // which check, which layers (with scores), what the
-                    // qparams fingerprints were before/after, and how each
-                    // rung's refresh went
-                    let audit = SwapAudit {
-                        round,
-                        check: out.check,
-                        old_fp,
-                        new_fp,
-                        drifted: out.layers,
-                        rungs: rung_status,
-                    };
-                    if let Some(r) = &rec {
-                        r.emit(
-                            round,
-                            EventKind::HotSwap {
-                                swap: metrics.recal_swaps as u64,
-                                drifted: out.drifted as u32,
-                                old_fp,
-                                new_fp,
-                            },
-                        );
-                        r.audit(audit.clone());
-                    }
-                    metrics.swap_audits.push(audit);
-                    metrics.recal_swaps += 1;
-                    metrics.recal_layers += out.drifted;
-                    if metrics.first_swap_round.is_none() {
-                        metrics.first_swap_round = Some(metrics.rounds);
-                    }
-                    crate::log_info!(
-                        "recalibration hot-swap: {} drifted layer(s) at round {}",
-                        out.drifted,
-                        metrics.rounds
-                    );
+                let landed = apply_qparams_swap(
+                    &mut qs_cur,
+                    &mut ladder,
+                    &mut metrics,
+                    &rec,
+                    round,
+                    out.check,
+                    out.qparams,
+                    out.rung_qparams,
+                    out.layers,
+                );
+                if let (Some(dm), Some(qs)) = (landed, &qs_cur) {
+                    last_drift_max = dm;
                     // checkpoint the swapped model + the window it came
                     // from, off the scheduler thread: a crash after this
                     // point restarts on the recalibrated params. At most

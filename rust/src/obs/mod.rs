@@ -29,8 +29,8 @@ pub mod telemetry;
 
 pub use event::{Event, EventKind};
 pub use recorder::{FlightRecorder, SwapAudit, Trace};
-pub use snapshot::{MetricsSnapshot, CLASS_NAMES};
-pub use telemetry::{Hist, PhaseTimers, RoundSample, Telemetry};
+pub use snapshot::{FleetSnapshot, MetricsSnapshot, CLASS_NAMES};
+pub use telemetry::{fleet_jsonl, Hist, PhaseTimers, RoundSample, ShardSeries, Telemetry};
 
 /// Observability configuration for one serving coordinator.
 ///

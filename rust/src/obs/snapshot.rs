@@ -349,6 +349,117 @@ impl MetricsSnapshot {
     }
 }
 
+/// Fleet-scope observability snapshot: every shard's
+/// [`MetricsSnapshot`] keyed by shard id, the fleet-merged view
+/// (counters summed, series canonically re-sorted — built by
+/// `coordinator::Metrics::merge`), and the aggregator's own accounting.
+/// Written next to the merged sketch window on fleet shutdown.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FleetSnapshot {
+    /// per-shard snapshots in shard-id order
+    pub shards: Vec<(u64, MetricsSnapshot)>,
+    /// the fleet-wide merged snapshot
+    pub merged: MetricsSnapshot,
+    /// fleet aggregation epochs completed (merge + drift-score + plan)
+    pub merges: u64,
+    /// shard windows the aggregator skipped for layout mismatch instead
+    /// of dying (the hardened `SketchSet::merge` error path)
+    pub skipped_windows: u64,
+    /// (layer, bucket) positions that lost the partition-invariance
+    /// guarantee to a truncated input reservoir, summed over epochs
+    pub lossy_positions: u64,
+    /// layers broadcast recalibration plans rebuilt, over every epoch
+    pub plan_layers: Vec<u64>,
+    /// fleet epoch the first broadcast swap applied at (None = no swap)
+    pub swap_epoch: Option<u64>,
+}
+
+impl FleetSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "shards",
+                arr(self.shards.iter().map(|(id, snap)| {
+                    obj(vec![("shard", num(*id as f64)), ("snapshot", snap.to_json())])
+                })),
+            ),
+            ("merged", self.merged.to_json()),
+            ("merges", num(self.merges as f64)),
+            ("skipped_windows", num(self.skipped_windows as f64)),
+            ("lossy_positions", num(self.lossy_positions as f64)),
+            ("plan_layers", arr(self.plan_layers.iter().map(|&l| num(l as f64)))),
+            (
+                "swap_epoch",
+                match self.swap_epoch {
+                    Some(e) => num(e as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FleetSnapshot> {
+        let mut shards = Vec::new();
+        for entry in j.get("shards")?.arr()? {
+            shards.push((
+                entry.get("shard")?.usize()? as u64,
+                MetricsSnapshot::from_json(entry.get("snapshot")?)?,
+            ));
+        }
+        Ok(FleetSnapshot {
+            shards,
+            merged: MetricsSnapshot::from_json(j.get("merged")?)?,
+            merges: j.get("merges")?.usize()? as u64,
+            skipped_windows: j.get("skipped_windows")?.usize()? as u64,
+            lossy_positions: j.get("lossy_positions")?.usize()? as u64,
+            plan_layers: j
+                .get("plan_layers")?
+                .arr()?
+                .iter()
+                .map(|l| Ok(l.usize()? as u64))
+                .collect::<Result<Vec<u64>>>()?,
+            swap_epoch: match j.get("swap_epoch")? {
+                Json::Null => None,
+                v => Some(v.usize()? as u64),
+            },
+        })
+    }
+
+    /// Fleet Prometheus page: the merged snapshot's exposition plus the
+    /// fleet-only series (`msfp_fleet_*`), including per-shard image
+    /// counters so a scraper sees routing balance.
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write;
+        let mut out = self.merged.prometheus();
+        let mut head = |name: &str, kind: &str, help: &str| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+        };
+        head("msfp_fleet_shards", "gauge", "coordinator shards in the fleet");
+        let _ = writeln!(out, "msfp_fleet_shards {}", self.shards.len());
+        head("msfp_fleet_merges_total", "counter", "fleet aggregation epochs completed");
+        let _ = writeln!(out, "msfp_fleet_merges_total {}", self.merges);
+        head(
+            "msfp_fleet_skipped_windows_total",
+            "counter",
+            "shard windows skipped for layout mismatch",
+        );
+        let _ = writeln!(out, "msfp_fleet_skipped_windows_total {}", self.skipped_windows);
+        head(
+            "msfp_fleet_lossy_positions_total",
+            "counter",
+            "sketch positions merged via the lossy fallback",
+        );
+        let _ = writeln!(out, "msfp_fleet_lossy_positions_total {}", self.lossy_positions);
+        head("msfp_fleet_shard_images_total", "counter", "images generated per shard");
+        for (id, snap) in &self.shards {
+            let _ =
+                writeln!(out, "msfp_fleet_shard_images_total{{shard=\"{id}\"}} {}", snap.images);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -453,6 +564,37 @@ mod tests {
         // but any nonzero wait sample unquiets
         let snap = MetricsSnapshot { wait_max: [0, 1, 0], ..snap };
         assert!(snap.render_slo().contains("slo:"));
+    }
+
+    #[test]
+    fn fleet_snapshot_roundtrips_and_exposes_fleet_series() {
+        let fleet = FleetSnapshot {
+            shards: vec![(0, busy()), (1, MetricsSnapshot::default())],
+            merged: busy(),
+            merges: 3,
+            skipped_windows: 1,
+            lossy_positions: 2,
+            plan_layers: vec![0, 4, 7],
+            swap_epoch: Some(2),
+        };
+        let text = fleet.to_json().to_string();
+        let back = FleetSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, fleet);
+        assert_eq!(back.to_json().to_string(), text, "re-serialization must be stable");
+        // swap_epoch None rides as null
+        let none = FleetSnapshot { swap_epoch: None, ..fleet.clone() };
+        let text = none.to_json().to_string();
+        assert!(text.contains("\"swap_epoch\":null"), "{text}");
+        assert_eq!(FleetSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap(), none);
+
+        let prom = fleet.prometheus();
+        assert!(prom.contains("msfp_fleet_shards 2"), "{prom}");
+        assert!(prom.contains("msfp_fleet_merges_total 3"), "{prom}");
+        assert!(prom.contains("msfp_fleet_skipped_windows_total 1"), "{prom}");
+        assert!(prom.contains("msfp_fleet_shard_images_total{shard=\"0\"} 32"), "{prom}");
+        assert!(prom.contains("msfp_fleet_shard_images_total{shard=\"1\"} 0"), "{prom}");
+        // the merged exposition rides along untouched
+        assert!(prom.contains("msfp_requests_total 16"), "{prom}");
     }
 
     #[test]

@@ -46,6 +46,17 @@ impl Hist {
         }
     }
 
+    /// Fold another histogram in: bucketwise integer sums, so the merge
+    /// is exactly commutative and associative — the property the fleet
+    /// telemetry aggregation leans on.
+    pub fn merge(&mut self, other: &Hist) {
+        for (mine, theirs) in self.buckets.iter_mut().zip(&other.buckets) {
+            *mine += *theirs;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("count", num(self.count as f64)),
@@ -83,6 +94,15 @@ pub struct PhaseTimers {
 }
 
 impl PhaseTimers {
+    /// Merge another shard's phase histograms ([`Hist::merge`] per phase).
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        self.plan.merge(&other.plan);
+        self.exec.merge(&other.exec);
+        self.offload.merge(&other.offload);
+        self.probe.merge(&other.probe);
+        self.recal.merge(&other.recal);
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("plan", self.plan.to_json()),
@@ -249,6 +269,47 @@ impl Telemetry {
     }
 }
 
+/// One shard's contribution to the fleet telemetry export: its id, its
+/// retained rows, and its phase timers (harvested from the shard's
+/// scheduler at shutdown or an aggregation boundary).
+#[derive(Debug, Clone, Default)]
+pub struct ShardSeries {
+    pub shard: u64,
+    pub rows: Vec<RoundSample>,
+    pub timers: PhaseTimers,
+}
+
+/// The fleet-wide `metrics.jsonl` image: every shard's retained rows,
+/// each tagged with a `"shard"` key (shards in the given order, rows
+/// oldest-first within a shard — per-shard series stay differentiable),
+/// then one trailer object carrying the fleet-merged phase timers and
+/// the shard count.
+pub fn fleet_jsonl(shards: &[ShardSeries]) -> String {
+    let mut out = String::new();
+    let mut timers = PhaseTimers::default();
+    let mut rows_total = 0u64;
+    for s in shards {
+        timers.merge(&s.timers);
+        for row in &s.rows {
+            rows_total += 1;
+            let mut j = row.to_json();
+            if let Json::Obj(map) = &mut j {
+                map.insert("shard".to_string(), num(s.shard as f64));
+            }
+            out.push_str(&j.to_string());
+            out.push('\n');
+        }
+    }
+    let trailer = obj(vec![
+        ("phase_timers", timers.to_json()),
+        ("shards", num(shards.len() as f64)),
+        ("rows_total", num(rows_total as f64)),
+    ]);
+    out.push_str(&trailer.to_string());
+    out.push('\n');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -341,6 +402,66 @@ mod tests {
         assert_eq!(trailer.get("rows_dropped").unwrap().usize().unwrap(), 2);
         let timers = PhaseTimers::from_json(trailer.get("phase_timers").unwrap()).unwrap();
         assert_eq!(timers, t.timers);
+    }
+
+    #[test]
+    fn hist_merge_is_bucketwise_sum() {
+        let mut a = Hist::default();
+        let mut b = Hist::default();
+        for us in [0u64, 3, 1000] {
+            a.record_us(us);
+        }
+        for us in [3u64, 7] {
+            b.record_us(us);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge is commutative");
+        assert_eq!(ab.count, 5);
+        assert_eq!(ab.sum_us, 1013);
+        assert_eq!(ab.buckets[2], 2); // both 3s
+        assert_eq!(ab.buckets.iter().sum::<u64>(), ab.count);
+        // a merged sequentially vs pairwise agrees (associativity)
+        let mut c = Hist::default();
+        c.record_us(42);
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc);
+    }
+
+    #[test]
+    fn fleet_jsonl_tags_rows_by_shard_and_merges_timers() {
+        let mut t0 = PhaseTimers::default();
+        t0.plan.record_us(10);
+        let mut t1 = PhaseTimers::default();
+        t1.plan.record_us(30);
+        t1.exec.record_us(500);
+        let shards = vec![
+            ShardSeries { shard: 0, rows: vec![sample(1), sample(2)], timers: t0.clone() },
+            ShardSeries { shard: 1, rows: vec![sample(1)], timers: t1.clone() },
+        ];
+        let jsonl = fleet_jsonl(&shards);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 4, "3 rows + trailer");
+        for (line, want_shard) in lines[..3].iter().zip([0u64, 0, 1]) {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("shard").unwrap().usize().unwrap() as u64, want_shard);
+            // the row body still roundtrips (extra key is ignored)
+            let _ = RoundSample::from_json(&j).unwrap();
+        }
+        let trailer = Json::parse(lines[3]).unwrap();
+        assert_eq!(trailer.get("shards").unwrap().usize().unwrap(), 2);
+        assert_eq!(trailer.get("rows_total").unwrap().usize().unwrap(), 3);
+        let merged = PhaseTimers::from_json(trailer.get("phase_timers").unwrap()).unwrap();
+        let mut want = t0;
+        want.merge(&t1);
+        assert_eq!(merged, want);
     }
 
     #[test]

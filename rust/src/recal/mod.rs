@@ -37,4 +37,4 @@ pub mod sketch;
 
 pub use drift::{drift_score, DriftScore};
 pub use planner::{RecalLayer, RecalPlan, RecalPlanner};
-pub use sketch::{LayerSketch, SketchSet};
+pub use sketch::{FleetMerged, LayerSketch, SketchSet};

@@ -75,6 +75,20 @@ impl LayerSketch {
         self.count
     }
 
+    /// Reservoir capacity (the most samples this sketch retains).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// True while the reservoir still holds *every* observed value — the
+    /// stream has not outgrown the capacity, so the retained sample is
+    /// exact, not a subsample. The canonical fleet merge
+    /// ([`SketchSet::merge_canonical`]) relies on this to rebuild
+    /// partition-invariant reservoirs.
+    pub fn is_lossless(&self) -> bool {
+        self.count == self.res.len()
+    }
+
     /// The retained reservoir sample.
     pub fn samples(&self) -> &[f32] {
         &self.res
@@ -230,6 +244,15 @@ impl<'a> ByteReader<'a> {
     }
 }
 
+/// Result of [`SketchSet::merge_canonical`]: the fleet-merged window plus
+/// how many (layer, bucket) positions fell back to the order-sensitive
+/// sequential merge because an input reservoir had already truncated.
+#[derive(Debug, Clone)]
+pub struct FleetMerged {
+    pub window: SketchSet,
+    pub lossy_positions: usize,
+}
+
 /// Whole-model sketch store: `n_layers × n_buckets` layer sketches, keyed
 /// by layer index and the timestep bucket `floor(t / t_total · n_buckets)`.
 #[derive(Debug, Clone, PartialEq)]
@@ -264,6 +287,11 @@ impl SketchSet {
 
     pub fn n_buckets(&self) -> usize {
         self.n_buckets
+    }
+
+    /// Timestep horizon the bucket index is computed against.
+    pub fn t_total(&self) -> usize {
+        self.t_total
     }
 
     fn bucket_of(&self, t: f32) -> usize {
@@ -326,17 +354,99 @@ impl SketchSet {
         out
     }
 
+    /// Verify `other` has this set's (layer, bucket) layout. Distinct
+    /// errors per axis so a fleet aggregator can report exactly how a
+    /// stale or foreign shard window disagrees.
+    pub fn check_layout(&self, other: &SketchSet) -> Result<()> {
+        if self.n_layers != other.n_layers {
+            bail!(
+                "sketch-set layer-layout mismatch: {} vs {} layers",
+                self.n_layers,
+                other.n_layers
+            );
+        }
+        if self.n_buckets != other.n_buckets {
+            bail!(
+                "sketch-set bucket-layout mismatch: {} vs {} buckets",
+                self.n_buckets,
+                other.n_buckets
+            );
+        }
+        Ok(())
+    }
+
     /// Merge another producer's observations into this set, sketch by
-    /// sketch (layouts must match). Extrema, counts and moments combine
-    /// exactly; reservoirs re-draw per [`LayerSketch::merge`], driven by
-    /// *this* set's rng cursors — so merging into a loaded snapshot draws
-    /// identically to merging into the original.
-    pub fn merge(&mut self, other: &SketchSet) {
-        assert_eq!(self.n_layers, other.n_layers, "sketch-set layer mismatch");
-        assert_eq!(self.n_buckets, other.n_buckets, "sketch-set bucket mismatch");
+    /// sketch. Extrema, counts and moments combine exactly; reservoirs
+    /// re-draw per [`LayerSketch::merge`], driven by *this* set's rng
+    /// cursors — so merging into a loaded snapshot draws identically to
+    /// merging into the original. A (layer, bucket) layout mismatch is an
+    /// error (`check_layout`), not a panic: a malformed peer snapshot
+    /// must never take down the consumer.
+    pub fn merge(&mut self, other: &SketchSet) -> Result<()> {
+        self.check_layout(other)?;
         for (a, b) in self.sketches.iter_mut().zip(&other.sketches) {
             a.merge(b);
         }
+        Ok(())
+    }
+
+    /// Canonical *partition-invariant* merge of per-shard windows — the
+    /// fleet aggregator's primitive. The sequential [`SketchSet::merge`]
+    /// is order-sensitive twice over (reservoir redraw consumes the rng;
+    /// f64 moment sums group differently per partition), so a 2-shard
+    /// and a 4-shard split of the same traffic would disagree bitwise.
+    /// This merge instead rebuilds each (layer, bucket) position from the
+    /// *sorted union* of every input's retained samples: counts, extrema
+    /// and moments accumulate in canonical sorted order, and the rebuilt
+    /// reservoir is either the union itself (when it fits the capacity)
+    /// or a fresh deterministic Algorithm-R pass over the sorted stream —
+    /// in both cases a pure function of the union multiset, not of how
+    /// traffic was sharded.
+    ///
+    /// The invariance contract holds while every contributing sketch is
+    /// still lossless ([`LayerSketch::is_lossless`] — count ≤ capacity,
+    /// the drift-window regime the prober's budget keeps us in). A
+    /// position where some input already truncated its reservoir falls
+    /// back to the sequential redraw (still deterministic in input order)
+    /// and is counted in [`FleetMerged::lossy_positions`].
+    ///
+    /// Layouts must agree with `windows[0]`; a mismatch is an error so
+    /// the aggregator can skip the offending shard. Empty input is an
+    /// error (there is no layout to adopt).
+    pub fn merge_canonical(windows: &[&SketchSet]) -> Result<FleetMerged> {
+        let first = *windows.first().ok_or_else(|| anyhow::anyhow!("no windows to merge"))?;
+        for w in &windows[1..] {
+            first.check_layout(w)?;
+        }
+        let cap = first.sketches.iter().map(|s| s.cap).max().unwrap_or(1);
+        let mut out =
+            SketchSet::new(first.n_layers, first.n_buckets, cap, first.t_total, 0xF1EE7);
+        let mut lossy_positions = 0usize;
+        let mut union: Vec<f32> = Vec::new();
+        for (i, sk) in out.sketches.iter_mut().enumerate() {
+            let inputs: Vec<&LayerSketch> = windows.iter().map(|w| &w.sketches[i]).collect();
+            if inputs.iter().all(|s| s.is_lossless()) {
+                union.clear();
+                for s in &inputs {
+                    union.extend_from_slice(s.samples());
+                }
+                union.sort_unstable_by(|a, b| a.total_cmp(b));
+                for &x in &union {
+                    sk.push(x);
+                }
+            } else {
+                lossy_positions += 1;
+                for s in &inputs {
+                    sk.merge(s);
+                }
+            }
+            // exact extrema always transfer — they cover widen-only
+            // inputs and values a truncated reservoir dropped
+            for s in &inputs {
+                sk.widen(s.min, s.max);
+            }
+        }
+        Ok(FleetMerged { window: out, lossy_positions })
     }
 
     /// Drop all observed data (fresh drift window), keeping the layout.
@@ -596,6 +706,131 @@ mod tests {
         let mut long = bytes;
         long.push(0);
         assert!(SketchSet::from_bytes(&long).is_err());
+    }
+
+    #[test]
+    fn merge_layout_mismatch_is_an_error_not_a_panic() {
+        let mut a = SketchSet::new(2, 4, 8, 100, 1);
+        let b = SketchSet::new(3, 4, 8, 100, 1);
+        let err = a.merge(&b).unwrap_err();
+        assert!(err.to_string().contains("layer-layout mismatch"), "{err}");
+        let c = SketchSet::new(2, 2, 8, 100, 1);
+        let err = a.merge(&c).unwrap_err();
+        assert!(err.to_string().contains("bucket-layout mismatch"), "{err}");
+        // a matching layout still merges
+        let d = SketchSet::new(2, 4, 8, 100, 9);
+        a.merge(&d).unwrap();
+        // canonical merge rejects the same mismatches
+        assert!(SketchSet::merge_canonical(&[&a, &b]).is_err());
+        assert!(SketchSet::merge_canonical(&[&a, &c]).is_err());
+        assert!(SketchSet::merge_canonical(&[]).is_err());
+    }
+
+    #[test]
+    fn self_merge_doubles_moments_keeps_extrema_matches_roundtrip() {
+        // merging a sketch with a byte-identical clone of itself is the
+        // aliasing edge of the fleet path: moments and counts double
+        // exactly, extrema are unchanged, and the reservoir redraw (which
+        // advances the rng cursor) is identical whether `other` is a
+        // clone or a persistence roundtrip of the same sketch
+        let mut a = LayerSketch::new(16, 11);
+        for i in 0..100 {
+            a.push((i as f32 * 0.37).sin() * 3.0);
+        }
+        let (count, min, max, sum, sumsq) = (a.count(), a.min, a.max, a.sum, a.sumsq);
+        let mut via_clone = a.clone();
+        via_clone.merge(&a.clone());
+        let mut bytes = Vec::new();
+        a.write_to(&mut bytes);
+        let restored = LayerSketch::read_from(&mut ByteReader { bytes: &bytes, off: 0 }).unwrap();
+        let mut via_roundtrip = a.clone();
+        via_roundtrip.merge(&restored);
+        assert_eq!(via_clone, via_roundtrip);
+        assert_eq!(via_clone.count(), 2 * count);
+        assert_eq!(via_clone.min.to_bits(), min.to_bits());
+        assert_eq!(via_clone.max.to_bits(), max.to_bits());
+        assert_eq!(via_clone.sum.to_bits(), (sum + sum).to_bits());
+        assert_eq!(via_clone.sumsq.to_bits(), (sumsq + sumsq).to_bits());
+        // the reservoir still holds only values the stream produced
+        assert!(via_clone.samples().iter().all(|v| *v >= min && *v <= max));
+    }
+
+    #[test]
+    fn canonical_merge_is_partition_invariant_for_lossless_windows() {
+        // the fleet contract: any sharding of the same observation stream
+        // merges to the same window, bit for bit, as long as no reservoir
+        // truncated. Build one stream, split it 2-way and 4-way by a
+        // routing hash, and compare the canonical merges.
+        let t_total = 100usize;
+        let obs: Vec<(usize, f32, f32)> = {
+            let mut rng = Rng::new(77);
+            (0..300)
+                .map(|_| (rng.below(3), rng.range(0.0, 100.0), rng.normal()))
+                .collect()
+        };
+        let feed_split = |n_shards: usize| -> Vec<SketchSet> {
+            let mut shards: Vec<SketchSet> = (0..n_shards)
+                .map(|s| SketchSet::new(3, 4, 256, t_total, 1000 + s as u64))
+                .collect();
+            for (i, &(l, t, v)) in obs.iter().enumerate() {
+                let shard = crate::util::rng::mix64(i as u64) as usize % n_shards;
+                shards[shard].observe(l, t, &[v]);
+            }
+            shards
+        };
+        let two = feed_split(2);
+        let four = feed_split(4);
+        let m2 = SketchSet::merge_canonical(&two.iter().collect::<Vec<_>>()).unwrap();
+        let m4 = SketchSet::merge_canonical(&four.iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(m2.lossy_positions, 0);
+        assert_eq!(m4.lossy_positions, 0);
+        assert_eq!(m2.window.to_bytes(), m4.window.to_bytes());
+        // and both agree with the single-producer feed merged alone
+        let one = feed_split(1);
+        let m1 = SketchSet::merge_canonical(&[&one[0]]).unwrap();
+        assert_eq!(m1.window.to_bytes(), m2.window.to_bytes());
+        // exact stats survive: total count per layer matches the stream
+        for l in 0..3 {
+            let n = obs.iter().filter(|o| o.0 == l).count();
+            assert_eq!(m2.window.layer_count(l), n);
+        }
+    }
+
+    #[test]
+    fn canonical_merge_truncates_deterministically_past_capacity() {
+        // tiny caps force the Algorithm-R pass over the sorted union; the
+        // inputs are still lossless (cap 256 holds everything), so the
+        // 2-way and 4-way merges must still agree bitwise
+        let obs: Vec<(usize, f32, f32)> = {
+            let mut rng = Rng::new(5);
+            (0..200).map(|_| (0usize, rng.range(0.0, 100.0), rng.normal())).collect()
+        };
+        let feed = |n_shards: usize, cap: usize| -> Vec<SketchSet> {
+            let mut shards: Vec<SketchSet> =
+                (0..n_shards).map(|s| SketchSet::new(1, 1, cap, 100, 7 + s as u64)).collect();
+            for (i, &(l, t, v)) in obs.iter().enumerate() {
+                let shard = crate::util::rng::mix64(i as u64) as usize % n_shards;
+                shards[shard].observe(l, t, &[v]);
+            }
+            shards
+        };
+        // per-shard slices (~40-50 obs) fit cap 64 losslessly, but their
+        // 200-sample union overflows the merged cap — the output runs the
+        // deterministic Algorithm-R pass over the sorted union, which is
+        // still a pure function of the union multiset, so different shard
+        // counts keep agreeing bitwise
+        let a = SketchSet::merge_canonical(&feed(4, 64).iter().collect::<Vec<_>>()).unwrap();
+        let b = SketchSet::merge_canonical(&feed(5, 64).iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(a.lossy_positions, 0);
+        assert_eq!(b.lossy_positions, 0);
+        assert_eq!(a.window.to_bytes(), b.window.to_bytes());
+        assert_eq!(a.window.sketch(0, 0).count(), 200);
+        assert_eq!(a.window.sketch(0, 0).samples().len(), 64);
+        // a truncated *input* flips the lossy fallback counter instead
+        let lossy_in = feed(1, 16); // 200 obs into cap 16 → truncated
+        let c = SketchSet::merge_canonical(&lossy_in.iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(c.lossy_positions, 1);
+        assert_eq!(c.window.sketch(0, 0).count(), 200);
     }
 
     #[test]

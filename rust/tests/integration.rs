@@ -1606,3 +1606,274 @@ fn checkpoint_cache_reused() {
     assert_eq!(p1.params, p2.params);
     std::env::remove_var("MSFP_RUNS");
 }
+
+/// The fleet headline invariant: 1-, 2- and 4-shard fleets over the same
+/// deterministic workload + observation stream produce byte-identical
+/// fleet-merged sketch windows, bit-identical drift scores, the same
+/// broadcast recalibration plan (layers + swap epoch) and bit-identical
+/// per-request images — and the merged window detects drift that no
+/// single shard's slice could have been trusted with alone.
+#[test]
+fn fleet_serving_is_shard_count_invariant_and_merges_drift() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::{Fleet, FleetCfg, route};
+    use msfp::quant::msfp::{LayerCalib, Method, QuantOpts, StateDir};
+    use msfp::recal::RecalPlanner;
+
+    std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_integ_fleet"));
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let p = pl.prepare(Corpus::CifarSyn).unwrap();
+    let info = p.info.clone();
+    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4)
+        .with_io_8bit(&info.io_layer_indices());
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(p.params.clone());
+    let mut spec = MethodSpec::ours(4, 2, 0);
+    spec.finetune = None;
+
+    // the shared drift baseline every run scores against (build_session
+    // is deterministic, so each run's fleet session carries exactly this)
+    let calib: Vec<LayerCalib> =
+        pl.build_session(&p).unwrap().calib().to_vec();
+    let shift = 1.0f32;
+    let feed_cap = 768usize; // samples fed per layer (chunks of 8)
+
+    // replay the feed's routing (pure in the observation ids) to size the
+    // planner's trust gate: `min_samples` must exceed every single
+    // shard's slice of every layer in every tested fleet size, while at
+    // least one layer's full (merged) count still clears it — that is
+    // exactly the "merging improves detection" regime
+    let mut max_slice = 0usize;
+    for shards in [2usize, 4] {
+        let mut id = 0u64;
+        for c in &calib {
+            let len = c.acts.len().min(feed_cap);
+            let mut per = vec![0usize; shards];
+            let mut off = 0usize;
+            while off < len {
+                let take = (len - off).min(8);
+                per[route(id, 0, shards)] += take;
+                id += 1;
+                off += take;
+            }
+            id += 1; // the widen_layer id
+            max_slice = max_slice.max(per.into_iter().max().unwrap());
+        }
+    }
+    let min_samples = max_slice + 1;
+    let full_max = (0..calib.len()).map(|l| calib[l].acts.len().min(feed_cap)).max().unwrap();
+    assert!(
+        full_max >= min_samples,
+        "fixture cannot separate solo from merged: full {full_max} < gate {min_samples}"
+    );
+    let planner = RecalPlanner { min_samples, ..RecalPlanner::default() };
+
+    let feed = |fleet: &Fleet| {
+        let mut rng = Rng::new(18);
+        let mut id = 0u64;
+        for (l, c) in calib.iter().enumerate() {
+            let acts: Vec<f32> = c.acts.iter().take(feed_cap).map(|v| v + shift).collect();
+            for chunk in acts.chunks(8) {
+                let t = rng.range(0.0, pl.sched.t_total as f32);
+                fleet.observe(id, l, t, chunk);
+                id += 1;
+            }
+            // exact extrema land on one routed shard; the canonical merge
+            // widens with every input, so the fleet window carries them
+            fleet.widen_layer(id, l, 0.0, c.min + shift, c.max + shift);
+            id += 1;
+        }
+    };
+    let workload = |lo: u64| -> Vec<Request> {
+        (0..6u64)
+            .map(|i| {
+                let mut r = Request::new(0, 2, 6);
+                r.seed = lo + i;
+                r
+            })
+            .collect()
+    };
+    let collect = |rxs: Vec<msfp::coordinator::ResponseRx>| -> Vec<Vec<u32>> {
+        rxs.into_iter()
+            .map(|rx| {
+                rx.recv().unwrap().unwrap_done().images.iter().map(|v| v.to_bits()).collect()
+            })
+            .collect()
+    };
+
+    let state_root = std::env::temp_dir().join("msfp_integ_fleet_state");
+    let _ = std::fs::remove_dir_all(&state_root);
+    std::fs::create_dir_all(&state_root).unwrap();
+    let run = |shards: usize, state_dir: Option<&std::path::Path>| {
+        let session = pl.build_session(&p).unwrap();
+        let q = pl.quantize_with_session(&p, &session, &spec).unwrap();
+        let mut cfg = FleetCfg::new(shards, q.state, session, opts.clone());
+        cfg.seed = 21;
+        cfg.workers = 1;
+        cfg.planner = planner.clone();
+        cfg.state_dir = state_dir.map(StateDir::new);
+        let mut fleet = Fleet::spawn(
+            Arc::clone(&den),
+            info.clone(),
+            pl.sched.clone(),
+            Arc::clone(&params),
+            cfg,
+        );
+        feed(&fleet);
+        // in a multi-shard fleet no single shard's slice may be trusted
+        // alone: the planner (same gate, same baseline) plans nothing on
+        // any solo window — only the merged one crosses the gate below
+        if shards > 1 {
+            for s in 0..shards {
+                let w = fleet.shard_window(s).lock().unwrap().clone();
+                assert!(
+                    planner.plan(&calib, &w).layers.is_empty(),
+                    "{shards}-shard fleet: shard {s}'s slice was trusted alone"
+                );
+            }
+        }
+        let imgs1 = collect(fleet.submit_many(workload(60)).unwrap());
+        let agg = fleet.aggregate().unwrap();
+        let imgs2 = collect(fleet.submit_many(workload(80)).unwrap());
+        (imgs1, agg, imgs2, fleet.shutdown())
+    };
+
+    let (one_1, agg_1, one_2, rep_1) = run(1, None);
+    let (two_1, agg_2, two_2, rep_2) = run(2, Some(&state_root));
+    let (four_1, agg_4, four_2, rep_4) = run(4, None);
+
+    // the merged window is partition-invariant: byte-identical for every
+    // shard count, with zero lossy positions and zero skipped shards
+    for agg in [&agg_1, &agg_2, &agg_4] {
+        assert_eq!(agg.epoch, 0);
+        assert_eq!(agg.lossy_positions, 0, "shard windows overflowed the test's cap");
+        assert_eq!(agg.skipped_windows, 0);
+    }
+    assert_eq!(agg_1.window.to_bytes(), agg_2.window.to_bytes(), "1 vs 2 shards");
+    assert_eq!(agg_2.window.to_bytes(), agg_4.window.to_bytes(), "2 vs 4 shards");
+    // ... so drift scores and the broadcast plan agree exactly
+    assert_eq!(agg_1.scores, agg_2.scores);
+    assert_eq!(agg_2.scores, agg_4.scores);
+    let plan_layers = |a: &msfp::coordinator::FleetAggregate| -> Vec<(u32, u32)> {
+        a.swap
+            .as_ref()
+            .expect("the merged window must cross the trust gate and plan a swap")
+            .layers
+            .iter()
+            .map(|&(l, s)| (l, s.to_bits()))
+            .collect()
+    };
+    assert_eq!(plan_layers(&agg_1), plan_layers(&agg_2));
+    assert_eq!(plan_layers(&agg_2), plan_layers(&agg_4));
+    for rep in [&rep_1, &rep_2, &rep_4] {
+        assert_eq!(rep.snapshot.swap_epoch, Some(0), "fleet swap landed at epoch 0");
+    }
+
+    // every shard applied the broadcast exactly once, with a real
+    // fingerprint transition in its audit trail
+    for (n, rep) in [(1usize, &rep_1), (2, &rep_2), (4, &rep_4)] {
+        assert_eq!(rep.merged.recal_swaps, n, "every shard must apply the fleet swap");
+        assert_eq!(rep.merged.swap_audits.len(), n);
+        assert!(rep.merged.swap_audits.iter().all(|a| a.old_fp != a.new_fp));
+        assert_eq!(rep.per_shard.len(), n);
+        let per: usize = rep.per_shard.iter().map(|m| m.images_done).sum();
+        assert_eq!(per, rep.merged.images_done);
+        assert_eq!(rep.merged.images_done, 24, "6 requests x 2 images x 2 epochs");
+    }
+
+    // per-request image bits are routing-invariant, both before and after
+    // the fleet-wide hot-swap
+    assert_eq!(one_1, two_1, "pre-swap images moved between 1 and 2 shards");
+    assert_eq!(two_1, four_1, "pre-swap images moved between 2 and 4 shards");
+    assert_eq!(one_2, two_2, "post-swap images moved between 1 and 2 shards");
+    assert_eq!(two_2, four_2, "post-swap images moved between 2 and 4 shards");
+    for img in one_2.iter().chain(&one_1) {
+        assert!(img.iter().all(|b| f32::from_bits(*b).is_finite()));
+    }
+
+    // the fleet state dir got the full artifact set, and the persisted
+    // snapshot is exactly the one the report carries
+    let sd = StateDir::new(&state_root);
+    assert!(sd.sketch_path().exists(), "merged window not persisted");
+    assert!(sd.telemetry_path().exists(), "fleet metrics.jsonl not persisted");
+    let json = std::fs::read_to_string(state_root.join("fleet.json")).unwrap();
+    let parsed = msfp::obs::FleetSnapshot::from_json(
+        &msfp::util::json::Json::parse(&json).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(parsed, rep_2.snapshot, "persisted fleet snapshot drifted from the report");
+    let prom = std::fs::read_to_string(state_root.join("fleet.prom")).unwrap();
+    assert!(prom.contains("msfp_fleet_shards 2"), "prometheus page lost the shard count");
+    std::env::remove_var("MSFP_RUNS");
+}
+
+/// The aggregator's error path (the hardened `SketchSet::merge`): a shard
+/// whose window comes back with a mismatched layout is skipped, warned
+/// about and counted — aggregation proceeds on the shards that agree and
+/// serving never dies.
+#[test]
+fn fleet_aggregation_skips_bad_shard_windows_instead_of_dying() {
+    let Some(dir) = artifacts() else { return };
+    use msfp::coordinator::{Fleet, FleetCfg};
+    use msfp::quant::msfp::{Method, QuantOpts};
+    use msfp::recal::SketchSet;
+
+    std::env::set_var("MSFP_RUNS", std::env::temp_dir().join("msfp_integ_fleet_bad"));
+    let pl = Pipeline::new(&dir, tiny_scale()).unwrap();
+    let p = pl.prepare(Corpus::CifarSyn).unwrap();
+    let info = p.info.clone();
+    let opts = QuantOpts::new(Method::Msfp, info.n_layers, 4, 4)
+        .with_io_8bit(&info.io_layer_indices());
+    let den = Arc::new(Denoiser::new(Arc::clone(&pl.engine), &info).unwrap());
+    let params = Arc::new(p.params.clone());
+    let mut spec = MethodSpec::ours(4, 2, 0);
+    spec.finetune = None;
+
+    let session = pl.build_session(&p).unwrap();
+    let q = pl.quantize_with_session(&p, &session, &spec).unwrap();
+    let calib_feed: Vec<(usize, Vec<f32>)> = session
+        .calib()
+        .iter()
+        .enumerate()
+        .map(|(l, c)| (l, c.acts.iter().take(256).map(|v| v + 1.0).collect()))
+        .collect();
+    let mut cfg = FleetCfg::new(2, q.state, session, opts);
+    cfg.seed = 21;
+    cfg.workers = 1;
+    let mut fleet = Fleet::spawn(
+        Arc::clone(&den),
+        info.clone(),
+        pl.sched.clone(),
+        Arc::clone(&params),
+        cfg,
+    );
+    let mut rng = Rng::new(18);
+    let mut id = 0u64;
+    for (l, acts) in &calib_feed {
+        for chunk in acts.chunks(8) {
+            fleet.observe(id, *l, rng.range(0.0, pl.sched.t_total as f32), chunk);
+            id += 1;
+        }
+    }
+
+    // poison shard 1: its window comes back with a different layer count,
+    // which the aggregator must reject per shard, not panic on (the old
+    // `SketchSet::merge` assert would have taken the fleet down)
+    *fleet.shard_window(1).lock().unwrap() =
+        SketchSet::new(info.n_layers + 1, 4, 8, pl.sched.t_total, 3);
+    let agg = fleet.aggregate().unwrap();
+    assert_eq!(agg.skipped_windows, 1, "the bad shard must be counted, not fatal");
+    assert_eq!(agg.window.n_layers(), info.n_layers, "merged layout follows the fleet's");
+    assert_eq!(agg.scores.len(), info.n_layers);
+
+    // the fleet still serves after the partial aggregation
+    let mut req = Request::new(0, 2, 4);
+    req.seed = 9;
+    let rxs = fleet.submit_many(vec![req]).unwrap();
+    let done = rxs.into_iter().next().unwrap().recv().unwrap().unwrap_done();
+    assert!(done.images.iter().all(|v| v.is_finite()));
+    let rep = fleet.shutdown();
+    assert_eq!(rep.snapshot.skipped_windows, 1);
+    assert_eq!(rep.merged.images_done, 2);
+    std::env::remove_var("MSFP_RUNS");
+}

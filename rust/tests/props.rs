@@ -746,13 +746,194 @@ fn prop_sketch_loaded_then_merged_equals_merged_then_loaded() {
             }
             let mut loaded_then_merged =
                 msfp::recal::SketchSet::from_bytes(&a.to_bytes()).unwrap();
-            loaded_then_merged.merge(&b);
+            loaded_then_merged.merge(&b).unwrap();
             let mut a = a;
-            a.merge(&b);
+            a.merge(&b).unwrap();
             let merged_then_loaded =
                 msfp::recal::SketchSet::from_bytes(&a.to_bytes()).unwrap();
             loaded_then_merged == merged_then_loaded
                 && loaded_then_merged.to_bytes() == merged_then_loaded.to_bytes()
+        },
+    );
+}
+
+// Fleet-merge laws ----------------------------------------------------
+
+#[test]
+fn prop_fleet_canonical_merge_is_partition_invariant() {
+    // the fleet aggregator's headline law: feed one deterministic traffic
+    // tape either unsharded, or partitioned across 2 or 4 shards by the
+    // fleet router, and `merge_canonical` rebuilds the SAME window —
+    // byte-identical between the 2-way and 4-way partitions, and exact
+    // (count / extrema, moments to fp-reorder tolerance) against the
+    // unsharded feed
+    use msfp::coordinator::route;
+    use msfp::recal::SketchSet;
+    check(
+        "fleet-partition-invariant",
+        40,
+        |r: &mut Rng| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let n_layers = 1 + rng.below(3);
+            let n_buckets = 1 + rng.below(3);
+            // large enough that every shard reservoir stays lossless
+            // (≤ 50 observations × ≤ 8 samples) — the regime the
+            // invariance contract covers
+            let cap = 512;
+            let salt = rng.next_u64();
+            // one traffic tape: (producer id, layer, t, samples | widen)
+            let mut tape: Vec<(u64, usize, f32, Result<Vec<f32>, (f32, f32)>)> = Vec::new();
+            for id in 0..(10 + rng.below(40)) as u64 {
+                let l = rng.below(n_layers);
+                let t = rng.range(0.0, 100.0);
+                if rng.below(6) == 0 {
+                    let w = rng.range(0.1, 8.0);
+                    tape.push((id, l, t, Err((-w, w))));
+                } else {
+                    let vals: Vec<f32> =
+                        (0..1 + rng.below(8)).map(|_| rng.normal()).collect();
+                    tape.push((id, l, t, Ok(vals)));
+                }
+            }
+            let feed = |set: &mut SketchSet, slice: Option<(usize, usize)>| {
+                for (id, l, t, ev) in &tape {
+                    if let Some((shard, n)) = slice {
+                        if route(*id, salt, n) != shard {
+                            continue;
+                        }
+                    }
+                    match ev {
+                        Ok(vals) => set.observe(*l, *t, vals),
+                        Err((lo, hi)) => set.widen_layer(*l, *t, *lo, *hi),
+                    }
+                }
+            };
+            let mut full = SketchSet::new(n_layers, n_buckets, cap, 100, 7);
+            feed(&mut full, None);
+            let merged_for = |n: usize| {
+                let mut shards: Vec<SketchSet> = (0..n)
+                    .map(|s| SketchSet::new(n_layers, n_buckets, cap, 100, 0x5EED ^ s as u64))
+                    .collect();
+                for (s, set) in shards.iter_mut().enumerate() {
+                    feed(set, Some((s, n)));
+                }
+                let refs: Vec<&SketchSet> = shards.iter().collect();
+                SketchSet::merge_canonical(&refs).unwrap()
+            };
+            let m2 = merged_for(2);
+            let m4 = merged_for(4);
+            if m2.lossy_positions != 0 || m4.lossy_positions != 0 {
+                return false;
+            }
+            if m2.window.to_bytes() != m4.window.to_bytes() {
+                return false;
+            }
+            (0..n_layers).all(|l| {
+                (0..n_buckets).all(|b| {
+                    let f = full.sketch(l, b);
+                    let m = m2.window.sketch(l, b);
+                    f.count() == m.count()
+                        && f.min.to_bits() == m.min.to_bits()
+                        && f.max.to_bits() == m.max.to_bits()
+                        && (f.mean() - m.mean()).abs() <= 1e-9 * f.mean().abs().max(1.0)
+                        && (f.var() - m.var()).abs() <= 1e-6 * f.var().abs().max(1.0)
+                })
+            })
+        },
+    );
+}
+
+/// Random per-shard [`msfp::coordinator::Metrics`]: a plausible spread of
+/// sample series, counters and swap audits. Backend is fixed by the
+/// caller — the merge keeps the first non-empty backend, so the algebra
+/// holds over a homogeneous fleet (which is what `Fleet::spawn` builds).
+fn random_metrics(rng: &mut Rng, backend: &'static str) -> msfp::coordinator::Metrics {
+    use std::time::Duration;
+    let mut m = msfp::coordinator::Metrics {
+        backend,
+        images_done: rng.below(50),
+        evals: rng.below(900),
+        rounds: rng.below(40),
+        wall: Duration::from_micros(rng.next_u64() % 1_000_000),
+        round_exec: Duration::from_micros(rng.next_u64() % 500_000),
+        round_sched: Duration::from_micros(rng.next_u64() % 100_000),
+        sel_hits: rng.next_u64() % 100,
+        sel_misses: rng.next_u64() % 100,
+        recal_checks: rng.below(5),
+        recal_swaps: rng.below(3),
+        recal_layers: rng.below(6),
+        first_swap_round: if rng.below(2) == 0 { Some(rng.below(30)) } else { None },
+        shed: [rng.below(4), rng.below(4), rng.below(4)],
+        rung_rounds: (0..rng.below(4)).map(|_| rng.below(20)).collect(),
+        packed_bytes: rng.below(1 << 16),
+        swap_audits: (0..rng.below(3))
+            .map(|_| msfp::obs::SwapAudit {
+                round: rng.below(40) as u64,
+                check: rng.below(5) as u64,
+                old_fp: rng.next_u64(),
+                new_fp: rng.next_u64(),
+                drifted: vec![(rng.below(6) as u32, rng.normal())],
+                rungs: vec![(4, 4, rng.below(2) == 0)],
+            })
+            .collect(),
+        ..msfp::coordinator::Metrics::default()
+    };
+    for _ in 0..rng.below(20) {
+        m.latencies.push(Duration::from_micros(rng.next_u64() % 50_000));
+    }
+    for _ in 0..rng.below(12) {
+        m.batch_sizes.push(1 + rng.below(8));
+        m.batch_fills.push(rng.range(0.0, 1.0));
+    }
+    for q in &mut m.queue_waits {
+        let n = rng.next_u64() % 10;
+        for _ in 0..n {
+            q.push(rng.next_u64() % 10_000);
+        }
+    }
+    m
+}
+
+/// Full-strength Metrics equality: the raw sample series and audit trail
+/// bit-for-bit, plus the derived [`msfp::obs::MetricsSnapshot`] (which
+/// covers every counter, the percentiles and the throughput math).
+fn metrics_eq(a: &msfp::coordinator::Metrics, b: &msfp::coordinator::Metrics) -> bool {
+    a.latencies == b.latencies
+        && a.batch_sizes == b.batch_sizes
+        && a.batch_fills == b.batch_fills
+        && a.queue_waits == b.queue_waits
+        && a.rung_rounds == b.rung_rounds
+        && a.swap_audits == b.swap_audits
+        && a.snapshot() == b.snapshot()
+}
+
+#[test]
+fn prop_fleet_metrics_merge_commutative_and_associative() {
+    // the fleet report is a fold of per-shard Metrics; the fold must not
+    // care which shard harvests first or how shards are grouped — merge
+    // canonicalizes every series (sorted-multiset form), so the law is
+    // bitwise, not approximate
+    check(
+        "fleet-metrics-merge-algebra",
+        60,
+        |r: &mut Rng| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let a = random_metrics(&mut rng, "graph");
+            let b = random_metrics(&mut rng, "graph");
+            let c = random_metrics(&mut rng, "graph");
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            metrics_eq(&ab, &ba) && metrics_eq(&ab_c, &a_bc)
         },
     );
 }

@@ -25,6 +25,12 @@
 #   trace-determinism smoke                    named re-run of the flight-
 #                                              recorder logical-trace parity
 #                                              test (1 vs 4 workers)
+#   fleet-determinism smoke                    named re-run of the fleet
+#                                              shard-count invariance test
+#                                              (2 vs 4 shards: identical
+#                                              merged windows, plans and
+#                                              image bits) plus the bad-
+#                                              window skip hardening test
 #   test-count floor                           the summed `N passed` totals
 #                                              must not drop below
 #                                              scripts/test_floor.txt, so a
@@ -85,6 +91,15 @@ echo "== trace-determinism smoke (flight-recorder logical trace, 1 vs 4 workers)
 # any worker count, and the shutdown postmortem must reload cleanly
 cargo test -q --test integration \
     flight_recorder_trace_is_bit_identical_across_workers
+
+echo "== fleet-determinism smoke (2 vs 4 shards: merged windows, plans, image bits) =="
+# the fleet contract gets its own CI line: sharding the same traffic 2 or
+# 4 ways must produce byte-identical canonically-merged windows, the same
+# broadcast recalibration plan and bit-identical images — and a shard
+# handing back a malformed window must be skipped, never fatal
+cargo test -q --test integration \
+    fleet_serving_is_shard_count_invariant_and_merges_drift \
+    fleet_aggregation_skips_bad_shard_windows_instead_of_dying
 
 echo "== test-count regression guard =="
 total=$(grep -E 'test result: ok' "$test_log" \
